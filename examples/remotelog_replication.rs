@@ -1,0 +1,113 @@
+//! End-to-end driver (the repository's headline validation run):
+//! REMOTELOG log replication over every persistence domain, with both
+//! singleton (checksummed records) and compound (explicit tail pointer)
+//! appends, a mid-run power failure, and full recovery through the
+//! AOT-compiled Pallas kernels when artifacts are available.
+//!
+//! Run: `make artifacts && cargo run --release --example remotelog_replication`
+//! The output of this run is recorded in EXPERIMENTS.md.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::log::RECORD_BYTES;
+use rpmem::remotelog::recovery::{recover, RustScanner, Scanner};
+use rpmem::runtime::XlaScanner;
+use std::time::Instant;
+
+fn main() {
+    let appends = 2_000u64;
+    let scanner: Box<dyn Scanner> = match XlaScanner::load("artifacts") {
+        Ok(s) => {
+            println!("recovery scanner: AOT Pallas kernels via PJRT");
+            Box::new(s)
+        }
+        Err(e) => {
+            println!("recovery scanner: rust mirror ({e})");
+            Box::new(RustScanner)
+        }
+    };
+
+    println!(
+        "\n{:<26} {:<10} {:<9} {:>10} {:>9} {:>11} {:>10}",
+        "config", "mode", "primary", "mean(us)", "p99(us)", "acked@cut", "recovered"
+    );
+    println!("{}", "-".repeat(92));
+
+    let wall = Instant::now();
+    let mut total_appends = 0u64;
+    for pd in PDomain::ALL {
+        for (mode, primary) in [
+            (AppendMode::Singleton, Primary::Write),
+            (AppendMode::Compound, Primary::Write),
+            (AppendMode::Singleton, Primary::Send),
+        ] {
+            let rqwrb = if primary == Primary::Send {
+                RqwrbLoc::Pm
+            } else {
+                RqwrbLoc::Dram
+            };
+            let cfg = ServerConfig::new(pd, pd == PDomain::Dmp, rqwrb);
+            let mut rl = RemoteLog::new(
+                cfg,
+                TimingModel::default(),
+                mode,
+                MethodChoice::Planned(primary),
+                appends + 8,
+                0xFEED,
+                true,
+            );
+            rl.run(appends);
+            total_appends += appends;
+
+            // Cut power right after the 70%-th ack.
+            let cut = rl.appends[(appends * 7 / 10) as usize].acked_at + 1;
+            let acked = rl.acked_before(cut);
+            let image = rl.fab.mem.crash_image(cut, cfg.pdomain);
+            let needs_replay = match mode {
+                AppendMode::Singleton => rl.singleton_method().requires_replay(),
+                AppendMode::Compound => rl.compound_method().requires_replay(),
+            };
+            let res = recover(
+                &image,
+                &rl.fab.mem.layout,
+                &rl.log,
+                mode,
+                needs_replay,
+                scanner.as_ref(),
+            );
+            // Verify the recovered prefix byte-for-byte.
+            for k in 0..res.recovered as usize {
+                assert_eq!(
+                    &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES],
+                    &rl.appends[k].record[..],
+                    "{}: record {k} corrupt",
+                    cfg.label()
+                );
+            }
+            assert!(
+                res.recovered >= acked,
+                "{}: lost acked data",
+                cfg.label()
+            );
+            println!(
+                "{:<26} {:<10} {:<9} {:>10.2} {:>9.2} {:>11} {:>10}",
+                cfg.label(),
+                mode.name(),
+                primary.name(),
+                rl.latencies.summary().mean() / 1000.0,
+                rl.latencies.quantile(0.99) as f64 / 1000.0,
+                acked,
+                res.recovered,
+            );
+        }
+    }
+    println!(
+        "\n{} scenarios x {} appends each, all crash-recoveries verified, in {:.2?} wall-clock",
+        9,
+        appends,
+        wall.elapsed()
+    );
+    let _ = total_appends;
+}

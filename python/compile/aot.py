@@ -1,0 +1,70 @@
+"""AOT: lower the L2 entry points once to HLO *text* for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` or serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+(invoked by ``make artifacts``; a no-op at the Makefile level when inputs
+are unchanged). Also writes ``manifest.json`` recording shapes so the rust
+runtime can sanity-check at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORT_N, export_specs
+from .kernels.ref import PAYLOAD_WORDS, RECORD_WORDS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "export_n": EXPORT_N,
+        "payload_words": PAYLOAD_WORDS,
+        "record_words": RECORD_WORDS,
+        "artifacts": {},
+    }
+    for name, (fn, arg_specs) in export_specs().items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in arg_specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

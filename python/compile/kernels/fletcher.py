@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: blocked Fletcher checksum over batches of log records.
+
+This is the requester-side hot-spot of REMOTELOG: every append must carry a
+checksum (singleton appends are *detected* by checksum at the responder,
+paper §4.1), and bulk replication checksums whole batches of records at
+once. The kernel tiles the (N, W) u32 record matrix into (BLOCK_N, W)
+VMEM-resident blocks and computes both Fletcher accumulators per record.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the checksum is an integer
+reduction — VPU lane-parallel over records, not an MXU workload. Instead of
+the sequential per-word recurrence the oracle uses, the kernel exploits the
+closed form (all math mod 2^32):
+
+    s1 = 1 + sum_i w_i
+    s2 = W + sum_i (W - i) * w_i
+
+which is two weighted reductions over the word axis — one fused pass over
+the block, no loop-carried dependency, fully vectorizable. The weights
+vector is a compile-time iota, so the whole kernel is: load block, two
+multiply-accumulate reductions, store two (BLOCK_N,) vectors.
+
+VMEM budget per grid step (BLOCK_N=256, W=14):
+256*14*4 B input + 2*256*4 B output + 256*14*4 B weights-broadcast scratch
+≈ 30 KiB, far under VMEM; double-buffering the input block is free.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the lowered HLO is what `aot.py` exports for the rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default record-batch tile. 256 records x 14 words keeps the working set
+# ~30 KiB of VMEM while giving the VPU full lanes across the record axis.
+BLOCK_N = 256
+
+
+def _fletcher_block_kernel(rec_ref, s1_ref, s2_ref):
+    """Per-block body: two weighted u32 reductions over the word axis."""
+    block = rec_ref[...]  # (BLOCK_N, W) u32, resident in VMEM
+    w = block.shape[1]
+    # weights[i] = W - i, the closed-form multiplier for s2.
+    weights = jnp.uint32(w) - jax.lax.broadcasted_iota(jnp.uint32, (1, w), 1)
+    s1_ref[...] = jnp.uint32(1) + jnp.sum(block, axis=1, dtype=jnp.uint32)
+    s2_ref[...] = jnp.uint32(w) + jnp.sum(
+        block * weights, axis=1, dtype=jnp.uint32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def fletcher_pallas(payload: jax.Array, *, block_n: int = BLOCK_N):
+    """Checksum ``payload`` (N, W) u32 -> (s1 (N,), s2 (N,)) u32.
+
+    N must be a multiple of ``block_n``; callers pad (a padded all-zero
+    record checksums to (1, W), never colliding with stored zeros).
+    """
+    n, w = payload.shape
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _fletcher_block_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, w), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=True,
+    )(payload)

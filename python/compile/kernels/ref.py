@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: straightforward, loop-shaped
+implementations of the REMOTELOG record-integrity math. The Pallas kernels
+(`fletcher.py`, `scan.py`) must match these bit-for-bit; `python/tests/`
+asserts that with hypothesis sweeps over shapes and contents, and the rust
+mirror (`rust/src/remotelog/checksum.rs`) implements the identical spec so
+requester-side (rust) and recovery-side (XLA) checksums agree.
+
+Checksum spec (shared across all three layers)
+----------------------------------------------
+Fletcher-64/32-style dual accumulator over little-endian u32 words, all
+arithmetic mod 2^32 (natural u32 wraparound):
+
+    s1 = 1; s2 = 0
+    for w in payload_words:
+        s1 = (s1 + w)  mod 2^32
+        s2 = (s2 + s1) mod 2^32
+
+``s1`` starts at 1 (Adler-style) so the all-zero record does not checksum
+to (0, 0): freshly-zeroed PM never looks like a valid record, which is what
+lets REMOTELOG detect its tail by checksum failure (paper §4.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Record geometry: 64-byte log records = 16 u32 words; the last two words
+# store (s1, s2). Matches rust/src/remotelog/log.rs.
+RECORD_WORDS = 16
+PAYLOAD_WORDS = 14
+S1_WORD = 14
+S2_WORD = 15
+
+
+def fletcher_ref(payload: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reference Fletcher over ``payload`` of shape (N, W) u32.
+
+    Returns (s1, s2), each (N,) u32. Implemented as the literal sequential
+    recurrence via lax.fori_loop — intentionally the dumbest correct form.
+    """
+    assert payload.dtype == jnp.uint32 and payload.ndim == 2
+    n, w = payload.shape
+
+    def body(i, carry):
+        s1, s2 = carry
+        s1 = s1 + payload[:, i]
+        s2 = s2 + s1
+        return s1, s2
+
+    s1_0 = jnp.ones((n,), jnp.uint32)
+    s2_0 = jnp.zeros((n,), jnp.uint32)
+    s1, s2 = jax.lax.fori_loop(0, w, body, (s1_0, s2_0))
+    return s1, s2
+
+
+def record_valid_ref(records: jax.Array) -> jax.Array:
+    """Validity mask for full (N, RECORD_WORDS) u32 record images.
+
+    A record is valid iff the stored (s1, s2) words match the Fletcher of
+    the payload words. Returns (N,) u32 in {0, 1}.
+    """
+    assert records.shape[1] == RECORD_WORDS
+    s1, s2 = fletcher_ref(records[:, :PAYLOAD_WORDS])
+    ok = (records[:, S1_WORD] == s1) & (records[:, S2_WORD] == s2)
+    return ok.astype(jnp.uint32)
+
+
+def tail_ref(valid: jax.Array) -> jax.Array:
+    """First-invalid index (the recovered log tail) from a validity mask.
+
+    Records at/after the first invalid one are ignored even if their
+    checksums pass (stale survivors of GC): the log is a prefix.
+    Returns () u32 == N when every record is valid.
+    """
+    n = valid.shape[0]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    first_bad = jnp.where(valid == 0, idx, jnp.uint32(n))
+    return jnp.min(first_bad, initial=jnp.uint32(n))
+
+
+def scan_ref(records: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Recovery scan oracle: (valid mask (N,), tail (1,))."""
+    valid = record_valid_ref(records)
+    return valid, tail_ref(valid).reshape((1,))
+
+
+def verify_ref(
+    records: jax.Array, base_seq: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compound-update verification oracle.
+
+    For the explicit-tail-pointer log (paper §4.1 compound case), record
+    word 0 carries the append sequence number. A record participates in the
+    recovered prefix iff its checksum is valid AND its sequence number is
+    exactly ``base_seq + position`` (chain check — catches reordered /
+    replayed records).
+
+    Returns (tail (1,), valid_count (1,), chain_ok (N,)).
+    """
+    valid = record_valid_ref(records)
+    n = records.shape[0]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    seq_ok = records[:, 0] == (base_seq[0] + idx)
+    chain_ok = (valid & seq_ok.astype(jnp.uint32)).astype(jnp.uint32)
+    tail = tail_ref(chain_ok).reshape((1,))
+    valid_count = jnp.sum(valid, dtype=jnp.uint32).reshape((1,))
+    return tail, valid_count, chain_ok

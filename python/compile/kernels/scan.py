@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: recovery scan — validity mask + log-tail detection.
+
+This is the responder-side recovery hot-spot: after a power failure the
+recovery subsystem scans the whole PM log region, recomputes every record's
+Fletcher checksum, and finds the first invalid record — that index is the
+recovered log tail (paper §4.1: "the server detects the log tail when its
+checksum fails"). On multi-GiB logs this is a bandwidth-bound streaming
+reduction, exactly the shape TPUs pipeline well.
+
+Kernel structure: grid over (N // BLOCK_N) record blocks. Each step loads a
+(BLOCK_N, RECORD_WORDS) tile into VMEM, recomputes the closed-form Fletcher
+of the payload words, compares against the stored checksum words to emit
+the per-record validity mask, and folds the block's first-invalid index
+into a running global minimum. The tail output block-maps every grid step
+to the same (1,) element; TPU grids (and interpret mode) execute
+sequentially, so the read-modify-write accumulation is well-defined — this
+is the standard Pallas cross-block reduction idiom.
+
+VMEM per step (BLOCK_N=256): 256*16*4 B tile + masks ≈ 20 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAYLOAD_WORDS, RECORD_WORDS, S1_WORD, S2_WORD
+
+BLOCK_N = 256
+
+
+def _scan_block_kernel(rec_ref, valid_ref, tail_ref, *, block_n: int):
+    i = pl.program_id(0)
+    block = rec_ref[...]  # (BLOCK_N, RECORD_WORDS) u32
+    payload = block[:, :PAYLOAD_WORDS]
+    w = PAYLOAD_WORDS
+    weights = jnp.uint32(w) - jax.lax.broadcasted_iota(jnp.uint32, (1, w), 1)
+    s1 = jnp.uint32(1) + jnp.sum(payload, axis=1, dtype=jnp.uint32)
+    s2 = jnp.uint32(w) + jnp.sum(payload * weights, axis=1, dtype=jnp.uint32)
+    ok = (block[:, S1_WORD] == s1) & (block[:, S2_WORD] == s2)
+    valid_ref[...] = ok.astype(jnp.uint32)
+
+    # First-invalid index within this block, in global coordinates; records
+    # with a valid checksum contribute the sentinel 0xFFFF_FFFF.
+    local_idx = jax.lax.broadcasted_iota(jnp.uint32, (block_n,), 0)
+    global_idx = jnp.uint32(i * block_n) + local_idx
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    first_bad = jnp.min(jnp.where(ok, sentinel, global_idx))
+
+    # Cross-block min-accumulation into the shared (1,) tail output.
+    @pl.when(i == 0)
+    def _init():
+        tail_ref[...] = jnp.full((1,), sentinel, jnp.uint32)
+
+    tail_ref[...] = jnp.minimum(tail_ref[...], first_bad.reshape((1,)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def scan_pallas(records: jax.Array, *, block_n: int = BLOCK_N):
+    """Scan (N, RECORD_WORDS) u32 records -> (valid (N,), tail (1,)).
+
+    ``tail`` is the first checksum-invalid index, or N if all valid
+    (the 0xFFFF_FFFF sentinel is clamped to N afterwards).
+    """
+    n, rw = records.shape
+    if rw != RECORD_WORDS:
+        raise ValueError(f"records must have {RECORD_WORDS} words, got {rw}")
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    kernel = functools.partial(_scan_block_kernel, block_n=block_n)
+    valid, tail = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, rw), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            # Every grid step maps to the same output element: the running
+            # global minimum (sequential-grid reduction idiom).
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+        ],
+        interpret=True,
+    )(records)
+    return valid, jnp.minimum(tail, jnp.uint32(n))

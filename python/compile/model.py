@@ -1,0 +1,110 @@
+"""L2: the JAX compute graph for REMOTELOG record integrity.
+
+Composes the L1 Pallas kernels (`kernels.fletcher`, `kernels.scan`) into
+the three entry points the rust coordinator calls through PJRT:
+
+  * ``checksum_records`` — requester append path (batched): payload words
+    in, full record images (payload ‖ s1 ‖ s2) out, ready to be RDMA-written.
+  * ``recover_scan``     — responder recovery path: scan a PM log region,
+    return the per-record validity mask and the recovered tail index.
+  * ``verify_segment``   — compound-log verification: validity ∧ sequence-
+    chain check against the explicit tail pointer's base sequence.
+
+Everything here is shape-static so `aot.py` can lower each entry point once
+to HLO text; the rust runtime pads inputs to EXPORT_N records. Python never
+runs on the request path — these functions exist to be lowered.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.digest import segment_digest_pallas, SEG_RECORDS
+from .kernels.fletcher import fletcher_pallas
+from .kernels.scan import scan_pallas
+from .kernels.ref import PAYLOAD_WORDS, RECORD_WORDS
+
+# The batch size each AOT artifact is specialized to. Rust pads partial
+# batches with zero records (which can never checksum as valid).
+EXPORT_N = 1024
+
+
+def checksum_records(payload: jax.Array) -> jax.Array:
+    """(N, PAYLOAD_WORDS) u32 payloads -> (N, RECORD_WORDS) u32 record images.
+
+    The emitted image is exactly what the requester RDMA-writes into the
+    remote log: payload words followed by the two Fletcher words.
+    """
+    s1, s2 = fletcher_pallas(payload)
+    return jnp.concatenate(
+        [payload, s1[:, None], s2[:, None]], axis=1
+    ).astype(jnp.uint32)
+
+
+def recover_scan(records: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(N, RECORD_WORDS) u32 log image -> (valid (N,) u32, tail (1,) u32)."""
+    valid, tail = scan_pallas(records)
+    return valid, tail.reshape((1,))
+
+
+def verify_segment(
+    records: jax.Array, base_seq: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compound-log verification.
+
+    ``records``: (N, RECORD_WORDS) u32; ``base_seq``: (1,) u32 — the
+    sequence number the first record in the segment must carry (recovered
+    from the persisted tail pointer).
+
+    Returns (tail (1,), valid_count (1,), chain_ok (N,)): ``tail`` is the
+    length of the longest prefix whose records are checksum-valid AND carry
+    consecutive sequence numbers starting at ``base_seq``.
+    """
+    n = records.shape[0]
+    valid, _ = scan_pallas(records)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    seq_ok = (records[:, 0] == (base_seq[0] + idx)).astype(jnp.uint32)
+    chain_ok = valid & seq_ok
+    first_bad = jnp.where(chain_ok == 0, idx, jnp.uint32(n))
+    tail = jnp.min(first_bad, initial=jnp.uint32(n)).reshape((1,))
+    valid_count = jnp.sum(valid, dtype=jnp.uint32).reshape((1,))
+    return tail, valid_count, chain_ok
+
+
+def segment_digests(records: jax.Array) -> jax.Array:
+    """(N, RECORD_WORDS) u32 -> (N/SEG_RECORDS, 2) u32 anti-entropy
+    digests; primary and replica compare these to locate divergence."""
+    s1, s2 = segment_digest_pallas(records)
+    return jnp.stack([s1, s2], axis=1)
+
+
+def export_specs() -> dict[str, tuple]:
+    """(fn, example-arg specs) for every AOT entry point, keyed by artifact
+    name. Shared by `aot.py` and the python-side AOT tests."""
+    u32 = jnp.uint32
+    return {
+        "checksum": (
+            checksum_records,
+            (jax.ShapeDtypeStruct((EXPORT_N, PAYLOAD_WORDS), u32),),
+        ),
+        "scan": (
+            recover_scan,
+            (jax.ShapeDtypeStruct((EXPORT_N, RECORD_WORDS), u32),),
+        ),
+        "verify": (
+            verify_segment,
+            (
+                jax.ShapeDtypeStruct((EXPORT_N, RECORD_WORDS), u32),
+                jax.ShapeDtypeStruct((1,), u32),
+            ),
+        ),
+        "digest": (
+            segment_digests,
+            (jax.ShapeDtypeStruct((EXPORT_N, RECORD_WORDS), u32),),
+        ),
+    }
+
+
+# Re-export for manifest consumers.
+SEGMENT_RECORDS = SEG_RECORDS

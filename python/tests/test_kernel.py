@@ -1,0 +1,205 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles.
+
+The hypothesis sweeps are the core correctness signal for the kernels: any
+(shape, contents) divergence between the closed-form blocked kernels and
+the sequential-recurrence oracle is a bug in one of them.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    PAYLOAD_WORDS,
+    RECORD_WORDS,
+    S1_WORD,
+    S2_WORD,
+    fletcher_ref,
+    record_valid_ref,
+    scan_ref,
+    tail_ref,
+)
+from compile.kernels.fletcher import fletcher_pallas
+from compile.kernels.scan import scan_pallas
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+u32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _np_fletcher(payload: np.ndarray):
+    """Third, numpy-side implementation of the spec — cross-checks the jnp
+    oracle itself, not just kernel-vs-oracle."""
+    s1 = np.ones(payload.shape[0], np.uint64)
+    s2 = np.zeros(payload.shape[0], np.uint64)
+    for i in range(payload.shape[1]):
+        s1 = (s1 + payload[:, i]) & 0xFFFFFFFF
+        s2 = (s2 + s1) & 0xFFFFFFFF
+    return s1.astype(np.uint32), s2.astype(np.uint32)
+
+
+def _records(rng, n, corrupt=()):
+    payload = rng.integers(0, 2**32, size=(n, PAYLOAD_WORDS), dtype=np.uint32)
+    s1, s2 = _np_fletcher(payload)
+    recs = np.concatenate([payload, s1[:, None], s2[:, None]], axis=1)
+    for idx in corrupt:
+        recs[idx, rng.integers(0, RECORD_WORDS)] ^= 1 + rng.integers(0, 2**31)
+    return recs
+
+
+# ---------------------------------------------------------------- fletcher
+
+
+class TestFletcherOracle:
+    def test_matches_numpy_spec(self):
+        rng = np.random.default_rng(1)
+        p = rng.integers(0, 2**32, size=(64, PAYLOAD_WORDS), dtype=np.uint32)
+        s1r, s2r = fletcher_ref(jnp.asarray(p))
+        s1n, s2n = _np_fletcher(p)
+        np.testing.assert_array_equal(np.array(s1r), s1n)
+        np.testing.assert_array_equal(np.array(s2r), s2n)
+
+    def test_zero_record_not_zero_checksum(self):
+        p = jnp.zeros((4, PAYLOAD_WORDS), jnp.uint32)
+        s1, s2 = fletcher_ref(p)
+        assert (np.array(s1) == 1).all()
+        assert (np.array(s2) == PAYLOAD_WORDS).all()
+
+    def test_single_word_sensitivity(self):
+        """Flipping any single payload word changes the checksum."""
+        rng = np.random.default_rng(2)
+        p = rng.integers(0, 2**32, size=(1, PAYLOAD_WORDS), dtype=np.uint32)
+        s1, s2 = _np_fletcher(p)
+        for i in range(PAYLOAD_WORDS):
+            q = p.copy()
+            q[0, i] ^= 0x1
+            t1, t2 = _np_fletcher(q)
+            assert (t1[0], t2[0]) != (s1[0], s2[0])
+
+    def test_swap_detection(self):
+        """Swapping two unequal words changes s2 (position-weighted)."""
+        p = np.zeros((1, PAYLOAD_WORDS), np.uint32)
+        p[0, 0], p[0, 1] = 7, 11
+        q = p.copy()
+        q[0, 0], q[0, 1] = 11, 7
+        _, s2p = _np_fletcher(p)
+        _, s2q = _np_fletcher(q)
+        assert s2p[0] != s2q[0]
+
+
+class TestFletcherKernel:
+    @given(
+        n_blocks=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+        block_n=st.sampled_from([8, 32, 256]),
+    )
+    def test_matches_ref_random(self, n_blocks, seed, block_n):
+        rng = np.random.default_rng(seed)
+        n = n_blocks * block_n
+        p = rng.integers(0, 2**32, size=(n, PAYLOAD_WORDS), dtype=np.uint32)
+        pj = jnp.asarray(p)
+        s1k, s2k = fletcher_pallas(pj, block_n=block_n)
+        s1r, s2r = fletcher_ref(pj)
+        np.testing.assert_array_equal(np.array(s1k), np.array(s1r))
+        np.testing.assert_array_equal(np.array(s2k), np.array(s2r))
+
+    @given(fill=st.sampled_from([0, 1, 0xFFFFFFFF, 0x80000000]))
+    def test_extreme_fills(self, fill):
+        """Wraparound-heavy constant fills must wrap identically."""
+        p = jnp.full((256, PAYLOAD_WORDS), fill, jnp.uint32)
+        s1k, s2k = fletcher_pallas(p)
+        s1r, s2r = fletcher_ref(p)
+        np.testing.assert_array_equal(np.array(s1k), np.array(s1r))
+        np.testing.assert_array_equal(np.array(s2k), np.array(s2r))
+
+    @given(w=st.integers(1, 40), seed=st.integers(0, 2**31))
+    def test_arbitrary_word_counts(self, w, seed):
+        """Kernel is generic in W, not just the 14-word record layout."""
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(rng.integers(0, 2**32, size=(8, w), dtype=np.uint32))
+        s1k, s2k = fletcher_pallas(p, block_n=8)
+        s1r, s2r = fletcher_ref(p)
+        np.testing.assert_array_equal(np.array(s1k), np.array(s1r))
+        np.testing.assert_array_equal(np.array(s2k), np.array(s2r))
+
+    def test_rejects_non_multiple_batch(self):
+        with pytest.raises(ValueError, match="multiple"):
+            fletcher_pallas(jnp.zeros((13, PAYLOAD_WORDS), jnp.uint32))
+
+
+# -------------------------------------------------------------------- scan
+
+
+class TestScanKernel:
+    @given(
+        seed=st.integers(0, 2**31),
+        n_corrupt=st.integers(0, 6),
+        block_n=st.sampled_from([8, 64, 256]),
+    )
+    def test_matches_ref_random_corruption(self, seed, n_corrupt, block_n):
+        rng = np.random.default_rng(seed)
+        n = 2 * block_n
+        corrupt = rng.choice(n, size=n_corrupt, replace=False)
+        recs = jnp.asarray(_records(rng, n, corrupt))
+        vk, tk = scan_pallas(recs, block_n=block_n)
+        vr, tr = scan_ref(recs)
+        np.testing.assert_array_equal(np.array(vk), np.array(vr))
+        assert int(tk[0]) == int(tr[0])
+
+    def test_all_valid_tail_is_n(self):
+        rng = np.random.default_rng(3)
+        recs = jnp.asarray(_records(rng, 512))
+        valid, tail = scan_pallas(recs)
+        assert int(tail[0]) == 512
+        assert np.array(valid).sum() == 512
+
+    def test_all_zero_log_tail_is_zero(self):
+        recs = jnp.zeros((512, RECORD_WORDS), jnp.uint32)
+        valid, tail = scan_pallas(recs)
+        assert int(tail[0]) == 0
+        assert np.array(valid).sum() == 0
+
+    @given(bad=st.integers(0, 511))
+    def test_tail_is_first_invalid(self, bad):
+        rng = np.random.default_rng(4)
+        recs = _records(rng, 512)
+        recs[bad, S1_WORD] ^= 0xDEAD
+        _, tail = scan_pallas(jnp.asarray(recs))
+        assert int(tail[0]) == bad
+
+    def test_block_boundary_corruption(self):
+        """First record of the second block — exercises the cross-block
+        min-accumulation path."""
+        rng = np.random.default_rng(5)
+        recs = _records(rng, 512)
+        recs[256, S2_WORD] ^= 1
+        _, tail = scan_pallas(jnp.asarray(recs), block_n=256)
+        assert int(tail[0]) == 256
+
+    def test_valid_after_tail_still_reported(self):
+        """The mask reports raw validity; prefix semantics are the
+        caller's (tail is still the first invalid)."""
+        rng = np.random.default_rng(6)
+        recs = _records(rng, 512)
+        recs[10, 0] ^= 0xFF  # invalidate record 10 only
+        valid, tail = scan_pallas(jnp.asarray(recs))
+        assert int(tail[0]) == 10
+        assert np.array(valid)[11:].all()
+
+    def test_rejects_wrong_word_count(self):
+        with pytest.raises(ValueError, match="words"):
+            scan_pallas(jnp.zeros((256, 8), jnp.uint32))
+
+    def test_rejects_non_multiple_batch(self):
+        with pytest.raises(ValueError, match="multiple"):
+            scan_pallas(jnp.zeros((100, RECORD_WORDS), jnp.uint32))
+
+
+class TestTailOracle:
+    @given(bits=st.lists(st.booleans(), min_size=1, max_size=64))
+    def test_tail_matches_python_scan(self, bits):
+        valid = jnp.asarray(np.array(bits, np.uint32))
+        expect = bits.index(False) if False in bits else len(bits)
+        assert int(tail_ref(valid)) == expect

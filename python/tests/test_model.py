@@ -1,0 +1,118 @@
+"""L2 model correctness: entry-point composition semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import PAYLOAD_WORDS, RECORD_WORDS, verify_ref
+from compile.model import (
+    EXPORT_N,
+    checksum_records,
+    recover_scan,
+    verify_segment,
+)
+
+settings.register_profile("model", deadline=None, max_examples=15)
+settings.load_profile("model")
+
+
+def _payloads(rng, n, seq0=None):
+    p = rng.integers(0, 2**32, size=(n, PAYLOAD_WORDS), dtype=np.uint32)
+    if seq0 is not None:
+        p[:, 0] = np.arange(seq0, seq0 + n, dtype=np.uint32)
+    return p
+
+
+class TestChecksumRecords:
+    def test_layout(self):
+        """Output = payload words followed by the two checksum words."""
+        rng = np.random.default_rng(0)
+        p = _payloads(rng, 256)
+        recs = np.array(checksum_records(jnp.asarray(p)))
+        assert recs.shape == (256, RECORD_WORDS)
+        np.testing.assert_array_equal(recs[:, :PAYLOAD_WORDS], p)
+
+    def test_roundtrip_scan(self):
+        """checksum_records output scans as fully valid."""
+        rng = np.random.default_rng(1)
+        recs = checksum_records(jnp.asarray(_payloads(rng, 512)))
+        valid, tail = recover_scan(recs)
+        assert int(tail[0]) == 512
+        assert np.array(valid).all()
+
+    @given(seed=st.integers(0, 2**31))
+    def test_deterministic(self, seed):
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(_payloads(rng, 256))
+        a = np.array(checksum_records(p))
+        b = np.array(checksum_records(p))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestRecoverScan:
+    @given(cut=st.integers(0, 511))
+    def test_partial_write_detected(self, cut):
+        """A torn record (half old, half new) must break the prefix."""
+        rng = np.random.default_rng(2)
+        recs = np.array(checksum_records(jnp.asarray(_payloads(rng, 512))))
+        torn = np.array(checksum_records(jnp.asarray(_payloads(rng, 512))))
+        # Tear record `cut` halfway: first 8 words new, rest old.
+        recs[cut, :8] = torn[cut, :8]
+        _, tail = recover_scan(jnp.asarray(recs))
+        assert int(tail[0]) == cut
+
+    def test_erased_suffix(self):
+        rng = np.random.default_rng(3)
+        recs = np.array(checksum_records(jnp.asarray(_payloads(rng, 512))))
+        recs[300:] = 0
+        _, tail = recover_scan(jnp.asarray(recs))
+        assert int(tail[0]) == 300
+
+
+class TestVerifySegment:
+    @given(seed=st.integers(0, 2**31), base=st.integers(0, 2**20))
+    def test_matches_oracle(self, seed, base):
+        rng = np.random.default_rng(seed)
+        recs = checksum_records(jnp.asarray(_payloads(rng, 512, seq0=base)))
+        bs = jnp.asarray([base], jnp.uint32)
+        tail, vc, chain = verify_segment(recs, bs)
+        t2, v2, c2 = verify_ref(recs, bs)
+        assert int(tail[0]) == int(t2[0]) == 512
+        assert int(vc[0]) == int(v2[0]) == 512
+        np.testing.assert_array_equal(np.array(chain), np.array(c2))
+
+    def test_sequence_gap_breaks_chain(self):
+        """Checksum-valid records with a seq gap (lost ordered update —
+        exactly the compound-update hazard of paper §3.3) stop the prefix."""
+        rng = np.random.default_rng(4)
+        p = _payloads(rng, 512, seq0=100)
+        p[200:, 0] += 1  # records 200.. skip one sequence number
+        recs = checksum_records(jnp.asarray(p))
+        tail, vc, _ = verify_segment(recs, jnp.asarray([100], jnp.uint32))
+        assert int(tail[0]) == 200
+        assert int(vc[0]) == 512  # checksums all fine — only the chain broke
+
+    def test_wrong_base_rejects_everything(self):
+        rng = np.random.default_rng(5)
+        recs = checksum_records(jnp.asarray(_payloads(rng, 512, seq0=7)))
+        tail, _, _ = verify_segment(recs, jnp.asarray([8], jnp.uint32))
+        assert int(tail[0]) == 0
+
+    def test_seq_wraparound(self):
+        """u32 sequence arithmetic wraps cleanly across 2^32."""
+        rng = np.random.default_rng(6)
+        base = 2**32 - 100
+        p = _payloads(rng, 512)
+        p[:, 0] = (base + np.arange(512, dtype=np.uint64)) & 0xFFFFFFFF
+        recs = checksum_records(jnp.asarray(p))
+        tail, _, _ = verify_segment(
+            recs, jnp.asarray([base & 0xFFFFFFFF], jnp.uint32)
+        )
+        assert int(tail[0]) == 512
+
+
+class TestExportShapes:
+    def test_export_n_is_block_multiple(self):
+        from compile.kernels.fletcher import BLOCK_N
+
+        assert EXPORT_N % BLOCK_N == 0

@@ -1,0 +1,159 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. Native IBTA FLUSH vs RDMA READ emulation (§3.4).
+//!  B. Compound ordering mechanism: WRITE_atomic pipeline vs the §4.2
+//!     READ-pipeline performance *estimate* vs waiting for the first
+//!     FLUSH completion (today's only correct option).
+//!  C. IB/RoCE vs iWARP completion semantics under WSP (§3.2).
+//!  D. RQ ring size back-pressure: server recycle rate vs client SEND
+//!     rate (§4.3 "resource availability timeouts ... performance
+//!     jitter").
+//!  E. Record size sweep: where SEND message passing overtakes one-sided
+//!     WRITE+FLUSH (copy cost vs round trips, §5).
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{
+    Extensions, PDomain, RqwrbLoc, ServerConfig, Transport,
+};
+use rpmem::persist::exec::{exec_compound, exec_singleton, Update};
+use rpmem::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::server::memory::Layout;
+use rpmem::fabric::engine::Fabric;
+
+const N: u64 = 30_000;
+
+fn mean_singleton(cfg: ServerConfig, m: SingletonMethod, len: usize) -> f64 {
+    let layout = Layout::new(1 << 22, 1 << 20, 64, 8192, cfg.rqwrb);
+    let mut f = Fabric::new(cfg, TimingModel::default(), layout, 7, false);
+    let mut sum = 0u64;
+    for i in 0..N {
+        let u = Update::new(0x10000 + (i % 512) * 4096, vec![1u8; len]);
+        sum += exec_singleton(&mut f, m, &u, i as u32).latency();
+    }
+    sum as f64 / N as f64
+}
+
+fn mean_compound(cfg: ServerConfig, m: CompoundMethod) -> f64 {
+    let layout = Layout::new(1 << 22, 1 << 20, 64, 8192, cfg.rqwrb);
+    let mut f = Fabric::new(cfg, TimingModel::default(), layout, 7, false);
+    let mut sum = 0u64;
+    for i in 0..N {
+        let a = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
+        let b = Update::new(0x100, (i + 1).to_le_bytes().to_vec());
+        sum += exec_compound(&mut f, m, &a, &b, i as u32).latency();
+    }
+    sum as f64 / N as f64
+}
+
+fn main() {
+    println!("=== Ablation A: native FLUSH vs READ emulation ===");
+    let base = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let native = mean_singleton(base, SingletonMethod::WriteFlush, 64);
+    let emu = mean_singleton(
+        base.with_extensions(Extensions::Emulated),
+        SingletonMethod::WriteFlush,
+        64,
+    );
+    println!("  WRITE;FLUSH  native IBTA : {:8.2} us", native / 1e3);
+    println!(
+        "  WRITE;READ   emulated    : {:8.2} us  (+{:.0}%)\n",
+        emu / 1e3,
+        (emu - native) / native * 100.0
+    );
+
+    println!("=== Ablation B: compound ordering mechanism (DMP+¬DDIO) ===");
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let atomic = mean_compound(cfg, CompoundMethod::WriteFlushAtomicFlush);
+    let est = mean_compound(
+        cfg.with_extensions(Extensions::Emulated),
+        CompoundMethod::WriteFlushAtomicFlush, // §4.2 READ-pipeline estimate
+    );
+    let wait = mean_compound(cfg, CompoundMethod::WriteFlushWaitWriteFlush);
+    println!("  WRITE_atomic pipeline (IBTA)      : {:8.2} us", atomic / 1e3);
+    println!("  READ-pipeline estimate (§4.2)     : {:8.2} us", est / 1e3);
+    println!(
+        "  wait-for-FLUSH (correct today)    : {:8.2} us  ({:.1}x the atomic pipeline)\n",
+        wait / 1e3,
+        wait / atomic
+    );
+
+    println!("=== Ablation C: WSP under IB/RoCE vs iWARP ===");
+    let wsp = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+    let ib = mean_singleton(wsp, SingletonMethod::WriteComp, 64);
+    // iWARP WSP must fall back to the MHP method (completion-only is
+    // unsound — §3.2); measure what the planner would actually run.
+    let iwarp_cfg = wsp.with_transport(Transport::Iwarp);
+    let iw = mean_singleton(iwarp_cfg, SingletonMethod::WriteFlush, 64);
+    println!("  IB/RoCE  WRITE;Comp               : {:8.2} us", ib / 1e3);
+    println!(
+        "  iWARP    WRITE;FLUSH (required)   : {:8.2} us  (+{:.0}%)\n",
+        iw / 1e3,
+        (iw - ib) / ib * 100.0
+    );
+
+    println!("=== Ablation D: RQ ring size back-pressure (SEND rate, slow server) ===");
+    // A server that recycles receive buffers slowly (heavy stalls) makes
+    // small rings throttle the client — the §4.3 jitter effect.
+    let slow_cpu = TimingModel {
+        cpu_stall_ns: 40_000,
+        cpu_stall_period: 10,
+        ..Default::default()
+    };
+    for ring in [2usize, 4, 8, 64] {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm);
+        let layout = Layout::new(1 << 22, 1 << 20, ring, 8192, RqwrbLoc::Pm);
+        let mut f = Fabric::new(cfg, slow_cpu.clone(), layout, 7, false);
+        let mut rl_lat = rpmem::util::stats::Histogram::new();
+        for i in 0..N / 3 {
+            let u = Update::new(0x10000 + (i % 512) * 4096, vec![1u8; 64]);
+            rl_lat.record(
+                exec_singleton(&mut f, SingletonMethod::SendFlush, &u, i as u32)
+                    .latency(),
+            );
+        }
+        println!(
+            "  ring={:<3} mean {:7.2} us   p99 {:7.2} us   max {:7.2} us",
+            ring,
+            rl_lat.summary().mean() / 1e3,
+            rl_lat.quantile(0.99) as f64 / 1e3,
+            rl_lat.summary().max() as f64 / 1e3
+        );
+    }
+    println!();
+
+    println!("=== Ablation E: record size — one-sided WRITE vs SEND msg passing (DMP+¬DDIO) ===");
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    for size in [64usize, 256, 1024, 4096] {
+        let w = mean_singleton(cfg, SingletonMethod::WriteFlush, size);
+        let s = mean_singleton(cfg, SingletonMethod::SendCopyFlushAck, size);
+        println!(
+            "  {:>5} B   WRITE;FLUSH {:8.2} us   SEND/copy/ack {:8.2} us   ({})",
+            size,
+            w / 1e3,
+            s / 1e3,
+            if w < s { "one-sided wins" } else { "msg passing wins" }
+        );
+    }
+
+    println!("\n=== Ablation F: jitter sensitivity of append latency ===");
+    for jit in [0u64, 200, 400, 800] {
+        let timing = TimingModel { persist_jitter_ns: jit, ..Default::default() };
+        let mut rl = RemoteLog::new(
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            timing,
+            AppendMode::Singleton,
+            MethodChoice::Planned(Primary::Write),
+            4096,
+            7,
+            false,
+        );
+        rl.run(N / 3);
+        println!(
+            "  placement jitter {:>4} ns: mean {:7.2} us  p99 {:7.2} us",
+            jit,
+            rl.latencies.summary().mean() / 1e3,
+            rl.latencies.quantile(0.99) as f64 / 1e3
+        );
+    }
+}

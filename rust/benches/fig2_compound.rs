@@ -1,0 +1,33 @@
+//! Figure 2 (d)/(e)/(f): REMOTELOG compound-append latency (record +
+//! strictly-ordered tail pointer) across all twelve server
+//! configurations × three primaries, per persistence domain.
+
+use rpmem::coordinator::sweep::{render_panel, run_figure_panel, SweepOpts};
+use rpmem::persist::config::PDomain;
+use rpmem::remotelog::client::AppendMode;
+use std::time::Instant;
+
+fn main() {
+    let opts = SweepOpts { appends: 50_000, ..Default::default() };
+    println!(
+        "REMOTELOG compound appends (64 B record + 8 B tail pointer), {} appends/bar\n",
+        opts.appends
+    );
+    for (title, pd) in [
+        ("Fig 2(d) — compound updates, DMP", PDomain::Dmp),
+        ("Fig 2(e) — compound updates, MHP", PDomain::Mhp),
+        ("Fig 2(f) — compound updates, WSP", PDomain::Wsp),
+    ] {
+        let t0 = Instant::now();
+        let results = run_figure_panel(pd, AppendMode::Compound, &opts);
+        let wall = t0.elapsed();
+        println!("{}", render_panel(title, &results));
+        let sim_appends = opts.appends * results.len() as u64;
+        println!(
+            "  [harness: {} simulated appends in {:.2?} — {:.2}M appends/s wall-clock]\n",
+            sim_appends,
+            wall,
+            sim_appends as f64 / wall.as_secs_f64() / 1e6
+        );
+    }
+}

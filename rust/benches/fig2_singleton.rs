@@ -1,0 +1,36 @@
+//! Figure 2 (a)/(b)/(c): REMOTELOG singleton-append latency across all
+//! twelve server configurations × three primary operations, per
+//! persistence domain. Regenerates the paper's series (simulated
+//! virtual-time latency; the reproduction target is the *shape* — see
+//! EXPERIMENTS.md) and reports the wall-clock cost of generating each
+//! panel.
+
+use rpmem::coordinator::sweep::{render_panel, run_figure_panel, SweepOpts};
+use rpmem::persist::config::PDomain;
+use rpmem::remotelog::client::AppendMode;
+use std::time::Instant;
+
+fn main() {
+    let opts = SweepOpts { appends: 50_000, ..Default::default() };
+    println!(
+        "REMOTELOG singleton appends, 64 B records, {} appends/bar\n",
+        opts.appends
+    );
+    for (title, pd) in [
+        ("Fig 2(a) — singleton updates, DMP", PDomain::Dmp),
+        ("Fig 2(b) — singleton updates, MHP", PDomain::Mhp),
+        ("Fig 2(c) — singleton updates, WSP", PDomain::Wsp),
+    ] {
+        let t0 = Instant::now();
+        let results = run_figure_panel(pd, AppendMode::Singleton, &opts);
+        let wall = t0.elapsed();
+        println!("{}", render_panel(title, &results));
+        let sim_appends = opts.appends * results.len() as u64;
+        println!(
+            "  [harness: {} simulated appends in {:.2?} — {:.2}M appends/s wall-clock]\n",
+            sim_appends,
+            wall,
+            sim_appends as f64 / wall.as_secs_f64() / 1e6
+        );
+    }
+}

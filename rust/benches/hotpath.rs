@@ -1,0 +1,136 @@
+//! Wall-clock hot-path benchmarks (the §Perf targets in EXPERIMENTS.md):
+//!
+//!  * simulator append throughput per method class (the L3 hot loop),
+//!  * record checksumming (requester-side integrity hot path),
+//!  * recovery scan throughput (rust mirror; the XLA path is measured in
+//!    `examples/crash_recovery.rs` since it needs artifacts),
+//!  * wire envelope encode/decode,
+//!  * crash-image reconstruction.
+
+use rpmem::bench::run;
+use rpmem::fabric::engine::Fabric;
+use rpmem::fabric::timing::TimingModel;
+use rpmem::integrity::fletcher64;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::exec::{exec_compound, exec_singleton, Update};
+use rpmem::persist::method::{CompoundMethod, SingletonMethod};
+use rpmem::persist::wire::{self, WireUpdate};
+use rpmem::remotelog::log::{make_record, APP_WORDS, RECORD_BYTES};
+use rpmem::remotelog::recovery::{RustScanner, Scanner};
+use rpmem::server::memory::Layout;
+
+fn fabric(cfg: ServerConfig) -> Fabric {
+    let layout = Layout::new(1 << 22, 1 << 20, 64, 8192, cfg.rqwrb);
+    Fabric::new(cfg, TimingModel::default(), layout, 7, false)
+}
+
+fn main() {
+    println!("== L3 simulator hot path ==");
+    {
+        let mut f = fabric(ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram));
+        let mut i = 0u64;
+        run("sim/append one-sided WriteComp (WSP)", || {
+            let u = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
+            exec_singleton(&mut f, SingletonMethod::WriteComp, &u, i as u32);
+            i += 1;
+        });
+    }
+    {
+        let mut f = fabric(ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram));
+        let mut i = 0u64;
+        run("sim/append one-sided WriteFlush (MHP)", || {
+            let u = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
+            exec_singleton(&mut f, SingletonMethod::WriteFlush, &u, i as u32);
+            i += 1;
+        });
+    }
+    {
+        let mut f = fabric(ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram));
+        let mut i = 0u64;
+        run("sim/append two-sided SendCopyFlushAck (DMP)", || {
+            let u = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
+            exec_singleton(&mut f, SingletonMethod::SendCopyFlushAck, &u, i as u32);
+            i += 1;
+        });
+    }
+    {
+        let mut f = fabric(ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram));
+        let mut i = 0u64;
+        run("sim/append compound atomic pipeline (DMP)", || {
+            let a = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
+            let b = Update::new(0x100, (i + 1).to_le_bytes().to_vec());
+            exec_compound(
+                &mut f,
+                CompoundMethod::WriteFlushAtomicFlush,
+                &a,
+                &b,
+                i as u32,
+            );
+            i += 1;
+        });
+    }
+
+    println!("\n== integrity hot path ==");
+    {
+        let mut seq = 0u64;
+        let app = [0xDEADBEEFu32; APP_WORDS];
+        run("integrity/make_record (checksum 64B)", || {
+            std::hint::black_box(make_record(seq, &app));
+            seq += 1;
+        });
+    }
+    {
+        let buf = vec![0xA5u8; 4096];
+        run("integrity/fletcher64 4KiB", || {
+            std::hint::black_box(fletcher64(&buf));
+        });
+    }
+
+    println!("\n== recovery scan (rust mirror) ==");
+    {
+        let n = 16384usize;
+        let mut log = Vec::with_capacity(n * RECORD_BYTES);
+        for s in 0..n {
+            log.extend_from_slice(&make_record(s as u64, &[s as u32; APP_WORDS]));
+        }
+        let r = run("recovery/scan 16Ki records (1 MiB)", || {
+            std::hint::black_box(RustScanner.scan(&log));
+        });
+        println!(
+            "    -> {:.2} GiB/s scan bandwidth",
+            (n * RECORD_BYTES) as f64 / r.median_ns_per_iter / 1.073_741_824
+        );
+    }
+
+    println!("\n== wire envelope ==");
+    {
+        let ups = [
+            WireUpdate { target: 0x1000, data: vec![1u8; 64] },
+            WireUpdate { target: 0x100, data: vec![2u8; 8] },
+        ];
+        run("wire/encode compound message", || {
+            std::hint::black_box(wire::encode(7, &ups));
+        });
+        let buf = wire::encode(7, &ups);
+        run("wire/decode compound message", || {
+            std::hint::black_box(wire::decode(&buf).unwrap());
+        });
+    }
+
+    println!("\n== crash-image reconstruction ==");
+    {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 18, 1 << 16, 64, 512, cfg.rqwrb);
+        let mut f = Fabric::new(cfg, TimingModel::default(), layout, 7, true);
+        for i in 0..1000u64 {
+            let u = Update::new(0x1000 + (i % 512) * 64, vec![1u8; 64]);
+            exec_singleton(&mut f, SingletonMethod::WriteFlush, &u, i as u32);
+        }
+        let end = f.now();
+        let mut t = 0u64;
+        run("crash/image @1000 writes (256 KiB PM)", || {
+            t = (t + end / 7) % end;
+            std::hint::black_box(f.mem.crash_image(t, PDomain::Dmp));
+        });
+    }
+}

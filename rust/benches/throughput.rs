@@ -1,0 +1,72 @@
+//! Throughput extension: windowed (pipelined) REMOTELOG appends — the
+//! dimension the paper's latency-only evaluation leaves open. Sweeps the
+//! pipeline window per configuration class and reports sustained
+//! simulated throughput + the latency cost of queueing.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::pipeline::run_pipelined;
+
+fn sweep(name: &str, cfg: ServerConfig, mode: AppendMode, primary: Primary) {
+    println!("{name}  [{}]", cfg.label());
+    println!(
+        "  {:>7} {:>16} {:>14} {:>12}",
+        "window", "throughput", "mean lat", "p99 lat"
+    );
+    for window in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut rl = RemoteLog::new(
+            cfg,
+            TimingModel::default(),
+            mode,
+            MethodChoice::Planned(primary),
+            8192,
+            7,
+            false,
+        );
+        let res = run_pipelined(&mut rl, 30_000, window);
+        println!(
+            "  {:>7} {:>12.2} Mops {:>11.2} us {:>9.2} us",
+            res.window,
+            res.throughput_mops(),
+            res.mean_latency_ns / 1e3,
+            res.p99_latency_ns as f64 / 1e3,
+        );
+    }
+    println!();
+}
+
+fn main() {
+    println!("REMOTELOG pipelined append throughput (simulated time)\n");
+    sweep(
+        "singleton WRITE;Comp (WSP)",
+        ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+        AppendMode::Singleton,
+        Primary::Write,
+    );
+    sweep(
+        "singleton WRITE;FLUSH (MHP)",
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        AppendMode::Singleton,
+        Primary::Write,
+    );
+    sweep(
+        "singleton SEND one-sided (MHP, PM RQWRB — bounded by RQ recycling)",
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm),
+        AppendMode::Singleton,
+        Primary::Send,
+    );
+    sweep(
+        "compound WRITE_atomic pipeline (DMP+¬DDIO)",
+        ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+        AppendMode::Compound,
+        Primary::Write,
+    );
+    sweep(
+        "compound two-sided msg passing (DMP+DDIO — not pipelinable, window ignored)",
+        ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+        AppendMode::Compound,
+        Primary::Write,
+    );
+}

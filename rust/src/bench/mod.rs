@@ -1,0 +1,105 @@
+//! Minimal wall-clock benchmark harness (criterion is unavailable in
+//! this offline environment). Used by `rust/benches/*` via
+//! `harness = false`.
+//!
+//! Methodology: warm-up, then fixed-duration sampling with outlier-robust
+//! reporting (median of per-batch means). Deterministic workloads make
+//! run-to-run noise the only variance source.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+    pub median_ns_per_iter: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.ns_per_iter
+    }
+}
+
+/// Benchmark `f` (one logical iteration per call).
+pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warm-up ~100 ms.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(100) {
+        f();
+        warm_iters += 1;
+    }
+    // Pick a batch size targeting ~10 ms per sample.
+    let per_iter =
+        warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+    let batch = ((10e6 / per_iter.max(1.0)) as u64).max(1);
+
+    let mut sample_means = Vec::new();
+    let mut total_iters = 0u64;
+    let mut total_ns = 0f64;
+    let run_start = Instant::now();
+    while run_start.elapsed() < Duration::from_millis(600)
+        || sample_means.len() < 5
+    {
+        let s = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let ns = s.elapsed().as_nanos() as f64;
+        sample_means.push(ns / batch as f64);
+        total_iters += batch;
+        total_ns += ns;
+        if sample_means.len() > 200 {
+            break;
+        }
+    }
+    sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sample_means[sample_means.len() / 2];
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        ns_per_iter: total_ns / total_iters as f64,
+        median_ns_per_iter: median,
+        samples: sample_means.len(),
+    }
+}
+
+/// Print a result in a cargo-bench-like format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<52} {:>12.0} ns/iter (median {:>10.0}, {} samples, {:.2e} it/s)",
+        r.name,
+        r.ns_per_iter,
+        r.median_ns_per_iter,
+        r.samples,
+        r.throughput_per_sec()
+    );
+}
+
+/// Run + report, returning the result for further aggregation.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench_fn(name, f);
+    report(&r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut x = 0u64;
+        let r = bench_fn("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.iters > 1000);
+        assert!(r.samples >= 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment coordination: parallel scenario sweeps (Figure 2 panels),
+//! the paper-claims checker, and crash-test campaign orchestration.
+
+pub mod report;
+pub mod sweep;
+
+pub use report::{check_claims, render_claims, Claim};
+pub use sweep::{
+    render_panel, results_to_json, run_all, run_figure_panel, run_scenario,
+    ScenarioResult, SweepOpts,
+};

@@ -1,0 +1,228 @@
+//! Experiment sweeps: run REMOTELOG across server configurations and
+//! collect latency distributions — the data behind Figure 2 (a)-(f).
+
+use crate::fabric::timing::TimingModel;
+use crate::persist::config::{PDomain, ServerConfig};
+use crate::persist::method::Primary;
+use crate::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use crate::util::json::Json;
+use std::thread;
+
+/// One (configuration, mode, primary) measurement.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub config: ServerConfig,
+    pub mode: AppendMode,
+    pub primary: Primary,
+    pub method_name: String,
+    pub appends: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub stddev_ns: f64,
+}
+
+impl ScenarioResult {
+    pub fn bar_label(&self) -> String {
+        format!(
+            "{}{}_{}",
+            if self.config.ddio { "DDIO " } else { "¬DDIO " },
+            self.config.rqwrb.name(),
+            self.primary.name()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("mode", self.mode.name().into())
+            .set("primary", self.primary.name().into())
+            .set("method", self.method_name.clone().into())
+            .set("appends", self.appends.into())
+            .set("mean_ns", self.mean_ns.into())
+            .set("p50_ns", self.p50_ns.into())
+            .set("p99_ns", self.p99_ns.into())
+            .set("stddev_ns", self.stddev_ns.into());
+        j
+    }
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepOpts {
+    pub appends: u64,
+    pub seed: u64,
+    pub timing: TimingModel,
+    /// Ring capacity for the (non-recording) latency runs.
+    pub capacity: u64,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            appends: 20_000,
+            seed: 42,
+            timing: TimingModel::default(),
+            capacity: 4096,
+        }
+    }
+}
+
+/// Run one scenario (latency only; write recording off so the log ring
+/// can wrap like the paper's 10M-append runs).
+pub fn run_scenario(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    opts: &SweepOpts,
+) -> ScenarioResult {
+    let mut rl = RemoteLog::new(
+        cfg,
+        opts.timing.clone(),
+        mode,
+        MethodChoice::Planned(primary),
+        opts.capacity,
+        opts.seed,
+        false,
+    );
+    rl.run(opts.appends);
+    let s = rl.latencies.summary();
+    ScenarioResult {
+        config: cfg,
+        mode,
+        primary,
+        method_name: match mode {
+            AppendMode::Singleton => rl.singleton_method().name().to_string(),
+            AppendMode::Compound => rl.compound_method().name().to_string(),
+        },
+        appends: opts.appends,
+        mean_ns: s.mean(),
+        p50_ns: rl.latencies.quantile(0.5),
+        p99_ns: rl.latencies.quantile(0.99),
+        stddev_ns: s.stddev(),
+    }
+}
+
+/// All 12 bars of one Figure 2 panel: {DDIO on/off} × {DRAM/PM RQWRB} ×
+/// {WRITE, WRITEIMM, SEND} for one persistence domain + update kind.
+pub fn run_figure_panel(
+    domain: PDomain,
+    mode: AppendMode,
+    opts: &SweepOpts,
+) -> Vec<ScenarioResult> {
+    let scenarios: Vec<(ServerConfig, Primary)> = ServerConfig::table1()
+        .into_iter()
+        .filter(|c| c.pdomain == domain)
+        .flat_map(|c| Primary::ALL.map(|p| (c, p)))
+        .collect();
+    run_parallel(scenarios, mode, opts)
+}
+
+/// The full 72-scenario sweep (6 panels).
+pub fn run_all(opts: &SweepOpts) -> Vec<ScenarioResult> {
+    let mut out = Vec::new();
+    for mode in [AppendMode::Singleton, AppendMode::Compound] {
+        for domain in PDomain::ALL {
+            out.extend(run_figure_panel(domain, mode, opts));
+        }
+    }
+    out
+}
+
+fn run_parallel(
+    scenarios: Vec<(ServerConfig, Primary)>,
+    mode: AppendMode,
+    opts: &SweepOpts,
+) -> Vec<ScenarioResult> {
+    thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(cfg, p)| scope.spawn(move || run_scenario(cfg, mode, p, opts)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("scenario panicked")).collect()
+    })
+}
+
+/// Render a panel as the paper's bar groups (text).
+pub fn render_panel(
+    title: &str,
+    results: &[ScenarioResult],
+) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<34} {:<36} {:>10} {:>9} {:>9}\n",
+        "bar", "method", "mean(us)", "p50(us)", "p99(us)"
+    ));
+    out.push_str(&"-".repeat(102));
+    out.push('\n');
+    for r in results {
+        out.push_str(&format!(
+            "{:<34} {:<36} {:>10.2} {:>9.2} {:>9.2}\n",
+            r.bar_label(),
+            r.method_name,
+            r.mean_ns / 1000.0,
+            r.p50_ns as f64 / 1000.0,
+            r.p99_ns as f64 / 1000.0,
+        ));
+    }
+    out
+}
+
+pub fn results_to_json(results: &[ScenarioResult]) -> Json {
+    Json::Arr(results.iter().map(|r| r.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> SweepOpts {
+        SweepOpts { appends: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn panel_has_twelve_bars() {
+        let res =
+            run_figure_panel(PDomain::Wsp, AppendMode::Singleton, &small_opts());
+        assert_eq!(res.len(), 12);
+        let labels: std::collections::HashSet<_> =
+            res.iter().map(|r| r.bar_label()).collect();
+        assert_eq!(labels.len(), 12);
+        for r in &res {
+            assert!(r.mean_ns > 500.0, "{}: {}", r.bar_label(), r.mean_ns);
+        }
+    }
+
+    #[test]
+    fn full_sweep_is_72_scenarios() {
+        let opts = SweepOpts { appends: 50, ..Default::default() };
+        let res = run_all(&opts);
+        assert_eq!(res.len(), 72);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_scenario(
+            ServerConfig::new(PDomain::Dmp, true, crate::persist::config::RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+            &small_opts(),
+        );
+        let b = run_scenario(
+            ServerConfig::new(PDomain::Dmp, true, crate::persist::config::RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+            &small_opts(),
+        );
+        assert_eq!(a.mean_ns, b.mean_ns);
+        assert_eq!(a.p99_ns, b.p99_ns);
+    }
+
+    #[test]
+    fn render_includes_all_bars() {
+        let res =
+            run_figure_panel(PDomain::Mhp, AppendMode::Compound, &small_opts());
+        let text = render_panel("Fig 2(e)", &res);
+        assert_eq!(text.matches('\n').count(), 15); // title + header + sep + 12
+    }
+}

@@ -1,0 +1,795 @@
+//! The requester↔responder fabric engine: a deterministic virtual-time
+//! simulation of one reliable connection (QPAIR) against a responder
+//! machine model.
+//!
+//! # Modeling approach
+//!
+//! Rather than a heap-of-events DES, every operation's milestones are
+//! computed as a *timestamp dataflow* when the op is posted: each
+//! milestone is a max over its dependencies plus calibrated constants
+//! (plus seeded jitter). This is exact for a single sequential requester
+//! (REMOTELOG's shape), deterministic given the seed, allows crash
+//! queries at *any* virtual time post-hoc (milestones are kept, nothing
+//! is consumed), and makes the hot path allocation-light.
+//!
+//! # Ordering semantics implemented (paper §2)
+//!
+//! * Reliable connection: in-order delivery — responder-RNIC arrival
+//!   times are monotone in posting order.
+//! * Posted-op placement into the coherent domain is per-QP FIFO when
+//!   `placement_fifo` is true (strict PCIe ordering — the premise behind
+//!   the paper's MHP/WSP pipelined recipes). With `placement_fifo =
+//!   false` (PCIe relaxed-ordering ablation), placements are
+//!   independently jittered and may reorder — the §2 hazard that
+//!   motivates WRITE_atomic.
+//! * Non-posted ops (READ/FLUSH/WRITE_atomic) are totally ordered with
+//!   all priors at the responder; their completions are generated at the
+//!   requester only when the response arrives.
+//! * Posted-op completions: IB/RoCE — generated on responder-RNIC
+//!   receipt (ack); iWARP — generated when the op reaches the local
+//!   transport layer, *before* any wire traversal (§3.2).
+//! * The `fence` flag holds an op at the requester until responses for
+//!   all prior non-posted ops have arrived.
+//! * SEND/WRITEIMM consume receive WRs; receive completions surface to
+//!   the responder CPU in posting order, after placement.
+
+use crate::fabric::ops::{OnRecv, OpId, OpKind, WorkRequest};
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::persist::config::{ServerConfig, Transport};
+use crate::server::memory::{Layout, MemoryModel, WriteEvent, WriteSource, NEVER};
+use crate::util::rng::jitter;
+use std::collections::VecDeque;
+
+/// Per-op record kept by the engine.
+#[derive(Debug, Clone)]
+pub struct OpState {
+    pub kind: OpKind,
+    /// Requester clock when the op was handed to the RNIC.
+    pub t_posted: Nanos,
+    /// Arrival at the responder RNIC (after any RQ-slot stall for
+    /// recv-WR-consuming ops).
+    pub t_arrive: Nanos,
+    /// Placement into the coherent domain (updates only; else 0).
+    pub t_place: Nanos,
+    /// Completion-notification arrival at the requester, if signaled.
+    pub comp_at: Option<Nanos>,
+    /// Responder-handler ack arrival at the requester (if the handler
+    /// acks).
+    pub ack_at: Option<Nanos>,
+    /// Index of this op's WriteEvent in the memory model (updates only,
+    /// when recording).
+    pub write_seq: Option<u64>,
+}
+
+/// A copy directive executed by the responder CPU message handler:
+/// copy `len` payload bytes starting at `payload_off` to `target`.
+#[derive(Debug, Clone, Copy)]
+pub struct CopySpec {
+    pub payload_off: usize,
+    pub len: usize,
+    pub target: u64,
+}
+
+/// The fabric engine for one QPAIR.
+pub struct Fabric {
+    pub timing: TimingModel,
+    pub cfg: ServerConfig,
+    pub mem: MemoryModel,
+    /// Strict (true) vs relaxed (false) placement ordering for posted ops.
+    pub placement_fifo: bool,
+    seed: u64,
+    /// Requester virtual clock.
+    now: Nanos,
+    ops: Vec<OpState>,
+    next_seq: u64,
+    // ---- responder-side ordering chains ----
+    /// In-order delivery: last responder-RNIC arrival.
+    last_arrive: Nanos,
+    /// FIFO placement chain among posted update ops.
+    last_place_posted: Nanos,
+    /// Max placement among *all* update ops (flush dependency).
+    update_place_max: Nanos,
+    /// Max placement among all ops + non-posted execution points
+    /// (WRITE_atomic ordering dependency).
+    all_exec_max: Nanos,
+    /// Receive-completion observation chain (posting-order delivery of
+    /// recv completions to the CPU).
+    last_obs: Nanos,
+    /// Latest requester-side response arrival among non-posted ops
+    /// (fence dependency).
+    nonposted_resp_max: Nanos,
+    // ---- responder CPU ----
+    cpu_free: Nanos,
+    // ---- receive queue ring ----
+    rq_free_at: VecDeque<Nanos>,
+    rq_next_slot: usize,
+    // ---- pending copy specs for the next SEND (builder-style) ----
+    pending_copies: Vec<CopySpec>,
+}
+
+impl Fabric {
+    pub fn new(
+        cfg: ServerConfig,
+        timing: TimingModel,
+        layout: Layout,
+        seed: u64,
+        record_writes: bool,
+    ) -> Self {
+        let rq_count = layout.rq_count;
+        Fabric {
+            timing,
+            cfg,
+            mem: MemoryModel::new(layout, record_writes),
+            placement_fifo: true,
+            seed,
+            now: 0,
+            ops: Vec::new(),
+            next_seq: 0,
+            last_arrive: 0,
+            last_place_posted: 0,
+            update_place_max: 0,
+            all_exec_max: 0,
+            last_obs: 0,
+            nonposted_resp_max: 0,
+            cpu_free: 0,
+            rq_free_at: VecDeque::from(vec![0; rq_count]),
+            rq_next_slot: 0,
+            pending_copies: Vec::new(),
+        }
+    }
+
+    /// Requester virtual clock.
+    pub fn now(&self) -> Nanos {
+        self.now
+    }
+
+    /// Advance the requester clock (inter-arrival gaps, think time).
+    pub fn advance(&mut self, dt: Nanos) {
+        self.now += dt;
+    }
+
+    pub fn op(&self, id: OpId) -> &OpState {
+        &self.ops[id.0 as usize]
+    }
+
+    pub fn ops_posted(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Configure the copy directives the responder CPU executes for the
+    /// *next posted* SEND with a copying `OnRecv` handler. When empty,
+    /// the handler copies the whole payload to `wr.recv_target`.
+    pub fn set_recv_copies(&mut self, copies: Vec<CopySpec>) {
+        self.pending_copies = copies;
+    }
+
+    /// Post a work request; returns its id. Milestones are computed
+    /// immediately (timestamp dataflow).
+    pub fn post(&mut self, wr: WorkRequest) -> OpId {
+        // Copy the handful of scalars used on this path (cloning the
+        // whole TimingModel per post showed up in the hot-path profile).
+        let (post_ns, rnic_op_ns, wire_ns, iwarp_local_comp_ns) = (
+            self.timing.post_ns,
+            self.timing.rnic_op_ns,
+            self.timing.wire_ns,
+            self.timing.iwarp_local_comp_ns,
+        );
+        let id = OpId(self.ops.len() as u32);
+        self.now += post_ns;
+
+        // Fence: hold launch until prior non-posted responses arrived.
+        let launch = if wr.fence {
+            self.now.max(self.nonposted_resp_max)
+        } else {
+            self.now
+        };
+
+        // Wire: in-order delivery to the responder RNIC.
+        let mut t_arrive =
+            (launch + rnic_op_ns + wire_ns + rnic_op_ns).max(self.last_arrive);
+
+        // Recv-WR consumers stall until a receive buffer is free
+        // (RNR back-pressure, §4.3).
+        let mut rq_slot = None;
+        if wr.kind.consumes_recv_wr() {
+            let free_at = *self.rq_free_at.front().expect("rq ring empty");
+            t_arrive = t_arrive.max(free_at);
+            self.rq_free_at.pop_front();
+            rq_slot = Some(self.rq_next_slot);
+            self.rq_next_slot = (self.rq_next_slot + 1) % self.mem.layout.rq_count;
+        }
+        self.last_arrive = t_arrive;
+
+        let mut st = OpState {
+            kind: wr.kind,
+            t_posted: launch,
+            t_arrive,
+            t_place: 0,
+            comp_at: None,
+            ack_at: None,
+            write_seq: None,
+        };
+
+        match wr.kind {
+            OpKind::Write | OpKind::WriteImm | OpKind::Send | OpKind::WriteAtomic => {
+                self.run_update(&wr, &mut st, id, rq_slot);
+            }
+            OpKind::Read | OpKind::Flush => {
+                self.run_drain(&wr, &mut st);
+            }
+        }
+
+        // Completion notification for posted ops.
+        if !wr.kind.is_non_posted() {
+            st.comp_at = Some(match self.cfg.transport {
+                Transport::IbRoce => {
+                    // Ack from the responder RNIC on receipt.
+                    st.t_arrive + rnic_op_ns + wire_ns + rnic_op_ns
+                }
+                Transport::Iwarp => {
+                    // Generated at the local transport layer — possibly
+                    // before the op ever reaches the responder (§3.2).
+                    st.t_posted + iwarp_local_comp_ns
+                }
+            });
+        }
+
+        self.ops.push(st);
+        id
+    }
+
+    /// Update-op path: DMA placement + persistence milestones + receive
+    /// completion handling.
+    fn run_update(
+        &mut self,
+        wr: &WorkRequest,
+        st: &mut OpState,
+        id: OpId,
+        rq_slot: Option<usize>,
+    ) {
+        let t = &self.timing;
+        let len = wr.payload.len() as u64;
+        let ddio = self.cfg.ddio;
+
+        // Target: SENDs land in their RQWRB slot; everything else at
+        // wr.target.
+        let target = match wr.kind {
+            OpKind::Send => self.mem.layout.rqwrb_slot_addr(rq_slot.unwrap()),
+            _ => wr.target,
+        };
+        if wr.kind == OpKind::Send {
+            debug_assert!(
+                len <= self.mem.layout.rq_slot_bytes,
+                "SEND payload exceeds RQWRB slot"
+            );
+        }
+
+        // DMA through the RNIC + IIO into the coherent domain.
+        let dma_done = st.t_arrive + t.dma_setup_ns + t.dma_stream_ns(len);
+        let stage = if ddio { t.iio_to_l3_ns } else { t.iio_to_imc_ns };
+        let mut raw_place = dma_done + stage;
+
+        if wr.kind == OpKind::WriteAtomic {
+            // Non-posted: ordered after ALL prior operations' effects.
+            raw_place = raw_place.max(self.all_exec_max) + t.atomic_overhead_ns;
+        }
+
+        let mut jit = jitter(self.seed, id.0 as u64, t.persist_jitter_ns);
+        if t.backlog_period > 0
+            && crate::util::rng::mix(self.seed ^ (id.0 as u64).wrapping_mul(0x9E37))
+                % t.backlog_period
+                == 0
+        {
+            // DMA engine backlog: placement lags far behind receipt.
+            jit += t.backlog_stall_ns;
+        }
+        let t_place = if self.placement_fifo && wr.kind != OpKind::WriteAtomic {
+            // Strict ordering: jitter cannot reorder placements.
+            (raw_place + jit).max(self.last_place_posted)
+        } else if wr.kind == OpKind::WriteAtomic {
+            raw_place // atomic placement is fenced, no jitter
+        } else {
+            raw_place + jit // relaxed ordering: placements may reorder
+        };
+        st.t_place = t_place;
+
+        // Persistence-domain milestone: with DDIO the payload sits in L3
+        // and never reaches the DMP domain unless the responder CPU
+        // flushes it (recorded later via `force_dmp`).
+        let t_dmp = if ddio { NEVER } else { t_place };
+
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        st.write_seq = Some(seq);
+        if self.mem.recording() {
+            // Payload bytes are only materialized for crash-testing
+            // runs; pure-latency sweeps skip the clone (hot path).
+            self.mem.record(WriteEvent {
+                seq,
+                addr: target,
+                data: wr.payload.clone(),
+                src: WriteSource::Rdma { op_index: id.0 },
+                t_arrive: st.t_arrive,
+                t_place,
+                t_dmp,
+            });
+        }
+
+        // Ordering chains.
+        if wr.kind != OpKind::WriteAtomic {
+            self.last_place_posted = self.last_place_posted.max(t_place);
+        }
+        self.update_place_max = self.update_place_max.max(t_place);
+        self.all_exec_max = self.all_exec_max.max(t_place);
+        if wr.kind == OpKind::WriteAtomic {
+            // Non-posted: response returns to the requester.
+            let resp = t_place + t.rnic_op_ns + t.wire_ns + t.rnic_op_ns;
+            st.comp_at = Some(resp);
+            self.nonposted_resp_max = self.nonposted_resp_max.max(resp);
+        }
+
+        // Receive completion -> responder CPU handler.
+        if wr.kind.consumes_recv_wr() {
+            self.run_recv_handler(wr, st, target, rq_slot.unwrap());
+        }
+    }
+
+    /// Responder CPU processing of a receive completion (SEND/WRITEIMM).
+    fn run_recv_handler(
+        &mut self,
+        wr: &WorkRequest,
+        st: &mut OpState,
+        rqwrb_addr: u64,
+        rq_slot: usize,
+    ) {
+        let t = self.timing.clone();
+        // Receive completions surface in posting order, after the
+        // message payload is visible (placed).
+        let t_obs = st.t_place.max(self.last_obs);
+        self.last_obs = t_obs;
+
+        let mut dispatch = t.cpu_dispatch_ns;
+        if t.cpu_stall_period > 0
+            && crate::util::rng::mix(
+                self.seed ^ (self.ops.len() as u64).wrapping_mul(0xC0DE),
+            ) % t.cpu_stall_period
+                == 0
+        {
+            // The server CPU was busy elsewhere; the message waits.
+            dispatch += t.cpu_stall_ns;
+        }
+        let start = (t_obs + dispatch).max(self.cpu_free);
+        let mut clock = start;
+
+        match wr.on_recv {
+            OnRecv::Recycle => {}
+            OnRecv::FlushTargetAck => {
+                // Flush the announced earlier WRITE's lines to the
+                // persistence domain.
+                clock += t.cpu_flush_ns(wr.recv_flush_len);
+                self.force_dmp_range(wr.recv_target, wr.recv_flush_len, clock);
+            }
+            OnRecv::CopyFlushAck
+            | OnRecv::CopyAck
+            | OnRecv::CopyFlushLazy
+            | OnRecv::CopyLazy => {
+                let flush = wr.on_recv.flushes_copies();
+                let copies = self.take_copies(wr);
+                for c in copies {
+                    clock += t.cpu_copy_ns(c.len as u64);
+                    let store_time = clock;
+                    let t_dmp = if flush {
+                        clock += t.cpu_flush_ns(c.len as u64);
+                        clock
+                    } else {
+                        // Store stays in cache: persistent only under
+                        // MHP/WSP semantics.
+                        NEVER
+                    };
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    if self.mem.recording() {
+                        let data = wr.payload
+                            [c.payload_off..c.payload_off + c.len]
+                            .to_vec();
+                        self.mem.record(WriteEvent {
+                            seq,
+                            addr: c.target,
+                            data,
+                            src: WriteSource::Cpu,
+                            t_arrive: store_time,
+                            t_place: store_time,
+                            t_dmp,
+                        });
+                    }
+                }
+            }
+        }
+
+        if wr.on_recv.sends_ack() {
+            clock += t.cpu_post_ack_ns;
+            // Ack SEND travels back to the requester.
+            let ack_at = clock + t.rnic_op_ns + t.wire_ns + t.rnic_op_ns;
+            st.ack_at = Some(ack_at);
+        }
+
+        self.cpu_free = clock;
+        // The receive WR (and its buffer) is recycled once the CPU is
+        // done with the message.
+        let _ = rq_slot;
+        self.rq_free_at.push_back(clock);
+        let _ = rqwrb_addr;
+    }
+
+    fn take_copies(&mut self, wr: &WorkRequest) -> Vec<CopySpec> {
+        if self.pending_copies.is_empty() {
+            vec![CopySpec {
+                payload_off: 0,
+                len: wr.payload.len(),
+                target: wr.recv_target,
+            }]
+        } else {
+            std::mem::take(&mut self.pending_copies)
+        }
+    }
+
+    /// FLUSH / READ execution: completes at the responder only after all
+    /// prior update placements, plus the PCIe drain of RNIC+IIO buffers.
+    fn run_drain(&mut self, wr: &WorkRequest, st: &mut OpState) {
+        let t = &self.timing;
+        let mut drain = t.pcie_drain_ns;
+        if wr.kind == OpKind::Flush {
+            // Native FLUSH (IBTA) is slightly cheaper than the READ
+            // emulation; the planner only emits FLUSH ops when the
+            // extension is available.
+            drain = drain.saturating_sub(t.native_flush_discount_ns);
+        }
+        // Non-posted ops are totally ordered at the responder: this
+        // drain starts only after prior updates' placements AND prior
+        // non-posted executions have finished.
+        let done = st
+            .t_arrive
+            .max(self.update_place_max)
+            .max(self.all_exec_max)
+            + drain;
+        let resp = done + t.rnic_op_ns + t.wire_ns + t.rnic_op_ns;
+        st.comp_at = Some(resp);
+        self.all_exec_max = self.all_exec_max.max(done);
+        self.nonposted_resp_max = self.nonposted_resp_max.max(resp);
+    }
+
+    /// Force writes overlapping `[addr, addr+len)` into the DMP domain at
+    /// `when` (responder CPU clflush/clwb effect), provided their data was
+    /// already placed (cache-resident) by then.
+    fn force_dmp_range(&mut self, addr: u64, len: u64, when: Nanos) {
+        if !self.mem.recording() {
+            return;
+        }
+        for ev in self.mem.writes_mut().iter_mut() {
+            let end = ev.addr + ev.data.len() as u64;
+            if ev.addr < addr + len && end > addr && ev.t_place <= when {
+                ev.t_dmp = ev.t_dmp.min(when);
+            }
+        }
+    }
+
+    /// Block the requester until the op's completion notification.
+    /// Panics if the op was not set up to generate one.
+    pub fn wait_comp(&mut self, id: OpId) -> Nanos {
+        let comp = self.ops[id.0 as usize]
+            .comp_at
+            .expect("op generates no completion");
+        self.now = self.now.max(comp);
+        self.now
+    }
+
+    /// Block the requester until the responder handler's ack message.
+    pub fn wait_ack(&mut self, id: OpId) -> Nanos {
+        let ack = self.ops[id.0 as usize]
+            .ack_at
+            .expect("op's handler does not ack — recipe bug");
+        self.now = self.now.max(ack);
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+
+    fn fabric(pd: PDomain, ddio: bool, rqwrb: RqwrbLoc) -> Fabric {
+        let cfg = ServerConfig::new(pd, ddio, rqwrb);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, 7, true)
+    }
+
+    #[test]
+    fn write_milestones_ordered() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let st = f.op(id);
+        assert!(st.t_posted < st.t_arrive);
+        assert!(st.t_arrive < st.t_place);
+        assert!(st.comp_at.unwrap() > st.t_arrive);
+    }
+
+    #[test]
+    fn in_order_delivery() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let b = f.post(WorkRequest::write(0x2000, vec![2u8; 64]));
+        assert!(f.op(a).t_arrive <= f.op(b).t_arrive);
+    }
+
+    #[test]
+    fn ddio_keeps_data_out_of_dmp() {
+        let mut f = fabric(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        f.wait_comp(id);
+        // Even long after completion, the data never persisted (DMP).
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Dmp);
+        assert_eq!(img.read(0x1000, 1)[0], 0);
+        // Under MHP semantics the same trace would be persistent.
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x1000, 1)[0], 1);
+    }
+
+    #[test]
+    fn no_ddio_place_is_dmp() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![9u8; 64]));
+        let place = f.op(id).t_place;
+        let img = f.mem.crash_image(place, PDomain::Dmp);
+        assert_eq!(img.read(0x1000, 1)[0], 9);
+    }
+
+    #[test]
+    fn flush_completes_after_prior_placements() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let w = f.post(WorkRequest::write(0x1000, vec![1u8; 4096]));
+        let fl = f.post(WorkRequest::flush());
+        let place = f.op(w).t_place;
+        let comp = f.op(fl).comp_at.unwrap();
+        assert!(comp > place + f.timing.pcie_drain_ns);
+    }
+
+    #[test]
+    fn iwarp_completion_precedes_arrival() {
+        let cfg = ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Dram)
+            .with_transport(Transport::Iwarp);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        let mut f =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 7, true);
+        let id = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let st = f.op(id);
+        assert!(st.comp_at.unwrap() < st.t_arrive, "iWARP early completion");
+    }
+
+    #[test]
+    fn ib_completion_after_arrival() {
+        let mut f = fabric(PDomain::Wsp, true, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let st = f.op(id);
+        assert!(st.comp_at.unwrap() > st.t_arrive);
+    }
+
+    #[test]
+    fn send_lands_in_rqwrb_ring() {
+        let mut f = fabric(PDomain::Mhp, true, RqwrbLoc::Pm);
+        let a = f.post(WorkRequest::send(vec![5u8; 32], OnRecv::Recycle, 0));
+        let b = f.post(WorkRequest::send(vec![6u8; 32], OnRecv::Recycle, 0));
+        f.wait_comp(a);
+        f.wait_comp(b);
+        let slot0 = f.mem.layout.rqwrb_slot_addr(0);
+        let slot1 = f.mem.layout.rqwrb_slot_addr(1);
+        let img = f.mem.visible_image(Nanos::MAX - 1);
+        assert_eq!(img.read(slot0, 1)[0], 5);
+        assert_eq!(img.read(slot1, 1)[0], 6);
+    }
+
+    #[test]
+    fn copy_handler_writes_target_and_acks() {
+        let mut f = fabric(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let s = f.post(WorkRequest::send(
+            vec![7u8; 64],
+            OnRecv::CopyFlushAck,
+            0x4000,
+        ));
+        let end = f.wait_ack(s);
+        // CPU copy persisted via explicit flush: DMP image has it.
+        let img = f.mem.crash_image(end, PDomain::Dmp);
+        assert_eq!(img.read(0x4000, 1)[0], 7);
+    }
+
+    #[test]
+    fn copy_without_flush_not_dmp_persistent() {
+        let mut f = fabric(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let s =
+            f.post(WorkRequest::send(vec![8u8; 64], OnRecv::CopyAck, 0x4000));
+        let end = f.wait_ack(s);
+        let img = f.mem.crash_image(end, PDomain::Dmp);
+        assert_eq!(img.read(0x4000, 1)[0], 0, "unflushed store must not persist");
+        // But it *is* persistent under MHP.
+        let img = f.mem.crash_image(end, PDomain::Mhp);
+        assert_eq!(img.read(0x4000, 1)[0], 8);
+    }
+
+    #[test]
+    fn flush_target_ack_forces_ddio_write_into_dmp() {
+        let mut f = fabric(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let w = f.post(WorkRequest::write(0x1000, vec![3u8; 64]));
+        let mut notify = WorkRequest::send(vec![0u8; 8], OnRecv::FlushTargetAck, 0);
+        notify.recv_target = 0x1000;
+        notify.recv_flush_len = 64;
+        let s = f.post(notify);
+        let end = f.wait_ack(s);
+        let _ = w;
+        let img = f.mem.crash_image(end, PDomain::Dmp);
+        assert_eq!(img.read(0x1000, 1)[0], 3, "flushed DDIO write persists");
+    }
+
+    #[test]
+    fn atomic_write_ordered_after_flush() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let _a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let fl = f.post(WorkRequest::flush());
+        let b = f.post(WorkRequest::write_atomic(0x2000, vec![2u8; 8]));
+        // Atomic placement must come after the flush's responder-side
+        // completion point (all_exec_max), which itself is after a's place.
+        let fl_resp = f.op(fl).comp_at.unwrap();
+        let wire_back = f.timing.rnic_op_ns * 2 + f.timing.wire_ns;
+        let flush_done = fl_resp - wire_back;
+        assert!(f.op(b).t_place >= flush_done);
+    }
+
+    #[test]
+    fn fence_blocks_until_nonposted_response() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let _w = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let fl = f.post(WorkRequest::flush());
+        let fenced = f.post(WorkRequest::write(0x2000, vec![2u8; 64]).with_fence());
+        assert!(f.op(fenced).t_posted >= f.op(fl).comp_at.unwrap());
+    }
+
+    #[test]
+    fn unfenced_write_launches_before_flush_response() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let _w = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let fl = f.post(WorkRequest::flush());
+        let plain = f.post(WorkRequest::write(0x2000, vec![2u8; 64]));
+        assert!(f.op(plain).t_posted < f.op(fl).comp_at.unwrap());
+    }
+
+    #[test]
+    fn rq_backpressure_stalls_sends() {
+        // 8-slot ring: the 9th send cannot arrive before the CPU frees
+        // slot 0.
+        let mut f = fabric(PDomain::Mhp, true, RqwrbLoc::Pm);
+        let mut ids = Vec::new();
+        for i in 0..9 {
+            ids.push(f.post(WorkRequest::send(
+                vec![i as u8; 16],
+                OnRecv::Recycle,
+                0,
+            )));
+        }
+        // The 9th arrival is gated on CPU recycling (cpu_free of msg 0).
+        let first_cpu_done = f.op(ids[0]).t_place; // lower bound
+        assert!(f.op(ids[8]).t_arrive > first_cpu_done);
+    }
+
+    #[test]
+    fn relaxed_ordering_can_reorder_placements() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        let timing = TimingModel::default(); // jitter on
+        let mut any_reorder = false;
+        for seed in 0..64 {
+            let mut f = Fabric::new(cfg, timing.clone(), layout.clone(), seed, true);
+            f.placement_fifo = false;
+            let a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+            let b = f.post(WorkRequest::write(0x2000, vec![2u8; 8]));
+            if f.op(b).t_place < f.op(a).t_place {
+                any_reorder = true;
+                break;
+            }
+        }
+        assert!(any_reorder, "relaxed mode should reorder for some seed");
+    }
+
+    #[test]
+    fn fifo_ordering_never_reorders_placements() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        for seed in 0..64 {
+            let mut f = Fabric::new(
+                cfg,
+                TimingModel::default(),
+                layout.clone(),
+                seed,
+                true,
+            );
+            let a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+            let b = f.post(WorkRequest::write(0x2000, vec![2u8; 8]));
+            assert!(f.op(b).t_place >= f.op(a).t_place, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn zero_length_write_is_legal() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![]));
+        assert!(f.op(id).t_place > f.op(id).t_arrive);
+        f.wait_comp(id);
+    }
+
+    #[test]
+    fn large_payload_streaming_dominates() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 22, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        let mut f =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 7, true);
+        let small = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let small_dma = f.op(small).t_place - f.op(small).t_arrive;
+        let big = f.post(WorkRequest::write(0x8000, vec![1u8; 1 << 20]));
+        let big_dma = f.op(big).t_place - f.op(big).t_arrive;
+        // 1 MiB at ~12 B/ns ≈ 87 us >> the 64 B path.
+        assert!(big_dma > 50_000, "{big_dma}");
+        assert!(big_dma > 100 * small_dma);
+    }
+
+    #[test]
+    fn consecutive_flushes_are_ordered() {
+        let mut f = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let f1 = f.post(WorkRequest::flush());
+        let f2 = f.post(WorkRequest::flush());
+        assert!(f.op(f2).comp_at.unwrap() > f.op(f1).comp_at.unwrap());
+    }
+
+    #[test]
+    fn atomic_completion_is_response_based() {
+        let mut f = fabric(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let a = f.post(WorkRequest::write_atomic(0x1000, vec![1u8; 8]));
+        let st = f.op(a);
+        // Non-posted: the completion arrives only after the effect, a
+        // full wire trip after placement.
+        assert!(st.comp_at.unwrap() >= st.t_place + f.timing.wire_ns);
+    }
+
+    #[test]
+    fn advance_moves_requester_clock() {
+        let mut f = fabric(PDomain::Wsp, true, RqwrbLoc::Dram);
+        let t0 = f.now();
+        f.advance(1234);
+        assert_eq!(f.now(), t0 + 1234);
+        let id = f.post(WorkRequest::write(0x1000, vec![1u8; 8]));
+        assert!(f.op(id).t_posted >= t0 + 1234);
+    }
+
+    #[test]
+    fn iwarp_nonposted_still_response_based() {
+        let cfg = ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Dram)
+            .with_transport(Transport::Iwarp);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        let mut f =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 7, true);
+        f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let fl = f.post(WorkRequest::flush());
+        // Even on iWARP, FLUSH completion requires the responder response.
+        assert!(f.op(fl).comp_at.unwrap() > f.op(fl).t_arrive);
+    }
+
+    #[test]
+    fn wsp_persistence_at_arrival() {
+        let mut f = fabric(PDomain::Wsp, true, RqwrbLoc::Dram);
+        let id = f.post(WorkRequest::write(0x1000, vec![4u8; 64]));
+        let arrive = f.op(id).t_arrive;
+        let img = f.mem.crash_image(arrive, PDomain::Wsp);
+        assert_eq!(img.read(0x1000, 1)[0], 4);
+        // One ns earlier it was still on the wire.
+        let img = f.mem.crash_image(arrive - 1, PDomain::Wsp);
+        assert_eq!(img.read(0x1000, 1)[0], 0);
+    }
+}

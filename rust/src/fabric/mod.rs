@@ -1,0 +1,11 @@
+//! RDMA fabric simulation: operation vocabulary, timing model, and the
+//! reliable-connection engine with the paper's ordering/completion
+//! semantics (§2).
+
+pub mod engine;
+pub mod ops;
+pub mod timing;
+
+pub use engine::{CopySpec, Fabric, OpState};
+pub use ops::{OnRecv, OpId, OpKind, WorkRequest};
+pub use timing::{Nanos, TimingModel};

@@ -1,0 +1,257 @@
+//! RDMA operation vocabulary (paper §2).
+//!
+//! Posted ops (WRITE, WRITEIMM, SEND) produce no response; non-posted ops
+//! (READ, FLUSH, ATOMIC WRITE) return a result and are totally ordered
+//! with all prior operations at the responder. The distinction drives both
+//! completion semantics and the persistence recipes.
+
+/// Operation kinds carried on a reliable connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// One-sided write of a payload to a responder address.
+    Write,
+    /// One-sided write + 32-bit immediate delivered to the responder CPU
+    /// (consumes a receive WR; generates a receive completion).
+    WriteImm,
+    /// Two-sided message; payload lands in the next RQWRB.
+    Send,
+    /// One-sided read (also the FLUSH emulation vehicle, §3.4).
+    Read,
+    /// IBTA-proposed FLUSH: all prior updates on the connection are
+    /// visible (and drained through the IIO) before its completion.
+    Flush,
+    /// IBTA-proposed non-posted ATOMIC WRITE (<= 8 bytes): ordered after
+    /// all preceding posted and non-posted ops at the responder.
+    WriteAtomic,
+}
+
+impl OpKind {
+    /// Non-posted ops produce a response consumed by the requester and
+    /// are totally ordered with prior ops at the responder (paper §2).
+    pub fn is_non_posted(&self) -> bool {
+        matches!(self, OpKind::Read | OpKind::Flush | OpKind::WriteAtomic)
+    }
+
+    /// Ops that deposit payload bytes into responder memory.
+    pub fn is_update(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Write | OpKind::WriteImm | OpKind::Send | OpKind::WriteAtomic
+        )
+    }
+
+    /// Ops that consume a receive work request at the responder.
+    pub fn consumes_recv_wr(&self) -> bool {
+        matches!(self, OpKind::Send | OpKind::WriteImm)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Write => "WRITE",
+            OpKind::WriteImm => "WRITEIMM",
+            OpKind::Send => "SEND",
+            OpKind::Read => "READ",
+            OpKind::Flush => "FLUSH",
+            OpKind::WriteAtomic => "WRITE_atomic",
+        }
+    }
+}
+
+/// What the responder CPU does when a receive completion (SEND or
+/// WRITEIMM) surfaces — the responder half of each persistence recipe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnRecv {
+    /// Consume the completion (recycle the WR); no application action.
+    /// Used when SEND is treated as a one-sided op (PM-resident RQWRB).
+    Recycle,
+    /// Flush the target cache lines of a preceding WRITE/WRITEIMM to the
+    /// persistence domain, then ack. (DMP + DDIO recipes.)
+    FlushTargetAck,
+    /// Copy the message payload to its target location, flush the target
+    /// lines, then ack. (DMP SEND message-passing recipes.)
+    CopyFlushAck,
+    /// Copy the payload to its target; no flush needed (MHP/WSP — store
+    /// visibility implies persistence), then ack.
+    CopyAck,
+    /// Lazy application for one-sided SEND recipes (PM-resident RQWRB,
+    /// paper §3.2/§3.3): the requester does NOT wait — the message itself
+    /// is the durable object — but the responder must still apply it
+    /// (copy + flush) off the critical path before recycling the RQWRB,
+    /// or the ring would overwrite the only persistent copy.
+    CopyFlushLazy,
+    /// Lazy application without flushes (MHP/WSP responders).
+    CopyLazy,
+}
+
+impl OnRecv {
+    pub fn sends_ack(&self) -> bool {
+        matches!(
+            self,
+            OnRecv::FlushTargetAck | OnRecv::CopyFlushAck | OnRecv::CopyAck
+        )
+    }
+
+    pub fn copies(&self) -> bool {
+        matches!(
+            self,
+            OnRecv::CopyFlushAck
+                | OnRecv::CopyAck
+                | OnRecv::CopyFlushLazy
+                | OnRecv::CopyLazy
+        )
+    }
+
+    pub fn flushes_copies(&self) -> bool {
+        matches!(self, OnRecv::CopyFlushAck | OnRecv::CopyFlushLazy)
+    }
+}
+
+/// A work request as posted by the requester.
+#[derive(Debug, Clone)]
+pub struct WorkRequest {
+    pub kind: OpKind,
+    /// Responder target address (WRITE/WRITEIMM/WRITE_atomic: the
+    /// destination; SEND: ignored — the RQWRB address is assigned at the
+    /// responder; READ/FLUSH: the region being read/flushed).
+    pub target: u64,
+    /// Payload bytes (empty for READ/FLUSH).
+    pub payload: Vec<u8>,
+    /// Fence flag: block this op at the requester until all prior
+    /// non-posted ops on the QP have completed (paper §2).
+    pub fence: bool,
+    /// Responder CPU behavior for the receive completion, when
+    /// `kind.consumes_recv_wr()`. For `FlushTargetAck`/`CopyFlushAck`/
+    /// `CopyAck` the flush/copy applies to (`recv_target`, payload/len).
+    pub on_recv: OnRecv,
+    /// Target address the responder handler copies to / flushes
+    /// (`CopyFlushAck`, `CopyAck`, `FlushTargetAck`).
+    pub recv_target: u64,
+    /// Byte count the responder handler flushes for `FlushTargetAck`
+    /// (length of the earlier one-sided WRITE this message announces).
+    pub recv_flush_len: u64,
+}
+
+impl WorkRequest {
+    pub fn write(target: u64, payload: Vec<u8>) -> Self {
+        WorkRequest {
+            kind: OpKind::Write,
+            target,
+            payload,
+            fence: false,
+            on_recv: OnRecv::Recycle,
+            recv_target: 0,
+            recv_flush_len: 0,
+        }
+    }
+
+    pub fn write_imm(target: u64, payload: Vec<u8>, on_recv: OnRecv) -> Self {
+        let len = payload.len() as u64;
+        WorkRequest {
+            kind: OpKind::WriteImm,
+            target,
+            payload,
+            fence: false,
+            on_recv,
+            recv_target: target,
+            recv_flush_len: len,
+        }
+    }
+
+    pub fn send(payload: Vec<u8>, on_recv: OnRecv, recv_target: u64) -> Self {
+        let len = payload.len() as u64;
+        WorkRequest {
+            kind: OpKind::Send,
+            target: 0,
+            payload,
+            fence: false,
+            on_recv,
+            recv_target,
+            recv_flush_len: len,
+        }
+    }
+
+    pub fn flush() -> Self {
+        WorkRequest {
+            kind: OpKind::Flush,
+            target: 0,
+            payload: Vec::new(),
+            fence: false,
+            on_recv: OnRecv::Recycle,
+            recv_target: 0,
+            recv_flush_len: 0,
+        }
+    }
+
+    pub fn read(target: u64) -> Self {
+        WorkRequest { target, kind: OpKind::Read, ..WorkRequest::flush() }
+    }
+
+    /// Non-posted atomic write; panics if payload exceeds the 8-byte
+    /// atomicity limit (paper §2).
+    pub fn write_atomic(target: u64, payload: Vec<u8>) -> Self {
+        assert!(
+            payload.len() <= 8,
+            "WRITE_atomic is limited to 8 bytes, got {}",
+            payload.len()
+        );
+        WorkRequest {
+            kind: OpKind::WriteAtomic,
+            target,
+            payload,
+            fence: false,
+            on_recv: OnRecv::Recycle,
+            recv_target: 0,
+            recv_flush_len: 0,
+        }
+    }
+
+    pub fn with_fence(mut self) -> Self {
+        self.fence = true;
+        self
+    }
+}
+
+/// Handle to a posted op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posted_vs_non_posted() {
+        assert!(!OpKind::Write.is_non_posted());
+        assert!(!OpKind::WriteImm.is_non_posted());
+        assert!(!OpKind::Send.is_non_posted());
+        assert!(OpKind::Read.is_non_posted());
+        assert!(OpKind::Flush.is_non_posted());
+        assert!(OpKind::WriteAtomic.is_non_posted());
+    }
+
+    #[test]
+    fn update_classification() {
+        assert!(OpKind::Write.is_update());
+        assert!(OpKind::WriteAtomic.is_update());
+        assert!(!OpKind::Read.is_update());
+        assert!(!OpKind::Flush.is_update());
+    }
+
+    #[test]
+    fn recv_wr_consumers() {
+        assert!(OpKind::Send.consumes_recv_wr());
+        assert!(OpKind::WriteImm.consumes_recv_wr());
+        assert!(!OpKind::Write.consumes_recv_wr());
+    }
+
+    #[test]
+    #[should_panic(expected = "8 bytes")]
+    fn atomic_write_size_limit() {
+        WorkRequest::write_atomic(0, vec![0u8; 9]);
+    }
+
+    #[test]
+    fn fence_builder() {
+        assert!(WorkRequest::flush().with_fence().fence);
+    }
+}

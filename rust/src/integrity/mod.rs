@@ -1,0 +1,113 @@
+//! Record/message integrity: the Fletcher checksum spec shared across all
+//! three layers.
+//!
+//! This is the rust mirror of `python/compile/kernels/ref.py` — the same
+//! dual-accumulator Fletcher over little-endian u32 words, mod 2^32:
+//!
+//! ```text
+//! s1 = 1; s2 = 0
+//! for w in words: s1 += w; s2 += s1      (wrapping u32)
+//! ```
+//!
+//! `s1` starts at 1 so all-zero data never checksums to (0, 0): freshly
+//! zeroed PM can never masquerade as a valid record — the property that
+//! lets REMOTELOG detect its tail by checksum failure (paper §4.1). The
+//! requester computes checksums here on the hot path; the recovery path
+//! recomputes them through the AOT-compiled Pallas kernel, and the python
+//! tests pin both to the same oracle.
+
+/// Fletcher over u32 words. Returns (s1, s2).
+#[inline]
+pub fn fletcher_words(words: &[u32]) -> (u32, u32) {
+    let mut s1: u32 = 1;
+    let mut s2: u32 = 0;
+    for &w in words {
+        s1 = s1.wrapping_add(w);
+        s2 = s2.wrapping_add(s1);
+    }
+    (s1, s2)
+}
+
+/// Fletcher over bytes, interpreted as little-endian u32 words; a partial
+/// trailing word is zero-padded.
+pub fn fletcher_bytes(bytes: &[u8]) -> (u32, u32) {
+    let mut s1: u32 = 1;
+    let mut s2: u32 = 0;
+    let mut chunks = bytes.chunks_exact(4);
+    for c in &mut chunks {
+        s1 = s1.wrapping_add(u32::from_le_bytes(c.try_into().unwrap()));
+        s2 = s2.wrapping_add(s1);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut last = [0u8; 4];
+        last[..rem.len()].copy_from_slice(rem);
+        s1 = s1.wrapping_add(u32::from_le_bytes(last));
+        s2 = s2.wrapping_add(s1);
+    }
+    (s1, s2)
+}
+
+/// Combined 64-bit digest (s2 ‖ s1) — convenient single-word form.
+pub fn fletcher64(bytes: &[u8]) -> u64 {
+    let (s1, s2) = fletcher_bytes(bytes);
+    ((s2 as u64) << 32) | s1 as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_spec_zero() {
+        // ref.py: zero payload of W words -> s1 = 1, s2 = W.
+        let words = [0u32; 14];
+        assert_eq!(fletcher_words(&words), (1, 14));
+    }
+
+    #[test]
+    fn matches_python_spec_known_vector() {
+        // Hand-computed: words [1, 2, 3]:
+        // s1: 1->2->4->7 ; s2: 2->6->13
+        assert_eq!(fletcher_words(&[1, 2, 3]), (7, 13));
+    }
+
+    #[test]
+    fn wrapping_behaviour() {
+        let words = [u32::MAX, u32::MAX];
+        // s1: 1 + MAX = 0; + MAX = MAX. s2: 0 + 0 = 0; + MAX = MAX.
+        assert_eq!(fletcher_words(&words), (u32::MAX, u32::MAX));
+    }
+
+    #[test]
+    fn bytes_match_words_for_aligned_input() {
+        let words = [0xDEADBEEFu32, 0x01020304, 0xFFFFFFFF];
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(fletcher_bytes(&bytes), fletcher_words(&words));
+    }
+
+    #[test]
+    fn trailing_partial_word_zero_padded() {
+        let a = fletcher_bytes(&[0xAA]);
+        let b = fletcher_bytes(&[0xAA, 0, 0, 0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        assert_ne!(fletcher_words(&[1, 2]), fletcher_words(&[2, 1]));
+    }
+
+    #[test]
+    fn single_bit_sensitivity() {
+        let base = fletcher64(&[0u8; 64]);
+        for i in 0..64 {
+            let mut buf = [0u8; 64];
+            buf[i] = 1;
+            assert_ne!(fletcher64(&buf), base, "byte {i}");
+        }
+    }
+}

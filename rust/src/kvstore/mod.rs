@@ -1,0 +1,403 @@
+//! Replicated key-value store over remote PM — the second workload class
+//! the paper's intro motivates ("distributed, highly available
+//! applications"), built entirely on the persistence planner.
+//!
+//! Updates-in-place are torn by crashes, so each bucket keeps an **A/B
+//! slot pair** plus an 8-byte *active-version* word: a put writes the
+//! full checksummed entry into the inactive slot (`a`), then flips the
+//! version word (`b`) — a strictly-ordered compound update, executed
+//! with the planner-selected Table-3 method for the responder's
+//! configuration. Recovery reads the version word, validates the slot it
+//! designates, and falls back to the previous committed slot if a crash
+//! tore the in-flight put: **acked puts are always recovered; un-acked
+//! puts roll back atomically; garbage is never returned.**
+//!
+//! Layout per bucket (192 B): slot A (64 B) ‖ slot B (64 B) ‖ version
+//! word (64 B line, 8 B used). Entry format mirrors the REMOTELOG record
+//! geometry (16 u32 words, Fletcher pair in words 14/15):
+//! `key(2w) ‖ version(1w) ‖ len(1w) ‖ value(10w = 40 B) ‖ s1 ‖ s2`.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::integrity::fletcher_words;
+use crate::persist::config::ServerConfig;
+use crate::persist::exec::{exec_compound, Update};
+use crate::persist::method::{CompoundMethod, Primary};
+use crate::persist::planner::plan_compound;
+use crate::server::memory::{Image, Layout};
+use std::collections::HashMap;
+
+pub const ENTRY_BYTES: usize = 64;
+pub const BUCKET_BYTES: u64 = 192;
+pub const VALUE_BYTES: usize = 40;
+const KV_BASE: u64 = 0x1000;
+
+/// Encode an entry image.
+pub fn encode_entry(key: u64, version: u32, value: &[u8]) -> [u8; ENTRY_BYTES] {
+    assert!(value.len() <= VALUE_BYTES, "value too large");
+    let mut words = [0u32; 16];
+    words[0] = key as u32;
+    words[1] = (key >> 32) as u32;
+    words[2] = version;
+    words[3] = value.len() as u32;
+    let mut vbytes = [0u8; VALUE_BYTES];
+    vbytes[..value.len()].copy_from_slice(value);
+    for i in 0..10 {
+        words[4 + i] =
+            u32::from_le_bytes(vbytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..14]);
+    words[14] = s1;
+    words[15] = s2;
+    let mut out = [0u8; ENTRY_BYTES];
+    for (i, w) in words.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode + integrity-check an entry image; returns (key, version, value).
+pub fn decode_entry(bytes: &[u8]) -> Option<(u64, u32, Vec<u8>)> {
+    let mut words = [0u32; 16];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..14]);
+    if words[14] != s1 || words[15] != s2 {
+        return None;
+    }
+    let key = words[0] as u64 | ((words[1] as u64) << 32);
+    let len = words[3] as usize;
+    if len > VALUE_BYTES {
+        return None;
+    }
+    let mut value = Vec::with_capacity(len);
+    for i in 0..len {
+        value.push(bytes[16 + i]);
+    }
+    Some((key, words[2], value))
+}
+
+/// Oracle record of an acked put.
+#[derive(Debug, Clone)]
+pub struct PutRecord {
+    pub key: u64,
+    pub version: u32,
+    pub value: Vec<u8>,
+    pub acked_at: Nanos,
+}
+
+/// A replicated KV client bound to one simulated responder.
+pub struct RemoteKv {
+    pub fab: Fabric,
+    pub capacity: u64,
+    method: CompoundMethod,
+    versions: HashMap<u64, u32>,
+    /// Requester-side bucket directory: linear-probed assignment so
+    /// colliding keys get distinct buckets (recovery reads keys from the
+    /// entries themselves, so the directory needs no persistence).
+    buckets: HashMap<u64, u64>,
+    occupied: std::collections::HashSet<u64>,
+    /// Acked-put oracle (recording runs only).
+    pub puts: Vec<PutRecord>,
+    next_msg: u32,
+}
+
+impl RemoteKv {
+    pub fn new(
+        cfg: ServerConfig,
+        timing: TimingModel,
+        capacity: u64,
+        seed: u64,
+        record: bool,
+    ) -> Self {
+        let pm_size =
+            (KV_BASE + capacity * BUCKET_BYTES + 64 * 256 + 4096).next_power_of_two();
+        let layout = Layout::new(pm_size, pm_size / 2, 64, 256, cfg.rqwrb);
+        let fab = Fabric::new(cfg, timing, layout, seed, record);
+        RemoteKv {
+            fab,
+            capacity,
+            method: plan_compound(&cfg, Primary::Write, 8),
+            versions: HashMap::new(),
+            buckets: HashMap::new(),
+            occupied: std::collections::HashSet::new(),
+            puts: Vec::new(),
+            next_msg: 0,
+        }
+    }
+
+    pub fn method(&self) -> CompoundMethod {
+        self.method
+    }
+
+    /// Override the planned method (wrong-method demonstrations and
+    /// ablations only — the planner's choice is the correct one).
+    pub fn with_method(mut self, m: CompoundMethod) -> Self {
+        self.method = m;
+        self
+    }
+
+    /// Bucket for `key`: previously assigned, or the first free bucket
+    /// by linear probing from the key's hash. Panics when full (no
+    /// eviction — sized by the caller).
+    fn bucket(&mut self, key: u64) -> u64 {
+        if let Some(&b) = self.buckets.get(&key) {
+            return b;
+        }
+        let h = crate::util::rng::mix(key) % self.capacity;
+        for step in 0..self.capacity {
+            let b = (h + step) % self.capacity;
+            if !self.occupied.contains(&b) {
+                self.occupied.insert(b);
+                self.buckets.insert(key, b);
+                return b;
+            }
+        }
+        panic!("kv store full: {} buckets", self.capacity);
+    }
+
+    fn slot_addr(&self, bucket: u64, slot: u32) -> u64 {
+        KV_BASE + bucket * BUCKET_BYTES + slot as u64 * ENTRY_BYTES as u64
+    }
+
+    fn version_addr(&self, bucket: u64) -> u64 {
+        KV_BASE + bucket * BUCKET_BYTES + 2 * ENTRY_BYTES as u64
+    }
+
+    /// Durably replicate `key -> value`. Returns when the responder's
+    /// configuration-correct persistence point is observed.
+    pub fn put(&mut self, key: u64, value: &[u8]) -> Nanos {
+        let version = self.versions.get(&key).copied().unwrap_or(0) + 1;
+        let bucket = self.bucket(key);
+        let slot = version % 2; // alternate slots; version 0 = empty
+        let entry = encode_entry(key, version, value);
+        let a = Update::new(self.slot_addr(bucket, slot), entry.to_vec());
+        let b = Update::new(
+            self.version_addr(bucket),
+            (version as u64).to_le_bytes().to_vec(),
+        );
+        let msg = self.next_msg;
+        self.next_msg += 1;
+        let out = exec_compound(&mut self.fab, self.method, &a, &b, msg);
+        self.versions.insert(key, version);
+        if self.fab.mem.recording() {
+            self.puts.push(PutRecord {
+                key,
+                version,
+                value: value.to_vec(),
+                acked_at: out.acked,
+            });
+        }
+        out.acked
+    }
+
+    /// Latest acked version per key at virtual time `t` (oracle view).
+    pub fn acked_versions_at(&self, t: Nanos) -> HashMap<u64, &PutRecord> {
+        let mut latest: HashMap<u64, &PutRecord> = HashMap::new();
+        for p in self.puts.iter().filter(|p| p.acked_at <= t) {
+            let e = latest.entry(p.key).or_insert(p);
+            if p.version > e.version {
+                *e = p;
+            }
+        }
+        latest
+    }
+}
+
+/// Recover the committed KV state from a crash image.
+///
+/// For each bucket: the version word designates the committed slot; if
+/// that slot fails validation (crash between entry placement and version
+/// flip is impossible for correct methods — but torn *entries* from
+/// incorrect methods or mid-put crashes are), fall back to the other
+/// slot's previous version.
+pub fn recover_kv(image: &Image, capacity: u64) -> HashMap<u64, (u32, Vec<u8>)> {
+    let mut out = HashMap::new();
+    for bucket in 0..capacity {
+        let vaddr = KV_BASE + bucket * BUCKET_BYTES + 2 * ENTRY_BYTES as u64;
+        let version = image.read_u64(vaddr) as u32;
+        if version == 0 {
+            continue;
+        }
+        // Try the designated slot, then the previous one.
+        for v in [version, version - 1] {
+            if v == 0 {
+                break;
+            }
+            let addr =
+                KV_BASE + bucket * BUCKET_BYTES + (v % 2) as u64 * ENTRY_BYTES as u64;
+            if let Some((key, ev, value)) =
+                decode_entry(image.read(addr, ENTRY_BYTES))
+            {
+                if ev == v {
+                    out.insert(key, (ev, value));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn entry_roundtrip_and_corruption() {
+        let e = encode_entry(0xDEAD_BEEF_F00D, 7, b"value!");
+        let (k, v, val) = decode_entry(&e).unwrap();
+        assert_eq!(k, 0xDEAD_BEEF_F00D);
+        assert_eq!(v, 7);
+        assert_eq!(val, b"value!");
+        for i in 0..ENTRY_BYTES {
+            let mut bad = e;
+            bad[i] ^= 0x10;
+            assert!(decode_entry(&bad).is_none(), "byte {i}");
+        }
+    }
+
+    #[test]
+    fn put_get_after_quiesce() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let mut kv = RemoteKv::new(cfg, TimingModel::default(), 256, 1, true);
+        kv.put(1, b"one");
+        kv.put(2, b"two");
+        kv.put(1, b"uno"); // overwrite
+        let img = kv.fab.mem.crash_image(kv.fab.now(), cfg.pdomain);
+        let state = recover_kv(&img, 256);
+        assert_eq!(state[&1].1, b"uno");
+        assert_eq!(state[&2].1, b"two");
+        assert_eq!(state[&1].0, 2);
+    }
+
+    /// The KV crash contract, property-checked: at every crash instant,
+    /// every key's recovered value is its latest-acked value or a newer
+    /// posted one — never older, never garbage, never a torn mix.
+    #[test]
+    fn crash_contract_across_configs() {
+        for cfg in ServerConfig::table1() {
+            let mut kv =
+                RemoteKv::new(cfg, TimingModel::default(), 128, 11, true);
+            let mut r = SplitMix64::new(99);
+            let keys: Vec<u64> = (0..12).map(|_| r.next_u64()).collect();
+            for i in 0..80u64 {
+                let k = keys[(r.next_below(keys.len() as u64)) as usize];
+                let val = format!("v{}-{}", i, r.next_u32());
+                kv.put(k, val.as_bytes());
+            }
+            let end = kv.fab.now();
+            for i in 0..60u64 {
+                let t = end * i / 59;
+                let img = kv.fab.mem.crash_image(t, cfg.pdomain);
+                let state = recover_kv(&img, 128);
+                for (key, acked) in kv.acked_versions_at(t) {
+                    let got = state.get(&key).unwrap_or_else(|| {
+                        panic!(
+                            "{}: key {key:#x} acked v{} missing at t={t}",
+                            cfg.label(),
+                            acked.version
+                        )
+                    });
+                    assert!(
+                        got.0 >= acked.version,
+                        "{}: key {key:#x} regressed to v{} (acked v{})",
+                        cfg.label(),
+                        got.0,
+                        acked.version
+                    );
+                    // Whatever version we recovered must match the oracle
+                    // for that version (no torn values).
+                    let oracle = kv
+                        .puts
+                        .iter()
+                        .find(|p| p.key == key && p.version == got.0)
+                        .expect("recovered a never-put version");
+                    assert_eq!(got.1, oracle.value, "{}", cfg.label());
+                }
+            }
+        }
+    }
+
+    /// The same workload driven with the WSP completion-only method on a
+    /// DMP responder loses acked puts — the taxonomy matters for
+    /// applications, not just microbenchmarks.
+    #[test]
+    fn wrong_method_loses_acked_puts() {
+        let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let mut lost = false;
+        'outer: for seed in 0..10u64 {
+            let mut kv = RemoteKv::new(cfg, TimingModel::default(), 64, seed, true)
+                .with_method(CompoundMethod::WriteWriteComp);
+            for i in 0..30u64 {
+                kv.put(i % 8, format!("v{i}").as_bytes());
+            }
+            let end = kv.fab.now();
+            for i in 0..80u64 {
+                let t = end * i / 79;
+                let state = recover_kv(&kv.fab.mem.crash_image(t, cfg.pdomain), 64);
+                for (key, acked) in kv.acked_versions_at(t) {
+                    let ok = state
+                        .get(&key)
+                        .map(|(v, _)| *v >= acked.version)
+                        .unwrap_or(false);
+                    if !ok {
+                        lost = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(lost, "wrong method should lose acked puts on DMP+DDIO");
+    }
+
+    #[test]
+    fn colliding_keys_get_distinct_buckets() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mut kv = RemoteKv::new(cfg, TimingModel::default(), 8, 1, true);
+        for k in 0..8u64 {
+            kv.put(k, &[k as u8]);
+        }
+        let img = kv.fab.mem.crash_image(kv.fab.now(), cfg.pdomain);
+        let state = recover_kv(&img, 8);
+        assert_eq!(state.len(), 8);
+        for k in 0..8u64 {
+            assert_eq!(state[&k].1, vec![k as u8]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn overfull_store_panics() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mut kv = RemoteKv::new(cfg, TimingModel::default(), 4, 1, false);
+        for k in 0..5u64 {
+            kv.put(k, b"x");
+        }
+    }
+
+    #[test]
+    fn unacked_puts_roll_back_not_tear() {
+        let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let mut kv = RemoteKv::new(cfg, TimingModel::default(), 64, 3, true);
+        kv.put(42, b"committed");
+        let t_commit = kv.fab.now();
+        kv.put(42, b"in-flight");
+        // Crash at every instant of the second put's lifetime.
+        let end = kv.fab.now();
+        for i in 0..40 {
+            let t = t_commit + (end - t_commit) * i / 39;
+            let img = kv.fab.mem.crash_image(t, cfg.pdomain);
+            let state = recover_kv(&img, 64);
+            let (v, val) = &state[&42];
+            match *v {
+                1 => assert_eq!(val, b"committed"),
+                2 => assert_eq!(val, b"in-flight"),
+                other => panic!("impossible version {other}"),
+            }
+        }
+    }
+}

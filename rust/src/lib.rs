@@ -1,0 +1,28 @@
+//! # rpmem — Correct, Fast Remote Persistence
+//!
+//! A reproduction of *Correct, Fast Remote Persistence* (Kashyap, Qin,
+//! Byan, Marathe, Nalli — 2019): persistence of RDMA updates to remote
+//! persistent memory, implemented as
+//!
+//! * a deterministic fabric + responder-machine simulator with the RDMA
+//!   ordering/completion semantics and persistence-domain model the
+//!   paper's taxonomy is built on ([`fabric`], [`server`]),
+//! * the taxonomy itself as an executable *persistence planner* — the
+//!   "single RDMA library that transparently applies the correct method"
+//!   the paper's §5 calls for ([`persist`]),
+//! * the REMOTELOG log-replication workload, crash-recovery machinery,
+//!   and the AOT-compiled XLA integrity kernels it uses
+//!   ([`remotelog`], [`runtime`]),
+//! * and the experiment coordinator that regenerates every table and
+//!   figure of the paper's evaluation ([`coordinator`]).
+
+pub mod bench;
+pub mod coordinator;
+pub mod fabric;
+pub mod integrity;
+pub mod kvstore;
+pub mod persist;
+pub mod remotelog;
+pub mod runtime;
+pub mod server;
+pub mod util;

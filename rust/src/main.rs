@@ -1,0 +1,355 @@
+//! `rpmem` — CLI for the Correct, Fast Remote Persistence reproduction.
+//!
+//! Commands (argument parsing is hand-rolled; clap is unavailable in
+//! this offline build environment):
+//!
+//! ```text
+//! rpmem taxonomy [--table 1|2|3]         regenerate the paper's tables
+//! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
+//! rpmem claims [--appends N]             check §4.3/§4.4 claims
+//! rpmem crash-test [...]                 crash-consistency campaign
+//! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
+//! rpmem help
+//! ```
+
+use rpmem::coordinator::report::{check_claims, render_claims};
+use rpmem::coordinator::sweep::{
+    render_panel, results_to_json, run_figure_panel, SweepOpts,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{
+    Extensions, PDomain, RqwrbLoc, ServerConfig, Transport,
+};
+use rpmem::persist::method::Primary;
+use rpmem::persist::taxonomy;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::crashtest::crash_sweep;
+use rpmem::remotelog::log::RECORD_BYTES;
+use rpmem::remotelog::recovery::{recover, RustScanner, Scanner};
+use rpmem::util::json::Json;
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args);
+    let result = match cmd.as_deref() {
+        Some("taxonomy") => cmd_taxonomy(&flags),
+        Some("sweep") => cmd_sweep(&flags),
+        Some("claims") => cmd_claims(&flags),
+        Some("crash-test") => cmd_crash_test(&flags),
+        Some("recover-demo") => cmd_recover_demo(&flags),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command `{other}` — try `rpmem help`")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+rpmem — Correct, Fast Remote Persistence (reproduction)
+
+USAGE: rpmem <command> [--flag value]...
+
+COMMANDS
+  taxonomy      Regenerate the paper's Tables 1-3 from the planner.
+                  --table 1|2|3          (default: all)
+  sweep         REMOTELOG latency sweep — Figure 2 panels.
+                  --domain dmp|mhp|wsp|all   (default: all)
+                  --kind singleton|compound|both (default: both)
+                  --appends N            (default: 20000)
+                  --seed N               (default: 42)
+                  --transport ib|iwarp   (default: ib)
+                  --emulated             (FLUSH via READ, no WRITE_atomic)
+                  --json FILE            (dump results as JSON)
+  claims        Run the sweeps and check every §4.3/§4.4 paper claim.
+                  --appends N            (default: 20000)
+  crash-test    Crash-consistency campaign over the 72 scenarios.
+                  --appends N            (default: 25)
+                  --seeds N              (default: 3)
+                  --points N             (uniform crash points, default 80)
+                  --scanner rust|xla     (default: rust)
+  recover-demo  Run a workload, cut power mid-run, recover (XLA kernels
+                by default), and print the reconstruction.
+                  --scanner rust|xla     (default: xla)
+                  --appends N            (default: 50)
+";
+
+fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+    let mut flags = HashMap::new();
+    let mut cmd = None;
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else if cmd.is_none() {
+            cmd = Some(a.clone());
+        }
+        i += 1;
+    }
+    (cmd, flags)
+}
+
+fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn domains(flags: &HashMap<String, String>) -> Result<Vec<PDomain>, String> {
+    match flags.get("domain").map(String::as_str) {
+        None | Some("all") => Ok(PDomain::ALL.to_vec()),
+        Some("dmp") => Ok(vec![PDomain::Dmp]),
+        Some("mhp") => Ok(vec![PDomain::Mhp]),
+        Some("wsp") => Ok(vec![PDomain::Wsp]),
+        Some(other) => Err(format!("bad --domain {other}")),
+    }
+}
+
+fn modes(flags: &HashMap<String, String>) -> Result<Vec<AppendMode>, String> {
+    match flags.get("kind").map(String::as_str) {
+        None | Some("both") => {
+            Ok(vec![AppendMode::Singleton, AppendMode::Compound])
+        }
+        Some("singleton") => Ok(vec![AppendMode::Singleton]),
+        Some("compound") => Ok(vec![AppendMode::Compound]),
+        Some(other) => Err(format!("bad --kind {other}")),
+    }
+}
+
+fn cmd_taxonomy(flags: &HashMap<String, String>) -> Result<(), String> {
+    match flags.get("table").map(String::as_str) {
+        Some("1") => print!("{}", taxonomy::render_table1()),
+        Some("2") => print!("{}", taxonomy::render_table2()),
+        Some("3") => print!("{}", taxonomy::render_table3()),
+        None => print!(
+            "{}\n{}\n{}",
+            taxonomy::render_table1(),
+            taxonomy::render_table2(),
+            taxonomy::render_table3()
+        ),
+        Some(other) => return Err(format!("bad --table {other}")),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
+    let opts = SweepOpts {
+        appends: flag_u64(flags, "appends", 20_000),
+        seed: flag_u64(flags, "seed", 42),
+        timing: TimingModel::default(),
+        capacity: 4096,
+    };
+    let mut all = Vec::new();
+    let panel_ids: [(&str, PDomain, AppendMode); 6] = [
+        ("Fig 2(a) — singleton, DMP", PDomain::Dmp, AppendMode::Singleton),
+        ("Fig 2(b) — singleton, MHP", PDomain::Mhp, AppendMode::Singleton),
+        ("Fig 2(c) — singleton, WSP", PDomain::Wsp, AppendMode::Singleton),
+        ("Fig 2(d) — compound, DMP", PDomain::Dmp, AppendMode::Compound),
+        ("Fig 2(e) — compound, MHP", PDomain::Mhp, AppendMode::Compound),
+        ("Fig 2(f) — compound, WSP", PDomain::Wsp, AppendMode::Compound),
+    ];
+    let want_domains = domains(flags)?;
+    let want_modes = modes(flags)?;
+    let iwarp = flags.get("transport").map(String::as_str) == Some("iwarp");
+    let emulated = flags.contains_key("emulated");
+    for (title, pd, mode) in panel_ids {
+        if !want_domains.contains(&pd) || !want_modes.contains(&mode) {
+            continue;
+        }
+        let results: Vec<_> = if iwarp || emulated {
+            run_figure_panel(pd, mode, &opts)
+                .iter()
+                .map(|r| {
+                    let mut cfg = r.config;
+                    if iwarp {
+                        cfg = cfg.with_transport(Transport::Iwarp);
+                    }
+                    if emulated {
+                        cfg = cfg.with_extensions(Extensions::Emulated);
+                    }
+                    rpmem::coordinator::sweep::run_scenario(
+                        cfg, mode, r.primary, &opts,
+                    )
+                })
+                .collect()
+        } else {
+            run_figure_panel(pd, mode, &opts)
+        };
+        println!("{}", render_panel(title, &results));
+        all.extend(results);
+    }
+    if let Some(path) = flags.get("json") {
+        let j = results_to_json(&all).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_claims(flags: &HashMap<String, String>) -> Result<(), String> {
+    let opts = SweepOpts {
+        appends: flag_u64(flags, "appends", 20_000),
+        ..Default::default()
+    };
+    let claims = check_claims(&opts);
+    print!("{}", render_claims(&claims));
+    if let Some(path) = flags.get("json") {
+        let j = Json::Arr(claims.iter().map(|c| c.to_json()).collect());
+        std::fs::write(path, j.to_string_pretty()).map_err(|e| e.to_string())?;
+    }
+    if claims.iter().all(|c| c.ok) {
+        println!("\nall {} claims hold", claims.len());
+        Ok(())
+    } else {
+        Err("some paper claims did not reproduce".into())
+    }
+}
+
+fn load_scanner(
+    flags: &HashMap<String, String>,
+    default_xla: bool,
+) -> Result<Box<dyn Scanner>, String> {
+    let kind = flags
+        .get("scanner")
+        .map(String::as_str)
+        .unwrap_or(if default_xla { "xla" } else { "rust" });
+    match kind {
+        "rust" => Ok(Box::new(RustScanner)),
+        "xla" => rpmem::runtime::XlaScanner::load("artifacts")
+            .map(|s| Box::new(s) as Box<dyn Scanner>)
+            .map_err(|e| format!("loading artifacts: {e}")),
+        other => Err(format!("bad --scanner {other}")),
+    }
+}
+
+fn cmd_crash_test(flags: &HashMap<String, String>) -> Result<(), String> {
+    let appends = flag_u64(flags, "appends", 25);
+    let seeds = flag_u64(flags, "seeds", 3);
+    let points = flag_u64(flags, "points", 80);
+    let scanner = load_scanner(flags, false)?;
+    let mut failures = 0;
+    let mut total = 0;
+    for cfg in ServerConfig::table1() {
+        for primary in Primary::ALL {
+            for mode in [AppendMode::Singleton, AppendMode::Compound] {
+                let mut merged =
+                    rpmem::remotelog::crashtest::CrashReport::default();
+                for seed in 0..seeds {
+                    let mut rl = RemoteLog::new(
+                        cfg,
+                        TimingModel::default(),
+                        mode,
+                        MethodChoice::Planned(primary),
+                        appends + 8,
+                        seed * 7919 + 1,
+                        true,
+                    );
+                    rl.run(appends);
+                    merged.merge(&crash_sweep(
+                        &rl,
+                        points,
+                        seed,
+                        scanner.as_ref(),
+                    ));
+                }
+                total += 1;
+                let ok = merged.clean();
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "[{}] {:<26} {:<10} {:<9} ({} crash points)",
+                    if ok { "PASS" } else { "FAIL" },
+                    cfg.label(),
+                    mode.name(),
+                    primary.name(),
+                    merged.crash_points
+                );
+            }
+        }
+    }
+    println!(
+        "\n{total} scenarios, {failures} failures (scanner: {})",
+        scanner.name()
+    );
+    if failures == 0 {
+        Ok(())
+    } else {
+        Err(format!("{failures} scenarios lost data"))
+    }
+}
+
+fn cmd_recover_demo(flags: &HashMap<String, String>) -> Result<(), String> {
+    let appends = flag_u64(flags, "appends", 50);
+    let scanner = load_scanner(flags, true)?;
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Pm);
+    println!(
+        "responder: {} | transport IB/RoCE | IBTA extensions",
+        cfg.label()
+    );
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Compound,
+        MethodChoice::Planned(Primary::Send),
+        appends + 8,
+        2024,
+        true,
+    );
+    println!(
+        "method: {} (one-sided SEND; messages are the durable objects)",
+        rl.compound_method().name()
+    );
+    rl.run(appends);
+    let cut = rl.appends[appends as usize * 3 / 5].acked_at + 1;
+    println!(
+        "appended {} records; POWER FAILURE at t={:.2}us ({} acked)",
+        appends,
+        cut as f64 / 1000.0,
+        rl.acked_before(cut)
+    );
+    let img = rl.fab.mem.crash_image(cut, cfg.pdomain);
+    let res = recover(
+        &img,
+        &rl.fab.mem.layout,
+        &rl.log,
+        AppendMode::Compound,
+        true,
+        scanner.as_ref(),
+    );
+    println!(
+        "recovery ({}): tail_ptr={:?}, replayed {} RQWRB messages, recovered {} records",
+        scanner.name(),
+        res.tail_ptr,
+        res.replayed,
+        res.recovered
+    );
+    let acked = rl.acked_before(cut);
+    for k in 0..res.recovered as usize {
+        let got = &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES];
+        assert_eq!(got, &rl.appends[k].record[..], "record {k} mismatch");
+    }
+    if res.recovered >= acked {
+        println!(
+            "OK: all {acked} acked appends recovered intact (+{} un-acked but durable)",
+            res.recovered - acked
+        );
+        Ok(())
+    } else {
+        Err(format!("LOST {} acked appends", acked - res.recovered))
+    }
+}

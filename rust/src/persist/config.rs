@@ -1,0 +1,203 @@
+//! Remote-server (responder) configuration taxonomy — paper §3.1, Table 1.
+//!
+//! The configuration space is three axes: persistence domain, DDIO
+//! enablement, and RQWRB placement — 12 configurations. A fourth,
+//! orthogonal axis (the RDMA transport flavor, §3.2/WSP discussion)
+//! changes completion-notification semantics and therefore the correct
+//! method for WSP.
+
+use std::fmt;
+
+/// Persistence domain — the portion of the memory hierarchy (extended to
+/// include the RNIC buffers) whose contents survive a power failure
+/// (paper §3.1.1, Figure 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PDomain {
+    /// DIMM + Memory-controller Persistence: PM DIMMs + IMC buffers
+    /// (drained by ADR). The expected near-term dominant configuration.
+    Dmp,
+    /// Memory Hierarchy Persistence: all processor caches + store buffers
+    /// + IMC + DIMMs. Visibility of a store implies persistence.
+    Mhp,
+    /// Whole System Persistence: everything including RNIC buffers
+    /// (battery-backed). Receipt at the responder RNIC implies persistence.
+    Wsp,
+}
+
+impl PDomain {
+    pub const ALL: [PDomain; 3] = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PDomain::Dmp => "DMP",
+            PDomain::Mhp => "MHP",
+            PDomain::Wsp => "WSP",
+        }
+    }
+}
+
+/// Location of the Receive Queue Work Request Buffers (paper §3.1.3).
+/// PM-resident RQWRBs are what let RDMA SEND act like a one-sided
+/// operation in some configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RqwrbLoc {
+    Dram,
+    Pm,
+}
+
+impl RqwrbLoc {
+    pub const ALL: [RqwrbLoc; 2] = [RqwrbLoc::Dram, RqwrbLoc::Pm];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RqwrbLoc::Dram => "DRAM-RQWRB",
+            RqwrbLoc::Pm => "PM-RQWRB",
+        }
+    }
+}
+
+/// RDMA transport flavor. The distinction that matters for persistence is
+/// where posted-op completion notifications are generated (paper §3.2):
+/// InfiniBand/RoCE — after the responder's RNIC has received the op;
+/// iWARP — once the op reaches the *requester's* reliable transport layer,
+/// possibly before it is ever sent. Under WSP this difference decides
+/// whether a bare completion implies persistence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Transport {
+    /// InfiniBand or RoCE semantics.
+    IbRoce,
+    /// iWARP (TCP/SCTP-based) semantics.
+    Iwarp,
+}
+
+impl Transport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::IbRoce => "IB/RoCE",
+            Transport::Iwarp => "iWARP",
+        }
+    }
+}
+
+/// Whether the IBTA-proposed extensions (native RDMA FLUSH + non-posted
+/// WRITE_atomic, paper §2 / [10, 28]) are available, or whether FLUSH must
+/// be emulated with RDMA READ (paper §3.4) and WRITE_atomic is unavailable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Extensions {
+    /// Native FLUSH and WRITE_atomic (proposed IBTA extensions).
+    Ibta,
+    /// Today's hardware: FLUSH emulated by RDMA READ; no WRITE_atomic
+    /// (recipes that would use it must wait for the FLUSH completion —
+    /// the paper's §4.2 estimation setup).
+    Emulated,
+}
+
+impl Extensions {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Extensions::Ibta => "IBTA",
+            Extensions::Emulated => "emulated",
+        }
+    }
+}
+
+/// One responder configuration — a row of Table 1 plus the transport and
+/// extension axes used in the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ServerConfig {
+    pub pdomain: PDomain,
+    pub ddio: bool,
+    pub rqwrb: RqwrbLoc,
+    pub transport: Transport,
+    pub extensions: Extensions,
+}
+
+impl ServerConfig {
+    pub fn new(pdomain: PDomain, ddio: bool, rqwrb: RqwrbLoc) -> Self {
+        ServerConfig {
+            pdomain,
+            ddio,
+            rqwrb,
+            transport: Transport::IbRoce,
+            extensions: Extensions::Ibta,
+        }
+    }
+
+    pub fn with_transport(mut self, t: Transport) -> Self {
+        self.transport = t;
+        self
+    }
+
+    pub fn with_extensions(mut self, e: Extensions) -> Self {
+        self.extensions = e;
+        self
+    }
+
+    /// The 12 configurations of Table 1, in the paper's row order
+    /// (grouped by domain, then DDIO on/off, then RQWRB DRAM/PM).
+    pub fn table1() -> Vec<ServerConfig> {
+        let mut out = Vec::with_capacity(12);
+        for pd in PDomain::ALL {
+            for ddio in [true, false] {
+                for rq in RqwrbLoc::ALL {
+                    out.push(ServerConfig::new(pd, ddio, rq));
+                }
+            }
+        }
+        out
+    }
+
+    /// Short label, e.g. `DMP+DDIO+PM-RQWRB` / `MHP+¬DDIO+DRAM-RQWRB`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}+{}+{}",
+            self.pdomain.name(),
+            if self.ddio { "DDIO" } else { "¬DDIO" },
+            self.rqwrb.name()
+        )
+    }
+
+    /// Does a completion notification for a posted op imply the op was
+    /// received at the responder RNIC? True for IB/RoCE, false for iWARP.
+    pub fn completion_implies_receipt(&self) -> bool {
+        self.transport == Transport::IbRoce
+    }
+}
+
+impl fmt::Display for ServerConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_twelve_distinct_configs() {
+        let configs = ServerConfig::table1();
+        assert_eq!(configs.len(), 12);
+        let labels: std::collections::HashSet<_> =
+            configs.iter().map(|c| c.label()).collect();
+        assert_eq!(labels.len(), 12);
+    }
+
+    #[test]
+    fn table1_row_order_matches_paper() {
+        let configs = ServerConfig::table1();
+        assert_eq!(configs[0].label(), "DMP+DDIO+DRAM-RQWRB");
+        assert_eq!(configs[1].label(), "DMP+DDIO+PM-RQWRB");
+        assert_eq!(configs[2].label(), "DMP+¬DDIO+DRAM-RQWRB");
+        assert_eq!(configs[11].label(), "WSP+¬DDIO+PM-RQWRB");
+    }
+
+    #[test]
+    fn default_axes() {
+        let c = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        assert_eq!(c.transport, Transport::IbRoce);
+        assert_eq!(c.extensions, Extensions::Ibta);
+        assert!(c.completion_implies_receipt());
+        assert!(!c.with_transport(Transport::Iwarp).completion_implies_receipt());
+    }
+}

@@ -1,0 +1,628 @@
+//! Recipe executors: drive the fabric engine through each persistence
+//! method's requester script and responder handler.
+//!
+//! `exec_singleton` / `exec_compound` perform ONE persist operation and
+//! return when the requester has observed the method's persistence point.
+//! The returned [`PersistOutcome`] carries the virtual-time span plus the
+//! acked timestamp used by the crash-consistency harness ("everything
+//! acked before the crash must be recoverable").
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::ops::{OnRecv, OpKind, WorkRequest};
+use crate::fabric::timing::Nanos;
+use crate::persist::config::Extensions;
+use crate::persist::method::{CompoundMethod, SingletonMethod};
+use crate::persist::wire::{self, WireUpdate};
+
+/// One remote update: bytes destined for a responder PM address.
+#[derive(Debug, Clone)]
+pub struct Update {
+    pub addr: u64,
+    pub data: Vec<u8>,
+}
+
+impl Update {
+    pub fn new(addr: u64, data: Vec<u8>) -> Self {
+        Update { addr, data }
+    }
+}
+
+/// Result of one persist operation.
+#[derive(Debug, Clone, Copy)]
+pub struct PersistOutcome {
+    /// Requester clock when the operation began.
+    pub start: Nanos,
+    /// Requester clock at the persistence point (ack/completion
+    /// received) — the moment the application may declare durability.
+    pub acked: Nanos,
+}
+
+impl PersistOutcome {
+    pub fn latency(&self) -> Nanos {
+        self.acked - self.start
+    }
+}
+
+/// FLUSH, or its RDMA READ emulation when IBTA extensions are absent
+/// (§3.4: "RDMA FLUSH can be correctly emulated using RDMA READ").
+fn flush_wr(fab: &Fabric, probe_addr: u64) -> WorkRequest {
+    match fab.cfg.extensions {
+        Extensions::Ibta => WorkRequest::flush(),
+        Extensions::Emulated => WorkRequest::read(probe_addr),
+    }
+}
+
+/// The event a recipe's requester must observe to conclude persistence:
+/// a completion notification or a responder ack. Returned by the
+/// `post_*` halves so callers can pipeline appends (window > 1) and
+/// observe persistence points later.
+#[derive(Debug, Clone, Copy)]
+pub enum WaitPoint {
+    Comp(crate::fabric::ops::OpId),
+    Ack(crate::fabric::ops::OpId),
+}
+
+impl WaitPoint {
+    /// Block the requester until this persistence point is observed.
+    pub fn wait(self, fab: &mut Fabric) -> Nanos {
+        match self {
+            WaitPoint::Comp(id) => fab.wait_comp(id),
+            WaitPoint::Ack(id) => fab.wait_ack(id),
+        }
+    }
+
+    /// The virtual time the persistence point becomes observable,
+    /// without blocking the requester clock.
+    pub fn ready_at(self, fab: &Fabric) -> Nanos {
+        match self {
+            WaitPoint::Comp(id) => {
+                fab.op(id).comp_at.expect("op generates no completion")
+            }
+            WaitPoint::Ack(id) => {
+                fab.op(id).ack_at.expect("op's handler does not ack")
+            }
+        }
+    }
+}
+
+/// Post one singleton update's work requests without waiting; returns
+/// the persistence point to await. Every singleton method is a pure
+/// post-train followed by a single wait, so all ten are pipelinable.
+pub fn post_singleton(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    u: &Update,
+    msg_seq: u32,
+) -> WaitPoint {
+    use SingletonMethod::*;
+    match method {
+        WriteMsgFlushAck => {
+            // Rq Write(a); Rq Send(&a); Rsp flush(&a); Rsp Send(ack).
+            fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            let mut notify =
+                WorkRequest::send(vec![0u8; 16], OnRecv::FlushTargetAck, u.addr);
+            notify.recv_target = u.addr;
+            notify.recv_flush_len = u.data.len() as u64;
+            WaitPoint::Ack(fab.post(notify))
+        }
+        WriteImmFlushAck => WaitPoint::Ack(fab.post(WorkRequest::write_imm(
+            u.addr,
+            u.data.clone(),
+            OnRecv::FlushTargetAck,
+        ))),
+        SendCopyFlushAck | SendCopyAck => {
+            let on = if method == SendCopyFlushAck {
+                OnRecv::CopyFlushAck
+            } else {
+                OnRecv::CopyAck
+            };
+            let ups = [WireUpdate { target: u.addr, data: u.data.clone() }];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(payload, on, u.addr)))
+        }
+        WriteFlush => {
+            fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            WaitPoint::Comp(fab.post(flush_wr(fab, u.addr)))
+        }
+        WriteImmFlush => {
+            fab.post(WorkRequest::write_imm(
+                u.addr,
+                u.data.clone(),
+                OnRecv::Recycle,
+            ));
+            WaitPoint::Comp(fab.post(flush_wr(fab, u.addr)))
+        }
+        SendFlush => {
+            // One-sided SEND: the message itself is the durable object;
+            // the responder applies it lazily off the critical path and
+            // recovery replays any unapplied survivors (§3.2).
+            let ups = [WireUpdate { target: u.addr, data: u.data.clone() }];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            fab.post(WorkRequest::send(payload, lazy_apply(fab), u.addr));
+            WaitPoint::Comp(fab.post(flush_wr(fab, u.addr)))
+        }
+        WriteComp => {
+            WaitPoint::Comp(fab.post(WorkRequest::write(u.addr, u.data.clone())))
+        }
+        WriteImmComp => WaitPoint::Comp(fab.post(WorkRequest::write_imm(
+            u.addr,
+            u.data.clone(),
+            OnRecv::Recycle,
+        ))),
+        SendComp => {
+            let ups = [WireUpdate { target: u.addr, data: u.data.clone() }];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Comp(fab.post(WorkRequest::send(
+                payload,
+                lazy_apply(fab),
+                u.addr,
+            )))
+        }
+    }
+}
+
+/// Execute one singleton update with the given method (post + wait).
+pub fn exec_singleton(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    u: &Update,
+    msg_seq: u32,
+) -> PersistOutcome {
+    let start = fab.now();
+    let wp = post_singleton(fab, method, u, msg_seq);
+    let acked = wp.wait(fab);
+    PersistOutcome { start, acked }
+}
+
+/// Lazy-apply handler flavor for one-sided SEND recipes: DMP responders
+/// must flush the applied copies; MHP/WSP stores persist on visibility.
+fn lazy_apply(fab: &Fabric) -> OnRecv {
+    match fab.cfg.pdomain {
+        crate::persist::config::PDomain::Dmp => OnRecv::CopyFlushLazy,
+        _ => OnRecv::CopyLazy,
+    }
+}
+
+/// Post one compound update's work requests without waiting, when the
+/// method is a pure post-train (no internal completion waits). Returns
+/// `None` for the methods with intrinsic stalls (`...FlushAckTwice`,
+/// `...FlushWait...`) — those cannot be windowed without interleaving
+/// independent state machines.
+pub fn post_compound(
+    fab: &mut Fabric,
+    method: CompoundMethod,
+    a: &Update,
+    b: &Update,
+    msg_seq: u32,
+) -> Option<WaitPoint> {
+    use CompoundMethod::*;
+    Some(match method {
+        WriteMsgFlushAckTwice
+        | WriteImmFlushAckTwice
+        | WriteFlushWaitWriteFlush
+        | WriteImmFlushWaitImmFlush => return None,
+        SendCopyFlushAck | SendCopyAck => {
+            let on = if method == SendCopyFlushAck {
+                OnRecv::CopyFlushAck
+            } else {
+                OnRecv::CopyAck
+            };
+            let ups = [
+                WireUpdate { target: a.addr, data: a.data.clone() },
+                WireUpdate { target: b.addr, data: b.data.clone() },
+            ];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(payload, on, a.addr)))
+        }
+        WriteFlushAtomicFlush => match fab.cfg.extensions {
+            Extensions::Ibta => {
+                fab.post(WorkRequest::write(a.addr, a.data.clone()));
+                fab.post(WorkRequest::flush());
+                fab.post(WorkRequest::write_atomic(b.addr, b.data.clone()));
+                WaitPoint::Comp(fab.post(WorkRequest::flush()))
+            }
+            Extensions::Emulated => {
+                // §4.2 performance *estimate* — see exec_compound.
+                fab.post(WorkRequest::write(a.addr, a.data.clone()));
+                fab.post(WorkRequest::read(a.addr));
+                fab.post(WorkRequest::write(b.addr, b.data.clone()));
+                WaitPoint::Comp(fab.post(WorkRequest::read(b.addr)))
+            }
+        },
+        SendFlush => {
+            let ups = [
+                WireUpdate { target: a.addr, data: a.data.clone() },
+                WireUpdate { target: b.addr, data: b.data.clone() },
+            ];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            fab.post(WorkRequest::send(payload, lazy_apply(fab), a.addr));
+            WaitPoint::Comp(fab.post(flush_wr(fab, a.addr)))
+        }
+        WritePipelinedFlush => {
+            fab.post(WorkRequest::write(a.addr, a.data.clone()));
+            fab.post(WorkRequest::write(b.addr, b.data.clone()));
+            WaitPoint::Comp(fab.post(flush_wr(fab, b.addr)))
+        }
+        WriteImmPipelinedFlush => {
+            fab.post(WorkRequest::write_imm(
+                a.addr,
+                a.data.clone(),
+                OnRecv::Recycle,
+            ));
+            fab.post(WorkRequest::write_imm(
+                b.addr,
+                b.data.clone(),
+                OnRecv::Recycle,
+            ));
+            WaitPoint::Comp(fab.post(flush_wr(fab, b.addr)))
+        }
+        WriteWriteComp => {
+            fab.post(WorkRequest::write(a.addr, a.data.clone()));
+            WaitPoint::Comp(fab.post(WorkRequest::write(b.addr, b.data.clone())))
+        }
+        WriteImmWriteImmComp => {
+            fab.post(WorkRequest::write_imm(
+                a.addr,
+                a.data.clone(),
+                OnRecv::Recycle,
+            ));
+            WaitPoint::Comp(fab.post(WorkRequest::write_imm(
+                b.addr,
+                b.data.clone(),
+                OnRecv::Recycle,
+            )))
+        }
+        SendComp => {
+            let ups = [
+                WireUpdate { target: a.addr, data: a.data.clone() },
+                WireUpdate { target: b.addr, data: b.data.clone() },
+            ];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Comp(fab.post(WorkRequest::send(
+                payload,
+                lazy_apply(fab),
+                a.addr,
+            )))
+        }
+    })
+}
+
+/// Execute one compound (a-then-b, strictly ordered) update.
+pub fn exec_compound(
+    fab: &mut Fabric,
+    method: CompoundMethod,
+    a: &Update,
+    b: &Update,
+    msg_seq: u32,
+) -> PersistOutcome {
+    use CompoundMethod::*;
+    let start = fab.now();
+    if let Some(wp) = post_compound(fab, method, a, b, msg_seq) {
+        let acked = wp.wait(fab);
+        return PersistOutcome { start, acked };
+    }
+    let acked = match method {
+        // Methods with internal waits — two full singleton round trips
+        // or flush-completion stalls between the dependent updates.
+        WriteMsgFlushAckTwice => {
+            exec_singleton(fab, SingletonMethod::WriteMsgFlushAck, a, msg_seq);
+            exec_singleton(fab, SingletonMethod::WriteMsgFlushAck, b, msg_seq)
+                .acked
+        }
+        WriteImmFlushAckTwice => {
+            exec_singleton(fab, SingletonMethod::WriteImmFlushAck, a, msg_seq);
+            exec_singleton(fab, SingletonMethod::WriteImmFlushAck, b, msg_seq)
+                .acked
+        }
+        WriteFlushWaitWriteFlush => {
+            fab.post(WorkRequest::write(a.addr, a.data.clone()));
+            let f1 = fab.post(flush_wr(fab, a.addr));
+            fab.wait_comp(f1);
+            fab.post(WorkRequest::write(b.addr, b.data.clone()));
+            let f2 = fab.post(flush_wr(fab, b.addr));
+            fab.wait_comp(f2)
+        }
+        WriteImmFlushWaitImmFlush => {
+            fab.post(WorkRequest::write_imm(
+                a.addr,
+                a.data.clone(),
+                OnRecv::Recycle,
+            ));
+            let f1 = fab.post(flush_wr(fab, a.addr));
+            fab.wait_comp(f1);
+            fab.post(WorkRequest::write_imm(
+                b.addr,
+                b.data.clone(),
+                OnRecv::Recycle,
+            ));
+            let f2 = fab.post(flush_wr(fab, b.addr));
+            fab.wait_comp(f2)
+        }
+        // Everything else was handled by post_compound above.
+        _ => unreachable!("pipelinable method fell through post_compound"),
+    };
+    PersistOutcome { start, acked }
+}
+
+/// Convenience check used by tests: did the op mix match the method's
+/// one-sidedness claim (no responder ack awaited for one-sided methods)?
+pub fn used_op_kinds(fab: &Fabric, from: usize) -> Vec<OpKind> {
+    (from..fab.ops_posted())
+        .map(|i| fab.op(crate::fabric::ops::OpId(i as u32)).kind)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::persist::planner::{plan_compound, plan_singleton};
+    use crate::persist::method::Primary;
+    use crate::server::memory::Layout;
+
+    fn fab(cfg: ServerConfig) -> Fabric {
+        let layout = Layout::new(1 << 16, 1 << 16, 32, 256, cfg.rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, 3, true)
+    }
+
+    fn upd(addr: u64, val: u8, len: usize) -> Update {
+        Update::new(addr, vec![val; len])
+    }
+
+    /// Every planner-selected singleton method, executed on its config,
+    /// leaves the data persistent at the ack time.
+    #[test]
+    fn planned_singleton_methods_persist_by_ack() {
+        for cfg in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let m = plan_singleton(&cfg, p);
+                let mut f = fab(cfg);
+                let u = upd(0x1000, 0x5A, 64);
+                let out = exec_singleton(&mut f, m, &u, 1);
+                let img = f.mem.crash_image(out.acked, cfg.pdomain);
+                if m.requires_replay() {
+                    // The RQWRB message is durable; target updated only
+                    // after recovery replay — checked in remotelog tests.
+                    continue;
+                }
+                assert_eq!(
+                    img.read(0x1000, 64),
+                    &[0x5A; 64][..],
+                    "{} with {} must be persistent at ack",
+                    cfg.label(),
+                    m.name()
+                );
+            }
+        }
+    }
+
+    /// Every planner-selected compound method leaves BOTH updates
+    /// persistent at ack time.
+    #[test]
+    fn planned_compound_methods_persist_by_ack() {
+        for cfg in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let m = plan_compound(&cfg, p, 8);
+                let mut f = fab(cfg);
+                let a = upd(0x1000, 0xA1, 64);
+                let b = upd(0x100, 0xB2, 8);
+                let out = exec_compound(&mut f, m, &a, &b, 1);
+                if m.requires_replay() {
+                    continue;
+                }
+                let img = f.mem.crash_image(out.acked, cfg.pdomain);
+                assert_eq!(
+                    img.read(0x1000, 64),
+                    &[0xA1; 64][..],
+                    "{} / {}: update a",
+                    cfg.label(),
+                    m.name()
+                );
+                assert_eq!(
+                    img.read(0x100, 8),
+                    &[0xB2; 8][..],
+                    "{} / {}: update b",
+                    cfg.label(),
+                    m.name()
+                );
+            }
+        }
+    }
+
+    /// The classic incorrect pairing (paper §3.2): one-sided WRITE+FLUSH
+    /// under DMP with DDIO on — the data sits in L3, outside the DMP
+    /// domain, when the FLUSH completion arrives.
+    #[test]
+    fn write_flush_under_dmp_ddio_loses_data() {
+        let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let mut f = fab(cfg);
+        let u = upd(0x1000, 0x77, 64);
+        let out = exec_singleton(&mut f, SingletonMethod::WriteFlush, &u, 1);
+        let img = f.mem.crash_image(out.acked, PDomain::Dmp);
+        assert_eq!(
+            img.read(0x1000, 64),
+            &[0u8; 64][..],
+            "acked data must be LOST — the wrong method was applied"
+        );
+    }
+
+    /// WSP's completion-only method misapplied to MHP: at completion the
+    /// payload may still be in the RNIC buffers (DMA backlog), outside
+    /// MHP. Not guaranteed-lost — demonstrably losable for some seeds,
+    /// which is exactly what "incorrect method" means.
+    #[test]
+    fn write_comp_under_mhp_can_lose_data() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 32, 256, cfg.rqwrb);
+        let mut lost = false;
+        for seed in 0..400 {
+            let mut f = Fabric::new(
+                cfg,
+                TimingModel::default(),
+                layout.clone(),
+                seed,
+                true,
+            );
+            let u = upd(0x1000, 0x66, 64);
+            let out =
+                exec_singleton(&mut f, SingletonMethod::WriteComp, &u, 1);
+            let img = f.mem.crash_image(out.acked, PDomain::Mhp);
+            if img.read(0x1000, 64) == [0u8; 64] {
+                lost = true;
+                break;
+            }
+        }
+        assert!(lost, "some seed must exhibit loss of acked data");
+    }
+
+    /// iWARP: completion can precede responder receipt, so even WSP
+    /// loses completion-only data (paper §3.2).
+    #[test]
+    fn write_comp_under_iwarp_wsp_loses_data() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram)
+            .with_transport(crate::persist::config::Transport::Iwarp);
+        let mut f = fab(cfg);
+        let u = upd(0x1000, 0x55, 64);
+        let out = exec_singleton(&mut f, SingletonMethod::WriteComp, &u, 1);
+        let img = f.mem.crash_image(out.acked, PDomain::Wsp);
+        assert_eq!(img.read(0x1000, 64), &[0u8; 64][..]);
+    }
+
+    /// One-sided beats two-sided (paper §4.3: "up to 50%").
+    #[test]
+    fn one_sided_faster_than_message_passing() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut f1 = fab(cfg);
+        let one =
+            exec_singleton(&mut f1, SingletonMethod::WriteFlush, &upd(0x1000, 1, 64), 1);
+        let mut f2 = fab(cfg);
+        let two = exec_singleton(
+            &mut f2,
+            SingletonMethod::SendCopyFlushAck,
+            &upd(0x1000, 1, 64),
+            1,
+        );
+        assert!(
+            one.latency() < two.latency(),
+            "one-sided {} >= two-sided {}",
+            one.latency(),
+            two.latency()
+        );
+    }
+
+    /// WSP completion-only is the fastest singleton method (§4.3: 1.6us,
+    /// 25% below MHP's one-sided).
+    #[test]
+    fn wsp_comp_fastest() {
+        let wsp = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mhp = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut fw = fab(wsp);
+        let lw = exec_singleton(
+            &mut fw,
+            SingletonMethod::WriteComp,
+            &upd(0x1000, 1, 64),
+            1,
+        )
+        .latency();
+        let mut fm = fab(mhp);
+        let lm = exec_singleton(
+            &mut fm,
+            SingletonMethod::WriteFlush,
+            &upd(0x1000, 1, 64),
+            1,
+        )
+        .latency();
+        assert!(lw < lm);
+        let reduction = (lm - lw) as f64 / lm as f64;
+        assert!(
+            (0.10..0.45).contains(&reduction),
+            "expected ~25% reduction, got {:.0}%",
+            reduction * 100.0
+        );
+    }
+
+    /// Pipelined atomic-write method beats the wait-for-flush variant
+    /// (paper §4.4: non-posted WRITE enables pipelining).
+    #[test]
+    fn atomic_pipelining_beats_waiting() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let a = upd(0x1000, 1, 64);
+        let b = upd(0x100, 2, 8);
+        let mut f1 = fab(cfg);
+        let fast = exec_compound(
+            &mut f1,
+            CompoundMethod::WriteFlushAtomicFlush,
+            &a,
+            &b,
+            1,
+        );
+        let mut f2 = fab(cfg);
+        let slow = exec_compound(
+            &mut f2,
+            CompoundMethod::WriteFlushWaitWriteFlush,
+            &a,
+            &b,
+            1,
+        );
+        assert!(fast.latency() < slow.latency());
+    }
+
+    /// Compound DMP+DDIO: WRITE needs 2 round trips, SEND only 1 — SEND
+    /// message passing wins (>2x claim, paper §4.4).
+    #[test]
+    fn compound_dmp_ddio_send_beats_write() {
+        let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let a = upd(0x1000, 1, 64);
+        let b = upd(0x100, 2, 8);
+        let mut f1 = fab(cfg);
+        let w = exec_compound(
+            &mut f1,
+            CompoundMethod::WriteMsgFlushAckTwice,
+            &a,
+            &b,
+            1,
+        );
+        let mut f2 = fab(cfg);
+        let s =
+            exec_compound(&mut f2, CompoundMethod::SendCopyFlushAck, &a, &b, 1);
+        assert!(
+            w.latency() as f64 > 1.8 * s.latency() as f64,
+            "write {} vs send {}",
+            w.latency(),
+            s.latency()
+        );
+    }
+
+    /// FLUSH emulation via READ is used when extensions are absent and
+    /// costs a bit more.
+    #[test]
+    fn emulated_flush_slower_than_native() {
+        let base = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut f1 = fab(base);
+        let native = exec_singleton(
+            &mut f1,
+            SingletonMethod::WriteFlush,
+            &upd(0x1000, 1, 64),
+            1,
+        );
+        let mut f2 = fab(base.with_extensions(Extensions::Emulated));
+        let emu = exec_singleton(
+            &mut f2,
+            SingletonMethod::WriteFlush,
+            &upd(0x1000, 1, 64),
+            1,
+        );
+        assert!(emu.latency() > native.latency());
+        // And the READ op kind was actually used.
+        let kinds = used_op_kinds(&f2, 0);
+        assert!(kinds.contains(&OpKind::Read));
+        assert!(!kinds.contains(&OpKind::Flush));
+    }
+}

@@ -1,0 +1,409 @@
+//! The remote-persistence methods — the rows of Table 2 (singleton) and
+//! Table 3 (compound) as executable values.
+//!
+//! The paper's analysis yields **10 distinct methods for singleton
+//! updates** and the compound recipes of Table 3 (9 additional distinct
+//! ones beyond compositions of singleton methods). Each variant here
+//! documents the requester/responder step sequence in the paper's own
+//! notation (see `steps()`), and `persistence_point()` names the event at
+//! which the requester may conclude remote persistence.
+
+/// The primary RDMA operation used to carry the update (Table 2/3 column
+/// groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Primary {
+    Write,
+    WriteImm,
+    Send,
+}
+
+impl Primary {
+    pub const ALL: [Primary; 3] = [Primary::Write, Primary::WriteImm, Primary::Send];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Primary::Write => "WRITE",
+            Primary::WriteImm => "WRITEIMM",
+            Primary::Send => "SEND",
+        }
+    }
+}
+
+/// The event at which the requester concludes the update is persistent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PersistencePoint {
+    /// Receipt of the responder application's ack message.
+    ResponderAck,
+    /// Receipt of the completion notification of a FLUSH (or its READ
+    /// emulation).
+    FlushCompletion,
+    /// Receipt of the completion notification of the update op itself
+    /// (WSP one-sided cases).
+    UpdateCompletion,
+}
+
+/// Methods for persisting a singleton remote update (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SingletonMethod {
+    /// WRITE + notify-SEND; responder flushes the written lines, acks.
+    /// (DMP+DDIO, WRITE primary.)
+    WriteMsgFlushAck,
+    /// WRITEIMM; the receive completion tells the responder what to
+    /// flush; responder acks. (DMP+DDIO, WRITEIMM primary.)
+    WriteImmFlushAck,
+    /// Classic message passing: SEND; responder copies payload to the
+    /// target, flushes, acks. (DMP SEND rows; universal fallback.)
+    SendCopyFlushAck,
+    /// One-sided: WRITE; FLUSH; wait for FLUSH completion.
+    /// (DMP+¬DDIO and MHP, WRITE primary.)
+    WriteFlush,
+    /// One-sided: WRITEIMM; FLUSH; wait for FLUSH completion. Assumes
+    /// loss of the immediate is tolerable (paper §3.2).
+    WriteImmFlush,
+    /// SEND treated as one-sided (PM-resident RQWRB): SEND; FLUSH; wait.
+    /// Recovery replays the persistent message. (DMP+¬DDIO+PM, MHP+PM.)
+    SendFlush,
+    /// SEND; responder copies (no flush — store visibility is
+    /// persistence), acks. (MHP/WSP with DRAM RQWRB.)
+    SendCopyAck,
+    /// WRITE; wait for its completion. (WSP, IB/RoCE.)
+    WriteComp,
+    /// WRITEIMM; wait for its completion. (WSP, IB/RoCE.)
+    WriteImmComp,
+    /// SEND; wait for its completion (PM RQWRB; recovery replays).
+    /// (WSP, IB/RoCE.)
+    SendComp,
+}
+
+impl SingletonMethod {
+    pub const ALL: [SingletonMethod; 10] = [
+        SingletonMethod::WriteMsgFlushAck,
+        SingletonMethod::WriteImmFlushAck,
+        SingletonMethod::SendCopyFlushAck,
+        SingletonMethod::WriteFlush,
+        SingletonMethod::WriteImmFlush,
+        SingletonMethod::SendFlush,
+        SingletonMethod::SendCopyAck,
+        SingletonMethod::WriteComp,
+        SingletonMethod::WriteImmComp,
+        SingletonMethod::SendComp,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SingletonMethod::WriteMsgFlushAck => "Write+Msg/Flush/Ack",
+            SingletonMethod::WriteImmFlushAck => "WriteImm/Flush/Ack",
+            SingletonMethod::SendCopyFlushAck => "Send/Copy+Flush/Ack",
+            SingletonMethod::WriteFlush => "Write;Flush",
+            SingletonMethod::WriteImmFlush => "WriteImm;Flush",
+            SingletonMethod::SendFlush => "Send;Flush (one-sided)",
+            SingletonMethod::SendCopyAck => "Send/Copy/Ack",
+            SingletonMethod::WriteComp => "Write;Comp",
+            SingletonMethod::WriteImmComp => "WriteImm;Comp",
+            SingletonMethod::SendComp => "Send;Comp (one-sided)",
+        }
+    }
+
+    /// Paper-notation step sequence (Table 2 cells).
+    pub fn steps(&self) -> Vec<&'static str> {
+        use SingletonMethod::*;
+        match self {
+            WriteMsgFlushAck => vec![
+                "Rq Write(a)",
+                "Rq Send(&a)",
+                "Rsp Receive(&a)",
+                "Rsp flush(&a)",
+                "Rsp Send(ack)",
+                "Rq Receive(ack)",
+            ],
+            WriteImmFlushAck => vec![
+                "Rq WriteImm(a)",
+                "Rsp Receive(&a)",
+                "Rsp flush(&a)",
+                "Rsp Send(ack)",
+                "Rq Receive(ack)",
+            ],
+            SendCopyFlushAck => vec![
+                "Rq Send(a)",
+                "Rsp Receive(a)",
+                "Rsp copy(a) + flush(&a)",
+                "Rsp Send(ack)",
+                "Rq Receive(ack)",
+            ],
+            WriteFlush => vec!["Rq Write(a)", "Rq Flush", "Rq Comp_Flush"],
+            WriteImmFlush => {
+                vec!["Rq WriteImm(a)", "Rq Flush", "Rq Comp_Flush"]
+            }
+            SendFlush => vec!["Rq Send(a)", "Rq Flush", "Rq Comp_Flush"],
+            SendCopyAck => vec![
+                "Rq Send(a)",
+                "Rsp Receive(a)",
+                "Rsp copy(a)",
+                "Rsp Send(ack)",
+                "Rq Receive(ack)",
+            ],
+            WriteComp => vec!["Rq Write(a)", "Rq Comp_Write(a)"],
+            WriteImmComp => vec!["Rq WriteImm(a)", "Rq Comp_WriteImm(a)"],
+            SendComp => vec!["Rq Send(a)", "Rq Comp_Send(a)"],
+        }
+    }
+
+    pub fn persistence_point(&self) -> PersistencePoint {
+        use SingletonMethod::*;
+        match self {
+            WriteMsgFlushAck | WriteImmFlushAck | SendCopyFlushAck
+            | SendCopyAck => PersistencePoint::ResponderAck,
+            WriteFlush | WriteImmFlush | SendFlush => {
+                PersistencePoint::FlushCompletion
+            }
+            WriteComp | WriteImmComp | SendComp => {
+                PersistencePoint::UpdateCompletion
+            }
+        }
+    }
+
+    /// One-sided methods need no responder CPU on the persistence path.
+    pub fn is_one_sided(&self) -> bool {
+        self.persistence_point() != PersistencePoint::ResponderAck
+    }
+
+    /// Methods that persist the *message* (in a PM RQWRB) rather than the
+    /// target location — the recovery subsystem must replay surviving
+    /// messages (paper §3.2).
+    pub fn requires_replay(&self) -> bool {
+        matches!(self, SingletonMethod::SendFlush | SingletonMethod::SendComp)
+    }
+}
+
+/// Methods for persisting a compound update — `a` then `b`, strictly
+/// ordered (Table 3). The canonical case is the log append: record `a`,
+/// then the ≤ 8-byte tail pointer `b`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompoundMethod {
+    /// Two full singleton WRITE+msg round trips, one per update.
+    /// (DMP+DDIO, WRITE.)
+    WriteMsgFlushAckTwice,
+    /// Two WRITEIMM/flush/ack round trips. (DMP+DDIO, WRITEIMM.)
+    WriteImmFlushAckTwice,
+    /// Single SEND carrying both updates; responder copies + flushes
+    /// them in order, acks. (DMP SEND; single round trip — the §4.4
+    /// advantage.)
+    SendCopyFlushAck,
+    /// Pipelined one-sided: WRITE(a); FLUSH; WRITE_atomic(b); FLUSH;
+    /// wait for the second FLUSH. Requires the IBTA non-posted WRITE and
+    /// b ≤ 8 bytes. (DMP+¬DDIO, WRITE.)
+    WriteFlushAtomicFlush,
+    /// Conservative one-sided: WRITE(a); FLUSH; *wait*; WRITE(b); FLUSH;
+    /// wait. Used when b > 8 bytes or WRITE_atomic is unavailable.
+    WriteFlushWaitWriteFlush,
+    /// WRITEIMM(a); FLUSH; *wait* (no atomic WRITEIMM exists, §4.4);
+    /// WRITEIMM(b); FLUSH; wait. (DMP+¬DDIO, WRITEIMM.)
+    WriteImmFlushWaitImmFlush,
+    /// One-sided SEND (PM RQWRB) carrying both updates; FLUSH; wait.
+    /// Recovery replays. (DMP+¬DDIO+PM, MHP+PM SEND.)
+    SendFlush,
+    /// Pipelined WRITE(a); WRITE(b); FLUSH; wait — in-order visibility
+    /// is persistence order under MHP. (MHP, WRITE.)
+    WritePipelinedFlush,
+    /// Pipelined WRITEIMM(a); WRITEIMM(b); FLUSH; wait. (MHP, WRITEIMM.)
+    WriteImmPipelinedFlush,
+    /// SEND both updates; responder copies in order (no flush), acks.
+    /// (MHP/WSP with DRAM RQWRB.)
+    SendCopyAck,
+    /// WRITE(a); WRITE(b); wait for b's completion. (WSP, IB/RoCE.)
+    WriteWriteComp,
+    /// WRITEIMM(a); WRITEIMM(b); wait for b's completion. (WSP.)
+    WriteImmWriteImmComp,
+    /// Single SEND with both updates; wait for its completion (WSP + PM
+    /// RQWRB; recovery replays).
+    SendComp,
+}
+
+impl CompoundMethod {
+    pub const ALL: [CompoundMethod; 13] = [
+        CompoundMethod::WriteMsgFlushAckTwice,
+        CompoundMethod::WriteImmFlushAckTwice,
+        CompoundMethod::SendCopyFlushAck,
+        CompoundMethod::WriteFlushAtomicFlush,
+        CompoundMethod::WriteFlushWaitWriteFlush,
+        CompoundMethod::WriteImmFlushWaitImmFlush,
+        CompoundMethod::SendFlush,
+        CompoundMethod::WritePipelinedFlush,
+        CompoundMethod::WriteImmPipelinedFlush,
+        CompoundMethod::SendCopyAck,
+        CompoundMethod::WriteWriteComp,
+        CompoundMethod::WriteImmWriteImmComp,
+        CompoundMethod::SendComp,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        use CompoundMethod::*;
+        match self {
+            WriteMsgFlushAckTwice => "2x (Write+Msg/Flush/Ack)",
+            WriteImmFlushAckTwice => "2x (WriteImm/Flush/Ack)",
+            SendCopyFlushAck => "Send(a,b)/Copy+Flush/Ack",
+            WriteFlushAtomicFlush => "Write;Flush;Write_atomic;Flush",
+            WriteFlushWaitWriteFlush => "Write;Flush;wait;Write;Flush",
+            WriteImmFlushWaitImmFlush => "WriteImm;Flush;wait;WriteImm;Flush",
+            SendFlush => "Send(a,b);Flush (one-sided)",
+            WritePipelinedFlush => "Write;Write;Flush",
+            WriteImmPipelinedFlush => "WriteImm;WriteImm;Flush",
+            SendCopyAck => "Send(a,b)/Copy/Ack",
+            WriteWriteComp => "Write;Write;Comp",
+            WriteImmWriteImmComp => "WriteImm;WriteImm;Comp",
+            SendComp => "Send(a,b);Comp (one-sided)",
+        }
+    }
+
+    /// Paper-notation step sequence (Table 3 cells).
+    pub fn steps(&self) -> Vec<&'static str> {
+        use CompoundMethod::*;
+        match self {
+            WriteMsgFlushAckTwice => vec![
+                "Rq Write(a)", "Rq Send(&a)", "Rsp Receive(&a)",
+                "Rsp flush(&a)", "Rsp Send(ack)", "Rq Receive(ack)",
+                "Rq Write(b)", "Rq Send(&b)", "Rsp Receive(&b)",
+                "Rsp flush(&b)", "Rsp Send(ack)", "Rq Receive(ack)",
+            ],
+            WriteImmFlushAckTwice => vec![
+                "Rq WriteImm(a)", "Rsp Receive(&a)", "Rsp flush(&a)",
+                "Rsp Send(ack)", "Rq Receive(ack)", "Rq WriteImm(b)",
+                "Rsp Receive(&b)", "Rsp flush(&b)", "Rsp Send(ack)",
+                "Rq Receive(ack)",
+            ],
+            SendCopyFlushAck => vec![
+                "Rq Send(a,b)", "Rsp Receive(a,b)",
+                "Rsp copy + flush(a,b)", "Rsp Send(ack)", "Rq Receive(ack)",
+            ],
+            WriteFlushAtomicFlush => vec![
+                "Rq Write(a)", "Rq Flush", "Rq Write_atomic(b)", "Rq Flush",
+                "Rq Comp_Flush",
+            ],
+            WriteFlushWaitWriteFlush => vec![
+                "Rq Write(a)", "Rq Flush", "Rq Comp_Flush", "Rq Write(b)",
+                "Rq Flush", "Rq Comp_Flush",
+            ],
+            WriteImmFlushWaitImmFlush => vec![
+                "Rq WriteImm(a)", "Rq Flush", "Rq Comp_Flush",
+                "Rq WriteImm(b)", "Rq Flush", "Rq Comp_Flush",
+            ],
+            SendFlush => vec!["Rq Send(a,b)", "Rq Flush", "Rq Comp_Flush"],
+            WritePipelinedFlush => vec![
+                "Rq Write(a)", "Rq Write(b)", "Rq Flush", "Rq Comp_Flush",
+            ],
+            WriteImmPipelinedFlush => vec![
+                "Rq WriteImm(a)", "Rq WriteImm(b)", "Rq Flush",
+                "Rq Comp_Flush",
+            ],
+            SendCopyAck => vec![
+                "Rq Send(a,b)", "Rsp Receive(a,b)", "Rsp copy(a,b)",
+                "Rsp Send(ack)", "Rq Receive(ack)",
+            ],
+            WriteWriteComp => vec![
+                "Rq Write(a)", "Rq Write(b)", "Rq Comp_Write(b)",
+            ],
+            WriteImmWriteImmComp => vec![
+                "Rq WriteImm(a)", "Rq WriteImm(b)", "Rq Comp_WriteImm(b)",
+            ],
+            SendComp => vec!["Rq Send(a,b)", "Rq Comp_Send(a,b)"],
+        }
+    }
+
+    pub fn persistence_point(&self) -> PersistencePoint {
+        use CompoundMethod::*;
+        match self {
+            WriteMsgFlushAckTwice | WriteImmFlushAckTwice
+            | SendCopyFlushAck | SendCopyAck => PersistencePoint::ResponderAck,
+            WriteFlushAtomicFlush | WriteFlushWaitWriteFlush
+            | WriteImmFlushWaitImmFlush | SendFlush | WritePipelinedFlush
+            | WriteImmPipelinedFlush => PersistencePoint::FlushCompletion,
+            WriteWriteComp | WriteImmWriteImmComp | SendComp => {
+                PersistencePoint::UpdateCompletion
+            }
+        }
+    }
+
+    pub fn is_one_sided(&self) -> bool {
+        self.persistence_point() != PersistencePoint::ResponderAck
+    }
+
+    pub fn requires_replay(&self) -> bool {
+        matches!(self, CompoundMethod::SendFlush | CompoundMethod::SendComp)
+    }
+
+    /// Needs the IBTA non-posted WRITE extension.
+    pub fn requires_atomic_write(&self) -> bool {
+        matches!(self, CompoundMethod::WriteFlushAtomicFlush)
+    }
+
+    /// Number of requester-observed round trips on the critical path
+    /// (used by the report generator to explain latency shapes).
+    pub fn round_trips(&self) -> u32 {
+        use CompoundMethod::*;
+        match self {
+            WriteMsgFlushAckTwice | WriteImmFlushAckTwice
+            | WriteFlushWaitWriteFlush | WriteImmFlushWaitImmFlush => 2,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_singleton_methods() {
+        assert_eq!(SingletonMethod::ALL.len(), 10);
+        let names: std::collections::HashSet<_> =
+            SingletonMethod::ALL.iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), 10);
+    }
+
+    #[test]
+    fn thirteen_compound_recipes() {
+        assert_eq!(CompoundMethod::ALL.len(), 13);
+    }
+
+    #[test]
+    fn one_sided_classification() {
+        assert!(!SingletonMethod::SendCopyFlushAck.is_one_sided());
+        assert!(SingletonMethod::WriteFlush.is_one_sided());
+        assert!(SingletonMethod::SendFlush.is_one_sided());
+        assert!(CompoundMethod::SendComp.is_one_sided());
+        assert!(!CompoundMethod::SendCopyAck.is_one_sided());
+    }
+
+    #[test]
+    fn replay_methods_are_send_one_sided() {
+        for m in SingletonMethod::ALL {
+            if m.requires_replay() {
+                assert!(m.is_one_sided());
+            }
+        }
+        for m in CompoundMethod::ALL {
+            if m.requires_replay() {
+                assert!(m.is_one_sided());
+            }
+        }
+    }
+
+    #[test]
+    fn steps_nonempty_and_start_at_requester() {
+        for m in SingletonMethod::ALL {
+            let steps = m.steps();
+            assert!(!steps.is_empty());
+            assert!(steps[0].starts_with("Rq "), "{}", m.name());
+        }
+        for m in CompoundMethod::ALL {
+            assert!(m.steps()[0].starts_with("Rq "), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn round_trip_counts() {
+        assert_eq!(CompoundMethod::WriteMsgFlushAckTwice.round_trips(), 2);
+        assert_eq!(CompoundMethod::WriteFlushAtomicFlush.round_trips(), 1);
+        assert_eq!(CompoundMethod::SendComp.round_trips(), 1);
+    }
+}

@@ -1,0 +1,274 @@
+//! The persistence planner: the paper's Tables 2 and 3 as a function.
+//!
+//! Given a responder configuration and the primary operation an
+//! application wants to use, the planner returns the method that
+//! *correctly* persists the update on that configuration — the "single
+//! RDMA library that transparently applies the correct method of remote
+//! persistence for a given system" the paper's §5 proposes.
+//!
+//! Two taxonomy refinements from the paper's discussion are encoded
+//! beyond the raw tables:
+//!
+//! * **iWARP** (§3.2): a posted-op completion does not imply responder
+//!   receipt, so a WSP responder must be driven with the corresponding
+//!   MHP method (the completion-only WSP shortcuts are unsound).
+//! * **Extensions** (§3.4): without the IBTA non-posted WRITE, the
+//!   pipelined `Write;Flush;Write_atomic;Flush` compound method cannot be
+//!   correctly emulated; the planner falls back to waiting for the first
+//!   FLUSH completion. (FLUSH itself is correctly emulable by READ, so
+//!   FLUSH-based methods survive — the executor swaps the op kind.)
+
+use crate::persist::config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
+use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
+
+/// Plan the correct method for a singleton update (Table 2).
+pub fn plan_singleton(cfg: &ServerConfig, primary: Primary) -> SingletonMethod {
+    use Primary::*;
+    use SingletonMethod::*;
+
+    // iWARP: completion-only persistence is unsound even under WSP —
+    // "the methods for remote persistence for WSP essentially mimic the
+    // corresponding methods for remote persistence for MHP" (§3.2).
+    let effective = effective_domain(cfg);
+
+    match (effective, cfg.ddio, cfg.rqwrb, primary) {
+        // ---- DMP ----
+        (PDomain::Dmp, true, _, Write) => WriteMsgFlushAck,
+        (PDomain::Dmp, true, _, WriteImm) => WriteImmFlushAck,
+        (PDomain::Dmp, true, _, Send) => SendCopyFlushAck,
+        (PDomain::Dmp, false, _, Write) => WriteFlush,
+        (PDomain::Dmp, false, _, WriteImm) => WriteImmFlush,
+        (PDomain::Dmp, false, RqwrbLoc::Dram, Send) => SendCopyFlushAck,
+        (PDomain::Dmp, false, RqwrbLoc::Pm, Send) => SendFlush,
+        // ---- MHP (DDIO is irrelevant: cache is persistent) ----
+        (PDomain::Mhp, _, _, Write) => WriteFlush,
+        (PDomain::Mhp, _, _, WriteImm) => WriteImmFlush,
+        (PDomain::Mhp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
+        (PDomain::Mhp, _, RqwrbLoc::Pm, Send) => SendFlush,
+        // ---- WSP (IB/RoCE: receipt at the RNIC is persistence) ----
+        (PDomain::Wsp, _, _, Write) => WriteComp,
+        (PDomain::Wsp, _, _, WriteImm) => WriteImmComp,
+        (PDomain::Wsp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
+        (PDomain::Wsp, _, RqwrbLoc::Pm, Send) => SendComp,
+    }
+}
+
+/// Plan the correct method for a compound (strictly ordered a-then-b)
+/// update (Table 3). `b_len` matters: the pipelined WRITE_atomic method
+/// only applies when b fits the 8-byte atomic limit.
+pub fn plan_compound(
+    cfg: &ServerConfig,
+    primary: Primary,
+    b_len: usize,
+) -> CompoundMethod {
+    use CompoundMethod::*;
+    use Primary::*;
+
+    let effective = effective_domain(cfg);
+
+    match (effective, cfg.ddio, cfg.rqwrb, primary) {
+        // ---- DMP ----
+        (PDomain::Dmp, true, _, Write) => WriteMsgFlushAckTwice,
+        (PDomain::Dmp, true, _, WriteImm) => WriteImmFlushAckTwice,
+        (PDomain::Dmp, true, _, Send) => SendCopyFlushAck,
+        (PDomain::Dmp, false, _, Write) => {
+            if b_len <= 8 && cfg.extensions == Extensions::Ibta {
+                WriteFlushAtomicFlush
+            } else {
+                // b too large for WRITE_atomic, or the extension is
+                // unavailable and cannot be correctly emulated (§3.4).
+                WriteFlushWaitWriteFlush
+            }
+        }
+        (PDomain::Dmp, false, _, WriteImm) => WriteImmFlushWaitImmFlush,
+        (PDomain::Dmp, false, RqwrbLoc::Dram, Send) => SendCopyFlushAck,
+        (PDomain::Dmp, false, RqwrbLoc::Pm, Send) => SendFlush,
+        // ---- MHP ----
+        (PDomain::Mhp, _, _, Write) => WritePipelinedFlush,
+        (PDomain::Mhp, _, _, WriteImm) => WriteImmPipelinedFlush,
+        (PDomain::Mhp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
+        (PDomain::Mhp, _, RqwrbLoc::Pm, Send) => SendFlush,
+        // ---- WSP ----
+        (PDomain::Wsp, _, _, Write) => WriteWriteComp,
+        (PDomain::Wsp, _, _, WriteImm) => WriteImmWriteImmComp,
+        (PDomain::Wsp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
+        (PDomain::Wsp, _, RqwrbLoc::Pm, Send) => SendComp,
+    }
+}
+
+/// WSP on iWARP must be treated as MHP (§3.2).
+fn effective_domain(cfg: &ServerConfig) -> PDomain {
+    if cfg.pdomain == PDomain::Wsp && cfg.transport == Transport::Iwarp {
+        PDomain::Mhp
+    } else {
+        cfg.pdomain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::ServerConfig;
+
+    fn cfg(pd: PDomain, ddio: bool, rq: RqwrbLoc) -> ServerConfig {
+        ServerConfig::new(pd, ddio, rq)
+    }
+
+    #[test]
+    fn table2_dmp_rows() {
+        use SingletonMethod::*;
+        let c = cfg(PDomain::Dmp, true, RqwrbLoc::Dram);
+        assert_eq!(plan_singleton(&c, Primary::Write), WriteMsgFlushAck);
+        assert_eq!(plan_singleton(&c, Primary::WriteImm), WriteImmFlushAck);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendCopyFlushAck);
+        // PM RQWRB makes no difference while DDIO is on (§3.2).
+        let c = cfg(PDomain::Dmp, true, RqwrbLoc::Pm);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendCopyFlushAck);
+        // DDIO off: one-sided operations become possible.
+        let c = cfg(PDomain::Dmp, false, RqwrbLoc::Dram);
+        assert_eq!(plan_singleton(&c, Primary::Write), WriteFlush);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendCopyFlushAck);
+        let c = cfg(PDomain::Dmp, false, RqwrbLoc::Pm);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendFlush);
+    }
+
+    #[test]
+    fn table2_mhp_rows() {
+        use SingletonMethod::*;
+        for ddio in [true, false] {
+            let c = cfg(PDomain::Mhp, ddio, RqwrbLoc::Dram);
+            assert_eq!(plan_singleton(&c, Primary::Write), WriteFlush);
+            assert_eq!(plan_singleton(&c, Primary::WriteImm), WriteImmFlush);
+            assert_eq!(plan_singleton(&c, Primary::Send), SendCopyAck);
+            let c = cfg(PDomain::Mhp, ddio, RqwrbLoc::Pm);
+            assert_eq!(plan_singleton(&c, Primary::Send), SendFlush);
+        }
+    }
+
+    #[test]
+    fn table2_wsp_rows() {
+        use SingletonMethod::*;
+        let c = cfg(PDomain::Wsp, true, RqwrbLoc::Dram);
+        assert_eq!(plan_singleton(&c, Primary::Write), WriteComp);
+        assert_eq!(plan_singleton(&c, Primary::WriteImm), WriteImmComp);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendCopyAck);
+        let c = cfg(PDomain::Wsp, false, RqwrbLoc::Pm);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendComp);
+    }
+
+    #[test]
+    fn wsp_on_iwarp_mimics_mhp() {
+        use SingletonMethod::*;
+        let c = cfg(PDomain::Wsp, true, RqwrbLoc::Dram)
+            .with_transport(Transport::Iwarp);
+        assert_eq!(plan_singleton(&c, Primary::Write), WriteFlush);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendCopyAck);
+        let c = cfg(PDomain::Wsp, false, RqwrbLoc::Pm)
+            .with_transport(Transport::Iwarp);
+        assert_eq!(plan_singleton(&c, Primary::Send), SendFlush);
+        assert_eq!(
+            plan_compound(&c, Primary::Write, 8),
+            CompoundMethod::WritePipelinedFlush
+        );
+    }
+
+    #[test]
+    fn table3_dmp_rows() {
+        use CompoundMethod::*;
+        let c = cfg(PDomain::Dmp, true, RqwrbLoc::Dram);
+        assert_eq!(plan_compound(&c, Primary::Write, 8), WriteMsgFlushAckTwice);
+        assert_eq!(plan_compound(&c, Primary::Send, 8), SendCopyFlushAck);
+        let c = cfg(PDomain::Dmp, false, RqwrbLoc::Dram);
+        assert_eq!(plan_compound(&c, Primary::Write, 8), WriteFlushAtomicFlush);
+        assert_eq!(
+            plan_compound(&c, Primary::WriteImm, 8),
+            WriteImmFlushWaitImmFlush
+        );
+        let c = cfg(PDomain::Dmp, false, RqwrbLoc::Pm);
+        assert_eq!(plan_compound(&c, Primary::Send, 8), SendFlush);
+    }
+
+    #[test]
+    fn atomic_write_gated_on_size_and_extension() {
+        use CompoundMethod::*;
+        let c = cfg(PDomain::Dmp, false, RqwrbLoc::Dram);
+        // b > 8 bytes: WRITE_atomic does not apply (§3.3).
+        assert_eq!(
+            plan_compound(&c, Primary::Write, 16),
+            WriteFlushWaitWriteFlush
+        );
+        // No IBTA extensions: non-posted WRITE cannot be correctly
+        // emulated (§3.4).
+        let c = c.with_extensions(Extensions::Emulated);
+        assert_eq!(
+            plan_compound(&c, Primary::Write, 8),
+            WriteFlushWaitWriteFlush
+        );
+    }
+
+    #[test]
+    fn table3_mhp_wsp_rows() {
+        use CompoundMethod::*;
+        let c = cfg(PDomain::Mhp, true, RqwrbLoc::Dram);
+        assert_eq!(plan_compound(&c, Primary::Write, 8), WritePipelinedFlush);
+        assert_eq!(plan_compound(&c, Primary::Send, 8), SendCopyAck);
+        let c = cfg(PDomain::Mhp, false, RqwrbLoc::Pm);
+        assert_eq!(plan_compound(&c, Primary::Send, 8), SendFlush);
+        let c = cfg(PDomain::Wsp, true, RqwrbLoc::Dram);
+        assert_eq!(plan_compound(&c, Primary::Write, 8), WriteWriteComp);
+        let c = cfg(PDomain::Wsp, false, RqwrbLoc::Pm);
+        assert_eq!(plan_compound(&c, Primary::Send, 8), SendComp);
+    }
+
+    #[test]
+    fn all_72_scenarios_have_a_plan() {
+        // 12 configs x 3 primaries x 2 update kinds = 72 (paper §1).
+        let mut n = 0;
+        for c in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let _ = plan_singleton(&c, p);
+                let _ = plan_compound(&c, p, 8);
+                n += 2;
+            }
+        }
+        assert_eq!(n, 72);
+    }
+
+    #[test]
+    fn ddio_never_matters_outside_dmp() {
+        for pd in [PDomain::Mhp, PDomain::Wsp] {
+            for rq in RqwrbLoc::ALL {
+                for p in Primary::ALL {
+                    let on = cfg(pd, true, rq);
+                    let off = cfg(pd, false, rq);
+                    assert_eq!(
+                        plan_singleton(&on, p),
+                        plan_singleton(&off, p)
+                    );
+                    assert_eq!(
+                        plan_compound(&on, p, 8),
+                        plan_compound(&off, p, 8)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rqwrb_only_matters_for_send() {
+        for c in ServerConfig::table1() {
+            let mut other = c;
+            other.rqwrb = match c.rqwrb {
+                RqwrbLoc::Dram => RqwrbLoc::Pm,
+                RqwrbLoc::Pm => RqwrbLoc::Dram,
+            };
+            for p in [Primary::Write, Primary::WriteImm] {
+                assert_eq!(plan_singleton(&c, p), plan_singleton(&other, p));
+                assert_eq!(
+                    plan_compound(&c, p, 8),
+                    plan_compound(&other, p, 8)
+                );
+            }
+        }
+    }
+}

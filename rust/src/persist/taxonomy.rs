@@ -1,0 +1,96 @@
+//! Table renderers: regenerate the paper's Tables 1-3 from the planner.
+
+use crate::persist::config::{RqwrbLoc, ServerConfig};
+use crate::persist::method::Primary;
+use crate::persist::planner::{plan_compound, plan_singleton};
+
+/// Table 1: the twelve remote server configurations.
+pub fn render_table1() -> String {
+    let mut out = String::new();
+    out.push_str("Table 1: Remote server configurations\n");
+    out.push_str(&format!("{:<24} Explanation\n", "Config"));
+    out.push_str(&"-".repeat(78));
+    out.push('\n');
+    for cfg in ServerConfig::table1() {
+        let expl = format!(
+            "{}, with DDIO turned {}, and RQWRB placed in {}.",
+            cfg.pdomain.name(),
+            if cfg.ddio { "on" } else { "off" },
+            match cfg.rqwrb {
+                RqwrbLoc::Dram => "DRAM",
+                RqwrbLoc::Pm => "PM",
+            }
+        );
+        out.push_str(&format!("{:<24} {}\n", cfg.label(), expl));
+    }
+    out
+}
+
+fn render_method_table(title: &str, compound: bool) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(&"=".repeat(title.len()));
+    out.push('\n');
+    for cfg in ServerConfig::table1() {
+        out.push_str(&format!("\n[{}]\n", cfg.label()));
+        for p in Primary::ALL {
+            let (name, steps) = if compound {
+                let m = plan_compound(&cfg, p, 8);
+                (m.name(), m.steps())
+            } else {
+                let m = plan_singleton(&cfg, p);
+                (m.name(), m.steps())
+            };
+            out.push_str(&format!("  {:<9} -> {}\n", p.name(), name));
+            for s in steps {
+                out.push_str(&format!("      {s}\n"));
+            }
+        }
+    }
+    out
+}
+
+/// Table 2: taxonomy for singleton updates.
+pub fn render_table2() -> String {
+    render_method_table(
+        "Table 2: Taxonomy for Singleton Updates (value a at address &a)",
+        false,
+    )
+}
+
+/// Table 3: taxonomy for compound updates (a then b, strictly ordered).
+pub fn render_table3() -> String {
+    render_method_table(
+        "Table 3: Taxonomy for Compound Updates (a followed by b)",
+        true,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_all_configs() {
+        let t = render_table1();
+        assert_eq!(t.matches("RQWRB placed in").count(), 12);
+        assert!(t.contains("DMP+DDIO+DRAM-RQWRB"));
+        assert!(t.contains("WSP+¬DDIO+PM-RQWRB"));
+    }
+
+    #[test]
+    fn table2_has_36_cells() {
+        let t = render_table2();
+        assert_eq!(t.matches(" -> ").count(), 36);
+        assert!(t.contains("Rq Comp_Flush"));
+        assert!(t.contains("Rsp Send(ack)"));
+    }
+
+    #[test]
+    fn table3_has_36_cells_and_atomic() {
+        let t = render_table3();
+        assert_eq!(t.matches(" -> ").count(), 36);
+        assert!(t.contains("Write_atomic"));
+    }
+}

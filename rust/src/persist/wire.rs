@@ -1,0 +1,230 @@
+//! Wire envelope for SEND-based persistence methods.
+//!
+//! When RDMA SEND is used as the update vehicle, the message must be
+//! self-describing: the responder CPU (message-passing recipes) uses it
+//! to apply updates, and — for the one-sided-SEND recipes with
+//! PM-resident RQWRBs (paper §3.2/§3.3) — the *recovery subsystem* parses
+//! the surviving RQWRB ring after a power failure and replays messages to
+//! their target locations. The envelope therefore carries its own
+//! Fletcher checksum so recovery can reject torn messages.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic     u32    = 0x524C_4F47 ("RLOG")
+//! msg_seq   u32    message sequence number (replay order/idempotence)
+//! n_updates u32
+//! reserved  u32
+//! checksum  u64    fletcher64 (s2 ‖ s1) over everything after this field
+//!                  — the full pair; a 32-bit fold of the two
+//!                  accumulators can collide on single-byte flips
+//! { target u64, len u32 } * n_updates
+//! data bytes (concatenated update payloads)
+//! ```
+
+use crate::fabric::engine::CopySpec;
+use crate::integrity::fletcher64;
+
+pub const MAGIC: u32 = 0x524C_4F47;
+pub const HEADER_BYTES: usize = 24;
+pub const UPDATE_DESC_BYTES: usize = 12;
+
+/// One update carried in a message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireUpdate {
+    pub target: u64,
+    pub data: Vec<u8>,
+}
+
+/// Encode a message carrying `updates` (applied in order).
+pub fn encode(msg_seq: u32, updates: &[WireUpdate]) -> Vec<u8> {
+    let data_len: usize = updates.iter().map(|u| u.data.len()).sum();
+    let total = HEADER_BYTES + UPDATE_DESC_BYTES * updates.len() + data_len;
+    let mut buf = Vec::with_capacity(total);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&msg_seq.to_le_bytes());
+    buf.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes()); // reserved
+    buf.extend_from_slice(&0u64.to_le_bytes()); // checksum placeholder
+    for u in updates {
+        buf.extend_from_slice(&u.target.to_le_bytes());
+        buf.extend_from_slice(&(u.data.len() as u32).to_le_bytes());
+    }
+    for u in updates {
+        buf.extend_from_slice(&u.data);
+    }
+    let ck = envelope_digest(msg_seq, updates.len() as u32, &buf[HEADER_BYTES..]);
+    buf[16..24].copy_from_slice(&ck.to_le_bytes());
+    buf
+}
+
+/// 64-bit envelope digest: Fletcher pair over the body, mixed with the
+/// header fields so a flipped `msg_seq`/`n_updates` is also detected.
+fn envelope_digest(msg_seq: u32, n: u32, body: &[u8]) -> u64 {
+    fletcher64(body) ^ crate::util::rng::mix(((msg_seq as u64) << 32) | n as u64)
+}
+
+/// Decoding errors — recovery treats any of these as "torn / absent
+/// message" and stops replaying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    TooShort,
+    BadMagic,
+    BadChecksum,
+    Malformed,
+}
+
+/// Decoded message view.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireMessage {
+    pub msg_seq: u32,
+    pub updates: Vec<WireUpdate>,
+}
+
+/// Decode and integrity-check a message image (e.g. one RQWRB slot).
+pub fn decode(buf: &[u8]) -> Result<WireMessage, DecodeError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(DecodeError::TooShort);
+    }
+    let rd_u32 =
+        |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+    if rd_u32(0) != MAGIC {
+        return Err(DecodeError::BadMagic);
+    }
+    let msg_seq = rd_u32(4);
+    let n = rd_u32(8) as usize;
+    let stored_ck = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    if n > 64 {
+        return Err(DecodeError::Malformed);
+    }
+    let desc_end = HEADER_BYTES + n * UPDATE_DESC_BYTES;
+    if buf.len() < desc_end {
+        return Err(DecodeError::TooShort);
+    }
+    let mut lens = Vec::with_capacity(n);
+    let mut targets = Vec::with_capacity(n);
+    for i in 0..n {
+        let off = HEADER_BYTES + i * UPDATE_DESC_BYTES;
+        targets.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()));
+        lens.push(rd_u32(off + 8) as usize);
+    }
+    let data_len: usize = lens.iter().sum();
+    let total = desc_end + data_len;
+    if buf.len() < total {
+        return Err(DecodeError::TooShort);
+    }
+    if envelope_digest(msg_seq, n as u32, &buf[HEADER_BYTES..total]) != stored_ck
+    {
+        return Err(DecodeError::BadChecksum);
+    }
+    let mut updates = Vec::with_capacity(n);
+    let mut off = desc_end;
+    for i in 0..n {
+        updates.push(WireUpdate {
+            target: targets[i],
+            data: buf[off..off + lens[i]].to_vec(),
+        });
+        off += lens[i];
+    }
+    Ok(WireMessage { msg_seq, updates })
+}
+
+/// Copy directives for the responder CPU handler: where each update's
+/// payload bytes live inside the encoded message.
+pub fn copy_specs(updates: &[WireUpdate]) -> Vec<CopySpec> {
+    let mut off = HEADER_BYTES + UPDATE_DESC_BYTES * updates.len();
+    updates
+        .iter()
+        .map(|u| {
+            let spec = CopySpec {
+                payload_off: off,
+                len: u.data.len(),
+                target: u.target,
+            };
+            off += u.data.len();
+            spec
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<WireUpdate> {
+        vec![
+            WireUpdate { target: 0x1000, data: vec![0xAB; 64] },
+            WireUpdate { target: 0x100, data: vec![1, 2, 3, 4, 5, 6, 7, 8] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let buf = encode(42, &sample());
+        let msg = decode(&buf).unwrap();
+        assert_eq!(msg.msg_seq, 42);
+        assert_eq!(msg.updates, sample());
+    }
+
+    #[test]
+    fn roundtrip_with_trailing_slack() {
+        // RQWRB slots are larger than messages; decode must work with
+        // trailing garbage.
+        let mut buf = encode(7, &sample());
+        buf.extend_from_slice(&[0xEE; 32]);
+        assert_eq!(decode(&buf).unwrap().updates, sample());
+    }
+
+    #[test]
+    fn torn_header_detected() {
+        let buf = encode(1, &sample());
+        let mut torn = vec![0u8; buf.len()];
+        torn[..8].copy_from_slice(&buf[..8]); // only first 8 bytes landed
+        assert!(decode(&torn).is_err());
+    }
+
+    #[test]
+    fn torn_data_detected() {
+        let mut buf = encode(1, &sample());
+        let n = buf.len();
+        buf[n - 1] ^= 0xFF;
+        assert_eq!(decode(&buf), Err(DecodeError::BadChecksum));
+    }
+
+    #[test]
+    fn zeroed_slot_rejected() {
+        assert_eq!(decode(&[0u8; 256]), Err(DecodeError::BadMagic));
+        assert_eq!(decode(&[]), Err(DecodeError::TooShort));
+    }
+
+    #[test]
+    fn copy_specs_point_at_payload() {
+        let ups = sample();
+        let buf = encode(3, &ups);
+        let specs = copy_specs(&ups);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(
+            &buf[specs[0].payload_off..specs[0].payload_off + specs[0].len],
+            &ups[0].data[..]
+        );
+        assert_eq!(
+            &buf[specs[1].payload_off..specs[1].payload_off + specs[1].len],
+            &ups[1].data[..]
+        );
+        assert_eq!(specs[0].target, 0x1000);
+        assert_eq!(specs[1].target, 0x100);
+    }
+
+    #[test]
+    fn absurd_update_count_rejected() {
+        let mut buf = encode(1, &sample());
+        buf[8..12].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn empty_update_list() {
+        let buf = encode(0, &[]);
+        let msg = decode(&buf).unwrap();
+        assert!(msg.updates.is_empty());
+    }
+}

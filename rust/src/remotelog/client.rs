@@ -1,0 +1,292 @@
+//! REMOTELOG client: replicates a log to the remote responder using the
+//! planner-selected (or explicitly forced) persistence method.
+//!
+//! Two append modes, matching the paper's two REMOTELOG variants (§4.1):
+//!
+//! * **Singleton** — checksummed records only; the responder finds the
+//!   tail by checksum failure. One singleton RDMA update per append.
+//! * **Compound** — records plus an explicitly managed tail pointer:
+//!   append record `a`, then persist the 8-byte tail pointer `b`,
+//!   strictly in that order.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::persist::config::ServerConfig;
+use crate::persist::exec::{exec_compound, exec_singleton, PersistOutcome, Update};
+use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use crate::persist::planner::{plan_compound, plan_singleton};
+use crate::remotelog::log::{make_record, LogLayout, APP_WORDS, RECORD_BYTES};
+use crate::server::memory::Layout;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Histogram;
+
+/// Which REMOTELOG variant an experiment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppendMode {
+    Singleton,
+    Compound,
+}
+
+impl AppendMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppendMode::Singleton => "singleton",
+            AppendMode::Compound => "compound",
+        }
+    }
+}
+
+/// The method actually used — planned or forced (for
+/// wrong-method-demonstration and ablation experiments).
+#[derive(Debug, Clone, Copy)]
+pub enum MethodChoice {
+    /// Let the planner pick the correct method for the configuration.
+    Planned(Primary),
+    ForcedSingleton(SingletonMethod),
+    ForcedCompound(CompoundMethod),
+}
+
+/// Oracle record of one append, kept by the client for crash checking.
+#[derive(Debug, Clone)]
+pub struct AppendRecord {
+    pub seq: u64,
+    pub record: [u8; RECORD_BYTES],
+    /// Requester clock when the persistence point was observed.
+    pub acked_at: Nanos,
+}
+
+/// A REMOTELOG client bound to one simulated responder.
+pub struct RemoteLog {
+    pub fab: Fabric,
+    pub log: LogLayout,
+    pub mode: AppendMode,
+    singleton_method: SingletonMethod,
+    compound_method: CompoundMethod,
+    next_seq: u64,
+    /// Oracle history (only populated when the fabric records writes).
+    pub appends: Vec<AppendRecord>,
+    pub latencies: Histogram,
+    payload_rng: SplitMix64,
+}
+
+impl RemoteLog {
+    /// Build a client + simulated responder for `cfg`.
+    ///
+    /// `capacity`: log slots; `record`: keep write timelines + oracle
+    /// history (required for crash testing, off for pure benchmarking).
+    pub fn new(
+        cfg: ServerConfig,
+        timing: TimingModel,
+        mode: AppendMode,
+        choice: MethodChoice,
+        capacity: u64,
+        seed: u64,
+        record: bool,
+    ) -> Self {
+        let log = LogLayout::new(capacity);
+        // PM must hold the log region plus the RQWRB ring.
+        let rq_count = 64;
+        let rq_slot = 256u64;
+        let pm_size = (log.end() + rq_count as u64 * rq_slot + 4096)
+            .next_power_of_two();
+        let layout = Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
+        assert!(
+            log.end() <= layout.pm_app_limit(),
+            "log overlaps the RQWRB ring"
+        );
+        let fab = Fabric::new(cfg, timing, layout, seed, record);
+
+        let (sm, cm) = match choice {
+            MethodChoice::Planned(p) => {
+                (plan_singleton(&cfg, p), plan_compound(&cfg, p, 8))
+            }
+            MethodChoice::ForcedSingleton(m) => {
+                (m, plan_compound(&cfg, Primary::Write, 8))
+            }
+            MethodChoice::ForcedCompound(m) => {
+                (plan_singleton(&cfg, Primary::Write), m)
+            }
+        };
+
+        RemoteLog {
+            fab,
+            log,
+            mode,
+            singleton_method: sm,
+            compound_method: cm,
+            next_seq: 0,
+            appends: Vec::new(),
+            latencies: Histogram::new(),
+            payload_rng: SplitMix64::new(seed ^ 0xA5A5_5A5A),
+        }
+    }
+
+    pub fn singleton_method(&self) -> SingletonMethod {
+        self.singleton_method
+    }
+
+    pub fn compound_method(&self) -> CompoundMethod {
+        self.compound_method
+    }
+
+    pub fn appended(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Advance the append sequence counter (used by the pipelined runner,
+    /// which posts records itself).
+    pub(crate) fn bump_seq_to(&mut self, seq: u64) {
+        debug_assert!(seq >= self.next_seq);
+        self.next_seq = seq;
+    }
+
+    /// Append one record with caller-supplied payload words.
+    pub fn append_payload(&mut self, app: &[u32; APP_WORDS]) -> PersistOutcome {
+        let seq = self.next_seq;
+        let record = make_record(seq, app);
+        let slot = self.log.slot_addr(seq);
+        assert!(
+            seq < self.log.capacity || !self.fab.mem.recording(),
+            "log wraparound would invalidate the crash oracle"
+        );
+
+        let out = match self.mode {
+            AppendMode::Singleton => {
+                let u = Update::new(slot, record.to_vec());
+                exec_singleton(&mut self.fab, self.singleton_method, &u, seq as u32)
+            }
+            AppendMode::Compound => {
+                let a = Update::new(slot, record.to_vec());
+                // Tail pointer value = number of durable records = seq+1.
+                let b = Update::new(
+                    self.log.tail_addr,
+                    (seq + 1).to_le_bytes().to_vec(),
+                );
+                exec_compound(&mut self.fab, self.compound_method, &a, &b, seq as u32)
+            }
+        };
+
+        self.next_seq += 1;
+        if self.fab.mem.recording() {
+            self.appends.push(AppendRecord {
+                seq,
+                record,
+                acked_at: out.acked,
+            });
+        }
+        self.latencies.record(out.latency());
+        out
+    }
+
+    /// Append one record with pseudorandom payload.
+    pub fn append(&mut self) -> PersistOutcome {
+        let mut app = [0u32; APP_WORDS];
+        for w in &mut app {
+            *w = self.payload_rng.next_u32();
+        }
+        self.append_payload(&app)
+    }
+
+    /// Run `n` appends back-to-back; returns mean latency (ns).
+    pub fn run(&mut self, n: u64) -> f64 {
+        for _ in 0..n {
+            self.append();
+        }
+        self.latencies.summary().mean()
+    }
+
+    /// Number of appends acked at or before virtual time `t`.
+    pub fn acked_before(&self, t: Nanos) -> u64 {
+        self.appends.iter().take_while(|a| a.acked_at <= t).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+
+    fn client(mode: AppendMode) -> RemoteLog {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        RemoteLog::new(
+            cfg,
+            TimingModel::deterministic(),
+            mode,
+            MethodChoice::Planned(Primary::Write),
+            1024,
+            1,
+            true,
+        )
+    }
+
+    #[test]
+    fn appends_advance_sequence_and_clock() {
+        let mut c = client(AppendMode::Singleton);
+        let o1 = c.append();
+        let o2 = c.append();
+        assert_eq!(c.appended(), 2);
+        assert!(o2.start >= o1.acked);
+        assert_eq!(c.appends.len(), 2);
+        assert!(c.appends[0].acked_at < c.appends[1].acked_at);
+    }
+
+    #[test]
+    fn singleton_records_land_in_slots() {
+        let mut c = client(AppendMode::Singleton);
+        c.append();
+        c.append();
+        let img = c.fab.mem.visible_image(u64::MAX - 1);
+        let rec0 = img.read(c.log.slot_addr(0), RECORD_BYTES);
+        let rec1 = img.read(c.log.slot_addr(1), RECORD_BYTES);
+        assert_eq!(rec0, &c.appends[0].record[..]);
+        assert_eq!(rec1, &c.appends[1].record[..]);
+    }
+
+    #[test]
+    fn compound_updates_tail_pointer() {
+        let mut c = client(AppendMode::Compound);
+        c.append();
+        c.append();
+        c.append();
+        let img = c.fab.mem.visible_image(u64::MAX - 1);
+        assert_eq!(img.read_u64(c.log.tail_addr), 3);
+    }
+
+    #[test]
+    fn acked_before_counts_prefix() {
+        let mut c = client(AppendMode::Singleton);
+        for _ in 0..5 {
+            c.append();
+        }
+        let t2 = c.appends[1].acked_at;
+        assert_eq!(c.acked_before(t2), 2);
+        assert_eq!(c.acked_before(0), 0);
+        assert_eq!(c.acked_before(u64::MAX), 5);
+    }
+
+    #[test]
+    fn mean_latency_positive_and_stable() {
+        let mut c = client(AppendMode::Singleton);
+        let mean = c.run(50);
+        assert!(mean > 1000.0, "sub-microsecond append is implausible");
+        assert_eq!(c.latencies.summary().count(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "wraparound")]
+    fn wraparound_rejected_when_recording() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut c = RemoteLog::new(
+            cfg,
+            TimingModel::deterministic(),
+            AppendMode::Singleton,
+            MethodChoice::Planned(Primary::Write),
+            4,
+            1,
+            true,
+        );
+        for _ in 0..5 {
+            c.append();
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! REMOTELOG — the paper's evaluation workload (§4): log replication over
+//! RDMA with checksummed records (singleton updates) or an explicitly
+//! managed tail pointer (compound updates), plus the crash-recovery
+//! subsystem and the crash-consistency harness that *proves* each
+//! persistence method correct (or demonstrably incorrect).
+
+pub mod antientropy;
+pub mod client;
+pub mod crashtest;
+pub mod log;
+pub mod pipeline;
+pub mod recovery;
+
+pub use client::{AppendMode, AppendRecord, MethodChoice, RemoteLog};
+pub use crashtest::{check_crash_at, crash_sweep, CrashReport};
+pub use log::{LogLayout, APP_WORDS, PAYLOAD_WORDS, RECORD_BYTES, RECORD_WORDS};
+pub use recovery::{recover, RecoveryResult, RustScanner, Scanner};

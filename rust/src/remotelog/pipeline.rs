@@ -1,0 +1,236 @@
+//! Windowed (pipelined) REMOTELOG client: keep up to `window` appends in
+//! flight instead of waiting for each persistence point before issuing
+//! the next — the throughput dimension the paper's latency-only
+//! evaluation leaves open (§5 mentions pipelining as exactly what the
+//! non-posted WRITE enables).
+//!
+//! Pipelining changes nothing about correctness obligations: an append
+//! is "acked" only when *its own* persistence point is observed, and the
+//! crash-consistency harness applies unchanged (the campaign in
+//! `rust/tests/crash_consistency.rs` covers pipelined runs too).
+
+use crate::fabric::timing::Nanos;
+use crate::persist::exec::{post_compound, post_singleton, Update, WaitPoint};
+use crate::remotelog::client::{AppendMode, AppendRecord, RemoteLog};
+use crate::remotelog::log::{make_record, APP_WORDS};
+use std::collections::VecDeque;
+
+/// Result of a pipelined run.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub appends: u64,
+    pub window: usize,
+    /// Virtual time from first post to last persistence point.
+    pub span_ns: Nanos,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+impl PipelineResult {
+    /// Sustained append throughput in million ops per *simulated* second.
+    pub fn throughput_mops(&self) -> f64 {
+        self.appends as f64 / self.span_ns as f64 * 1e3
+    }
+}
+
+/// Is the client's configured method a pure post-train (pipelinable)?
+pub fn pipelinable(rl: &RemoteLog) -> bool {
+    match rl.mode {
+        AppendMode::Singleton => true, // all ten singleton methods are
+        AppendMode::Compound => !matches!(
+            rl.compound_method(),
+            crate::persist::method::CompoundMethod::WriteMsgFlushAckTwice
+                | crate::persist::method::CompoundMethod::WriteImmFlushAckTwice
+                | crate::persist::method::CompoundMethod::WriteFlushWaitWriteFlush
+                | crate::persist::method::CompoundMethod::WriteImmFlushWaitImmFlush
+        ),
+    }
+}
+
+/// Run `n` appends keeping up to `window` in flight. Falls back to
+/// sequential execution (window = 1 semantics) for methods with internal
+/// waits. Latencies are recorded into `rl.latencies` as usual.
+pub fn run_pipelined(rl: &mut RemoteLog, n: u64, window: usize) -> PipelineResult {
+    assert!(window >= 1);
+    if !pipelinable(rl) || window == 1 {
+        let t0 = rl.fab.now();
+        rl.run(n);
+        return PipelineResult {
+            appends: n,
+            window: 1,
+            span_ns: rl.fab.now() - t0,
+            mean_latency_ns: rl.latencies.summary().mean(),
+            p99_latency_ns: rl.latencies.quantile(0.99),
+        };
+    }
+
+    let t0 = rl.fab.now();
+    let mut inflight: VecDeque<(u64, Nanos, WaitPoint, [u8; 64])> =
+        VecDeque::with_capacity(window);
+    let mut payload_seq = rl.appended();
+
+    for _ in 0..n {
+        // Window full: retire the oldest append first.
+        if inflight.len() == window {
+            retire(rl, &mut inflight);
+        }
+        let seq = payload_seq;
+        payload_seq += 1;
+        let mut app = [0u32; APP_WORDS];
+        for (k, w) in app.iter_mut().enumerate() {
+            *w = (seq as u32).wrapping_mul(0x9E37_79B9) ^ k as u32;
+        }
+        let record = make_record(seq, &app);
+        let slot = rl.log.slot_addr(seq);
+        assert!(
+            seq < rl.log.capacity || !rl.fab.mem.recording(),
+            "log wraparound would invalidate the crash oracle"
+        );
+        let start = rl.fab.now();
+        let singleton_method = rl.singleton_method();
+        let compound_method = rl.compound_method();
+        let wp = match rl.mode {
+            AppendMode::Singleton => {
+                let u = Update::new(slot, record.to_vec());
+                post_singleton(&mut rl.fab, singleton_method, &u, seq as u32)
+            }
+            AppendMode::Compound => {
+                let a = Update::new(slot, record.to_vec());
+                let b = Update::new(
+                    rl.log.tail_addr,
+                    (seq + 1).to_le_bytes().to_vec(),
+                );
+                post_compound(&mut rl.fab, compound_method, &a, &b, seq as u32)
+                    .expect("checked pipelinable above")
+            }
+        };
+        inflight.push_back((seq, start, wp, record));
+    }
+    while !inflight.is_empty() {
+        retire(rl, &mut inflight);
+    }
+    rl.bump_seq_to(payload_seq);
+
+    PipelineResult {
+        appends: n,
+        window,
+        span_ns: rl.fab.now() - t0,
+        mean_latency_ns: rl.latencies.summary().mean(),
+        p99_latency_ns: rl.latencies.quantile(0.99),
+    }
+}
+
+fn retire(
+    rl: &mut RemoteLog,
+    inflight: &mut VecDeque<(u64, Nanos, WaitPoint, [u8; 64])>,
+) {
+    let (seq, start, wp, record) = inflight.pop_front().expect("non-empty");
+    let acked = wp.wait(&mut rl.fab);
+    rl.latencies.record(acked - start);
+    if rl.fab.mem.recording() {
+        rl.appends.push(AppendRecord { seq, record, acked_at: acked });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::persist::method::Primary;
+    use crate::remotelog::client::MethodChoice;
+    use crate::remotelog::crashtest::crash_sweep;
+    use crate::remotelog::recovery::RustScanner;
+
+    fn client(mode: AppendMode, cfg: ServerConfig, record: bool) -> RemoteLog {
+        RemoteLog::new(
+            cfg,
+            TimingModel::default(),
+            mode,
+            MethodChoice::Planned(Primary::Write),
+            4096,
+            5,
+            record,
+        )
+    }
+
+    #[test]
+    fn deeper_windows_increase_throughput() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut last = 0.0;
+        for window in [1usize, 2, 8, 32] {
+            let mut rl = client(AppendMode::Singleton, cfg, false);
+            let res = run_pipelined(&mut rl, 3000, window);
+            assert!(
+                res.throughput_mops() > last,
+                "window {window}: {} <= {last}",
+                res.throughput_mops()
+            );
+            last = res.throughput_mops();
+        }
+        // Deep pipelining should beat sequential by a wide margin.
+        assert!(last > 1.0, "expected >1 Mops at window 32, got {last}");
+    }
+
+    #[test]
+    fn latency_grows_modestly_under_pipelining() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mut seq = client(AppendMode::Singleton, cfg, false);
+        let s = run_pipelined(&mut seq, 2000, 1);
+        let mut pipe = client(AppendMode::Singleton, cfg, false);
+        let p = run_pipelined(&mut pipe, 2000, 16);
+        assert!(p.throughput_mops() > 4.0 * s.throughput_mops());
+        // Per-append latency may rise (queueing) but not explode.
+        assert!(p.mean_latency_ns < 20.0 * s.mean_latency_ns);
+    }
+
+    #[test]
+    fn pipelined_compound_methods_detected() {
+        let dmp_ddio = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let rl = client(AppendMode::Compound, dmp_ddio, false);
+        // 2x message round trips — not pipelinable.
+        assert!(!pipelinable(&rl));
+        let mhp = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let rl = client(AppendMode::Compound, mhp, false);
+        assert!(pipelinable(&rl));
+    }
+
+    #[test]
+    fn pipelined_runs_survive_crashes() {
+        for cfg in [
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Mhp, true, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Pm),
+        ] {
+            for mode in [AppendMode::Singleton, AppendMode::Compound] {
+                let mut rl = RemoteLog::new(
+                    cfg,
+                    TimingModel::default(),
+                    mode,
+                    MethodChoice::Planned(Primary::Write),
+                    64,
+                    9,
+                    true,
+                );
+                run_pipelined(&mut rl, 40, 8);
+                let rep = crash_sweep(&rl, 80, 3, &RustScanner);
+                assert!(
+                    rep.clean(),
+                    "{} {} pipelined: {rep:?}",
+                    cfg.label(),
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_continues_after_pipelined_run() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mut rl = client(AppendMode::Singleton, cfg, false);
+        run_pipelined(&mut rl, 100, 8);
+        assert_eq!(rl.appended(), 100);
+        rl.append();
+        assert_eq!(rl.appended(), 101);
+    }
+}

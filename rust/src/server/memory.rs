@@ -1,0 +1,368 @@
+//! Responder machine memory model: address layout, write-event timelines,
+//! and post-crash image reconstruction.
+//!
+//! Instead of materializing every buffer stage, each write (RDMA DMA or
+//! responder-CPU store) carries a *timeline* of milestones:
+//!
+//!   `t_arrive`  — payload received at the responder RNIC
+//!   `t_place`   — payload entered the coherent domain: L3 when DDIO is
+//!                 on, the IMC write queue when DDIO is off (this is the
+//!                 paper's "visibility" point)
+//!   `t_dmp`     — payload entered the DMP persistence domain (IMC/DIMM);
+//!                 `NEVER` for DDIO-delivered or un-flushed CPU data that
+//!                 stays in cache
+//!
+//! A write is persistent at time `t` under a persistence domain `D` iff
+//! its `D`-specific milestone is `<= t` (paper §3.1.1):
+//! WSP -> `t_arrive`, MHP -> `t_place`, DMP -> `t_dmp` — and the target
+//! address lies in PM (DRAM contents never survive).
+
+use crate::fabric::timing::Nanos;
+use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+
+/// Sentinel: this write never reaches the stage.
+pub const NEVER: Nanos = Nanos::MAX;
+
+/// Physical address-space layout of the responder.
+///
+/// PM occupies `[0, pm_size)`, DRAM `[pm_size, pm_size + dram_size)`.
+/// The receive-queue work request buffers are a ring of `rq_count` slots
+/// of `rq_slot_bytes`, placed in PM or DRAM per the server config.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub pm_size: u64,
+    pub dram_size: u64,
+    pub rqwrb_base: u64,
+    pub rq_slot_bytes: u64,
+    pub rq_count: usize,
+}
+
+impl Layout {
+    pub fn new(
+        pm_size: u64,
+        dram_size: u64,
+        rq_count: usize,
+        rq_slot_bytes: u64,
+        rqwrb: RqwrbLoc,
+    ) -> Self {
+        let ring = rq_count as u64 * rq_slot_bytes;
+        let rqwrb_base = match rqwrb {
+            RqwrbLoc::Pm => {
+                assert!(ring <= pm_size, "PM too small for RQWRB ring");
+                pm_size - ring
+            }
+            RqwrbLoc::Dram => {
+                assert!(ring <= dram_size, "DRAM too small for RQWRB ring");
+                pm_size + dram_size - ring
+            }
+        };
+        Layout { pm_size, dram_size, rqwrb_base, rq_slot_bytes, rq_count }
+    }
+
+    /// Conventional layout for a REMOTELOG responder.
+    pub fn for_config(cfg: &ServerConfig, pm_size: u64, rq_count: usize) -> Self {
+        Layout::new(pm_size, pm_size / 2, rq_count, 256, cfg.rqwrb)
+    }
+
+    pub fn total_size(&self) -> u64 {
+        self.pm_size + self.dram_size
+    }
+
+    pub fn is_pm(&self, addr: u64) -> bool {
+        addr < self.pm_size
+    }
+
+    pub fn rqwrb_slot_addr(&self, slot: usize) -> u64 {
+        debug_assert!(slot < self.rq_count);
+        self.rqwrb_base + slot as u64 * self.rq_slot_bytes
+    }
+
+    /// Usable PM below the RQWRB ring (when the ring is in PM).
+    pub fn pm_app_limit(&self) -> u64 {
+        if self.rqwrb_base < self.pm_size {
+            self.rqwrb_base
+        } else {
+            self.pm_size
+        }
+    }
+}
+
+/// Where a write originated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteSource {
+    /// RDMA DMA on behalf of op `op_index` (index into the fabric's op
+    /// table).
+    Rdma { op_index: u32 },
+    /// Responder CPU store (message-handler copy).
+    Cpu,
+}
+
+/// One write with its persistence timeline.
+#[derive(Debug, Clone)]
+pub struct WriteEvent {
+    /// Global order in which the write became *visible* (posting order
+    /// for RDMA, store order for CPU) — the overwrite-resolution order.
+    pub seq: u64,
+    pub addr: u64,
+    pub data: Vec<u8>,
+    pub src: WriteSource,
+    pub t_arrive: Nanos,
+    pub t_place: Nanos,
+    pub t_dmp: Nanos,
+}
+
+impl WriteEvent {
+    /// Time at which this write is inside persistence domain `pd`
+    /// (`NEVER` if it does not reach it).
+    pub fn persist_time(&self, pd: PDomain) -> Nanos {
+        match pd {
+            PDomain::Wsp => self.t_arrive,
+            PDomain::Mhp => self.t_place,
+            PDomain::Dmp => self.t_dmp,
+        }
+    }
+}
+
+/// The responder's memory: layout + recorded write timelines.
+#[derive(Debug)]
+pub struct MemoryModel {
+    pub layout: Layout,
+    /// Recorded writes, in seq order. Empty when recording is disabled
+    /// (pure-latency benchmarking).
+    writes: Vec<WriteEvent>,
+    recording: bool,
+}
+
+impl MemoryModel {
+    pub fn new(layout: Layout, recording: bool) -> Self {
+        MemoryModel { layout, writes: Vec::new(), recording }
+    }
+
+    pub fn record(&mut self, ev: WriteEvent) {
+        debug_assert!(
+            ev.addr + ev.data.len() as u64 <= self.layout.total_size(),
+            "write beyond address space: {:#x}+{}",
+            ev.addr,
+            ev.data.len()
+        );
+        if self.recording {
+            self.writes.push(ev);
+        }
+    }
+
+    pub fn writes(&self) -> &[WriteEvent] {
+        &self.writes
+    }
+
+    /// Mutable access for milestone retro-forcing (responder CPU flushes
+    /// moving cache-resident data into the DMP domain).
+    pub fn writes_mut(&mut self) -> &mut [WriteEvent] {
+        &mut self.writes
+    }
+
+    pub fn recording(&self) -> bool {
+        self.recording
+    }
+
+    /// Reconstruct the post-power-failure memory image for a crash at
+    /// time `t` under persistence domain `pd`.
+    ///
+    /// Surviving writes (milestone `<= t`) are applied in `seq` order
+    /// (latest visible version wins among survivors); everything else is
+    /// discarded. DRAM contents are then lost: the returned image covers
+    /// the *whole* address space but all DRAM bytes are zero.
+    pub fn crash_image(&self, t: Nanos, pd: PDomain) -> Image {
+        assert!(self.recording, "crash_image requires write recording");
+        let mut mem = vec![0u8; self.layout.total_size() as usize];
+        for ev in &self.writes {
+            if ev.persist_time(pd) <= t {
+                let a = ev.addr as usize;
+                mem[a..a + ev.data.len()].copy_from_slice(&ev.data);
+            }
+        }
+        // Power failure: DRAM vanishes.
+        for b in &mut mem[self.layout.pm_size as usize..] {
+            *b = 0;
+        }
+        Image { mem, pm_size: self.layout.pm_size }
+    }
+
+    /// The *visible* (coherent-domain) image at time `t` — what the
+    /// responder CPU would read during normal operation. Not a crash
+    /// image: DRAM is intact and placement (not persistence) gates
+    /// inclusion.
+    pub fn visible_image(&self, t: Nanos) -> Image {
+        assert!(self.recording, "visible_image requires write recording");
+        let mut mem = vec![0u8; self.layout.total_size() as usize];
+        for ev in &self.writes {
+            if ev.t_place <= t {
+                let a = ev.addr as usize;
+                mem[a..a + ev.data.len()].copy_from_slice(&ev.data);
+            }
+        }
+        Image { mem, pm_size: self.layout.pm_size }
+    }
+}
+
+/// A reconstructed memory image.
+#[derive(Debug, Clone)]
+pub struct Image {
+    mem: Vec<u8>,
+    pm_size: u64,
+}
+
+impl Image {
+    pub fn read(&self, addr: u64, len: usize) -> &[u8] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        u64::from_le_bytes(self.read(addr, 8).try_into().unwrap())
+    }
+
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        u32::from_le_bytes(self.read(addr, 4).try_into().unwrap())
+    }
+
+    pub fn pm_size(&self) -> u64 {
+        self.pm_size
+    }
+
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout::new(1 << 16, 1 << 16, 16, 256, RqwrbLoc::Pm)
+    }
+
+    fn ev(seq: u64, addr: u64, byte: u8, arrive: Nanos, place: Nanos, dmp: Nanos) -> WriteEvent {
+        WriteEvent {
+            seq,
+            addr,
+            data: vec![byte; 8],
+            src: WriteSource::Cpu,
+            t_arrive: arrive,
+            t_place: place,
+            t_dmp: dmp,
+        }
+    }
+
+    #[test]
+    fn rqwrb_ring_in_pm() {
+        let l = layout();
+        assert!(l.is_pm(l.rqwrb_slot_addr(0)));
+        assert!(l.is_pm(l.rqwrb_slot_addr(15)));
+        assert_eq!(l.rqwrb_slot_addr(1) - l.rqwrb_slot_addr(0), 256);
+        assert_eq!(l.pm_app_limit(), l.rqwrb_base);
+    }
+
+    #[test]
+    fn rqwrb_ring_in_dram() {
+        let l = Layout::new(1 << 16, 1 << 16, 16, 256, RqwrbLoc::Dram);
+        assert!(!l.is_pm(l.rqwrb_slot_addr(0)));
+        assert_eq!(l.pm_app_limit(), l.pm_size);
+    }
+
+    #[test]
+    fn persist_time_per_domain() {
+        let e = ev(0, 0, 1, 10, 20, 30);
+        assert_eq!(e.persist_time(PDomain::Wsp), 10);
+        assert_eq!(e.persist_time(PDomain::Mhp), 20);
+        assert_eq!(e.persist_time(PDomain::Dmp), 30);
+    }
+
+    #[test]
+    fn crash_image_respects_domain_milestones() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x100, 0xAA, 10, 20, 30));
+        // Crash at t=15: only WSP has the data (arrived, not placed).
+        assert_eq!(m.crash_image(15, PDomain::Wsp).read(0x100, 1)[0], 0xAA);
+        assert_eq!(m.crash_image(15, PDomain::Mhp).read(0x100, 1)[0], 0);
+        assert_eq!(m.crash_image(15, PDomain::Dmp).read(0x100, 1)[0], 0);
+        // t=25: MHP has it too; DMP not yet.
+        assert_eq!(m.crash_image(25, PDomain::Mhp).read(0x100, 1)[0], 0xAA);
+        assert_eq!(m.crash_image(25, PDomain::Dmp).read(0x100, 1)[0], 0);
+        // t=30: everyone.
+        assert_eq!(m.crash_image(30, PDomain::Dmp).read(0x100, 1)[0], 0xAA);
+    }
+
+    #[test]
+    fn crash_image_never_milestone_never_persists() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x100, 0xBB, 10, 20, NEVER));
+        let img = m.crash_image(Nanos::MAX - 1, PDomain::Dmp);
+        assert_eq!(img.read(0x100, 1)[0], 0);
+        // But MHP (cache persistent) has it.
+        let img = m.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x100, 1)[0], 0xBB);
+    }
+
+    #[test]
+    fn dram_contents_lost_on_crash() {
+        let l = layout();
+        let dram_addr = l.pm_size + 0x10;
+        let mut m = MemoryModel::new(l, true);
+        m.record(ev(0, dram_addr, 0xCC, 10, 20, 30));
+        let img = m.crash_image(1000, PDomain::Wsp);
+        assert_eq!(img.read(dram_addr, 1)[0], 0);
+        // Visible image during normal operation does have it.
+        let vis = m.visible_image(1000);
+        assert_eq!(vis.read(dram_addr, 1)[0], 0xCC);
+    }
+
+    #[test]
+    fn overwrite_latest_surviving_seq_wins() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x200, 0x01, 10, 10, 10));
+        m.record(ev(1, 0x200, 0x02, 20, 20, 20));
+        // Both persisted at t=30: latest wins.
+        assert_eq!(m.crash_image(30, PDomain::Dmp).read(0x200, 1)[0], 0x02);
+        // At t=15 only the first survived.
+        assert_eq!(m.crash_image(15, PDomain::Dmp).read(0x200, 1)[0], 0x01);
+    }
+
+    #[test]
+    fn overwrite_unpersisted_newer_value_vanishes() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x200, 0x01, 10, 10, 10));
+        m.record(ev(1, 0x200, 0x02, 20, 20, NEVER));
+        // The newer value never persisted: old value remains.
+        assert_eq!(m.crash_image(100, PDomain::Dmp).read(0x200, 1)[0], 0x01);
+    }
+
+    #[test]
+    fn image_readers() {
+        let mut m = MemoryModel::new(layout(), true);
+        let mut data = vec![0u8; 8];
+        data.copy_from_slice(&0xDEADBEEF_CAFEF00Du64.to_le_bytes());
+        m.record(WriteEvent {
+            seq: 0,
+            addr: 0x300,
+            data,
+            src: WriteSource::Cpu,
+            t_arrive: 0,
+            t_place: 0,
+            t_dmp: 0,
+        });
+        let img = m.crash_image(10, PDomain::Dmp);
+        assert_eq!(img.read_u64(0x300), 0xDEADBEEF_CAFEF00D);
+        assert_eq!(img.read_u32(0x300), 0xCAFEF00D);
+    }
+
+    #[test]
+    #[should_panic(expected = "recording")]
+    fn crash_image_requires_recording() {
+        let m = MemoryModel::new(layout(), false);
+        let _ = m.crash_image(0, PDomain::Dmp);
+    }
+}

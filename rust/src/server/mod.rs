@@ -1,0 +1,7 @@
+//! Responder machine model: address layout, memory-hierarchy persistence
+//! timelines, and power-failure image reconstruction (paper §3.1,
+//! Figure 1).
+
+pub mod memory;
+
+pub use memory::{Image, Layout, MemoryModel, WriteEvent, WriteSource, NEVER};

@@ -1,0 +1,9 @@
+//! Small self-contained utilities.
+//!
+//! This environment is offline with a minimal crate set, so the PRNG,
+//! JSON emission, and statistics helpers that would normally come from
+//! `rand`/`serde_json` are implemented here.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,220 @@
+//! Latency statistics: streaming summary + fixed-resolution histogram.
+
+/// Streaming summary statistics over `u64` samples (latencies in ns).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    count: u64,
+    sum: u128,
+    sum_sq: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { min: u64::MAX, ..Default::default() }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum += v as u128;
+        self.sum_sq += (v as u128) * (v as u128);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let mean = self.mean();
+        let var = (self.sum_sq as f64 / n - mean * mean).max(0.0);
+        var.sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed histogram (HdrHistogram-lite): ~2% relative resolution,
+/// constant memory, O(1) record.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    summary: Summary,
+}
+
+const SUB_BUCKETS: usize = 32; // per power of two => <= ~3% bucket width
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB_BUCKETS], summary: Summary::new() }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB_BUCKETS as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros() as usize;
+        let shift = exp.saturating_sub(5); // log2(SUB_BUCKETS)
+        let sub = ((v >> shift) as usize) & (SUB_BUCKETS - 1);
+        (exp - 4) * SUB_BUCKETS + sub
+    }
+
+    fn bucket_low(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            return idx as u64;
+        }
+        let exp = idx / SUB_BUCKETS + 4;
+        let sub = idx % SUB_BUCKETS;
+        let shift = exp.saturating_sub(5);
+        ((SUB_BUCKETS + sub) as u64) << shift
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.summary.record(v);
+        let idx = Self::index(v).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+    }
+
+    pub fn summary(&self) -> &Summary {
+        &self.summary
+    }
+
+    /// Approximate quantile (0.0..=1.0) by bucket lower bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.summary.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_low(i);
+            }
+        }
+        self.summary.max()
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.summary.merge(&other.summary);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.min(), 1);
+        assert_eq!(s.max(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-9);
+        assert!((s.stddev() - (2.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0);
+    }
+
+    #[test]
+    fn summary_merge() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        a.record(10);
+        b.record(20);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        // ~3% resolution
+        assert!((p50 as f64 - 5000.0).abs() / 5000.0 < 0.05, "p50={p50}");
+        assert!((p99 as f64 - 9900.0).abs() / 9900.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.summary().count(), 5);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(100);
+        b.record(200);
+        a.merge(&b);
+        assert_eq!(a.summary().count(), 2);
+        assert_eq!(a.summary().max(), 200);
+    }
+
+    #[test]
+    fn index_monotone_nondecreasing() {
+        let mut last = 0;
+        for v in (0..1_000_000u64).step_by(997) {
+            let i = Histogram::index(v);
+            assert!(i >= last);
+            last = i;
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! Crash-consistency campaign: the executable proof of Tables 2 and 3.
+//!
+//! For every one of the 72 (config × primary × update-kind) scenarios,
+//! with jittered timing and multiple seeds, run REMOTELOG, inject power
+//! failures at hundreds of points (uniform + adversarial around every
+//! ack), and assert the planner-selected method never loses acked data
+//! and never accepts garbage. Then assert the paper's incorrect pairings
+//! DO lose acked data — the taxonomy is tight, not just safe.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{
+    Extensions, PDomain, RqwrbLoc, ServerConfig, Transport,
+};
+use rpmem::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::crashtest::{crash_sweep, CrashReport};
+use rpmem::remotelog::recovery::RustScanner;
+
+fn run_and_sweep(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    choice: MethodChoice,
+    seed: u64,
+    appends: u64,
+    fifo: bool,
+) -> CrashReport {
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        mode,
+        choice,
+        appends + 8,
+        seed,
+        true,
+    );
+    rl.fab.placement_fifo = fifo;
+    rl.run(appends);
+    crash_sweep(&rl, 80, seed ^ 0xC0FFEE, &RustScanner)
+}
+
+/// All 72 scenarios, planner-selected methods, multiple seeds: clean.
+#[test]
+fn all_72_planned_scenarios_survive_crashes() {
+    for cfg in ServerConfig::table1() {
+        for primary in Primary::ALL {
+            for mode in [AppendMode::Singleton, AppendMode::Compound] {
+                for seed in [1u64, 99, 1234] {
+                    let rep = run_and_sweep(
+                        cfg,
+                        mode,
+                        MethodChoice::Planned(primary),
+                        seed,
+                        25,
+                        true,
+                    );
+                    assert!(
+                        rep.clean(),
+                        "{} {} {} seed={seed}: {rep:?}",
+                        cfg.label(),
+                        mode.name(),
+                        primary.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Same campaign under iWARP completion semantics (planner shifts WSP to
+/// MHP methods — must stay clean).
+#[test]
+fn iwarp_planned_scenarios_survive_crashes() {
+    for pd in PDomain::ALL {
+        for rq in RqwrbLoc::ALL {
+            let cfg = ServerConfig::new(pd, true, rq)
+                .with_transport(Transport::Iwarp);
+            for primary in Primary::ALL {
+                let rep = run_and_sweep(
+                    cfg,
+                    AppendMode::Compound,
+                    MethodChoice::Planned(primary),
+                    7,
+                    20,
+                    true,
+                );
+                assert!(
+                    rep.clean(),
+                    "iWARP {} {}: {rep:?}",
+                    cfg.label(),
+                    primary.name()
+                );
+            }
+        }
+    }
+}
+
+/// Without IBTA extensions (FLUSH emulated by READ, no WRITE_atomic) the
+/// planner's fallbacks must stay correct.
+#[test]
+fn emulated_extensions_scenarios_survive_crashes() {
+    for cfg in ServerConfig::table1() {
+        let cfg = cfg.with_extensions(Extensions::Emulated);
+        for mode in [AppendMode::Singleton, AppendMode::Compound] {
+            let rep = run_and_sweep(
+                cfg,
+                mode,
+                MethodChoice::Planned(Primary::Write),
+                5,
+                20,
+                true,
+            );
+            assert!(rep.clean(), "{} {}: {rep:?}", cfg.label(), mode.name());
+        }
+    }
+}
+
+/// The paper's incorrect pairings demonstrably lose acked data. Each
+/// entry: (config, wrongly-applied method) — a method that is correct on
+/// SOME configuration but not this one.
+#[test]
+fn wrong_singleton_methods_lose_acked_data() {
+    let cases: Vec<(ServerConfig, SingletonMethod, &str)> = vec![
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            SingletonMethod::WriteFlush,
+            "one-sided WRITE+FLUSH under DMP+DDIO (flagship, §3.2)",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            SingletonMethod::WriteImmFlush,
+            "WRITEIMM+FLUSH under DMP+DDIO",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Pm),
+            SingletonMethod::SendFlush,
+            "one-sided SEND under DMP+DDIO (message lands in cache)",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            SingletonMethod::WriteComp,
+            "completion-only (WSP method) under DMP",
+        ),
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            SingletonMethod::WriteComp,
+            "completion-only under MHP",
+        ),
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            SingletonMethod::SendComp,
+            "SEND completion-only with DRAM RQWRB",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            SingletonMethod::SendCopyAck,
+            "copy-without-flush (MHP method) under DMP",
+        ),
+        (
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram)
+                .with_transport(Transport::Iwarp),
+            SingletonMethod::WriteComp,
+            "completion-only under iWARP WSP (§3.2)",
+        ),
+    ];
+    for (cfg, method, why) in cases {
+        let mut worst = CrashReport::default();
+        for seed in 0..12u64 {
+            let rep = run_and_sweep(
+                cfg,
+                AppendMode::Singleton,
+                MethodChoice::ForcedSingleton(method),
+                seed,
+                25,
+                true,
+            );
+            worst.merge(&rep);
+            if !worst.clean() {
+                break;
+            }
+        }
+        assert!(
+            worst.durability_violations > 0 || worst.integrity_violations > 0,
+            "{} on {} should lose data: {why}",
+            method.name(),
+            cfg.label()
+        );
+    }
+}
+
+/// Wrong compound methods under DMP/MHP.
+#[test]
+fn wrong_compound_methods_lose_acked_data() {
+    let cases: Vec<(ServerConfig, CompoundMethod, &str)> = vec![
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            CompoundMethod::WriteFlushAtomicFlush,
+            "one-sided pipeline under DMP+DDIO",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            CompoundMethod::WriteWriteComp,
+            "WSP completion-only pipeline under DMP",
+        ),
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            CompoundMethod::WriteWriteComp,
+            "WSP completion-only pipeline under MHP",
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            CompoundMethod::SendCopyAck,
+            "copy-without-flush compound under DMP",
+        ),
+    ];
+    for (cfg, method, why) in cases {
+        let mut worst = CrashReport::default();
+        for seed in 0..12u64 {
+            worst.merge(&run_and_sweep(
+                cfg,
+                AppendMode::Compound,
+                MethodChoice::ForcedCompound(method),
+                seed,
+                25,
+                true,
+            ));
+            if !worst.clean() {
+                break;
+            }
+        }
+        assert!(
+            !worst.clean(),
+            "{} on {} should lose data: {why}",
+            method.name(),
+            cfg.label()
+        );
+    }
+}
+
+/// PCIe relaxed-ordering ablation (placement_fifo = false): the
+/// WRITE_atomic compound recipe stays correct because the atomic is
+/// fenced behind prior placements, while the naive posted pipeline
+/// (correct only under strict ordering premises) now exhibits violations
+/// — the §2 hazard that motivated the IBTA extension.
+#[test]
+fn relaxed_ordering_ablation_atomic_still_correct() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    for seed in 0..8u64 {
+        let rep = run_and_sweep(
+            cfg,
+            AppendMode::Compound,
+            MethodChoice::ForcedCompound(CompoundMethod::WriteFlushAtomicFlush),
+            seed,
+            25,
+            false, // relaxed placement ordering
+        );
+        assert!(
+            rep.clean(),
+            "atomic pipeline must survive relaxed ordering: {rep:?}"
+        );
+    }
+}
+
+#[test]
+fn relaxed_ordering_ablation_naive_pipeline_breaks() {
+    // Under relaxed ordering even the flush-terminated posted pipeline
+    // can persist the tail before the record; crash in the window
+    // produces an integrity or durability violation.
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let mut any_violation = false;
+    for seed in 0..40u64 {
+        let rep = run_and_sweep(
+            cfg,
+            AppendMode::Compound,
+            MethodChoice::ForcedCompound(CompoundMethod::WritePipelinedFlush),
+            seed,
+            25,
+            false,
+        );
+        if !rep.clean() {
+            any_violation = true;
+            break;
+        }
+    }
+    assert!(
+        any_violation,
+        "naive posted pipeline should break under relaxed ordering"
+    );
+}
+
+/// Recovery is deterministic and idempotent: recovering the same crash
+/// image twice yields identical results.
+#[test]
+fn recovery_is_idempotent() {
+    use rpmem::remotelog::recovery::recover;
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm);
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Singleton,
+        MethodChoice::Planned(Primary::Send),
+        64,
+        3,
+        true,
+    );
+    rl.run(30);
+    let t = rl.fab.now() / 2;
+    let img = rl.fab.mem.crash_image(t, cfg.pdomain);
+    let a =
+        recover(&img, &rl.fab.mem.layout, &rl.log, rl.mode, true, &RustScanner);
+    let b =
+        recover(&img, &rl.fab.mem.layout, &rl.log, rl.mode, true, &RustScanner);
+    assert_eq!(a.recovered, b.recovered);
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.replayed, b.replayed);
+}
+
+/// Recovered prefix is monotone in crash time for correct methods: a
+/// later crash can only recover more.
+#[test]
+fn recovered_prefix_monotone_in_crash_time() {
+    use rpmem::remotelog::recovery::recover;
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Compound,
+        MethodChoice::Planned(Primary::Write),
+        64,
+        17,
+        true,
+    );
+    rl.run(30);
+    let end = rl.fab.now();
+    let mut last = 0;
+    for i in 0..=20 {
+        let t = end * i / 20;
+        let img = rl.fab.mem.crash_image(t, cfg.pdomain);
+        let r = recover(
+            &img,
+            &rl.fab.mem.layout,
+            &rl.log,
+            rl.mode,
+            false,
+            &RustScanner,
+        );
+        assert!(
+            r.recovered >= last,
+            "recovered count regressed at t={t}: {} < {last}",
+            r.recovered
+        );
+        last = r.recovered;
+    }
+    assert_eq!(last, 30);
+}

@@ -1,0 +1,153 @@
+//! End-to-end system tests: workload → crash → recovery → verification
+//! across the whole stack, plus sweep/report smoke coverage.
+
+use rpmem::coordinator::sweep::{run_figure_panel, SweepOpts};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::persist::taxonomy;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::log::{record_seq, RECORD_BYTES};
+use rpmem::remotelog::recovery::{recover, RustScanner};
+
+/// The full lifecycle: replicate, lose power mid-run, recover, verify
+/// the durable prefix — and then resume appending from the recovered
+/// state on a fresh connection (what a real failover would do).
+#[test]
+fn replicate_crash_recover_resume() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Compound,
+        MethodChoice::Planned(Primary::Write),
+        256,
+        2024,
+        true,
+    );
+    rl.run(100);
+
+    // Power fails right after the 60th ack.
+    let t_crash = rl.appends[59].acked_at + 1;
+    let image = rl.fab.mem.crash_image(t_crash, cfg.pdomain);
+    let res = recover(
+        &image,
+        &rl.fab.mem.layout,
+        &rl.log,
+        AppendMode::Compound,
+        false,
+        &RustScanner,
+    );
+    assert!(res.recovered >= 60, "acked appends lost: {}", res.recovered);
+    assert!(res.recovered <= 100);
+    // Recovered records are exactly the appended prefix.
+    for k in 0..res.recovered as usize {
+        assert_eq!(
+            &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES],
+            &rl.appends[k].record[..]
+        );
+        assert_eq!(
+            record_seq(&res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES]),
+            k as u32
+        );
+    }
+
+    // Failover: a new client resumes at the recovered tail.
+    let mut rl2 = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Compound,
+        MethodChoice::Planned(Primary::Write),
+        256,
+        777,
+        true,
+    );
+    for _ in 0..res.recovered {
+        rl2.append(); // replay the prefix
+    }
+    rl2.append(); // and continue
+    assert_eq!(rl2.appended(), res.recovered + 1);
+}
+
+/// Each Figure 2 panel is internally consistent: every one-sided method
+/// beats its two-sided counterpart within the same (domain, ddio, rqwrb)
+/// row, and WSP is the fastest domain for every bar.
+#[test]
+fn panels_exhibit_paper_shape() {
+    let opts = SweepOpts { appends: 1500, ..Default::default() };
+    let wsp = run_figure_panel(PDomain::Wsp, AppendMode::Singleton, &opts);
+    let mhp = run_figure_panel(PDomain::Mhp, AppendMode::Singleton, &opts);
+    let dmp = run_figure_panel(PDomain::Dmp, AppendMode::Singleton, &opts);
+    for (w, (m, d)) in wsp.iter().zip(mhp.iter().zip(&dmp)) {
+        assert_eq!(w.bar_label(), m.bar_label());
+        assert_eq!(w.bar_label(), d.bar_label());
+        assert!(
+            w.mean_ns <= m.mean_ns * 1.02,
+            "WSP should be <= MHP for {}: {} vs {}",
+            w.bar_label(),
+            w.mean_ns,
+            m.mean_ns
+        );
+        assert!(
+            m.mean_ns <= d.mean_ns * 1.02,
+            "MHP should be <= DMP for {}: {} vs {}",
+            m.bar_label(),
+            m.mean_ns,
+            d.mean_ns
+        );
+    }
+}
+
+/// Taxonomy tables render and the CLI-visible step notation matches the
+/// paper's vocabulary.
+#[test]
+fn taxonomy_tables_smoke() {
+    let t1 = taxonomy::render_table1();
+    let t2 = taxonomy::render_table2();
+    let t3 = taxonomy::render_table3();
+    for needle in ["DMP", "MHP", "WSP"] {
+        assert!(t1.contains(needle));
+        assert!(t2.contains(needle));
+        assert!(t3.contains(needle));
+    }
+    assert!(t2.contains("Rq Write(a)"));
+    assert!(t3.contains("Rq Write_atomic(b)") || t3.contains("Write_atomic"));
+}
+
+/// Singleton-mode whole-lifecycle with the one-sided SEND method: the
+/// recovery path must stitch together lazily-applied records and
+/// replayed RQWRB messages into one consistent prefix.
+#[test]
+fn one_sided_send_lifecycle() {
+    let cfg = ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Pm);
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        AppendMode::Singleton,
+        MethodChoice::Planned(Primary::Send),
+        128,
+        31,
+        true,
+    );
+    rl.run(80);
+    // Crash at a point where some messages are applied and some only
+    // live in the ring.
+    let t = rl.appends[70].acked_at;
+    let image = rl.fab.mem.crash_image(t, cfg.pdomain);
+    let res = recover(
+        &image,
+        &rl.fab.mem.layout,
+        &rl.log,
+        AppendMode::Singleton,
+        true,
+        &RustScanner,
+    );
+    assert!(res.recovered >= 71, "recovered {}", res.recovered);
+    for k in 0..res.recovered as usize {
+        assert_eq!(
+            &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES],
+            &rl.appends[k].record[..],
+            "record {k}"
+        );
+    }
+}

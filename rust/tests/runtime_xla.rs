@@ -1,0 +1,190 @@
+//! Integration: the AOT-compiled Pallas kernels, loaded via PJRT from
+//! rust, must agree bit-for-bit with the rust-native integrity mirror —
+//! on clean logs, corrupted logs, and full crash-recovery sweeps.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::log::{make_record, APP_WORDS, RECORD_BYTES};
+use rpmem::remotelog::recovery::{RustScanner, Scanner};
+use rpmem::remotelog::crashtest::crash_sweep;
+use rpmem::runtime::XlaScanner;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn log_image(n: u64) -> Vec<u8> {
+    let mut buf = Vec::new();
+    for seq in 0..n {
+        buf.extend_from_slice(&make_record(
+            seq,
+            &[(seq as u32).wrapping_mul(0x9E3779B9); APP_WORDS],
+        ));
+    }
+    buf
+}
+
+#[test]
+fn xla_scan_matches_rust_scan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaScanner::load(&dir).expect("load artifacts");
+    // Cases: clean, corrupt-in-middle, corrupt-at-0, corrupt at a chunk
+    // boundary (export_n), larger-than-one-chunk.
+    let n_big = xla.runtime().export_n() as u64 + 300;
+    for (n, corrupt) in [
+        (10u64, None),
+        (10, Some(0usize)),
+        (100, Some(57)),
+        (n_big, Some(xla.runtime().export_n())),
+        (n_big, Some(n_big as usize - 1)),
+    ] {
+        let mut buf = log_image(n);
+        if let Some(c) = corrupt {
+            buf[c * RECORD_BYTES + 9] ^= 0x5A;
+        }
+        let (v_rust, t_rust) = RustScanner.scan(&buf);
+        let (v_xla, t_xla) = xla.scan(&buf);
+        assert_eq!(t_rust, t_xla, "tail mismatch n={n} corrupt={corrupt:?}");
+        assert_eq!(v_rust, v_xla, "mask mismatch n={n} corrupt={corrupt:?}");
+    }
+}
+
+#[test]
+fn xla_verify_chain_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaScanner::load(&dir).expect("load artifacts");
+    let n = xla.runtime().export_n() as u64 + 77;
+    let buf = log_image(n);
+    assert_eq!(xla.verify_chain(&buf, 0), RustScanner.verify_chain(&buf, 0));
+    // Wrong base: nothing verifies.
+    assert_eq!(xla.verify_chain(&buf, 1), 0);
+    // Seq gap mid-log.
+    let mut gap = log_image(200);
+    let wrong = make_record(999, &[0; APP_WORDS]);
+    gap[50 * RECORD_BYTES..51 * RECORD_BYTES].copy_from_slice(&wrong);
+    assert_eq!(xla.verify_chain(&gap, 0), 50);
+    assert_eq!(RustScanner.verify_chain(&gap, 0), 50);
+}
+
+#[test]
+fn xla_checksum_generates_valid_records() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaScanner::load(&dir).expect("load artifacts");
+    let rt = xla.runtime();
+    // Payload batch (seq word + app words), two chunks worth.
+    let n = rt.export_n() + 5;
+    let mut payloads = Vec::new();
+    for i in 0..n {
+        payloads.push(i as u32); // seq word
+        for w in 0..13 {
+            payloads.push((i as u32).wrapping_mul(31) ^ w);
+        }
+    }
+    let records = rt.checksum_records(&payloads).expect("checksum");
+    assert_eq!(records.len(), n * 16);
+    // Every emitted record must validate under the rust mirror, and
+    // match make_record exactly.
+    let mut bytes = Vec::with_capacity(records.len() * 4);
+    for w in &records {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    let (valid, tail) = RustScanner.scan(&bytes);
+    assert_eq!(tail, n as u64);
+    assert!(valid.iter().all(|&v| v));
+    for i in 0..n {
+        let mut app = [0u32; APP_WORDS];
+        for (k, a) in app.iter_mut().enumerate() {
+            *a = payloads[i * 14 + 1 + k];
+        }
+        let expect = make_record(i as u64, &app);
+        assert_eq!(
+            &bytes[i * RECORD_BYTES..(i + 1) * RECORD_BYTES],
+            &expect[..],
+            "record {i}"
+        );
+    }
+}
+
+#[test]
+fn crash_recovery_through_xla_scanner_is_clean() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaScanner::load(&dir).expect("load artifacts");
+    for (cfg, mode, primary) in [
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            AppendMode::Compound,
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm),
+            AppendMode::Singleton,
+            Primary::Send,
+        ),
+        (
+            ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Pm),
+            AppendMode::Compound,
+            Primary::Send,
+        ),
+    ] {
+        let mut rl = RemoteLog::new(
+            cfg,
+            TimingModel::default(),
+            mode,
+            MethodChoice::Planned(primary),
+            64,
+            42,
+            true,
+        );
+        rl.run(30);
+        let rep = crash_sweep(&rl, 40, 9, &xla);
+        assert!(
+            rep.clean(),
+            "{} {} via XLA scanner: {rep:?}",
+            cfg.label(),
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn xla_segment_digests_match_rust_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaScanner::load(&dir).expect("load artifacts");
+    use rpmem::remotelog::antientropy::{segment_digests, SEG_RECORDS};
+    let n = rpmem::remotelog::antientropy::SEG_RECORDS * 20;
+    let _ = SEG_RECORDS;
+    let bytes = log_image(n as u64);
+    let words: Vec<u32> = bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let via_xla = xla.runtime().segment_digests(&words).expect("digest");
+    let via_rust = segment_digests(&bytes);
+    assert_eq!(via_xla, via_rust);
+    // And a divergence flips exactly one digest.
+    let mut other = bytes.clone();
+    other[3 * rpmem::remotelog::antientropy::SEG_BYTES + 7] ^= 0x40;
+    let d2 = segment_digests(&other);
+    let diffs: Vec<usize> = via_rust
+        .iter()
+        .zip(&d2)
+        .enumerate()
+        .filter_map(|(i, (a, b))| (a != b).then_some(i))
+        .collect();
+    assert_eq!(diffs, vec![3]);
+}

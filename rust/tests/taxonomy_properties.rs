@@ -1,0 +1,263 @@
+//! Property-based tests over randomized workloads (hand-rolled generator
+//! + seeded PRNG, since proptest is unavailable offline): fabric-engine
+//! ordering invariants, persistence-milestone invariants, wire-codec
+//! round trips, and planner totality — each checked across hundreds of
+//! generated cases.
+
+use rpmem::fabric::engine::Fabric;
+use rpmem::fabric::ops::{OnRecv, OpId, OpKind, WorkRequest};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig, Transport};
+use rpmem::persist::wire::{self, WireUpdate};
+use rpmem::server::memory::Layout;
+use rpmem::util::rng::SplitMix64;
+
+fn random_config(r: &mut SplitMix64) -> ServerConfig {
+    let pd = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp]
+        [r.next_below(3) as usize];
+    let rq = [RqwrbLoc::Dram, RqwrbLoc::Pm][r.next_below(2) as usize];
+    let mut cfg = ServerConfig::new(pd, r.next_below(2) == 0, rq);
+    if r.next_below(4) == 0 {
+        cfg = cfg.with_transport(Transport::Iwarp);
+    }
+    cfg
+}
+
+fn random_update_wr(r: &mut SplitMix64) -> WorkRequest {
+    let addr = 0x1000 + r.next_below(64) * 64;
+    let len = 1 + r.next_below(256) as usize;
+    let data = vec![(r.next_u64() | 1) as u8; len];
+    match r.next_below(4) {
+        0 => WorkRequest::write(addr, data),
+        1 => WorkRequest::write_imm(addr, data, OnRecv::Recycle),
+        2 => WorkRequest::send(data, OnRecv::Recycle, addr),
+        _ => WorkRequest::write_atomic(addr, vec![(r.next_u64() | 1) as u8; 8]),
+    }
+}
+
+fn fabric(cfg: ServerConfig, seed: u64) -> Fabric {
+    let layout = Layout::new(1 << 17, 1 << 16, 64, 512, cfg.rqwrb);
+    Fabric::new(cfg, TimingModel::default(), layout, seed, true)
+}
+
+/// Reliable connection: arrival order equals posting order, always.
+#[test]
+fn prop_in_order_delivery() {
+    for case in 0..300u64 {
+        let mut r = SplitMix64::new(case);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        let n = 2 + r.next_below(20) as usize;
+        let mut last = 0;
+        for _ in 0..n {
+            let id = f.post(random_update_wr(&mut r));
+            let st = f.op(id);
+            assert!(st.t_arrive >= last, "case {case}: arrival reordered");
+            last = st.t_arrive;
+        }
+    }
+}
+
+/// Milestone ordering: arrive <= place, and the per-domain persistence
+/// times are nested (WSP <= MHP <= DMP) for every recorded write.
+#[test]
+fn prop_persistence_domain_nesting() {
+    for case in 0..300u64 {
+        let mut r = SplitMix64::new(case ^ 0xBEEF);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        for _ in 0..(1 + r.next_below(15)) {
+            f.post(random_update_wr(&mut r));
+        }
+        for ev in f.mem.writes() {
+            assert!(ev.t_arrive <= ev.t_place, "case {case}");
+            assert!(
+                ev.persist_time(PDomain::Wsp) <= ev.persist_time(PDomain::Mhp),
+                "case {case}"
+            );
+            assert!(
+                ev.persist_time(PDomain::Mhp) <= ev.persist_time(PDomain::Dmp),
+                "case {case}"
+            );
+        }
+    }
+}
+
+/// Posted placements are FIFO under strict ordering for every op mix.
+#[test]
+fn prop_fifo_placement_monotone() {
+    for case in 0..300u64 {
+        let mut r = SplitMix64::new(case ^ 0xFACE);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        let mut last_place = 0;
+        for _ in 0..(2 + r.next_below(20)) {
+            let wr = random_update_wr(&mut r);
+            let kind = wr.kind;
+            let id = f.post(wr);
+            if kind != OpKind::WriteAtomic {
+                let p = f.op(id).t_place;
+                assert!(p >= last_place, "case {case}: placement reordered");
+                last_place = p;
+            }
+        }
+    }
+}
+
+/// A FLUSH's completion always bounds every prior update's placement —
+/// the core one-sided persistence guarantee.
+#[test]
+fn prop_flush_completion_after_prior_placements() {
+    for case in 0..300u64 {
+        let mut r = SplitMix64::new(case ^ 0xF105);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        let n = 1 + r.next_below(12) as usize;
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            ids.push(f.post(random_update_wr(&mut r)));
+        }
+        let fl = f.post(WorkRequest::flush());
+        let comp = f.op(fl).comp_at.unwrap();
+        let wire_back = f.timing.wire_ns + 2 * f.timing.rnic_op_ns;
+        for id in ids {
+            assert!(
+                f.op(id).t_place <= comp - wire_back,
+                "case {case}: flush returned before a prior placement"
+            );
+        }
+    }
+}
+
+/// Fence-flagged ops never launch before outstanding non-posted
+/// responses have arrived at the requester.
+#[test]
+fn prop_fence_orders_after_nonposted() {
+    for case in 0..200u64 {
+        let mut r = SplitMix64::new(case ^ 0x5EED);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        f.post(random_update_wr(&mut r));
+        let nonposted = if r.next_below(2) == 0 {
+            f.post(WorkRequest::flush())
+        } else {
+            f.post(WorkRequest::read(0x1000))
+        };
+        let fenced =
+            f.post(WorkRequest::write(0x2000, vec![1; 32]).with_fence());
+        let resp = f.op(nonposted).comp_at.unwrap();
+        assert!(f.op(fenced).t_posted >= resp, "case {case}: fence violated");
+    }
+}
+
+/// iWARP completions never certify responder receipt; IB completions do.
+#[test]
+fn prop_completion_semantics_by_transport() {
+    for case in 0..200u64 {
+        let mut r = SplitMix64::new(case ^ 0x1BA4);
+        let mut cfg = random_config(&mut r);
+        cfg.transport = if case % 2 == 0 {
+            Transport::IbRoce
+        } else {
+            Transport::Iwarp
+        };
+        let mut f = fabric(cfg, case);
+        let wr = random_update_wr(&mut r);
+        if wr.kind == OpKind::WriteAtomic {
+            continue; // non-posted: response-based on both transports
+        }
+        let id = f.post(wr);
+        let st = f.op(id);
+        let comp = st.comp_at.unwrap();
+        match cfg.transport {
+            Transport::IbRoce => assert!(comp > st.t_arrive, "case {case}"),
+            Transport::Iwarp => assert!(comp < st.t_arrive, "case {case}"),
+        }
+    }
+}
+
+/// Crash images are monotone in time: a byte persisted at `t` stays
+/// persisted at every later instant (payload bytes are non-zero, so a
+/// regression to zero would mean un-persisting).
+#[test]
+fn prop_crash_image_monotone() {
+    for case in 0..60u64 {
+        let mut r = SplitMix64::new(case ^ 0x3A3A);
+        let cfg = random_config(&mut r);
+        let mut f = fabric(cfg, case);
+        for _ in 0..(2 + r.next_below(10)) {
+            f.post(random_update_wr(&mut r));
+        }
+        let end = f.op(OpId((f.ops_posted() - 1) as u32)).t_place + 10_000;
+        let mut prev: Option<Vec<u8>> = None;
+        for i in 0..8 {
+            let t = end * i / 7;
+            let img = f.mem.crash_image(t, cfg.pdomain);
+            let bytes = img.read(0x1000, 64 * 65).to_vec();
+            if let Some(p) = &prev {
+                for (a, b) in p.iter().zip(&bytes) {
+                    if *a != 0 {
+                        assert_ne!(*b, 0, "case {case}: byte un-persisted");
+                    }
+                }
+            }
+            prev = Some(bytes);
+        }
+    }
+}
+
+/// Wire codec: random multi-update messages round-trip exactly; any
+/// single-byte corruption is either rejected or provably harmless.
+#[test]
+fn prop_wire_roundtrip_and_corruption() {
+    for case in 0..400u64 {
+        let mut r = SplitMix64::new(case ^ 0x77DE);
+        let n = 1 + r.next_below(5) as usize;
+        let updates: Vec<WireUpdate> = (0..n)
+            .map(|_| WireUpdate {
+                target: r.next_below(1 << 20),
+                data: (0..1 + r.next_below(120))
+                    .map(|_| r.next_u64() as u8)
+                    .collect(),
+            })
+            .collect();
+        let buf = wire::encode(case as u32, &updates);
+        let msg = wire::decode(&buf).expect("roundtrip");
+        assert_eq!(msg.updates, updates, "case {case}");
+        let pos = 4 + r.next_below(buf.len() as u64 - 4) as usize;
+        let mut bad = buf.clone();
+        bad[pos] ^= 1 + (r.next_u64() as u8 & 0x7F);
+        match wire::decode(&bad) {
+            Err(_) => {}
+            Ok(m) => assert_eq!(
+                m.updates, updates,
+                "case {case}: corruption at {pos} silently accepted"
+            ),
+        }
+    }
+}
+
+/// RQ back-pressure: send arrivals never outrun buffer recycling by more
+/// than the ring size.
+#[test]
+fn prop_rq_ring_backpressure() {
+    for case in 0..50u64 {
+        let mut r = SplitMix64::new(case ^ 0xB00C);
+        let cfg = ServerConfig::new(PDomain::Mhp, true, RqwrbLoc::Pm);
+        let layout = Layout::new(1 << 17, 1 << 16, 4, 512, RqwrbLoc::Pm);
+        let mut f =
+            Fabric::new(cfg, TimingModel::default(), layout, case, true);
+        let n = 10 + r.next_below(30) as usize;
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            ids.push(f.post(WorkRequest::send(vec![7u8; 64], OnRecv::Recycle, 0)));
+        }
+        for k in 4..n {
+            let early = f.op(ids[k - 4]).t_place;
+            assert!(
+                f.op(ids[k]).t_arrive >= early,
+                "case {case}: ring overrun at {k}"
+            );
+        }
+    }
+}
