@@ -8,6 +8,8 @@ the sequential-recurrence oracle is a bug in one of them.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.ref import (

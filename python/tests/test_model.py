@@ -2,6 +2,9 @@
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.ref import PAYLOAD_WORDS, RECORD_WORDS, verify_ref

@@ -21,29 +21,33 @@ use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
 use rpmem::server::memory::Layout;
 use rpmem::fabric::engine::Fabric;
 
-const N: u64 = 30_000;
+fn iters() -> u64 {
+    rpmem::bench::scaled(30_000)
+}
 
 fn mean_singleton(cfg: ServerConfig, m: SingletonMethod, len: usize) -> f64 {
+    let n = iters();
     let layout = Layout::new(1 << 22, 1 << 20, 64, 8192, cfg.rqwrb);
     let mut f = Fabric::new(cfg, TimingModel::default(), layout, 7, false);
     let mut sum = 0u64;
-    for i in 0..N {
+    for i in 0..n {
         let u = Update::new(0x10000 + (i % 512) * 4096, vec![1u8; len]);
         sum += exec_singleton(&mut f, m, &u, i as u32).latency();
     }
-    sum as f64 / N as f64
+    sum as f64 / n as f64
 }
 
 fn mean_compound(cfg: ServerConfig, m: CompoundMethod) -> f64 {
+    let n = iters();
     let layout = Layout::new(1 << 22, 1 << 20, 64, 8192, cfg.rqwrb);
     let mut f = Fabric::new(cfg, TimingModel::default(), layout, 7, false);
     let mut sum = 0u64;
-    for i in 0..N {
+    for i in 0..n {
         let a = Update::new(0x10000 + (i % 512) * 64, vec![1u8; 64]);
         let b = Update::new(0x100, (i + 1).to_le_bytes().to_vec());
         sum += exec_compound(&mut f, m, &a, &b, i as u32).latency();
     }
-    sum as f64 / N as f64
+    sum as f64 / n as f64
 }
 
 fn main() {
@@ -105,7 +109,7 @@ fn main() {
         let layout = Layout::new(1 << 22, 1 << 20, ring, 8192, RqwrbLoc::Pm);
         let mut f = Fabric::new(cfg, slow_cpu.clone(), layout, 7, false);
         let mut rl_lat = rpmem::util::stats::Histogram::new();
-        for i in 0..N / 3 {
+        for i in 0..iters() / 3 {
             let u = Update::new(0x10000 + (i % 512) * 4096, vec![1u8; 64]);
             rl_lat.record(
                 exec_singleton(&mut f, SingletonMethod::SendFlush, &u, i as u32)
@@ -148,7 +152,7 @@ fn main() {
             7,
             false,
         );
-        rl.run(N / 3);
+        rl.run(iters() / 3);
         println!(
             "  placement jitter {:>4} ns: mean {:7.2} us  p99 {:7.2} us",
             jit,

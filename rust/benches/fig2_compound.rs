@@ -8,7 +8,10 @@ use rpmem::remotelog::client::AppendMode;
 use std::time::Instant;
 
 fn main() {
-    let opts = SweepOpts { appends: 50_000, ..Default::default() };
+    let opts = SweepOpts {
+        appends: rpmem::bench::scaled(50_000),
+        ..Default::default()
+    };
     println!(
         "REMOTELOG compound appends (64 B record + 8 B tail pointer), {} appends/bar\n",
         opts.appends

@@ -11,7 +11,10 @@ use rpmem::remotelog::client::AppendMode;
 use std::time::Instant;
 
 fn main() {
-    let opts = SweepOpts { appends: 50_000, ..Default::default() };
+    let opts = SweepOpts {
+        appends: rpmem::bench::scaled(50_000),
+        ..Default::default()
+    };
     println!(
         "REMOTELOG singleton appends, 64 B records, {} appends/bar\n",
         opts.appends

@@ -1,0 +1,117 @@
+//! Throughput scaling: M clients × window-W doorbell-batched pipelines
+//! over an N-QP sharded fabric — the scaling table that sits alongside
+//! the paper's latency figures (Fig 2).
+//!
+//! Sweeps clients ∈ {1,2,4,8,16} with one QP per client (the scaling
+//! axis) for four representative method classes, plus a saturation axis
+//! (16 clients crammed onto fewer QPs). Results are persisted as a JSON
+//! artifact (`RPMEM_SCALING_OUT`, default `scaling_results.json`) and
+//! the scaling axis is asserted monotone for the pipelinable one-sided
+//! methods — a regression here means the sharded layer stopped scaling.
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::bench::scaled;
+use rpmem::coordinator::scaling::{
+    render_scaling, run_saturation_axis, run_scaling_axis, scaling_to_json,
+    ScalingOpts,
+};
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::AppendMode;
+use std::time::Instant;
+
+fn main() {
+    let opts = ScalingOpts {
+        appends_per_client: scaled(20_000),
+        ..Default::default()
+    };
+    let clients = [1usize, 2, 4, 8, 16];
+    println!(
+        "multi-client scaling, {} appends/client, window {}, batch {}\n",
+        opts.appends_per_client, opts.window, opts.batch
+    );
+
+    let scenarios: [(&str, ServerConfig, AppendMode, Primary, bool); 4] = [
+        (
+            "WSP one-sided Write;Comp (singleton)",
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+            true,
+        ),
+        (
+            "MHP one-sided Write;Flush (singleton)",
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+            true,
+        ),
+        (
+            "DMP ¬DDIO atomic pipeline (compound)",
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            AppendMode::Compound,
+            Primary::Write,
+            true,
+        ),
+        (
+            "DMP+DDIO two-sided Send (responder-CPU-bound)",
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Send,
+            false,
+        ),
+    ];
+
+    let mut all = Vec::new();
+    for (title, cfg, mode, primary, assert_monotone) in scenarios {
+        let t0 = Instant::now();
+        let points = run_scaling_axis(cfg, mode, primary, &clients, &opts);
+        let wall = t0.elapsed();
+        let label =
+            format!("{title}  [{} | {}]", points[0].method_name, cfg.label());
+        println!("{}", render_scaling(&label, &points));
+        println!("  [harness: {:.2?} wall-clock]\n", wall);
+        if assert_monotone {
+            for w in points.windows(2) {
+                assert!(
+                    w[1].throughput_mops >= w[0].throughput_mops * 0.999,
+                    "scaling regression: {} clients {:.2} Mops -> {} \
+                     clients {:.2} Mops",
+                    w[0].clients,
+                    w[0].throughput_mops,
+                    w[1].clients,
+                    w[1].throughput_mops
+                );
+            }
+        }
+        all.extend(points);
+    }
+
+    println!("saturation: 16 clients on fewer QPs (MHP Write;Flush)\n");
+    let sat_cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    for shards in [1usize, 2, 4, 8, 16] {
+        let points = run_saturation_axis(
+            sat_cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            shards,
+            &[16],
+            &opts,
+        );
+        println!(
+            "  shards={:<3} {:>9.2} Mops  (mean lat {:>8.2} us)",
+            shards,
+            points[0].throughput_mops,
+            points[0].mean_latency_ns / 1e3
+        );
+        all.extend(points);
+    }
+    println!();
+
+    let out = std::env::var("RPMEM_SCALING_OUT")
+        .unwrap_or_else(|_| "scaling_results.json".to_string());
+    std::fs::write(&out, scaling_to_json(&all).to_string_pretty())
+        .expect("write scaling JSON artifact");
+    println!("wrote {out} ({} points)", all.len());
+}

@@ -25,7 +25,7 @@ fn sweep(name: &str, cfg: ServerConfig, mode: AppendMode, primary: Primary) {
             7,
             false,
         );
-        let res = run_pipelined(&mut rl, 30_000, window);
+        let res = run_pipelined(&mut rl, rpmem::bench::scaled(30_000), window);
         println!(
             "  {:>7} {:>12.2} Mops {:>11.2} us {:>9.2} us",
             res.window,

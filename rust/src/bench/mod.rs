@@ -8,6 +8,23 @@
 
 use std::time::{Duration, Instant};
 
+/// Fast-mode gate for the CI bench-smoke job: set `RPMEM_BENCH_FAST=1`
+/// to shrink iteration counts ~100x (via [`scaled`]) and the sampling
+/// windows ~10x, so every bench binary finishes in seconds and can never
+/// silently bit-rot.
+pub fn fast() -> bool {
+    std::env::var_os("RPMEM_BENCH_FAST").is_some_and(|v| v != "0")
+}
+
+/// Scale a workload iteration count by the fast-mode gate.
+pub fn scaled(n: u64) -> u64 {
+    if fast() {
+        (n / 100).max(1)
+    } else {
+        n
+    }
+}
+
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -26,10 +43,11 @@ impl BenchResult {
 
 /// Benchmark `f` (one logical iteration per call).
 pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    // Warm-up ~100 ms.
+    let (warm_ms, run_ms) = if fast() { (10, 60) } else { (100, 600) };
+    // Warm-up.
     let warm_start = Instant::now();
     let mut warm_iters = 0u64;
-    while warm_start.elapsed() < Duration::from_millis(100) {
+    while warm_start.elapsed() < Duration::from_millis(warm_ms) {
         f();
         warm_iters += 1;
     }
@@ -42,7 +60,7 @@ pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     let mut total_iters = 0u64;
     let mut total_ns = 0f64;
     let run_start = Instant::now();
-    while run_start.elapsed() < Duration::from_millis(600)
+    while run_start.elapsed() < Duration::from_millis(run_ms)
         || sample_means.len() < 5
     {
         let s = Instant::now();
@@ -90,6 +108,16 @@ pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scaled_tracks_fast_gate() {
+        if fast() {
+            assert_eq!(scaled(30_000), 300);
+        } else {
+            assert_eq!(scaled(30_000), 30_000);
+        }
+        assert!(scaled(50) >= 1);
+    }
 
     #[test]
     fn measures_something_positive() {

@@ -1,10 +1,16 @@
 //! Experiment coordination: parallel scenario sweeps (Figure 2 panels),
-//! the paper-claims checker, and crash-test campaign orchestration.
+//! the paper-claims checker, throughput-scaling sweeps (clients ×
+//! shards), and crash-test campaign orchestration.
 
 pub mod report;
+pub mod scaling;
 pub mod sweep;
 
 pub use report::{check_claims, render_claims, Claim};
+pub use scaling::{
+    render_scaling, run_saturation_axis, run_scaling_axis, run_scaling_point,
+    scaling_to_json, ScalingOpts, ScalingPoint,
+};
 pub use sweep::{
     render_panel, results_to_json, run_all, run_figure_panel, run_scenario,
     ScenarioResult, SweepOpts,

@@ -1,0 +1,300 @@
+//! Throughput-scaling sweeps: clients × shards over the multi-QP fabric
+//! — the scaling table that sits alongside the paper's latency figures.
+//!
+//! Two axes:
+//!
+//! * **scaling axis** — one QP per client (`shards == clients`):
+//!   connections are the unit of RDMA scaling, so aggregate throughput
+//!   for a pipelinable method must be monotonically non-decreasing in
+//!   the client count (asserted by `rust/tests/scaling_consistency.rs`
+//!   and checked again by `benches/scaling.rs`).
+//! * **saturation axis** — fixed shard count, growing clients: shows
+//!   where co-located clients hit the shared connection's post rate or
+//!   the responder CPU (two-sided methods).
+
+use crate::fabric::timing::TimingModel;
+use crate::persist::config::ServerConfig;
+use crate::persist::method::Primary;
+use crate::remotelog::client::{AppendMode, MethodChoice};
+use crate::remotelog::pipeline::{run_multi_client, ShardedRunOpts};
+use crate::util::json::Json;
+use std::thread;
+
+/// One (clients, shards) measurement.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub config: ServerConfig,
+    pub mode: AppendMode,
+    pub method_name: String,
+    pub clients: usize,
+    pub shards: usize,
+    pub window: usize,
+    pub batch: usize,
+    /// Total appends across all clients.
+    pub appends: u64,
+    pub span_ns: u64,
+    pub throughput_mops: f64,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+impl ScalingPoint {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("mode", self.mode.name().into())
+            .set("method", self.method_name.clone().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("window", self.window.into())
+            .set("batch", self.batch.into())
+            .set("appends", self.appends.into())
+            .set("span_ns", self.span_ns.into())
+            .set("throughput_mops", self.throughput_mops.into())
+            .set("mean_latency_ns", self.mean_latency_ns.into())
+            .set("p99_latency_ns", self.p99_latency_ns.into());
+        j
+    }
+}
+
+/// Shared sweep parameters.
+#[derive(Debug, Clone)]
+pub struct ScalingOpts {
+    pub appends_per_client: u64,
+    pub window: usize,
+    pub batch: usize,
+    /// Log slots per client (runs are non-recording, so the ring wraps).
+    pub capacity: u64,
+    pub seed: u64,
+    pub timing: TimingModel,
+}
+
+impl Default for ScalingOpts {
+    fn default() -> Self {
+        ScalingOpts {
+            appends_per_client: 2000,
+            window: 16,
+            batch: 4,
+            capacity: 8192,
+            seed: 42,
+            timing: TimingModel::default(),
+        }
+    }
+}
+
+/// Measure one (clients, shards) point.
+pub fn run_scaling_point(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    opts: &ScalingOpts,
+) -> ScalingPoint {
+    let ropts = ShardedRunOpts {
+        clients,
+        shards,
+        window: opts.window,
+        batch: opts.batch,
+        appends_per_client: opts.appends_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+    };
+    let (run, res) = run_multi_client(
+        cfg,
+        opts.timing.clone(),
+        mode,
+        MethodChoice::Planned(primary),
+        &ropts,
+    );
+    let method_name = match mode {
+        AppendMode::Singleton => run.singleton_method().name().to_string(),
+        AppendMode::Compound => run.compound_method().name().to_string(),
+    };
+    ScalingPoint {
+        config: cfg,
+        mode,
+        method_name,
+        clients,
+        shards,
+        window: res.window,
+        batch: res.batch,
+        appends: res.appends,
+        span_ns: res.span_ns,
+        throughput_mops: res.throughput_mops(),
+        mean_latency_ns: res.mean_latency_ns,
+        p99_latency_ns: res.p99_latency_ns,
+    }
+}
+
+/// Scaling axis: one QP per client, for each entry of `clients_list`.
+pub fn run_scaling_axis(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    clients_list: &[usize],
+    opts: &ScalingOpts,
+) -> Vec<ScalingPoint> {
+    run_points(
+        clients_list.iter().map(|&m| (m, m)).collect(),
+        cfg,
+        mode,
+        primary,
+        opts,
+    )
+}
+
+/// Saturation axis: a fixed QP count under a growing client load.
+pub fn run_saturation_axis(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    shards: usize,
+    clients_list: &[usize],
+    opts: &ScalingOpts,
+) -> Vec<ScalingPoint> {
+    run_points(
+        clients_list.iter().map(|&m| (m, shards)).collect(),
+        cfg,
+        mode,
+        primary,
+        opts,
+    )
+}
+
+fn run_points(
+    points: Vec<(usize, usize)>,
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    opts: &ScalingOpts,
+) -> Vec<ScalingPoint> {
+    thread::scope(|scope| {
+        let handles: Vec<_> = points
+            .iter()
+            .map(|&(clients, shards)| {
+                scope.spawn(move || {
+                    run_scaling_point(cfg, mode, primary, clients, shards, opts)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scaling point panicked"))
+            .collect()
+    })
+}
+
+/// Render a scaling table (throughput + latency per point).
+pub fn render_scaling(title: &str, points: &[ScalingPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<8} {:<7} {:<7} {:<6} {:>14} {:>11} {:>10}\n",
+        "clients", "shards", "window", "batch", "throughput", "mean lat", "p99 lat"
+    ));
+    out.push_str(&"-".repeat(70));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<8} {:<7} {:<7} {:<6} {:>9.2} Mops {:>8.2} us {:>7.2} us\n",
+            p.clients,
+            p.shards,
+            p.window,
+            p.batch,
+            p.throughput_mops,
+            p.mean_latency_ns / 1e3,
+            p.p99_latency_ns as f64 / 1e3,
+        ));
+    }
+    out
+}
+
+pub fn scaling_to_json(points: &[ScalingPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+
+    fn small_opts() -> ScalingOpts {
+        ScalingOpts { appends_per_client: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn scaling_axis_covers_requested_points() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let pts = run_scaling_axis(
+            cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            &[1, 2, 4],
+            &small_opts(),
+        );
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].clients, 1);
+        assert_eq!(pts[2].clients, 4);
+        assert_eq!(pts[2].shards, 4);
+        assert_eq!(pts[2].appends, 4 * 200);
+        for p in &pts {
+            assert!(p.throughput_mops > 0.0);
+            assert!(p.span_ns > 0);
+        }
+    }
+
+    #[test]
+    fn saturation_axis_pins_shards() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let pts = run_saturation_axis(
+            cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            2,
+            &[2, 4],
+            &small_opts(),
+        );
+        assert!(pts.iter().all(|p| p.shards == 2));
+    }
+
+    #[test]
+    fn scaling_points_are_deterministic() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let a = run_scaling_point(
+            cfg,
+            AppendMode::Compound,
+            Primary::Write,
+            2,
+            2,
+            &small_opts(),
+        );
+        let b = run_scaling_point(
+            cfg,
+            AppendMode::Compound,
+            Primary::Write,
+            2,
+            2,
+            &small_opts(),
+        );
+        assert_eq!(a.span_ns, b.span_ns);
+        assert_eq!(a.throughput_mops, b.throughput_mops);
+    }
+
+    #[test]
+    fn json_round_shape() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let pts = run_scaling_axis(
+            cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            &[1],
+            &small_opts(),
+        );
+        let j = scaling_to_json(&pts);
+        let arr = j.as_arr().expect("array");
+        assert_eq!(arr.len(), 1);
+        assert!(arr[0].get("throughput_mops").is_some());
+        assert_eq!(arr[0].get("clients").and_then(Json::as_u64), Some(1));
+    }
+}

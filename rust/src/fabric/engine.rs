@@ -1,6 +1,8 @@
 //! The requester↔responder fabric engine: a deterministic virtual-time
 //! simulation of one reliable connection (QPAIR) against a responder
-//! machine model.
+//! machine model. A [`Fabric`] is exactly one QP with its own ordering/
+//! completion chains; the multi-QP execution layer composes N of them
+//! (see [`crate::fabric::sharded::ShardedFabric`]).
 //!
 //! # Modeling approach
 //!
@@ -105,6 +107,9 @@ pub struct Fabric {
     rq_next_slot: usize,
     // ---- pending copy specs for the next SEND (builder-style) ----
     pending_copies: Vec<CopySpec>,
+    // ---- doorbell-batched post train (see `doorbell_begin`) ----
+    train_active: bool,
+    train_posted: bool,
 }
 
 impl Fabric {
@@ -135,6 +140,8 @@ impl Fabric {
             rq_free_at: VecDeque::from(vec![0; rq_count]),
             rq_next_slot: 0,
             pending_copies: Vec::new(),
+            train_active: false,
+            train_posted: false,
         }
     }
 
@@ -163,17 +170,38 @@ impl Fabric {
         self.pending_copies = copies;
     }
 
+    /// Open a doorbell-batched post train: until [`Self::doorbell_end`],
+    /// the first `post` pays the full doorbell cost (`post_ns`) and every
+    /// subsequent one only the SQE-write cost (`batched_post_ns`) — one
+    /// submission for the whole train. Ordering, completion, and
+    /// persistence semantics are unchanged: batching coalesces requester
+    /// CPU/MMIO work, not fabric-side effects.
+    pub fn doorbell_begin(&mut self) {
+        self.train_active = true;
+        self.train_posted = false;
+    }
+
+    /// Close the current doorbell train (see [`Self::doorbell_begin`]).
+    pub fn doorbell_end(&mut self) {
+        self.train_active = false;
+    }
+
     /// Post a work request; returns its id. Milestones are computed
     /// immediately (timestamp dataflow).
     pub fn post(&mut self, wr: WorkRequest) -> OpId {
         // Copy the handful of scalars used on this path (cloning the
         // whole TimingModel per post showed up in the hot-path profile).
-        let (post_ns, rnic_op_ns, wire_ns, iwarp_local_comp_ns) = (
-            self.timing.post_ns,
+        let (rnic_op_ns, wire_ns, iwarp_local_comp_ns) = (
             self.timing.rnic_op_ns,
             self.timing.wire_ns,
             self.timing.iwarp_local_comp_ns,
         );
+        let post_ns = if self.train_active && self.train_posted {
+            self.timing.batched_post_ns
+        } else {
+            self.timing.post_ns
+        };
+        self.train_posted = true;
         let id = OpId(self.ops.len() as u32);
         self.now += post_ns;
 
@@ -258,9 +286,14 @@ impl Fabric {
             _ => wr.target,
         };
         if wr.kind == OpKind::Send {
-            debug_assert!(
+            // Hard assert (not debug): `batch` is a user-facing knob and
+            // an oversized single-envelope SEND would silently overwrite
+            // neighboring RQWRB slots in release builds.
+            assert!(
                 len <= self.mem.layout.rq_slot_bytes,
-                "SEND payload exceeds RQWRB slot"
+                "SEND payload ({len} B) exceeds RQWRB slot ({} B) — \
+                 reduce the doorbell batch or widen rq_slot_bytes",
+                self.mem.layout.rq_slot_bytes
             );
         }
 
@@ -779,6 +812,43 @@ mod tests {
         let fl = f.post(WorkRequest::flush());
         // Even on iWARP, FLUSH completion requires the responder response.
         assert!(f.op(fl).comp_at.unwrap() > f.op(fl).t_arrive);
+    }
+
+    #[test]
+    fn doorbell_train_amortizes_post_cost() {
+        // Same 4-write train, batched vs not: the batched requester
+        // clock advances by 3x (post_ns - batched_post_ns) less.
+        let mut a = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut b = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        b.doorbell_begin();
+        for i in 0..4u64 {
+            let wr = WorkRequest::write(0x1000 + i * 64, vec![1u8; 64]);
+            a.post(wr.clone());
+            b.post(wr);
+        }
+        b.doorbell_end();
+        let saved = 3 * (a.timing.post_ns - a.timing.batched_post_ns);
+        assert_eq!(a.now() - b.now(), saved);
+        // Semantics unchanged: same op count, still in-order arrivals.
+        assert_eq!(a.ops_posted(), b.ops_posted());
+        for i in 1..4 {
+            assert!(
+                b.op(OpId(i)).t_arrive >= b.op(OpId(i - 1)).t_arrive,
+                "in-order delivery must survive batching"
+            );
+        }
+    }
+
+    #[test]
+    fn doorbell_train_resets_per_begin() {
+        let mut f = fabric(PDomain::Wsp, false, RqwrbLoc::Dram);
+        f.doorbell_begin();
+        f.post(WorkRequest::write(0x1000, vec![1u8; 8]));
+        f.doorbell_end();
+        let t0 = f.now();
+        // Outside a train, the full doorbell cost applies again.
+        f.post(WorkRequest::write(0x2000, vec![1u8; 8]));
+        assert_eq!(f.now() - t0, f.timing.post_ns);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 pub mod engine;
 pub mod ops;
+pub mod sharded;
 pub mod timing;
 
 pub use engine::{CopySpec, Fabric, OpState};
 pub use ops::{OnRecv, OpId, OpKind, WorkRequest};
+pub use sharded::ShardedFabric;
 pub use timing::{Nanos, TimingModel};

@@ -19,6 +19,11 @@ pub struct TimingModel {
     pub rnic_op_ns: Nanos,
     /// Requester-side work-request post overhead (doorbell etc.).
     pub post_ns: Nanos,
+    /// Per-WR overhead for the 2nd..Nth work request of a doorbell-
+    /// batched train: the SQE is written but the doorbell is rung once
+    /// for the whole train, so the MMIO cost is amortized (the classic
+    /// RNIC batching optimization the sharded execution layer exploits).
+    pub batched_post_ns: Nanos,
     /// DMA setup RNIC -> IIO for a payload.
     pub dma_setup_ns: Nanos,
     /// Payload streaming bandwidth (bytes/ns) through DMA stages.
@@ -83,6 +88,7 @@ impl Default for TimingModel {
             wire_ns: 650,
             rnic_op_ns: 130,
             post_ns: 40,
+            batched_post_ns: 8,
             dma_setup_ns: 90,
             dma_bytes_per_ns: 12.0, // ~100 Gb/s
             iio_to_l3_ns: 40,
@@ -181,5 +187,11 @@ mod tests {
     #[test]
     fn deterministic_has_no_jitter() {
         assert_eq!(TimingModel::deterministic().persist_jitter_ns, 0);
+    }
+
+    #[test]
+    fn batched_post_cheaper_than_doorbell() {
+        let t = TimingModel::default();
+        assert!(t.batched_post_ns < t.post_ns);
     }
 }

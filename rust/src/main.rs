@@ -6,11 +6,14 @@
 //! ```text
 //! rpmem taxonomy [--table 1|2|3]         regenerate the paper's tables
 //! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
+//! rpmem scale [...]                      clients × shards throughput scaling
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
 //! rpmem help
 //! ```
+
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
 use rpmem::coordinator::report::{check_claims, render_claims};
 use rpmem::coordinator::sweep::{
@@ -36,6 +39,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_deref() {
         Some("taxonomy") => cmd_taxonomy(&flags),
         Some("sweep") => cmd_sweep(&flags),
+        Some("scale") => cmd_scale(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -69,6 +73,14 @@ COMMANDS
                   --seed N               (default: 42)
                   --transport ib|iwarp   (default: ib)
                   --emulated             (FLUSH via READ, no WRITE_atomic)
+                  --json FILE            (dump results as JSON)
+  scale         Multi-client sharded throughput scaling (the dimension
+                the paper's latency-only evaluation leaves open).
+                  --clients LIST         (default: 1,2,4,8,16)
+                  --shards N             (default: 0 = one QP per client)
+                  --window W             (trains in flight, default: 16)
+                  --batch B              (appends per doorbell train, 4)
+                  --appends N            (per client, default: 2000)
                   --json FILE            (dump results as JSON)
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
                   --appends N            (default: 20000)
@@ -194,6 +206,74 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(path) = flags.get("json") {
         let j = results_to_json(&all).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_scale(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        render_scaling, run_saturation_axis, run_scaling_axis,
+        scaling_to_json, ScalingOpts,
+    };
+    let clients: Vec<usize> = match flags.get("clients") {
+        None => vec![1, 2, 4, 8, 16],
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("bad --clients: {e}"))?,
+    };
+    if clients.is_empty() || clients.contains(&0) {
+        return Err("--clients needs positive entries".into());
+    }
+    let shards = flag_u64(flags, "shards", 0) as usize;
+    let opts = ScalingOpts {
+        appends_per_client: flag_u64(flags, "appends", 2000),
+        window: flag_u64(flags, "window", 16) as usize,
+        batch: flag_u64(flags, "batch", 4) as usize,
+        ..Default::default()
+    };
+    let scenarios: [(&str, ServerConfig, AppendMode, Primary); 4] = [
+        (
+            "WSP one-sided Write;Comp (singleton)",
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+        ),
+        (
+            "MHP one-sided Write;Flush (singleton)",
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+        ),
+        (
+            "DMP ¬DDIO atomic pipeline (compound)",
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            AppendMode::Compound,
+            Primary::Write,
+        ),
+        (
+            "DMP+DDIO two-sided Send (singleton, responder-CPU-bound)",
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Send,
+        ),
+    ];
+    let mut all = Vec::new();
+    for (title, cfg, mode, primary) in scenarios {
+        let points = if shards == 0 {
+            run_scaling_axis(cfg, mode, primary, &clients, &opts)
+        } else {
+            run_saturation_axis(cfg, mode, primary, shards, &clients, &opts)
+        };
+        let label = format!("{title}  [{}]", points[0].method_name);
+        println!("{}", render_scaling(&label, &points));
+        all.extend(points);
+    }
+    if let Some(path) = flags.get("json") {
+        let j = scaling_to_json(&all).to_string_pretty();
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -164,6 +164,154 @@ pub fn post_singleton(
     }
 }
 
+/// Doorbell-batch a train of singleton updates: one submission (single
+/// doorbell, see [`Fabric::doorbell_begin`]) with a **single wait-point
+/// covering every update in the train**.
+///
+/// Correctness per method class (all ten singleton methods batch):
+///
+/// * flush-terminated one-sided methods coalesce the train behind ONE
+///   trailing FLUSH — its responder-side execution orders after every
+///   prior update's placement (per-QP total order of non-posted ops);
+/// * completion-terminated (WSP) methods wait the LAST update's
+///   completion — in-order delivery means it implies receipt of all
+///   priors;
+/// * ack-terminated message methods either carry the whole train in one
+///   wire envelope (copy recipes; the envelope already supports multiple
+///   updates) or wait the last ack — receive completions surface to the
+///   responder CPU in posting order, so the last ack orders after every
+///   prior flush/copy.
+///
+/// Note for the single-envelope recipes (`SendCopy*`): the encoded
+/// message must fit one RQWRB slot — size `rq_slot_bytes` accordingly.
+pub fn post_singleton_batch(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    updates: &[Update],
+    msg_seq: u32,
+) -> WaitPoint {
+    use SingletonMethod::*;
+    assert!(!updates.is_empty(), "empty doorbell train");
+    let last = &updates[updates.len() - 1];
+    fab.doorbell_begin();
+    let wp = match method {
+        WriteComp => {
+            let mut id = None;
+            for u in updates {
+                id = Some(fab.post(WorkRequest::write(u.addr, u.data.clone())));
+            }
+            WaitPoint::Comp(id.expect("non-empty train"))
+        }
+        WriteImmComp => {
+            let mut id = None;
+            for u in updates {
+                id = Some(fab.post(WorkRequest::write_imm(
+                    u.addr,
+                    u.data.clone(),
+                    OnRecv::Recycle,
+                )));
+            }
+            WaitPoint::Comp(id.expect("non-empty train"))
+        }
+        WriteFlush => {
+            for u in updates {
+                fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            }
+            WaitPoint::Comp(fab.post(flush_wr(fab, last.addr)))
+        }
+        WriteImmFlush => {
+            for u in updates {
+                fab.post(WorkRequest::write_imm(
+                    u.addr,
+                    u.data.clone(),
+                    OnRecv::Recycle,
+                ));
+            }
+            WaitPoint::Comp(fab.post(flush_wr(fab, last.addr)))
+        }
+        SendFlush | SendComp => {
+            // One message per update (each message must fit its RQWRB
+            // slot and replays independently on recovery).
+            let mut id = None;
+            for (i, u) in updates.iter().enumerate() {
+                let ups =
+                    [WireUpdate { target: u.addr, data: u.data.clone() }];
+                let payload =
+                    wire::encode(msg_seq.wrapping_add(i as u32), &ups);
+                fab.set_recv_copies(wire::copy_specs(&ups));
+                id = Some(fab.post(WorkRequest::send(
+                    payload,
+                    lazy_apply(fab),
+                    u.addr,
+                )));
+            }
+            if method == SendFlush {
+                WaitPoint::Comp(fab.post(flush_wr(fab, last.addr)))
+            } else {
+                WaitPoint::Comp(id.expect("non-empty train"))
+            }
+        }
+        SendCopyFlushAck | SendCopyAck => {
+            let on = if method == SendCopyFlushAck {
+                OnRecv::CopyFlushAck
+            } else {
+                OnRecv::CopyAck
+            };
+            let ups: Vec<WireUpdate> = updates
+                .iter()
+                .map(|u| WireUpdate { target: u.addr, data: u.data.clone() })
+                .collect();
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(payload, on, last.addr)))
+        }
+        WriteMsgFlushAck => {
+            for u in updates {
+                fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            }
+            let mut id = None;
+            for u in updates {
+                let mut notify = WorkRequest::send(
+                    vec![0u8; 16],
+                    OnRecv::FlushTargetAck,
+                    u.addr,
+                );
+                notify.recv_target = u.addr;
+                notify.recv_flush_len = u.data.len() as u64;
+                id = Some(fab.post(notify));
+            }
+            WaitPoint::Ack(id.expect("non-empty train"))
+        }
+        WriteImmFlushAck => {
+            let mut id = None;
+            for u in updates {
+                id = Some(fab.post(WorkRequest::write_imm(
+                    u.addr,
+                    u.data.clone(),
+                    OnRecv::FlushTargetAck,
+                )));
+            }
+            WaitPoint::Ack(id.expect("non-empty train"))
+        }
+    };
+    fab.doorbell_end();
+    wp
+}
+
+/// Execute a doorbell-batched singleton train (post + single wait).
+/// Every update in the train is persistent by `acked`.
+pub fn exec_singleton_batch(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    updates: &[Update],
+    msg_seq: u32,
+) -> PersistOutcome {
+    let start = fab.now();
+    let wp = post_singleton_batch(fab, method, updates, msg_seq);
+    let acked = wp.wait(fab);
+    PersistOutcome { start, acked }
+}
+
 /// Execute one singleton update with the given method (post + wait).
 pub fn exec_singleton(
     fab: &mut Fabric,
@@ -291,6 +439,41 @@ pub fn post_compound(
             )))
         }
     })
+}
+
+/// Doorbell-batch a train of compound (a-then-b) updates: one submission
+/// with a single wait-point covering every pair. Returns `None` for the
+/// methods with intrinsic internal waits (they cannot ride one doorbell
+/// train — execute them pair-by-pair instead).
+///
+/// Per-pair ordering is preserved by posting order; the train-final
+/// wait-point covers earlier pairs for the same reasons as
+/// [`post_singleton_batch`] (flush total order / in-order delivery /
+/// posting-order receive completions).
+pub fn post_compound_batch(
+    fab: &mut Fabric,
+    method: CompoundMethod,
+    pairs: &[(Update, Update)],
+    msg_seq: u32,
+) -> Option<WaitPoint> {
+    use CompoundMethod::*;
+    assert!(!pairs.is_empty(), "empty doorbell train");
+    if matches!(
+        method,
+        WriteMsgFlushAckTwice
+            | WriteImmFlushAckTwice
+            | WriteFlushWaitWriteFlush
+            | WriteImmFlushWaitImmFlush
+    ) {
+        return None;
+    }
+    fab.doorbell_begin();
+    let mut wp = None;
+    for (i, (a, b)) in pairs.iter().enumerate() {
+        wp = post_compound(fab, method, a, b, msg_seq.wrapping_add(i as u32));
+    }
+    fab.doorbell_end();
+    wp
 }
 
 /// Execute one compound (a-then-b, strictly ordered) update.
@@ -624,5 +807,175 @@ mod tests {
         let kinds = used_op_kinds(&f2, 0);
         assert!(kinds.contains(&OpKind::Read));
         assert!(!kinds.contains(&OpKind::Flush));
+    }
+
+    /// Wide RQWRB slots so single-envelope batches fit one slot.
+    fn fab_wide(cfg: ServerConfig) -> Fabric {
+        let layout = Layout::new(1 << 16, 1 << 16, 32, 4096, cfg.rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, 3, true)
+    }
+
+    /// Every planner-selected singleton method, doorbell-batched: all
+    /// updates in the train are persistent at the single wait-point.
+    #[test]
+    fn batched_singleton_trains_persist_by_ack() {
+        for cfg in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let m = plan_singleton(&cfg, p);
+                if m.requires_replay() {
+                    continue; // message durability checked separately
+                }
+                let mut f = fab_wide(cfg);
+                let updates: Vec<Update> = (0..4)
+                    .map(|i| upd(0x1000 + i * 0x100, 0x40 + i as u8, 64))
+                    .collect();
+                let out = exec_singleton_batch(&mut f, m, &updates, 1);
+                let img = f.mem.crash_image(out.acked, cfg.pdomain);
+                for (i, u) in updates.iter().enumerate() {
+                    assert_eq!(
+                        img.read(u.addr, 64),
+                        &u.data[..],
+                        "{} {} update {i} must persist at the batch ack",
+                        cfg.label(),
+                        m.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Replay-class batches (one-sided SEND): every message of the train
+    /// is durable in the RQWRB ring at the batch wait-point.
+    #[test]
+    fn batched_send_replay_messages_survive() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm);
+        let m = plan_singleton(&cfg, Primary::Send);
+        assert_eq!(m, SingletonMethod::SendFlush);
+        let mut f = fab_wide(cfg);
+        let updates: Vec<Update> =
+            (0..3).map(|i| upd(0x1000 + i * 0x100, 7 + i as u8, 64)).collect();
+        let out = exec_singleton_batch(&mut f, m, &updates, 5);
+        let img = f.mem.crash_image(out.acked, cfg.pdomain);
+        let layout = f.mem.layout.clone();
+        let mut found = 0;
+        for slot in 0..layout.rq_count {
+            let addr = layout.rqwrb_slot_addr(slot);
+            if addr >= img.pm_size() {
+                continue;
+            }
+            let buf = img.read(addr, layout.rq_slot_bytes as usize);
+            if let Ok(msg) = wire::decode(buf) {
+                found += msg.updates.len();
+            }
+        }
+        assert_eq!(found, 3, "all batched messages must be durable at ack");
+    }
+
+    /// Batched train beats the same updates as sequential round trips.
+    #[test]
+    fn batching_amortizes_round_trips() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let updates: Vec<Update> =
+            (0..8).map(|i| upd(0x1000 + i * 0x100, 1, 64)).collect();
+        let mut fb = fab_wide(cfg);
+        let batched = exec_singleton_batch(
+            &mut fb,
+            SingletonMethod::WriteFlush,
+            &updates,
+            1,
+        );
+        let mut fs = fab_wide(cfg);
+        let t0 = fs.now();
+        for (i, u) in updates.iter().enumerate() {
+            exec_singleton(&mut fs, SingletonMethod::WriteFlush, u, i as u32);
+        }
+        let seq_span = fs.now() - t0;
+        assert!(
+            batched.latency() * 3 < seq_span,
+            "batched {} vs sequential {}",
+            batched.latency(),
+            seq_span
+        );
+    }
+
+    /// A train of one behaves exactly like the unbatched recipe.
+    #[test]
+    fn unit_train_matches_single_post() {
+        for cfg in [
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+        ] {
+            for p in Primary::ALL {
+                let m = plan_singleton(&cfg, p);
+                let u = upd(0x1000, 0x33, 64);
+                let mut f1 = fab_wide(cfg);
+                let a = exec_singleton(&mut f1, m, &u, 1);
+                let mut f2 = fab_wide(cfg);
+                let b = exec_singleton_batch(
+                    &mut f2,
+                    m,
+                    std::slice::from_ref(&u),
+                    1,
+                );
+                assert_eq!(
+                    a.latency(),
+                    b.latency(),
+                    "{} {}",
+                    cfg.label(),
+                    m.name()
+                );
+            }
+        }
+    }
+
+    /// Compound trains: every pair persists at the single wait-point;
+    /// methods with internal waits are refused.
+    #[test]
+    fn batched_compound_trains_persist_by_ack() {
+        for cfg in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let m = plan_compound(&cfg, p, 8);
+                if m.requires_replay() {
+                    continue;
+                }
+                let pairs: Vec<(Update, Update)> = (0..3)
+                    .map(|i| {
+                        (
+                            upd(0x1000 + i * 0x100, 0xA0 + i as u8, 64),
+                            upd(0x100 + i * 8, 0xB0 + i as u8, 8),
+                        )
+                    })
+                    .collect();
+                let mut f = fab_wide(cfg);
+                match post_compound_batch(&mut f, m, &pairs, 1) {
+                    Some(wp) => {
+                        let acked = wp.wait(&mut f);
+                        let img = f.mem.crash_image(acked, cfg.pdomain);
+                        for (a, b) in &pairs {
+                            assert_eq!(
+                                img.read(a.addr, a.data.len()),
+                                &a.data[..],
+                                "{} / {}: update a",
+                                cfg.label(),
+                                m.name()
+                            );
+                            assert_eq!(
+                                img.read(b.addr, b.data.len()),
+                                &b.data[..],
+                                "{} / {}: update b",
+                                cfg.label(),
+                                m.name()
+                            );
+                        }
+                    }
+                    None => assert_eq!(
+                        m.round_trips(),
+                        2,
+                        "only the 2-round-trip methods may refuse batching"
+                    ),
+                }
+            }
+        }
     }
 }

@@ -84,9 +84,11 @@ impl RemoteLog {
         record: bool,
     ) -> Self {
         let log = LogLayout::new(capacity);
-        // PM must hold the log region plus the RQWRB ring.
+        // PM must hold the log region plus the RQWRB ring. Slots are
+        // sized for doorbell-batched wire envelopes (several records per
+        // message), not just singletons.
         let rq_count = 64;
-        let rq_slot = 256u64;
+        let rq_slot = 1024u64;
         let pm_size = (log.end() + rq_count as u64 * rq_slot + 4096)
             .next_power_of_two();
         let layout = Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);

@@ -16,9 +16,10 @@
 //! — both directions are asserted by the test suite.
 
 use crate::fabric::timing::Nanos;
-use crate::remotelog::client::RemoteLog;
-use crate::remotelog::log::RECORD_BYTES;
+use crate::remotelog::client::{AppendMode, AppendRecord, RemoteLog};
+use crate::remotelog::log::{LogLayout, RECORD_BYTES};
 use crate::remotelog::recovery::{recover, Scanner};
+use crate::server::memory::{Image, Layout};
 use crate::util::rng::SplitMix64;
 
 /// Aggregated result of a crash sweep.
@@ -59,13 +60,58 @@ impl CrashReport {
 /// replay (decided by the client's configured method + mode).
 fn needs_replay(rl: &RemoteLog) -> bool {
     match rl.mode {
-        crate::remotelog::client::AppendMode::Singleton => {
-            rl.singleton_method().requires_replay()
-        }
-        crate::remotelog::client::AppendMode::Compound => {
-            rl.compound_method().requires_replay()
+        AppendMode::Singleton => rl.singleton_method().requires_replay(),
+        AppendMode::Compound => rl.compound_method().requires_replay(),
+    }
+}
+
+/// Check one log's crash contracts against its append oracle — the
+/// shared core of the single-client and sharded sweeps.
+///
+/// * **Durability** — appends acked at or before `t` must be recovered.
+/// * **Integrity** — every recovered record matches the oracle
+///   byte-for-byte, and recovery never invents records.
+/// * **Ordering** — a durable tail pointer never covers a record that
+///   is not durably, validly persisted.
+pub fn check_log_crash_at(
+    image: &Image,
+    machine: &Layout,
+    log: &LogLayout,
+    mode: AppendMode,
+    replay: bool,
+    appends: &[AppendRecord],
+    t: Nanos,
+    scanner: &dyn Scanner,
+) -> CrashReport {
+    let res = recover(image, machine, log, mode, replay, scanner);
+    let acked =
+        appends.iter().take_while(|a| a.acked_at <= t).count() as u64;
+
+    let mut rep = CrashReport { crash_points: 1, ..Default::default() };
+    if res.recovered < acked {
+        rep.durability_violations = 1;
+        rep.worst_loss = acked - res.recovered;
+    }
+    // Every recovered record must match the oracle byte-for-byte.
+    let n = (res.recovered as usize).min(appends.len());
+    for k in 0..n {
+        let got = &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES];
+        if got != appends[k].record {
+            rep.integrity_violations += 1;
         }
     }
+    // Recovery can never invent records that were never appended.
+    if res.recovered as usize > appends.len() {
+        rep.integrity_violations += 1;
+    }
+    // Compound ordering contract: a durable tail pointer must never
+    // cover a record that is not durably, validly persisted.
+    if let Some(tp) = res.tail_ptr {
+        if tp.min(log.capacity) > res.recovered {
+            rep.ordering_violations += 1;
+        }
+    }
+    rep
 }
 
 /// Check one crash instant.
@@ -75,41 +121,16 @@ pub fn check_crash_at(
     scanner: &dyn Scanner,
 ) -> CrashReport {
     let image = rl.fab.mem.crash_image(t, rl.fab.cfg.pdomain);
-    let res = recover(
+    check_log_crash_at(
         &image,
         &rl.fab.mem.layout,
         &rl.log,
         rl.mode,
         needs_replay(rl),
+        &rl.appends,
+        t,
         scanner,
-    );
-    let acked = rl.acked_before(t);
-
-    let mut rep = CrashReport { crash_points: 1, ..Default::default() };
-    if res.recovered < acked {
-        rep.durability_violations = 1;
-        rep.worst_loss = acked - res.recovered;
-    }
-    // Every recovered record must match the oracle byte-for-byte.
-    let n = (res.recovered as usize).min(rl.appends.len());
-    for k in 0..n {
-        let got = &res.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES];
-        if got != rl.appends[k].record {
-            rep.integrity_violations += 1;
-        }
-    }
-    // Recovery can never invent records that were never appended.
-    if res.recovered as usize > rl.appends.len() {
-        rep.integrity_violations += 1;
-    }
-    // Compound ordering contract: a durable tail pointer must never
-    // cover a record that is not durably, validly persisted.
-    if let Some(tp) = res.tail_ptr {
-        if tp.min(rl.log.capacity) > res.recovered {
-            rep.ordering_violations += 1;
-        }
-    }
-    rep
+    )
 }
 
 /// Sweep crash points over a completed workload: uniform samples plus the

@@ -73,7 +73,25 @@ pub struct LogLayout {
 impl LogLayout {
     /// Conventional placement: tail pointer at 0x40, records from 0x1000.
     pub fn new(capacity: u64) -> Self {
-        LogLayout { tail_addr: 0x40, base: 0x1000, capacity }
+        LogLayout::in_region(0, capacity)
+    }
+
+    /// Place a log inside the PM region starting at `region_base`: tail
+    /// pointer at base+0x40, records from base+0x1000. The sharded
+    /// multi-client driver uses this to give clients co-located on one
+    /// QP disjoint log regions.
+    pub fn in_region(region_base: u64, capacity: u64) -> Self {
+        LogLayout {
+            tail_addr: region_base + 0x40,
+            base: region_base + 0x1000,
+            capacity,
+        }
+    }
+
+    /// PM bytes a client region needs (header page + records), rounded
+    /// to a page so regions tile without overlap.
+    pub fn region_stride(capacity: u64) -> u64 {
+        (0x1000 + capacity * RECORD_BYTES as u64).next_multiple_of(0x1000)
     }
 
     pub fn slot_addr(&self, seq: u64) -> u64 {
@@ -129,6 +147,19 @@ mod tests {
         assert_eq!(l.slot_addr(8), l.base);
         assert_eq!(l.slot_addr(3), l.base + 3 * 64);
         assert!(l.end() > l.base);
+    }
+
+    #[test]
+    fn regions_tile_without_overlap() {
+        let stride = LogLayout::region_stride(32);
+        let a = LogLayout::in_region(0, 32);
+        let b = LogLayout::in_region(stride, 32);
+        assert_eq!(a.tail_addr, LogLayout::new(32).tail_addr);
+        assert!(a.end() <= b.tail_addr, "regions must not overlap");
+        assert!(b.tail_addr < b.base);
+        assert_eq!(b.slot_addr(0), b.base);
+        // 0x1000 header + 32*64 B of records, rounded to a page.
+        assert_eq!(stride, 0x2000);
     }
 
     #[test]

@@ -9,10 +9,26 @@
 //! crash-consistency harness applies unchanged (the campaign in
 //! `rust/tests/crash_consistency.rs` covers pipelined runs too).
 
-use crate::fabric::timing::Nanos;
-use crate::persist::exec::{post_compound, post_singleton, Update, WaitPoint};
-use crate::remotelog::client::{AppendMode, AppendRecord, RemoteLog};
-use crate::remotelog::log::{make_record, APP_WORDS};
+use crate::fabric::sharded::ShardedFabric;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::persist::config::ServerConfig;
+use crate::persist::exec::{
+    exec_compound, post_compound, post_compound_batch, post_singleton,
+    post_singleton_batch, Update, WaitPoint,
+};
+use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use crate::persist::planner::{plan_compound, plan_singleton};
+use crate::remotelog::client::{
+    AppendMode, AppendRecord, MethodChoice, RemoteLog,
+};
+use crate::remotelog::crashtest::{check_log_crash_at, CrashReport};
+use crate::remotelog::log::{
+    make_record, LogLayout, APP_WORDS, RECORD_BYTES,
+};
+use crate::remotelog::recovery::Scanner;
+use crate::server::memory::Layout;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Histogram;
 use std::collections::VecDeque;
 
 /// Result of a pipelined run.
@@ -33,18 +49,35 @@ impl PipelineResult {
     }
 }
 
+/// Is a compound method a pure post-train (no internal completion
+/// waits), i.e. windowable and doorbell-batchable?
+pub fn compound_pipelinable(m: CompoundMethod) -> bool {
+    !matches!(
+        m,
+        CompoundMethod::WriteMsgFlushAckTwice
+            | CompoundMethod::WriteImmFlushAckTwice
+            | CompoundMethod::WriteFlushWaitWriteFlush
+            | CompoundMethod::WriteImmFlushWaitImmFlush
+    )
+}
+
 /// Is the client's configured method a pure post-train (pipelinable)?
 pub fn pipelinable(rl: &RemoteLog) -> bool {
     match rl.mode {
         AppendMode::Singleton => true, // all ten singleton methods are
-        AppendMode::Compound => !matches!(
-            rl.compound_method(),
-            crate::persist::method::CompoundMethod::WriteMsgFlushAckTwice
-                | crate::persist::method::CompoundMethod::WriteImmFlushAckTwice
-                | crate::persist::method::CompoundMethod::WriteFlushWaitWriteFlush
-                | crate::persist::method::CompoundMethod::WriteImmFlushWaitImmFlush
-        ),
+        AppendMode::Compound => compound_pipelinable(rl.compound_method()),
     }
+}
+
+/// Deterministic per-seq payload used by the pipelined/batched/sharded
+/// runners: content depends only on `seq`, so differently scheduled runs
+/// (any window, batch, or shard count) produce byte-identical logs.
+pub fn pipeline_payload(seq: u64) -> [u32; APP_WORDS] {
+    let mut app = [0u32; APP_WORDS];
+    for (k, w) in app.iter_mut().enumerate() {
+        *w = (seq as u32).wrapping_mul(0x9E37_79B9) ^ k as u32;
+    }
+    app
 }
 
 /// Run `n` appends keeping up to `window` in flight. Falls back to
@@ -76,11 +109,7 @@ pub fn run_pipelined(rl: &mut RemoteLog, n: u64, window: usize) -> PipelineResul
         }
         let seq = payload_seq;
         payload_seq += 1;
-        let mut app = [0u32; APP_WORDS];
-        for (k, w) in app.iter_mut().enumerate() {
-            *w = (seq as u32).wrapping_mul(0x9E37_79B9) ^ k as u32;
-        }
-        let record = make_record(seq, &app);
+        let record = make_record(seq, &pipeline_payload(seq));
         let slot = rl.log.slot_addr(seq);
         assert!(
             seq < rl.log.capacity || !rl.fab.mem.recording(),
@@ -130,6 +159,517 @@ fn retire(
     if rl.fab.mem.recording() {
         rl.appends.push(AppendRecord { seq, record, acked_at: acked });
     }
+}
+
+/// One in-flight doorbell train: `records.len()` appends sharing one
+/// wait-point; every append in the train is acked when it resolves.
+struct BatchTrain {
+    first_seq: u64,
+    start: Nanos,
+    wp: WaitPoint,
+    records: Vec<[u8; RECORD_BYTES]>,
+}
+
+fn retire_batch(rl: &mut RemoteLog, inflight: &mut VecDeque<BatchTrain>) {
+    let train = inflight.pop_front().expect("non-empty");
+    let acked = train.wp.wait(&mut rl.fab);
+    for (j, rec) in train.records.iter().enumerate() {
+        rl.latencies.record(acked - train.start);
+        if rl.fab.mem.recording() {
+            rl.appends.push(AppendRecord {
+                seq: train.first_seq + j as u64,
+                record: *rec,
+                acked_at: acked,
+            });
+        }
+    }
+}
+
+/// Run `n` appends as doorbell trains of `batch` records with up to
+/// `window` trains in flight. Each train is one submission with ONE
+/// wait-point (see [`post_singleton_batch`]); every record in a train is
+/// acked at the train's persistence point. Falls back to
+/// [`run_pipelined`] for `batch == 1` or methods with internal waits.
+pub fn run_batched(
+    rl: &mut RemoteLog,
+    n: u64,
+    batch: usize,
+    window: usize,
+) -> PipelineResult {
+    assert!(batch >= 1 && window >= 1);
+    if !pipelinable(rl) || batch == 1 {
+        return run_pipelined(rl, n, window);
+    }
+    let t0 = rl.fab.now();
+    let mut inflight: VecDeque<BatchTrain> = VecDeque::with_capacity(window);
+    let mut seq = rl.appended();
+    let end_seq = seq + n;
+    assert!(
+        end_seq <= rl.log.capacity || !rl.fab.mem.recording(),
+        "log wraparound would invalidate the crash oracle"
+    );
+    let singleton_method = rl.singleton_method();
+    let compound_method = rl.compound_method();
+
+    while seq < end_seq {
+        if inflight.len() == window {
+            retire_batch(rl, &mut inflight);
+        }
+        let len = batch.min((end_seq - seq) as usize);
+        let start = rl.fab.now();
+        let mut records = Vec::with_capacity(len);
+        let wp = match rl.mode {
+            AppendMode::Singleton => {
+                let mut updates = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = seq + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    updates
+                        .push(Update::new(rl.log.slot_addr(s), record.to_vec()));
+                    records.push(record);
+                }
+                post_singleton_batch(
+                    &mut rl.fab,
+                    singleton_method,
+                    &updates,
+                    seq as u32,
+                )
+            }
+            AppendMode::Compound => {
+                let mut pairs = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = seq + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    pairs.push((
+                        Update::new(rl.log.slot_addr(s), record.to_vec()),
+                        Update::new(
+                            rl.log.tail_addr,
+                            (s + 1).to_le_bytes().to_vec(),
+                        ),
+                    ));
+                    records.push(record);
+                }
+                post_compound_batch(
+                    &mut rl.fab,
+                    compound_method,
+                    &pairs,
+                    seq as u32,
+                )
+                .expect("checked pipelinable above")
+            }
+        };
+        inflight.push_back(BatchTrain { first_seq: seq, start, wp, records });
+        seq += len as u64;
+    }
+    while !inflight.is_empty() {
+        retire_batch(rl, &mut inflight);
+    }
+    rl.bump_seq_to(seq);
+
+    PipelineResult {
+        appends: n,
+        window,
+        span_ns: rl.fab.now() - t0,
+        mean_latency_ns: rl.latencies.summary().mean(),
+        p99_latency_ns: rl.latencies.quantile(0.99),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multi-client sharded pipelines: M clients × window-W trains over an
+// N-QP fabric — the throughput-scaling axis.
+// ---------------------------------------------------------------------
+
+/// Options for a multi-client sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardedRunOpts {
+    /// Number of independent append streams.
+    pub clients: usize,
+    /// Number of QPs; clients are assigned round-robin (client c → QP
+    /// c % shards), so `shards == clients` gives every client its own
+    /// connection and `shards < clients` shares QPs (serialization).
+    pub shards: usize,
+    /// Doorbell trains in flight per client.
+    pub window: usize,
+    /// Appends per doorbell train (single wait-point per train).
+    pub batch: usize,
+    pub appends_per_client: u64,
+    /// Log slots per client (each client gets its own PM region).
+    pub capacity: u64,
+    pub seed: u64,
+    /// Record write timelines + oracles (required for crash sweeps).
+    pub record: bool,
+}
+
+impl Default for ShardedRunOpts {
+    fn default() -> Self {
+        ShardedRunOpts {
+            clients: 1,
+            shards: 1,
+            window: 8,
+            batch: 1,
+            appends_per_client: 1000,
+            capacity: 8192,
+            seed: 7,
+            record: false,
+        }
+    }
+}
+
+/// One client of a sharded run: its QP, log region, and oracle history.
+pub struct ShardedClient {
+    pub qp: usize,
+    pub log: LogLayout,
+    /// Oracle history (populated only when recording).
+    pub appends: Vec<AppendRecord>,
+    pub latencies: Histogram,
+}
+
+impl ShardedClient {
+    /// Number of this client's appends acked at or before `t`.
+    pub fn acked_before(&self, t: Nanos) -> u64 {
+        self.appends.iter().take_while(|a| a.acked_at <= t).count() as u64
+    }
+}
+
+/// A completed multi-client sharded run (fabric + per-client oracles),
+/// ready for crash sweeps.
+pub struct ShardedRun {
+    pub mode: AppendMode,
+    pub fabric: ShardedFabric,
+    pub clients: Vec<ShardedClient>,
+    singleton_method: SingletonMethod,
+    compound_method: CompoundMethod,
+}
+
+impl ShardedRun {
+    pub fn singleton_method(&self) -> SingletonMethod {
+        self.singleton_method
+    }
+
+    pub fn compound_method(&self) -> CompoundMethod {
+        self.compound_method
+    }
+
+    fn needs_replay(&self) -> bool {
+        match self.mode {
+            AppendMode::Singleton => self.singleton_method.requires_replay(),
+            AppendMode::Compound => self.compound_method.requires_replay(),
+        }
+    }
+}
+
+/// Aggregate result of a multi-client sharded run.
+#[derive(Debug, Clone)]
+pub struct MultiClientResult {
+    pub clients: usize,
+    pub shards: usize,
+    pub window: usize,
+    pub batch: usize,
+    /// Total appends across all clients.
+    pub appends: u64,
+    /// Makespan: parallel virtual time from start to the last
+    /// persistence point on any QP.
+    pub span_ns: Nanos,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+impl MultiClientResult {
+    /// Aggregate throughput in million appends per simulated second.
+    pub fn throughput_mops(&self) -> f64 {
+        self.appends as f64 / self.span_ns as f64 * 1e3
+    }
+}
+
+fn retire_client(
+    fabric: &mut ShardedFabric,
+    client: &mut ShardedClient,
+    inflight: &mut VecDeque<BatchTrain>,
+    summary: &mut Histogram,
+    record: bool,
+) {
+    let train = inflight.pop_front().expect("non-empty");
+    let acked = train.wp.wait(fabric.qp_mut(client.qp));
+    for (j, rec) in train.records.iter().enumerate() {
+        let lat = acked - train.start;
+        client.latencies.record(lat);
+        summary.record(lat);
+        if record {
+            client.appends.push(AppendRecord {
+                seq: train.first_seq + j as u64,
+                record: *rec,
+                acked_at: acked,
+            });
+        }
+    }
+}
+
+/// Drive `clients` append streams, each a window-W pipeline of
+/// doorbell-batched trains, over an N-QP sharded fabric.
+///
+/// Clients co-located on one QP interleave their posts deterministically
+/// (round-robin) and serialize on the shared connection; clients on
+/// different QPs advance in parallel virtual time. Non-pipelinable
+/// compound methods degrade to sequential execution (window = batch =
+/// 1), exactly like [`run_pipelined`].
+pub fn run_multi_client(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    mode: AppendMode,
+    choice: MethodChoice,
+    opts: &ShardedRunOpts,
+) -> (ShardedRun, MultiClientResult) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.window >= 1 && opts.batch >= 1);
+    let (sm, cm) = match choice {
+        MethodChoice::Planned(p) => {
+            (plan_singleton(&cfg, p), plan_compound(&cfg, p, 8))
+        }
+        MethodChoice::ForcedSingleton(m) => {
+            (m, plan_compound(&cfg, Primary::Write, 8))
+        }
+        MethodChoice::ForcedCompound(m) => {
+            (plan_singleton(&cfg, Primary::Write), m)
+        }
+    };
+    let pipelinable = match mode {
+        AppendMode::Singleton => true,
+        AppendMode::Compound => compound_pipelinable(cm),
+    };
+    let (window, batch) =
+        if pipelinable { (opts.window, opts.batch) } else { (1, 1) };
+    let total = opts.appends_per_client;
+    assert!(
+        !opts.record || total <= opts.capacity,
+        "log wraparound would invalidate the crash oracle"
+    );
+
+    // Size each QP's PM for its co-located clients' log regions plus the
+    // RQWRB ring (slots wide enough for batched wire envelopes).
+    let clients_per_qp = opts.clients.div_ceil(opts.shards);
+    let region = LogLayout::region_stride(opts.capacity);
+    let rq_count = 64usize;
+    let rq_slot = 8192u64;
+    let pm_size = (region * clients_per_qp as u64
+        + rq_count as u64 * rq_slot
+        + 4096)
+        .next_power_of_two();
+    let layout = Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
+    let mut fabric = ShardedFabric::new(
+        cfg,
+        timing,
+        layout,
+        opts.seed,
+        opts.record,
+        opts.shards,
+    );
+
+    let mut clients: Vec<ShardedClient> = (0..opts.clients)
+        .map(|c| {
+            let qp = c % opts.shards;
+            let k = (c / opts.shards) as u64;
+            let log = LogLayout::in_region(k * region, opts.capacity);
+            assert!(
+                log.end() <= fabric.qp(qp).mem.layout.pm_app_limit(),
+                "client region overlaps the RQWRB ring"
+            );
+            ShardedClient {
+                qp,
+                log,
+                appends: Vec::new(),
+                latencies: Histogram::new(),
+            }
+        })
+        .collect();
+
+    let mut inflight: Vec<VecDeque<BatchTrain>> =
+        (0..opts.clients).map(|_| VecDeque::new()).collect();
+    let mut next_seq = vec![0u64; opts.clients];
+    let mut summary = Histogram::new();
+
+    // Round-robin issue loop: one train per client per pass.
+    loop {
+        let mut progressed = false;
+        for c in 0..opts.clients {
+            if next_seq[c] >= total {
+                continue;
+            }
+            progressed = true;
+            if inflight[c].len() == window {
+                retire_client(
+                    &mut fabric,
+                    &mut clients[c],
+                    &mut inflight[c],
+                    &mut summary,
+                    opts.record,
+                );
+            }
+            let first = next_seq[c];
+            let len = (batch as u64).min(total - first) as usize;
+            let (qp, log) = (clients[c].qp, clients[c].log.clone());
+
+            if mode == AppendMode::Compound && !pipelinable {
+                // Internal-wait method: synchronous single append.
+                let record = make_record(first, &pipeline_payload(first));
+                let a = Update::new(log.slot_addr(first), record.to_vec());
+                let b = Update::new(
+                    log.tail_addr,
+                    (first + 1).to_le_bytes().to_vec(),
+                );
+                let fab = fabric.qp_mut(qp);
+                let out = exec_compound(fab, cm, &a, &b, first as u32);
+                let lat = out.acked - out.start;
+                clients[c].latencies.record(lat);
+                summary.record(lat);
+                if opts.record {
+                    clients[c].appends.push(AppendRecord {
+                        seq: first,
+                        record,
+                        acked_at: out.acked,
+                    });
+                }
+                next_seq[c] += 1;
+                continue;
+            }
+
+            let fab = fabric.qp_mut(qp);
+            let start = fab.now();
+            let mut records = Vec::with_capacity(len);
+            let wp = match mode {
+                AppendMode::Singleton => {
+                    let mut updates = Vec::with_capacity(len);
+                    for j in 0..len as u64 {
+                        let s = first + j;
+                        let record = make_record(s, &pipeline_payload(s));
+                        updates.push(Update::new(
+                            log.slot_addr(s),
+                            record.to_vec(),
+                        ));
+                        records.push(record);
+                    }
+                    post_singleton_batch(fab, sm, &updates, first as u32)
+                }
+                AppendMode::Compound => {
+                    let mut pairs = Vec::with_capacity(len);
+                    for j in 0..len as u64 {
+                        let s = first + j;
+                        let record = make_record(s, &pipeline_payload(s));
+                        pairs.push((
+                            Update::new(log.slot_addr(s), record.to_vec()),
+                            Update::new(
+                                log.tail_addr,
+                                (s + 1).to_le_bytes().to_vec(),
+                            ),
+                        ));
+                        records.push(record);
+                    }
+                    post_compound_batch(fab, cm, &pairs, first as u32)
+                        .expect("checked pipelinable above")
+                }
+            };
+            inflight[c].push_back(BatchTrain {
+                first_seq: first,
+                start,
+                wp,
+                records,
+            });
+            next_seq[c] += len as u64;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    for c in 0..opts.clients {
+        while !inflight[c].is_empty() {
+            retire_client(
+                &mut fabric,
+                &mut clients[c],
+                &mut inflight[c],
+                &mut summary,
+                opts.record,
+            );
+        }
+    }
+
+    let span_ns = fabric.makespan();
+    let result = MultiClientResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        window,
+        batch,
+        appends: total * opts.clients as u64,
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+    };
+    let run = ShardedRun {
+        mode,
+        fabric,
+        clients,
+        singleton_method: sm,
+        compound_method: cm,
+    };
+    (run, result)
+}
+
+/// Check one crash instant of a multi-client sharded run: every client's
+/// log must uphold the durability/integrity/ordering contracts on its
+/// own QP's crash image.
+pub fn check_sharded_crash_at(
+    run: &ShardedRun,
+    t: Nanos,
+    scanner: &dyn Scanner,
+) -> CrashReport {
+    let mut rep = CrashReport::default();
+    for client in &run.clients {
+        let fab = run.fabric.qp(client.qp);
+        let image = fab.mem.crash_image(t, fab.cfg.pdomain);
+        rep.merge(&check_log_crash_at(
+            &image,
+            &fab.mem.layout,
+            &client.log,
+            run.mode,
+            run.needs_replay(),
+            &client.appends,
+            t,
+            scanner,
+        ));
+    }
+    rep.crash_points = 1;
+    rep
+}
+
+/// Crash sweep over a completed sharded run: uniform global instants
+/// plus the adversarial instants around every client's every ack.
+pub fn sharded_crash_sweep(
+    run: &ShardedRun,
+    uniform_points: u64,
+    seed: u64,
+    scanner: &dyn Scanner,
+) -> CrashReport {
+    assert!(
+        run.fabric.qp(0).mem.recording(),
+        "crash sweep requires a recording run"
+    );
+    let end = run.fabric.makespan();
+    let mut rng = SplitMix64::new(seed);
+    let mut report = CrashReport::default();
+    for _ in 0..uniform_points {
+        let t = rng.next_below(end.max(1));
+        report.merge(&check_sharded_crash_at(run, t, scanner));
+    }
+    for client in &run.clients {
+        for a in &client.appends {
+            for t in
+                [a.acked_at, a.acked_at + 1, a.acked_at.saturating_sub(1)]
+            {
+                report.merge(&check_sharded_crash_at(run, t, scanner));
+            }
+        }
+    }
+    report.merge(&check_sharded_crash_at(run, end, scanner));
+    report
 }
 
 #[cfg(test)]
@@ -232,5 +772,137 @@ mod tests {
         assert_eq!(rl.appended(), 100);
         rl.append();
         assert_eq!(rl.appended(), 101);
+    }
+
+    #[test]
+    fn batched_trains_beat_unbatched_pipelining() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut plain = client(AppendMode::Singleton, cfg, false);
+        let p = run_pipelined(&mut plain, 3000, 8);
+        let mut batched = client(AppendMode::Singleton, cfg, false);
+        let b = run_batched(&mut batched, 3000, 8, 8);
+        assert!(
+            b.throughput_mops() > p.throughput_mops(),
+            "batched {} <= pipelined {}",
+            b.throughput_mops(),
+            p.throughput_mops()
+        );
+        assert_eq!(batched.appended(), 3000);
+    }
+
+    #[test]
+    fn multi_client_scaling_is_monotone() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut last = 0.0;
+        for m in [1usize, 2, 4, 8] {
+            let opts = ShardedRunOpts {
+                clients: m,
+                shards: m,
+                window: 8,
+                batch: 4,
+                appends_per_client: 400,
+                capacity: 512,
+                seed: 3,
+                record: false,
+            };
+            let (_, res) = run_multi_client(
+                cfg,
+                TimingModel::default(),
+                AppendMode::Singleton,
+                MethodChoice::Planned(Primary::Write),
+                &opts,
+            );
+            assert!(
+                res.throughput_mops() >= last,
+                "clients {m}: {} < {last}",
+                res.throughput_mops()
+            );
+            last = res.throughput_mops();
+        }
+    }
+
+    #[test]
+    fn sharding_relieves_responder_cpu_bottleneck() {
+        // Two-sided methods serialize on the responder CPU, so 4 clients
+        // crammed onto 1 QP (one responder) are CPU-bound; spread over 4
+        // QPs they get 4 responder CPUs and overlap.
+        let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+        let mut spans = Vec::new();
+        for shards in [1usize, 4] {
+            let opts = ShardedRunOpts {
+                clients: 4,
+                shards,
+                window: 4,
+                batch: 2,
+                appends_per_client: 300,
+                capacity: 512,
+                seed: 5,
+                record: false,
+            };
+            let (run, res) = run_multi_client(
+                cfg,
+                TimingModel::default(),
+                AppendMode::Singleton,
+                MethodChoice::Planned(Primary::Send),
+                &opts,
+            );
+            assert_eq!(
+                run.singleton_method(),
+                crate::persist::method::SingletonMethod::SendCopyFlushAck
+            );
+            spans.push(res.span_ns);
+        }
+        assert!(
+            spans[1] * 2 < spans[0],
+            "4 QPs ({}) should be >2x faster than 1 QP ({})",
+            spans[1],
+            spans[0]
+        );
+    }
+
+    #[test]
+    fn multi_client_sharded_runs_survive_crashes() {
+        for (cfg, mode, primary) in [
+            (
+                ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+                AppendMode::Compound,
+                Primary::Write,
+            ),
+            (
+                ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Dram),
+                AppendMode::Singleton,
+                Primary::Write,
+            ),
+            (
+                ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Pm),
+                AppendMode::Singleton,
+                Primary::Send,
+            ),
+        ] {
+            let opts = ShardedRunOpts {
+                clients: 3,
+                shards: 2,
+                window: 4,
+                batch: 2,
+                appends_per_client: 12,
+                capacity: 64,
+                seed: 9,
+                record: true,
+            };
+            let (run, _) = run_multi_client(
+                cfg,
+                TimingModel::default(),
+                mode,
+                MethodChoice::Planned(primary),
+                &opts,
+            );
+            let rep = sharded_crash_sweep(&run, 40, 11, &RustScanner);
+            assert!(
+                rep.clean(),
+                "{} {} sharded: {rep:?}",
+                cfg.label(),
+                mode.name()
+            );
+        }
     }
 }

@@ -1,0 +1,123 @@
+//! Zero-dependency stand-in for the PJRT runtime (default build).
+//!
+//! `Runtime::load`/`XlaScanner::load` always fail with a descriptive
+//! error; no instance can ever be constructed, so the remaining methods
+//! are statically unreachable. Callers treat a load failure exactly like
+//! missing artifacts and fall back to the rust mirrors.
+
+use crate::remotelog::recovery::Scanner;
+use std::fmt;
+use std::path::Path;
+
+/// Error returned by every stub `load`.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeUnavailable;
+
+impl fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "built without the `xla-runtime` feature — rebuild with \
+             `--features xla-runtime` on the artifact toolchain image, \
+             or use the rust scanner"
+        )
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Stub [`Runtime`]: unconstructable.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    pub fn load(
+        dir: impl AsRef<Path>,
+    ) -> Result<Self, RuntimeUnavailable> {
+        let _ = dir;
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn export_n(&self) -> usize {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn checksum_records(
+        &self,
+        _payloads: &[u32],
+    ) -> Result<Vec<u32>, RuntimeUnavailable> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn scan_records(
+        &self,
+        _records: &[u32],
+    ) -> Result<(Vec<bool>, u64), RuntimeUnavailable> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn verify_chain(
+        &self,
+        _records: &[u32],
+        _base_seq: u32,
+    ) -> Result<u64, RuntimeUnavailable> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn segment_digests(
+        &self,
+        _records: &[u32],
+    ) -> Result<Vec<(u32, u32)>, RuntimeUnavailable> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+/// Stub [`XlaScanner`]: unconstructable; `load` always fails.
+pub struct XlaScanner {
+    rt: Runtime,
+}
+
+impl XlaScanner {
+    pub fn new(rt: Runtime) -> Self {
+        XlaScanner { rt }
+    }
+
+    pub fn load(
+        dir: impl AsRef<Path>,
+    ) -> Result<Self, RuntimeUnavailable> {
+        Ok(XlaScanner { rt: Runtime::load(dir)? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Scanner for XlaScanner {
+    fn scan(&self, _records: &[u8]) -> (Vec<bool>, u64) {
+        unreachable!("stub XlaScanner cannot be constructed")
+    }
+
+    fn verify_chain(&self, _records: &[u8], _base_seq: u32) -> u64 {
+        unreachable!("stub XlaScanner cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_clear_message() {
+        match XlaScanner::load("artifacts") {
+            Err(e) => assert!(format!("{e}").contains("xla-runtime")),
+            Ok(_) => panic!("stub load must fail"),
+        }
+        assert!(Runtime::load("artifacts").is_err());
+    }
+}

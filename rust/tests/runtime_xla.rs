@@ -2,7 +2,11 @@
 //! rust, must agree bit-for-bit with the rust-native integrity mirror —
 //! on clean logs, corrupted logs, and full crash-recovery sweeps.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires `make artifacts` (skipped with a clear message otherwise)
+//! AND the `xla-runtime` feature — the default build's stub runtime
+//! cannot load artifacts, so this suite is compiled out entirely.
+
+#![cfg(feature = "xla-runtime")]
 
 use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
