@@ -1,0 +1,86 @@
+//! Cross-shard transaction throughput: the 2PC atomic-commit layer
+//! (`persist::txn`) vs. the same update stream issued as independent
+//! per-shard compound updates — the price of atomicity, across a
+//! clients × shards grid.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_TXN_OUT`, default
+//! `txn_results.json`). Two invariants are asserted: atomicity is never
+//! free (independent >= 2PC throughput at every point) but its price is
+//! bounded (2PC keeps more than a fifth of the independent throughput —
+//! one decision round trip plus intents, not a serialization collapse).
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::bench::scaled;
+use rpmem::coordinator::scaling::{
+    render_txn_grid, run_txn_grid, txn_grid_to_json, ScalingOpts,
+};
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use std::time::Instant;
+
+fn main() {
+    let txns = scaled(2000);
+    let clients = [1usize, 2, 4];
+    let shards = [1usize, 2, 4, 8];
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    println!(
+        "cross-shard transactions, {txns} txns/client, grid {clients:?} x {shards:?}\n"
+    );
+
+    let scenarios: [(&str, ServerConfig, Primary); 3] = [
+        (
+            "MHP one-sided Write;Flush phases",
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            "DMP ¬DDIO one-sided Write;Flush phases",
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            "DMP+DDIO two-sided Send phases (responder-CPU-bound)",
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            Primary::Send,
+        ),
+    ];
+
+    let mut all = Vec::new();
+    for (title, cfg, primary) in scenarios {
+        let t0 = Instant::now();
+        let points =
+            run_txn_grid(cfg, primary, &clients, &shards, txns, &opts);
+        let wall = t0.elapsed();
+        let label =
+            format!("{title}  [{} | {}]", points[0].method_name, cfg.label());
+        println!("{}", render_txn_grid(&label, &points));
+        println!("  [harness: {:.2?} wall-clock]\n", wall);
+        for p in &points {
+            assert!(
+                p.independent_mtps >= p.txn_mtps * 0.999,
+                "atomicity can't beat no-atomicity: {} clients x {} shards \
+                 2PC {:.3} vs independent {:.3}",
+                p.clients,
+                p.shards,
+                p.txn_mtps,
+                p.independent_mtps
+            );
+            assert!(
+                p.txn_mtps * 5.0 > p.independent_mtps,
+                "2PC collapsed: {} clients x {} shards {:.3} vs {:.3}",
+                p.clients,
+                p.shards,
+                p.txn_mtps,
+                p.independent_mtps
+            );
+        }
+        all.extend(points);
+    }
+
+    let out = std::env::var("RPMEM_TXN_OUT")
+        .unwrap_or_else(|_| "txn_results.json".to_string());
+    std::fs::write(&out, txn_grid_to_json(&all).to_string_pretty())
+        .expect("write txn JSON artifact");
+    println!("wrote {out} ({} points)", all.len());
+}

@@ -28,14 +28,20 @@ pub fn scaled(n: u64) -> u64 {
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Total iterations measured.
     pub iters: u64,
+    /// Mean wall-clock ns per iteration.
     pub ns_per_iter: f64,
+    /// Median of per-batch means (outlier-robust).
     pub median_ns_per_iter: f64,
+    /// Number of sampling batches.
     pub samples: usize,
 }
 
 impl BenchResult {
+    /// Iterations per wall-clock second.
     pub fn throughput_per_sec(&self) -> f64 {
         1e9 / self.ns_per_iter
     }

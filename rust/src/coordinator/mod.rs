@@ -1,6 +1,7 @@
 //! Experiment coordination: parallel scenario sweeps (Figure 2 panels),
 //! the paper-claims checker, throughput-scaling sweeps (clients ×
-//! shards), and crash-test campaign orchestration.
+//! shards), the cross-shard transaction grid (2PC vs. independent
+//! updates), and crash-test campaign orchestration.
 
 pub mod report;
 pub mod scaling;
@@ -8,8 +9,9 @@ pub mod sweep;
 
 pub use report::{check_claims, render_claims, Claim};
 pub use scaling::{
-    render_scaling, run_saturation_axis, run_scaling_axis, run_scaling_point,
-    scaling_to_json, ScalingOpts, ScalingPoint,
+    render_scaling, render_txn_grid, run_saturation_axis, run_scaling_axis,
+    run_scaling_point, run_txn_grid, run_txn_point, scaling_to_json,
+    txn_grid_to_json, ScalingOpts, ScalingPoint, TxnScalingPoint,
 };
 pub use sweep::{
     render_panel, results_to_json, run_all, run_figure_panel, run_scenario,

@@ -11,13 +11,18 @@ use crate::util::json::Json;
 /// One checked claim.
 #[derive(Debug, Clone)]
 pub struct Claim {
+    /// Short claim identifier.
     pub name: &'static str,
+    /// What the paper asserts (§4.3/§4.4).
     pub paper: &'static str,
+    /// What this reproduction measured.
     pub measured: String,
+    /// Did the measurement uphold the claim?
     pub ok: bool,
 }
 
 impl Claim {
+    /// Serialize for the JSON artifact.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("name", self.name.into())

@@ -1,7 +1,7 @@
 //! Throughput-scaling sweeps: clients × shards over the multi-QP fabric
 //! — the scaling table that sits alongside the paper's latency figures.
 //!
-//! Two axes:
+//! Three axes:
 //!
 //! * **scaling axis** — one QP per client (`shards == clients`):
 //!   connections are the unit of RDMA scaling, so aggregate throughput
@@ -11,34 +11,52 @@
 //! * **saturation axis** — fixed shard count, growing clients: shows
 //!   where co-located clients hit the shared connection's post rate or
 //!   the responder CPU (two-sided methods).
+//! * **transaction axis** ([`run_txn_grid`]) — clients × shards where
+//!   every update is a cross-shard transaction: 2PC commit throughput
+//!   vs. the same workload as independent per-shard updates, i.e. the
+//!   price of atomicity (`benches/txn.rs` persists the table).
 
 use crate::fabric::timing::TimingModel;
 use crate::persist::config::ServerConfig;
 use crate::persist::method::Primary;
 use crate::remotelog::client::{AppendMode, MethodChoice};
-use crate::remotelog::pipeline::{run_multi_client, ShardedRunOpts};
+use crate::remotelog::pipeline::{
+    run_multi_client, run_txn_multi_shard, ShardedRunOpts, TxnRunOpts,
+};
 use crate::util::json::Json;
 use std::thread;
 
 /// One (clients, shards) measurement.
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
+    /// Responder configuration measured.
     pub config: ServerConfig,
+    /// REMOTELOG variant.
     pub mode: AppendMode,
+    /// Human-readable method name.
     pub method_name: String,
+    /// Client count.
     pub clients: usize,
+    /// QP count.
     pub shards: usize,
+    /// Effective window depth.
     pub window: usize,
+    /// Effective doorbell batch.
     pub batch: usize,
     /// Total appends across all clients.
     pub appends: u64,
+    /// Makespan in virtual ns.
     pub span_ns: u64,
+    /// Aggregate throughput (million appends per simulated second).
     pub throughput_mops: f64,
+    /// Mean per-append latency (ns).
     pub mean_latency_ns: f64,
+    /// p99 per-append latency (ns).
     pub p99_latency_ns: u64,
 }
 
 impl ScalingPoint {
+    /// Serialize for the JSON artifact.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("config", self.config.label().into())
@@ -60,12 +78,17 @@ impl ScalingPoint {
 /// Shared sweep parameters.
 #[derive(Debug, Clone)]
 pub struct ScalingOpts {
+    /// Appends each client performs.
     pub appends_per_client: u64,
+    /// Doorbell trains in flight per client.
     pub window: usize,
+    /// Appends per doorbell train.
     pub batch: usize,
     /// Log slots per client (runs are non-recording, so the ring wraps).
     pub capacity: u64,
+    /// Jitter seed.
     pub seed: u64,
+    /// Timing model the sweep runs under.
     pub timing: TimingModel,
 }
 
@@ -210,7 +233,163 @@ pub fn render_scaling(title: &str, points: &[ScalingPoint]) -> String {
     out
 }
 
+/// Serialize a scaling table for the JSON artifact.
 pub fn scaling_to_json(points: &[ScalingPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
+// ---------------------------------------------------------------------
+// Transaction axis: 2PC commit throughput vs. independent updates.
+// ---------------------------------------------------------------------
+
+/// One (clients, shards) transactional measurement: the same multi-shard
+/// update stream committed with 2PC and as independent per-shard
+/// updates.
+#[derive(Debug, Clone)]
+pub struct TxnScalingPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Human-readable 2PC phase-method name.
+    pub method_name: String,
+    /// Coordinator count.
+    pub clients: usize,
+    /// QP count (every transaction spans all of them).
+    pub shards: usize,
+    /// Total transactions across all clients.
+    pub txns: u64,
+    /// 2PC commit throughput (million txns per simulated second).
+    pub txn_mtps: f64,
+    /// Independent-update throughput for the same stream (no protocol,
+    /// no atomicity).
+    pub independent_mtps: f64,
+    /// Mean 2PC commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 2PC commit latency (ns).
+    pub p99_commit_ns: u64,
+}
+
+impl TxnScalingPoint {
+    /// The price of atomicity: independent / 2PC throughput (>= ~1).
+    pub fn overhead_factor(&self) -> f64 {
+        self.independent_mtps / self.txn_mtps
+    }
+
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("method", self.method_name.clone().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("txns", self.txns.into())
+            .set("txn_mtps", self.txn_mtps.into())
+            .set("independent_mtps", self.independent_mtps.into())
+            .set("overhead_factor", self.overhead_factor().into())
+            .set("mean_commit_ns", self.mean_commit_ns.into())
+            .set("p99_commit_ns", self.p99_commit_ns.into());
+        j
+    }
+}
+
+/// Measure one (clients, shards) transactional point: the atomic (2PC)
+/// run and its independent-update control, back to back on identical
+/// seeds.
+pub fn run_txn_point(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> TxnScalingPoint {
+    let mk = |atomic| TxnRunOpts {
+        clients,
+        shards,
+        txns_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+        atomic,
+    };
+    let (run, atomic) =
+        run_txn_multi_shard(cfg, opts.timing.clone(), primary, &mk(true));
+    let (_, indep) =
+        run_txn_multi_shard(cfg, opts.timing.clone(), primary, &mk(false));
+    TxnScalingPoint {
+        config: cfg,
+        method_name: run.txn_method().name().to_string(),
+        clients,
+        shards,
+        txns: atomic.txns,
+        txn_mtps: atomic.throughput_mtps(),
+        independent_mtps: indep.throughput_mtps(),
+        mean_commit_ns: atomic.mean_latency_ns,
+        p99_commit_ns: atomic.p99_latency_ns,
+    }
+}
+
+/// The transaction grid: every (clients, shards) combination, measured
+/// in parallel threads.
+pub fn run_txn_grid(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients_list: &[usize],
+    shards_list: &[usize],
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<TxnScalingPoint> {
+    let points: Vec<(usize, usize)> = clients_list
+        .iter()
+        .flat_map(|&c| shards_list.iter().map(move |&s| (c, s)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = points
+            .iter()
+            .map(|&(clients, shards)| {
+                scope.spawn(move || {
+                    run_txn_point(
+                        cfg,
+                        primary,
+                        clients,
+                        shards,
+                        txns_per_client,
+                        opts,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("txn point panicked"))
+            .collect()
+    })
+}
+
+/// Render a transaction grid (2PC vs. independent throughput).
+pub fn render_txn_grid(title: &str, points: &[TxnScalingPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<8} {:<7} {:>12} {:>14} {:>9} {:>12}\n",
+        "clients", "shards", "2PC", "independent", "overhead", "commit lat"
+    ));
+    out.push_str(&"-".repeat(70));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<8} {:<7} {:>7.3} Mtps {:>9.3} Mtps {:>8.2}x {:>9.2} us\n",
+            p.clients,
+            p.shards,
+            p.txn_mtps,
+            p.independent_mtps,
+            p.overhead_factor(),
+            p.mean_commit_ns / 1e3,
+        ));
+    }
+    out
+}
+
+/// Serialize a transaction grid for the JSON artifact.
+pub fn txn_grid_to_json(points: &[TxnScalingPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
@@ -279,6 +458,34 @@ mod tests {
         );
         assert_eq!(a.span_ns, b.span_ns);
         assert_eq!(a.throughput_mops, b.throughput_mops);
+    }
+
+    #[test]
+    fn txn_grid_covers_combinations() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = ScalingOpts { capacity: 256, ..Default::default() };
+        let pts = run_txn_grid(
+            cfg,
+            Primary::Write,
+            &[1, 2],
+            &[2, 4],
+            60,
+            &opts,
+        );
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.txn_mtps > 0.0);
+            assert!(
+                p.independent_mtps >= p.txn_mtps * 0.999,
+                "atomicity can't be free: {} vs {}",
+                p.independent_mtps,
+                p.txn_mtps
+            );
+            assert!(p.overhead_factor() < 10.0, "{}", p.overhead_factor());
+        }
+        let j = txn_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 4);
+        assert!(render_txn_grid("t", &pts).contains("overhead"));
     }
 
     #[test]

@@ -11,18 +11,28 @@ use std::thread;
 /// One (configuration, mode, primary) measurement.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
+    /// Responder configuration measured.
     pub config: ServerConfig,
+    /// REMOTELOG variant.
     pub mode: AppendMode,
+    /// Primary operation (Figure-2 bar group).
     pub primary: Primary,
+    /// Human-readable method name.
     pub method_name: String,
+    /// Appends performed.
     pub appends: u64,
+    /// Mean append latency (ns).
     pub mean_ns: f64,
+    /// Median append latency (ns).
     pub p50_ns: u64,
+    /// p99 append latency (ns).
     pub p99_ns: u64,
+    /// Latency standard deviation (ns).
     pub stddev_ns: f64,
 }
 
 impl ScenarioResult {
+    /// Figure-2 bar label, e.g. `DDIO DRAM-RQWRB_WRITE`.
     pub fn bar_label(&self) -> String {
         format!(
             "{}{}_{}",
@@ -32,6 +42,7 @@ impl ScenarioResult {
         )
     }
 
+    /// Serialize for the JSON artifact.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("config", self.config.label().into())
@@ -50,8 +61,11 @@ impl ScenarioResult {
 /// Sweep parameters.
 #[derive(Debug, Clone)]
 pub struct SweepOpts {
+    /// Appends per scenario.
     pub appends: u64,
+    /// Jitter seed.
     pub seed: u64,
+    /// Timing model the sweep runs under.
     pub timing: TimingModel,
     /// Ring capacity for the (non-recording) latency runs.
     pub capacity: u64,
@@ -168,6 +182,7 @@ pub fn render_panel(
     out
 }
 
+/// Serialize a sweep for the JSON artifact.
 pub fn results_to_json(results: &[ScenarioResult]) -> Json {
     Json::Arr(results.iter().map(|r| r.to_json()).collect())
 }

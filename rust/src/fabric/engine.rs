@@ -45,6 +45,7 @@ use std::collections::VecDeque;
 /// Per-op record kept by the engine.
 #[derive(Debug, Clone)]
 pub struct OpState {
+    /// The operation's kind.
     pub kind: OpKind,
     /// Requester clock when the op was handed to the RNIC.
     pub t_posted: Nanos,
@@ -67,15 +68,21 @@ pub struct OpState {
 /// copy `len` payload bytes starting at `payload_off` to `target`.
 #[derive(Debug, Clone, Copy)]
 pub struct CopySpec {
+    /// Offset of the update inside the message payload.
     pub payload_off: usize,
+    /// Bytes to copy.
     pub len: usize,
+    /// Destination address in responder memory.
     pub target: u64,
 }
 
 /// The fabric engine for one QPAIR.
 pub struct Fabric {
+    /// Latency constants of the simulated stack.
     pub timing: TimingModel,
+    /// The responder's configuration (Table 1 row + axes).
     pub cfg: ServerConfig,
+    /// The responder's memory (layout + write timelines).
     pub mem: MemoryModel,
     /// Strict (true) vs relaxed (false) placement ordering for posted ops.
     pub placement_fifo: bool,
@@ -113,6 +120,9 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// Connect a requester to a fresh responder. `record_writes` keeps
+    /// per-write persistence timelines (crash testing) — off for
+    /// pure-latency sweeps.
     pub fn new(
         cfg: ServerConfig,
         timing: TimingModel,
@@ -155,10 +165,12 @@ impl Fabric {
         self.now += dt;
     }
 
+    /// Milestone record of a posted op.
     pub fn op(&self, id: OpId) -> &OpState {
         &self.ops[id.0 as usize]
     }
 
+    /// Operations posted so far on this QP.
     pub fn ops_posted(&self) -> usize {
         self.ops.len()
     }

@@ -45,6 +45,7 @@ impl OpKind {
         matches!(self, OpKind::Send | OpKind::WriteImm)
     }
 
+    /// Wire-protocol name (paper notation).
     pub fn name(&self) -> &'static str {
         match self {
             OpKind::Write => "WRITE",
@@ -84,6 +85,7 @@ pub enum OnRecv {
 }
 
 impl OnRecv {
+    /// Does the handler post an ack SEND back to the requester?
     pub fn sends_ack(&self) -> bool {
         matches!(
             self,
@@ -91,6 +93,7 @@ impl OnRecv {
         )
     }
 
+    /// Does the handler copy the payload to its target address?
     pub fn copies(&self) -> bool {
         matches!(
             self,
@@ -101,6 +104,7 @@ impl OnRecv {
         )
     }
 
+    /// Does the handler flush its copies into the DMP domain?
     pub fn flushes_copies(&self) -> bool {
         matches!(self, OnRecv::CopyFlushAck | OnRecv::CopyFlushLazy)
     }
@@ -109,6 +113,7 @@ impl OnRecv {
 /// A work request as posted by the requester.
 #[derive(Debug, Clone)]
 pub struct WorkRequest {
+    /// The RDMA operation to perform.
     pub kind: OpKind,
     /// Responder target address (WRITE/WRITEIMM/WRITE_atomic: the
     /// destination; SEND: ignored — the RQWRB address is assigned at the
@@ -132,6 +137,7 @@ pub struct WorkRequest {
 }
 
 impl WorkRequest {
+    /// One-sided WRITE of `payload` to `target`.
     pub fn write(target: u64, payload: Vec<u8>) -> Self {
         WorkRequest {
             kind: OpKind::Write,
@@ -144,6 +150,7 @@ impl WorkRequest {
         }
     }
 
+    /// WRITE-with-immediate; the receive completion triggers `on_recv`.
     pub fn write_imm(target: u64, payload: Vec<u8>, on_recv: OnRecv) -> Self {
         let len = payload.len() as u64;
         WorkRequest {
@@ -157,6 +164,8 @@ impl WorkRequest {
         }
     }
 
+    /// Two-sided SEND; the payload lands in the next RQWRB slot and the
+    /// responder CPU runs `on_recv` against `recv_target`.
     pub fn send(payload: Vec<u8>, on_recv: OnRecv, recv_target: u64) -> Self {
         let len = payload.len() as u64;
         WorkRequest {
@@ -170,6 +179,7 @@ impl WorkRequest {
         }
     }
 
+    /// IBTA FLUSH (the planner emits READ emulation when unavailable).
     pub fn flush() -> Self {
         WorkRequest {
             kind: OpKind::Flush,
@@ -182,6 +192,7 @@ impl WorkRequest {
         }
     }
 
+    /// One-sided READ of `target` (also the FLUSH emulation vehicle).
     pub fn read(target: u64) -> Self {
         WorkRequest { target, kind: OpKind::Read, ..WorkRequest::flush() }
     }
@@ -205,6 +216,8 @@ impl WorkRequest {
         }
     }
 
+    /// Hold this op at the requester until all prior non-posted ops
+    /// completed (paper §2 fence semantics).
     pub fn with_fence(mut self) -> Self {
         self.fence = true;
         self

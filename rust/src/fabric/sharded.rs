@@ -52,14 +52,17 @@ impl ShardedFabric {
         ShardedFabric { qps }
     }
 
+    /// Number of QPs.
     pub fn shards(&self) -> usize {
         self.qps.len()
     }
 
+    /// Borrow QP `i`.
     pub fn qp(&self, i: usize) -> &Fabric {
         &self.qps[i]
     }
 
+    /// Mutably borrow QP `i`.
     pub fn qp_mut(&mut self, i: usize) -> &mut Fabric {
         &mut self.qps[i]
     }

@@ -7,11 +7,14 @@
 //! rpmem taxonomy [--table 1|2|3]         regenerate the paper's tables
 //! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
 //! rpmem scale [...]                      clients × shards throughput scaling
+//! rpmem txn [...]                        cross-shard 2PC vs independent grid
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
 //! rpmem help
 //! ```
+//!
+//! Unknown subcommands print the usage text and exit non-zero.
 
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
@@ -40,6 +43,7 @@ fn main() -> ExitCode {
         Some("taxonomy") => cmd_taxonomy(&flags),
         Some("sweep") => cmd_sweep(&flags),
         Some("scale") => cmd_scale(&flags),
+        Some("txn") => cmd_txn(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -47,7 +51,10 @@ fn main() -> ExitCode {
             print!("{HELP}");
             Ok(())
         }
-        Some(other) => Err(format!("unknown command `{other}` — try `rpmem help`")),
+        Some(other) => {
+            eprint!("{HELP}");
+            Err(format!("unknown command `{other}`"))
+        }
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -81,6 +88,15 @@ COMMANDS
                   --window W             (trains in flight, default: 16)
                   --batch B              (appends per doorbell train, 4)
                   --appends N            (per client, default: 2000)
+                  --json FILE            (dump results as JSON)
+  txn           Cross-shard transaction grid: 2PC atomic commit vs the
+                same updates issued independently (the price of
+                atomicity), across clients × shards.
+                  --clients LIST         (default: 1,2,4)
+                  --shards LIST          (default: 1,2,4,8)
+                  --txns N               (per client, default: 500)
+                  --domain dmp|mhp|wsp   (default: mhp)
+                  --primary write|writeimm|send (default: write)
                   --json FILE            (dump results as JSON)
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
                   --appends N            (default: 20000)
@@ -217,17 +233,7 @@ fn cmd_scale(flags: &HashMap<String, String>) -> Result<(), String> {
         render_scaling, run_saturation_axis, run_scaling_axis,
         scaling_to_json, ScalingOpts,
     };
-    let clients: Vec<usize> = match flags.get("clients") {
-        None => vec![1, 2, 4, 8, 16],
-        Some(list) => list
-            .split(',')
-            .map(|s| s.trim().parse::<usize>())
-            .collect::<Result<_, _>>()
-            .map_err(|e| format!("bad --clients: {e}"))?,
-    };
-    if clients.is_empty() || clients.contains(&0) {
-        return Err("--clients needs positive entries".into());
-    }
+    let clients = parse_usize_list(flags, "clients", &[1, 2, 4, 8, 16])?;
     let shards = flag_u64(flags, "shards", 0) as usize;
     let opts = ScalingOpts {
         appends_per_client: flag_u64(flags, "appends", 2000),
@@ -274,6 +280,61 @@ fn cmd_scale(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(path) = flags.get("json") {
         let j = scaling_to_json(&all).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn parse_usize_list(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: &[usize],
+) -> Result<Vec<usize>, String> {
+    let list = match flags.get(key) {
+        None => default.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("bad --{key}: {e}"))?,
+    };
+    if list.is_empty() || list.contains(&0) {
+        return Err(format!("--{key} needs positive entries"));
+    }
+    Ok(list)
+}
+
+fn cmd_txn(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        render_txn_grid, run_txn_grid, txn_grid_to_json, ScalingOpts,
+    };
+    let clients = parse_usize_list(flags, "clients", &[1, 2, 4])?;
+    let shards = parse_usize_list(flags, "shards", &[1, 2, 4, 8])?;
+    let txns = flag_u64(flags, "txns", 500);
+    let domain = match flags.get("domain").map(String::as_str) {
+        None | Some("mhp") => PDomain::Mhp,
+        Some("dmp") => PDomain::Dmp,
+        Some("wsp") => PDomain::Wsp,
+        Some(other) => return Err(format!("bad --domain {other}")),
+    };
+    let primary = match flags.get("primary").map(String::as_str) {
+        None | Some("write") => Primary::Write,
+        Some("writeimm") => Primary::WriteImm,
+        Some("send") => Primary::Send,
+        Some(other) => return Err(format!("bad --primary {other}")),
+    };
+    let cfg = ServerConfig::new(domain, false, RqwrbLoc::Dram);
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let points = run_txn_grid(cfg, primary, &clients, &shards, txns, &opts);
+    let title = format!(
+        "cross-shard transactions on {} [{}] — 2PC vs independent",
+        cfg.label(),
+        points[0].method_name
+    );
+    println!("{}", render_txn_grid(&title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = txn_grid_to_json(&points).to_string_pretty();
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

@@ -25,8 +25,10 @@ pub enum PDomain {
 }
 
 impl PDomain {
+    /// All three domains, in Table-1 row-group order.
     pub const ALL: [PDomain; 3] = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp];
 
+    /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
         match self {
             PDomain::Dmp => "DMP",
@@ -41,13 +43,17 @@ impl PDomain {
 /// operation in some configurations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum RqwrbLoc {
+    /// Receive buffers in DRAM: SEND payloads do not survive a crash.
     Dram,
+    /// Receive buffers in PM: a received SEND is itself durable.
     Pm,
 }
 
 impl RqwrbLoc {
+    /// Both placements, in Table-1 column order.
     pub const ALL: [RqwrbLoc; 2] = [RqwrbLoc::Dram, RqwrbLoc::Pm];
 
+    /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
         match self {
             RqwrbLoc::Dram => "DRAM-RQWRB",
@@ -71,6 +77,7 @@ pub enum Transport {
 }
 
 impl Transport {
+    /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
         match self {
             Transport::IbRoce => "IB/RoCE",
@@ -93,6 +100,7 @@ pub enum Extensions {
 }
 
 impl Extensions {
+    /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
         match self {
             Extensions::Ibta => "IBTA",
@@ -105,14 +113,21 @@ impl Extensions {
 /// extension axes used in the evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ServerConfig {
+    /// Persistence domain (§3.1.1).
     pub pdomain: PDomain,
+    /// Is Data Direct I/O (DMA into L3) enabled? (§3.1.2)
     pub ddio: bool,
+    /// Receive-buffer placement (§3.1.3).
     pub rqwrb: RqwrbLoc,
+    /// Transport flavor (completion-generation semantics, §3.2).
     pub transport: Transport,
+    /// IBTA FLUSH/WRITE_atomic availability (§3.4).
     pub extensions: Extensions,
 }
 
 impl ServerConfig {
+    /// A Table-1 configuration with the evaluation defaults (IB/RoCE,
+    /// IBTA extensions available).
     pub fn new(pdomain: PDomain, ddio: bool, rqwrb: RqwrbLoc) -> Self {
         ServerConfig {
             pdomain,
@@ -123,11 +138,13 @@ impl ServerConfig {
         }
     }
 
+    /// Same configuration on a different transport.
     pub fn with_transport(mut self, t: Transport) -> Self {
         self.transport = t;
         self
     }
 
+    /// Same configuration with/without the IBTA extensions.
     pub fn with_extensions(mut self, e: Extensions) -> Self {
         self.extensions = e;
         self

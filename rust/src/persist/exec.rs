@@ -17,11 +17,14 @@ use crate::persist::wire::{self, WireUpdate};
 /// One remote update: bytes destined for a responder PM address.
 #[derive(Debug, Clone)]
 pub struct Update {
+    /// Responder PM destination address.
     pub addr: u64,
+    /// Payload bytes.
     pub data: Vec<u8>,
 }
 
 impl Update {
+    /// Bytes destined for responder PM address `addr`.
     pub fn new(addr: u64, data: Vec<u8>) -> Self {
         Update { addr, data }
     }
@@ -38,6 +41,7 @@ pub struct PersistOutcome {
 }
 
 impl PersistOutcome {
+    /// Requester-observed persist latency (ack − start).
     pub fn latency(&self) -> Nanos {
         self.acked - self.start
     }
@@ -58,7 +62,9 @@ fn flush_wr(fab: &Fabric, probe_addr: u64) -> WorkRequest {
 /// observe persistence points later.
 #[derive(Debug, Clone, Copy)]
 pub enum WaitPoint {
+    /// Wait for the op's completion notification.
     Comp(crate::fabric::ops::OpId),
+    /// Wait for the responder handler's ack message.
     Ack(crate::fabric::ops::OpId),
 }
 

@@ -12,14 +12,19 @@
 /// groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Primary {
+    /// One-sided RDMA WRITE.
     Write,
+    /// RDMA WRITE with immediate (consumes a receive WR).
     WriteImm,
+    /// Two-sided RDMA SEND.
     Send,
 }
 
 impl Primary {
+    /// All three primaries, in Table-2/3 column order.
     pub const ALL: [Primary; 3] = [Primary::Write, Primary::WriteImm, Primary::Send];
 
+    /// Paper-notation name (column header).
     pub fn name(&self) -> &'static str {
         match self {
             Primary::Write => "WRITE",
@@ -76,6 +81,7 @@ pub enum SingletonMethod {
 }
 
 impl SingletonMethod {
+    /// All ten distinct singleton methods (paper §3.2).
     pub const ALL: [SingletonMethod; 10] = [
         SingletonMethod::WriteMsgFlushAck,
         SingletonMethod::WriteImmFlushAck,
@@ -89,6 +95,7 @@ impl SingletonMethod {
         SingletonMethod::SendComp,
     ];
 
+    /// Paper-notation method name (Table 2 cell).
     pub fn name(&self) -> &'static str {
         match self {
             SingletonMethod::WriteMsgFlushAck => "Write+Msg/Flush/Ack",
@@ -148,6 +155,7 @@ impl SingletonMethod {
         }
     }
 
+    /// The event at which the requester concludes persistence.
     pub fn persistence_point(&self) -> PersistencePoint {
         use SingletonMethod::*;
         match self {
@@ -220,6 +228,7 @@ pub enum CompoundMethod {
 }
 
 impl CompoundMethod {
+    /// The thirteen distinct compound recipes (Table 3).
     pub const ALL: [CompoundMethod; 13] = [
         CompoundMethod::WriteMsgFlushAckTwice,
         CompoundMethod::WriteImmFlushAckTwice,
@@ -236,6 +245,7 @@ impl CompoundMethod {
         CompoundMethod::SendComp,
     ];
 
+    /// Paper-notation method name (Table 3 cell).
     pub fn name(&self) -> &'static str {
         use CompoundMethod::*;
         match self {
@@ -309,6 +319,8 @@ impl CompoundMethod {
         }
     }
 
+    /// The event at which the requester concludes persistence of BOTH
+    /// updates.
     pub fn persistence_point(&self) -> PersistencePoint {
         use CompoundMethod::*;
         match self {
@@ -323,10 +335,13 @@ impl CompoundMethod {
         }
     }
 
+    /// One-sided methods need no responder CPU on the persistence path.
     pub fn is_one_sided(&self) -> bool {
         self.persistence_point() != PersistencePoint::ResponderAck
     }
 
+    /// Methods that persist the *message* (PM RQWRB) rather than the
+    /// targets — recovery must replay surviving messages (§3.2).
     pub fn requires_replay(&self) -> bool {
         matches!(self, CompoundMethod::SendFlush | CompoundMethod::SendComp)
     }

@@ -1,16 +1,23 @@
 //! The paper's contribution: the remote-persistence taxonomy as an
 //! executable library — server configurations (§3.1), persistence methods
 //! for singleton (§3.2, Table 2) and compound (§3.3, Table 3) updates,
-//! and the planner that selects the correct method for a configuration.
+//! the planner that selects the correct method for a configuration, and
+//! the cross-shard two-phase-commit layer ([`txn`]) built on top of the
+//! per-connection recipes.
 
 pub mod config;
 pub mod exec;
 pub mod method;
 pub mod planner;
 pub mod taxonomy;
+pub mod txn;
 pub mod wire;
 
 pub use config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
 pub use exec::{exec_compound, exec_singleton, PersistOutcome, Update};
 pub use method::{CompoundMethod, PersistencePoint, Primary, SingletonMethod};
 pub use planner::{plan_compound, plan_singleton};
+pub use txn::{
+    plan_txn_method, recover_decisions, recover_intents, roll_forward,
+    CommitFlip, IntentRecord, SlotRing,
+};

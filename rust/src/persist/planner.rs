@@ -22,6 +22,35 @@ use crate::persist::config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transp
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 
 /// Plan the correct method for a singleton update (Table 2).
+///
+/// # Example
+///
+/// The quickstart flow: describe the responder, ask for the correct
+/// method, persist an update with it, and prove the data survives a
+/// power failure at the ack instant:
+///
+/// ```
+/// use rpmem::fabric::engine::Fabric;
+/// use rpmem::fabric::timing::TimingModel;
+/// use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+/// use rpmem::persist::exec::{exec_singleton, Update};
+/// use rpmem::persist::method::Primary;
+/// use rpmem::persist::planner::plan_singleton;
+/// use rpmem::server::memory::Layout;
+///
+/// // ADR-style persistence (DMP) with DDIO on — the dominant config.
+/// let cfg = ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram);
+/// let method = plan_singleton(&cfg, Primary::Write);
+///
+/// let layout = Layout::new(1 << 20, 1 << 20, 64, 4096, cfg.rqwrb);
+/// let mut fab = Fabric::new(cfg, TimingModel::default(), layout, 1, true);
+/// let update = Update::new(0x1000, vec![0x5A; 64]);
+/// let outcome = exec_singleton(&mut fab, method, &update, 0);
+///
+/// // Power failure immediately after the ack: data is intact.
+/// let image = fab.mem.crash_image(outcome.acked, cfg.pdomain);
+/// assert_eq!(image.read(0x1000, 64), &update.data[..]);
+/// ```
 pub fn plan_singleton(cfg: &ServerConfig, primary: Primary) -> SingletonMethod {
     use Primary::*;
     use SingletonMethod::*;

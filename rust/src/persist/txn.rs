@@ -1,0 +1,541 @@
+//! Cross-shard transactions: two-phase commit over compound updates.
+//!
+//! The paper's compound-update methods (§3.3, Table 3) make a multi-write
+//! unit atomically persistent on *one* connection — per-QP ordering plus
+//! a single persistence point. Across the N independent QPs of a
+//! [`crate::fabric::sharded::ShardedFabric`] no such ordering exists, so
+//! a multi-shard update needs an explicit commit *protocol* layered on
+//! the per-connection persistence recipes (cf. Tavakkol et al.,
+//! arXiv:1810.09360, on RDMA-mirrored PM transactions, and Aguilera et
+//! al., arXiv:1905.12143, on RDMA-era agreement protocols). This module
+//! is that layer: presumed-abort two-phase commit whose PREPARE, DECIDE,
+//! and COMMIT steps each end at a planner-selected persistence point.
+//!
+//! # Protocol (persistence points marked ▸)
+//!
+//! ```text
+//! coordinator QP(0)            shard QP(1)  ..  shard QP(N)
+//! ───────────────────────────────────────────────────────────
+//! PREPARE:                      payload +        payload +
+//!                               intent rec  ▸    intent rec  ▸
+//!          «wait all prepare persistence points»
+//! DECIDE:  decision rec ▸                                        ← txn ACK
+//!          «decision durable = transaction committed»
+//! COMMIT:                       release commit marker(s) ▸ (lazy)
+//! ```
+//!
+//! * **PREPARE** persists, on each participating shard via the planner's
+//!   method for that configuration, the shard's payload plus an *intent
+//!   record* naming the commit markers the transaction will release.
+//! * **DECIDE** persists a *decision record* on the coordinator shard.
+//!   Its persistence point is the transaction's atomic durability point
+//!   and the moment the application is acked.
+//! * **COMMIT** releases each shard's commit markers (e.g. KV version
+//!   words, log tail pointers). Markers are issued only after the
+//!   decision's persistence point was observed, so a durable marker
+//!   implies a durable decision at every crash instant.
+//!
+//! # Recovery (presumed abort)
+//!
+//! [`recover_decisions`] scans the coordinator's decision ring for the
+//! longest valid committed prefix; [`recover_intents`] collects the
+//! committed transactions' commit markers from a shard's intent ring;
+//! [`roll_forward`] re-releases them onto the crash image. Transactions
+//! with durable intents but no durable decision are *in doubt* and
+//! resolve to ABORT: their markers are never released, so their payload
+//! stays invisible — every shard recovers either all of a transaction's
+//! writes or none.
+//!
+//! Commit markers must be **monotone u64 release-writes** (versions,
+//! tail pointers): roll-forward applies `max(current, marker)`, which
+//! makes replaying an old transaction's marker after newer committed
+//! writes a no-op.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::Nanos;
+use crate::integrity::fletcher_words;
+use crate::persist::config::{RqwrbLoc, ServerConfig};
+use crate::persist::exec::{post_singleton_batch, Update, WaitPoint};
+use crate::persist::method::{Primary, SingletonMethod};
+use crate::persist::planner::plan_singleton;
+use crate::server::memory::Image;
+
+/// Intent record size: 64 little-endian u32 words.
+pub const INTENT_BYTES: usize = 256;
+/// Intent record size in u32 words.
+pub const INTENT_WORDS: usize = 64;
+/// Decision record size: 16 little-endian u32 words.
+pub const DECISION_BYTES: usize = 64;
+/// Decision record size in u32 words.
+pub const DECISION_WORDS: usize = 16;
+/// Maximum commit markers one intent record can carry:
+/// (64 words − 4 header − 2 checksum) / 4 words per marker.
+pub const MAX_TXN_FLIPS: usize = 14;
+/// Decision-record status word for COMMIT (the only status ever
+/// persisted — presumed abort needs no abort records).
+pub const DECISION_COMMIT: u32 = 1;
+
+/// One commit marker: an 8-byte monotone release-write (a KV version
+/// word, a log tail pointer) applied when the transaction commits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommitFlip {
+    /// PM address of the marker word.
+    pub addr: u64,
+    /// Value to release. Must be monotone per address across
+    /// transactions (recovery roll-forward applies `max`).
+    pub value: u64,
+}
+
+/// A shard's durable PREPARE evidence: the commit markers transaction
+/// `txn_id` will release on shard `shard`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntentRecord {
+    /// Transaction id (also the intent's ring slot).
+    pub txn_id: u64,
+    /// Participating shard index (guards cross-shard image mixups).
+    pub shard: u32,
+    /// Commit markers to release at COMMIT / recovery roll-forward.
+    pub flips: Vec<CommitFlip>,
+}
+
+/// Encode an intent record (Fletcher pair over words 0..62).
+pub fn encode_intent(intent: &IntentRecord) -> [u8; INTENT_BYTES] {
+    assert!(
+        intent.flips.len() <= MAX_TXN_FLIPS,
+        "a shard intent carries at most {MAX_TXN_FLIPS} commit markers, \
+         got {}",
+        intent.flips.len()
+    );
+    let mut words = [0u32; INTENT_WORDS];
+    words[0] = intent.txn_id as u32;
+    words[1] = (intent.txn_id >> 32) as u32;
+    words[2] = intent.shard;
+    words[3] = intent.flips.len() as u32;
+    for (i, f) in intent.flips.iter().enumerate() {
+        words[4 + i * 4] = f.addr as u32;
+        words[5 + i * 4] = (f.addr >> 32) as u32;
+        words[6 + i * 4] = f.value as u32;
+        words[7 + i * 4] = (f.value >> 32) as u32;
+    }
+    let (s1, s2) = fletcher_words(&words[..INTENT_WORDS - 2]);
+    words[INTENT_WORDS - 2] = s1;
+    words[INTENT_WORDS - 1] = s2;
+    let mut out = [0u8; INTENT_BYTES];
+    for (i, w) in words.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode + integrity-check an intent record image.
+pub fn decode_intent(bytes: &[u8]) -> Option<IntentRecord> {
+    if bytes.len() != INTENT_BYTES {
+        return None;
+    }
+    let mut words = [0u32; INTENT_WORDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..INTENT_WORDS - 2]);
+    if words[INTENT_WORDS - 2] != s1 || words[INTENT_WORDS - 1] != s2 {
+        return None;
+    }
+    let n = words[3] as usize;
+    if n > MAX_TXN_FLIPS {
+        return None;
+    }
+    let mut flips = Vec::with_capacity(n);
+    for i in 0..n {
+        flips.push(CommitFlip {
+            addr: words[4 + i * 4] as u64 | ((words[5 + i * 4] as u64) << 32),
+            value: words[6 + i * 4] as u64 | ((words[7 + i * 4] as u64) << 32),
+        });
+    }
+    Some(IntentRecord {
+        txn_id: words[0] as u64 | ((words[1] as u64) << 32),
+        shard: words[2],
+        flips,
+    })
+}
+
+/// Encode a COMMIT decision record for `txn_id` (Fletcher over words
+/// 0..14).
+pub fn encode_decision(txn_id: u64) -> [u8; DECISION_BYTES] {
+    let mut words = [0u32; DECISION_WORDS];
+    words[0] = txn_id as u32;
+    words[1] = (txn_id >> 32) as u32;
+    words[2] = DECISION_COMMIT;
+    let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
+    words[DECISION_WORDS - 2] = s1;
+    words[DECISION_WORDS - 1] = s2;
+    let mut out = [0u8; DECISION_BYTES];
+    for (i, w) in words.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a decision record; returns the committed txn id, or `None`
+/// when the slot is empty/torn/not-a-commit.
+pub fn decode_decision(bytes: &[u8]) -> Option<u64> {
+    if bytes.len() != DECISION_BYTES {
+        return None;
+    }
+    let mut words = [0u32; DECISION_WORDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
+    if words[DECISION_WORDS - 2] != s1
+        || words[DECISION_WORDS - 1] != s2
+        || words[2] != DECISION_COMMIT
+    {
+        return None;
+    }
+    Some(words[0] as u64 | ((words[1] as u64) << 32))
+}
+
+/// A ring of fixed-stride PM slots indexed by transaction id (intent
+/// rings on every shard, the decision ring on the coordinator shard).
+#[derive(Debug, Clone, Copy)]
+pub struct SlotRing {
+    /// Address of slot 0.
+    pub base: u64,
+    /// Number of slots before the ring wraps. Recording (crash-oracle)
+    /// runs must not wrap — assert `txn_id < slots` at the caller.
+    pub slots: u64,
+    /// Slot stride in bytes ([`INTENT_BYTES`] / [`DECISION_BYTES`]).
+    pub stride: u64,
+}
+
+impl SlotRing {
+    /// Slot address for `txn_id` (modular — see `slots`).
+    pub fn addr(&self, txn_id: u64) -> u64 {
+        self.base + (txn_id % self.slots) * self.stride
+    }
+
+    /// First address past the ring.
+    pub fn end(&self) -> u64 {
+        self.base + self.slots * self.stride
+    }
+}
+
+/// Pick the singleton method the 2PC steps use on `cfg`.
+///
+/// Intent and decision records must be *applied in place* so recovery
+/// can read them straight off the crash image; the replay-class methods
+/// (one-sided SEND with a PM-resident RQWRB, `requires_replay()`) leave
+/// the message as the durable object instead. For those configurations
+/// the protocol substitutes the responder-copy variant the planner
+/// selects when the RQWRB is DRAM-resident — correct on every
+/// configuration (Table 2's universal message-passing rows), merely
+/// slower than the one-sided shortcut it replaces.
+pub fn plan_txn_method(
+    cfg: &ServerConfig,
+    primary: Primary,
+) -> SingletonMethod {
+    let m = plan_singleton(cfg, primary);
+    if m.requires_replay() {
+        let mut dram = *cfg;
+        dram.rqwrb = RqwrbLoc::Dram;
+        plan_singleton(&dram, primary)
+    } else {
+        m
+    }
+}
+
+/// PREPARE one shard: persist its payload updates plus the intent record
+/// as ONE doorbell train with a single persistence point. Returns the
+/// wait-point; the coordinator must observe every shard's point before
+/// deciding.
+pub fn post_prepare(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    payload: &[Update],
+    intent: &IntentRecord,
+    intent_addr: u64,
+    msg_seq: u32,
+) -> WaitPoint {
+    let mut updates = Vec::with_capacity(payload.len() + 1);
+    updates.extend_from_slice(payload);
+    updates.push(Update::new(intent_addr, encode_intent(intent).to_vec()));
+    post_singleton_batch(fab, method, &updates, msg_seq)
+}
+
+/// DECIDE: persist the COMMIT decision record on the coordinator shard.
+/// The returned wait-point's resolution is the transaction's atomic
+/// durability point (and the application's ack).
+pub fn post_decision(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    txn_id: u64,
+    decision_addr: u64,
+    msg_seq: u32,
+) -> WaitPoint {
+    let u = Update::new(decision_addr, encode_decision(txn_id).to_vec());
+    post_singleton_batch(fab, method, std::slice::from_ref(&u), msg_seq)
+}
+
+/// COMMIT one shard: release its commit markers as one doorbell train.
+/// Must be posted only after the decision's persistence point was
+/// observed (use [`sync_clock`]) — that ordering is what makes a durable
+/// marker imply a durable decision.
+pub fn post_commit(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    flips: &[CommitFlip],
+    msg_seq: u32,
+) -> WaitPoint {
+    assert!(!flips.is_empty(), "commit with no markers");
+    let updates: Vec<Update> = flips
+        .iter()
+        .map(|f| Update::new(f.addr, f.value.to_le_bytes().to_vec()))
+        .collect();
+    post_singleton_batch(fab, method, &updates, msg_seq)
+}
+
+/// Advance a QP's requester clock to `t` if it lags — the coordinator
+/// "message" that carries a phase's outcome to the next phase's QP
+/// (observing all PREPARE acks before DECIDE, the DECIDE ack before
+/// COMMIT).
+pub fn sync_clock(fab: &mut Fabric, t: Nanos) {
+    let now = fab.now();
+    if now < t {
+        fab.advance(t - now);
+    }
+}
+
+/// Scan the coordinator's decision ring on a crash image: the number of
+/// committed transactions, as the longest prefix of slots holding valid
+/// COMMIT records with matching ids. Decisions are persisted in txn-id
+/// order on one QP, so durability is prefix-closed and the first
+/// empty/torn slot ends the committed set (presumed abort for
+/// everything after).
+pub fn recover_decisions(image: &Image, ring: &SlotRing) -> u64 {
+    for i in 0..ring.slots {
+        let rec = image.read(ring.addr(i), DECISION_BYTES);
+        match decode_decision(rec) {
+            Some(id) if id == i => {}
+            _ => return i,
+        }
+    }
+    ring.slots
+}
+
+/// Collect the commit markers a shard must re-release: intents of
+/// transactions `0..committed` that name this shard. Slots without a
+/// valid intent are shards that did not participate in that transaction
+/// (or transactions that never prepared here) — skipped.
+pub fn recover_intents(
+    image: &Image,
+    ring: &SlotRing,
+    shard: u32,
+    committed: u64,
+) -> Vec<CommitFlip> {
+    let mut flips = Vec::new();
+    for i in 0..committed.min(ring.slots) {
+        let rec = image.read(ring.addr(i), INTENT_BYTES);
+        if let Some(intent) = decode_intent(rec) {
+            if intent.txn_id == i && intent.shard == shard {
+                flips.extend(intent.flips);
+            }
+        }
+    }
+    flips
+}
+
+/// Re-release committed transactions' markers onto a crash image
+/// (roll-forward half of presumed-abort recovery). Markers are monotone:
+/// a marker is applied only when it raises the stored u64, so replaying
+/// an old transaction under newer committed state is a no-op.
+pub fn roll_forward(image: &mut Image, flips: &[CommitFlip]) {
+    for f in flips {
+        if image.read_u64(f.addr) < f.value {
+            image.apply(f.addr, &f.value.to_le_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::PDomain;
+    use crate::server::memory::Layout;
+
+    fn intent(txn_id: u64, shard: u32, n: usize) -> IntentRecord {
+        IntentRecord {
+            txn_id,
+            shard,
+            flips: (0..n)
+                .map(|i| CommitFlip {
+                    addr: 0x40 + 8 * i as u64,
+                    value: txn_id + 1,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn intent_roundtrip_and_corruption() {
+        let rec = intent(0xDEAD_BEEF_17, 3, 5);
+        let bytes = encode_intent(&rec);
+        assert_eq!(decode_intent(&bytes).unwrap(), rec);
+        for i in 0..INTENT_BYTES {
+            let mut bad = bytes;
+            bad[i] ^= 0x20;
+            assert!(decode_intent(&bad).is_none(), "flip at byte {i}");
+        }
+        assert!(decode_intent(&[0u8; INTENT_BYTES]).is_none());
+    }
+
+    #[test]
+    fn decision_roundtrip_and_corruption() {
+        let bytes = encode_decision(42);
+        assert_eq!(decode_decision(&bytes), Some(42));
+        for i in 0..DECISION_BYTES {
+            let mut bad = bytes;
+            bad[i] ^= 0x01;
+            assert!(decode_decision(&bad).is_none(), "flip at byte {i}");
+        }
+        assert!(decode_decision(&[0u8; DECISION_BYTES]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "commit markers")]
+    fn oversized_intent_rejected() {
+        encode_intent(&intent(1, 0, MAX_TXN_FLIPS + 1));
+    }
+
+    #[test]
+    fn ring_addresses_tile() {
+        let r = SlotRing { base: 0x2000, slots: 8, stride: 256 };
+        assert_eq!(r.addr(0), 0x2000);
+        assert_eq!(r.addr(3), 0x2000 + 3 * 256);
+        assert_eq!(r.addr(8), 0x2000, "modular past capacity");
+        assert_eq!(r.end(), 0x2000 + 8 * 256);
+    }
+
+    #[test]
+    fn replay_methods_substituted() {
+        // One-sided SEND with PM RQWRB would leave the intent in the
+        // message ring; the protocol must fall back to responder-copy.
+        for (pd, ddio) in [
+            (PDomain::Dmp, false),
+            (PDomain::Mhp, false),
+            (PDomain::Wsp, false),
+        ] {
+            let cfg = ServerConfig::new(pd, ddio, RqwrbLoc::Pm);
+            let m = plan_txn_method(&cfg, Primary::Send);
+            assert!(
+                !m.requires_replay(),
+                "{}: txn method {} must apply in place",
+                cfg.label(),
+                m.name()
+            );
+        }
+        // Non-replay plans pass through unchanged.
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        assert_eq!(
+            plan_txn_method(&cfg, Primary::Write),
+            plan_singleton(&cfg, Primary::Write)
+        );
+    }
+
+    #[test]
+    fn decision_prefix_stops_at_gap() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 1024, cfg.rqwrb);
+        let mut fab =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 1, true);
+        let ring = SlotRing { base: 0x4000, slots: 8, stride: 64 };
+        // Persist decisions 0 and 2 but not 1.
+        for id in [0u64, 2] {
+            let wp = post_decision(
+                &mut fab,
+                SingletonMethod::WriteFlush,
+                id,
+                ring.addr(id),
+                id as u32,
+            );
+            wp.wait(&mut fab);
+        }
+        let img = fab.mem.crash_image(fab.now(), cfg.pdomain);
+        assert_eq!(recover_decisions(&img, &ring), 1, "gap ends the prefix");
+    }
+
+    #[test]
+    fn prepare_persists_payload_and_intent_atomically_by_ack() {
+        for cfg in ServerConfig::table1() {
+            for p in Primary::ALL {
+                let m = plan_txn_method(&cfg, p);
+                let layout = Layout::new(1 << 16, 1 << 16, 8, 4096, cfg.rqwrb);
+                let mut fab = Fabric::new(
+                    cfg,
+                    TimingModel::default(),
+                    layout,
+                    7,
+                    true,
+                );
+                let ring = SlotRing { base: 0x4000, slots: 4, stride: 256 };
+                let payload = [Update::new(0x1000, vec![0xAB; 64])];
+                let rec = intent(0, 0, 2);
+                let wp = post_prepare(
+                    &mut fab,
+                    m,
+                    &payload,
+                    &rec,
+                    ring.addr(0),
+                    1,
+                );
+                let acked = wp.wait(&mut fab);
+                let img = fab.mem.crash_image(acked, cfg.pdomain);
+                assert_eq!(
+                    img.read(0x1000, 64),
+                    &[0xAB; 64][..],
+                    "{}: payload durable at prepare ack",
+                    cfg.label()
+                );
+                assert_eq!(
+                    decode_intent(img.read(ring.addr(0), INTENT_BYTES)),
+                    Some(rec.clone()),
+                    "{}: intent durable at prepare ack",
+                    cfg.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roll_forward_is_monotone() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, cfg.rqwrb);
+        let mut fab =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 1, true);
+        let wp = post_commit(
+            &mut fab,
+            SingletonMethod::WriteFlush,
+            &[CommitFlip { addr: 0x40, value: 7 }],
+            0,
+        );
+        let t = wp.wait(&mut fab);
+        let mut img = fab.mem.crash_image(t, cfg.pdomain);
+        // Older marker: no-op. Newer marker: applied.
+        roll_forward(&mut img, &[CommitFlip { addr: 0x40, value: 3 }]);
+        assert_eq!(img.read_u64(0x40), 7);
+        roll_forward(&mut img, &[CommitFlip { addr: 0x40, value: 9 }]);
+        assert_eq!(img.read_u64(0x40), 9);
+    }
+
+    #[test]
+    fn sync_clock_only_advances() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, cfg.rqwrb);
+        let mut fab =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 1, false);
+        sync_clock(&mut fab, 500);
+        assert_eq!(fab.now(), 500);
+        sync_clock(&mut fab, 100);
+        assert_eq!(fab.now(), 500, "must never move backwards");
+    }
+}

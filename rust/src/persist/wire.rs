@@ -24,14 +24,19 @@
 use crate::fabric::engine::CopySpec;
 use crate::integrity::fletcher64;
 
+/// Envelope magic ("RLOG" little-endian).
 pub const MAGIC: u32 = 0x524C_4F47;
+/// Envelope header bytes (magic, seq, count, checksum pair, pad).
 pub const HEADER_BYTES: usize = 24;
+/// Bytes per update descriptor (target + length).
 pub const UPDATE_DESC_BYTES: usize = 12;
 
 /// One update carried in a message.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireUpdate {
+    /// Destination address the responder applies the update to.
     pub target: u64,
+    /// Update payload bytes.
     pub data: Vec<u8>,
 }
 
@@ -67,16 +72,22 @@ fn envelope_digest(msg_seq: u32, n: u32, body: &[u8]) -> u64 {
 /// message" and stops replaying.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodeError {
+    /// Buffer smaller than the envelope header.
     TooShort,
+    /// Header magic mismatch (slot never held a message).
     BadMagic,
+    /// Envelope digest mismatch (torn message).
     BadChecksum,
+    /// Lengths inconsistent with the buffer (corrupt descriptors).
     Malformed,
 }
 
 /// Decoded message view.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireMessage {
+    /// Message sequence number (replay-order key).
     pub msg_seq: u32,
+    /// The updates the message carries, in application order.
     pub updates: Vec<WireUpdate>,
 }
 

@@ -14,6 +14,7 @@ use crate::remotelog::log::RECORD_BYTES;
 
 /// Records per digest segment (matches kernels/digest.py::SEG_RECORDS).
 pub const SEG_RECORDS: usize = 64;
+/// Bytes per anti-entropy segment.
 pub const SEG_BYTES: usize = SEG_RECORDS * RECORD_BYTES;
 
 /// Rust-mirror segment digests over a whole number of segments.

@@ -23,11 +23,15 @@ use crate::util::stats::Histogram;
 /// Which REMOTELOG variant an experiment runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AppendMode {
+    /// Checksummed records only; recovery finds the tail by checksum
+    /// failure.
     Singleton,
+    /// Record + explicitly managed tail pointer, strictly ordered.
     Compound,
 }
 
 impl AppendMode {
+    /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
         match self {
             AppendMode::Singleton => "singleton",
@@ -42,14 +46,18 @@ impl AppendMode {
 pub enum MethodChoice {
     /// Let the planner pick the correct method for the configuration.
     Planned(Primary),
+    /// Force a specific singleton method (wrong-method demos).
     ForcedSingleton(SingletonMethod),
+    /// Force a specific compound method (wrong-method demos).
     ForcedCompound(CompoundMethod),
 }
 
 /// Oracle record of one append, kept by the client for crash checking.
 #[derive(Debug, Clone)]
 pub struct AppendRecord {
+    /// Append sequence number (log slot).
     pub seq: u64,
+    /// The exact record image appended.
     pub record: [u8; RECORD_BYTES],
     /// Requester clock when the persistence point was observed.
     pub acked_at: Nanos,
@@ -57,14 +65,18 @@ pub struct AppendRecord {
 
 /// A REMOTELOG client bound to one simulated responder.
 pub struct RemoteLog {
+    /// The QP + responder this log replicates to.
     pub fab: Fabric,
+    /// Where the log lives in responder PM.
     pub log: LogLayout,
+    /// Which REMOTELOG variant this client runs.
     pub mode: AppendMode,
     singleton_method: SingletonMethod,
     compound_method: CompoundMethod,
     next_seq: u64,
     /// Oracle history (only populated when the fabric records writes).
     pub appends: Vec<AppendRecord>,
+    /// Per-append latencies.
     pub latencies: Histogram,
     payload_rng: SplitMix64,
 }
@@ -123,14 +135,17 @@ impl RemoteLog {
         }
     }
 
+    /// The singleton method appends execute with.
     pub fn singleton_method(&self) -> SingletonMethod {
         self.singleton_method
     }
 
+    /// The compound method appends execute with.
     pub fn compound_method(&self) -> CompoundMethod {
         self.compound_method
     }
 
+    /// Appends issued so far (= next sequence number).
     pub fn appended(&self) -> u64 {
         self.next_seq
     }

@@ -25,6 +25,7 @@ use crate::util::rng::SplitMix64;
 /// Aggregated result of a crash sweep.
 #[derive(Debug, Clone, Default)]
 pub struct CrashReport {
+    /// Crash instants checked.
     pub crash_points: u64,
     /// Crashes where an acked append was missing after recovery.
     pub durability_violations: u64,
@@ -41,12 +42,14 @@ pub struct CrashReport {
 }
 
 impl CrashReport {
+    /// No violations of any contract?
     pub fn clean(&self) -> bool {
         self.durability_violations == 0
             && self.integrity_violations == 0
             && self.ordering_violations == 0
     }
 
+    /// Accumulate another report.
     pub fn merge(&mut self, other: &CrashReport) {
         self.crash_points += other.crash_points;
         self.durability_violations += other.durability_violations;

@@ -17,10 +17,14 @@
 
 use crate::integrity::fletcher_words;
 
+/// Bytes per log record.
 pub const RECORD_BYTES: usize = 64;
+/// u32 words per log record.
 pub const RECORD_WORDS: usize = 16;
-pub const PAYLOAD_WORDS: usize = 14; // includes the seq word
-pub const APP_WORDS: usize = 13; // caller-supplied payload words
+/// Checksummed words (includes the seq word).
+pub const PAYLOAD_WORDS: usize = 14;
+/// Caller-supplied payload words.
+pub const APP_WORDS: usize = 13;
 
 /// Build a record image for append `seq` with 13 application words.
 pub fn make_record(seq: u64, app: &[u32; APP_WORDS]) -> [u8; RECORD_BYTES] {
@@ -94,6 +98,7 @@ impl LogLayout {
         (0x1000 + capacity * RECORD_BYTES as u64).next_multiple_of(0x1000)
     }
 
+    /// PM address of the slot for append `seq` (modular ring).
     pub fn slot_addr(&self, seq: u64) -> u64 {
         self.base + (seq % self.capacity) * RECORD_BYTES as u64
     }

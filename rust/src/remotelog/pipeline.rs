@@ -8,6 +8,13 @@
 //! is "acked" only when *its own* persistence point is observed, and the
 //! crash-consistency harness applies unchanged (the campaign in
 //! `rust/tests/crash_consistency.rs` covers pipelined runs too).
+//!
+//! The module also hosts the **cross-shard transactional runner**
+//! ([`run_txn_multi_shard`]): every append becomes a transaction
+//! spanning all shards, committed with the [`crate::persist::txn`]
+//! two-phase protocol, and [`txn_crash_sweep`] proves all-or-nothing
+//! recovery at every virtual-time instant (`rust/tests/txn_atomicity.rs`
+//! runs the full campaign).
 
 use crate::fabric::sharded::ShardedFabric;
 use crate::fabric::timing::{Nanos, TimingModel};
@@ -18,6 +25,11 @@ use crate::persist::exec::{
 };
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::{plan_compound, plan_singleton};
+use crate::persist::txn::{
+    plan_txn_method, post_commit, post_decision, post_prepare,
+    recover_decisions, recover_intents, roll_forward, sync_clock, CommitFlip,
+    IntentRecord, SlotRing, DECISION_BYTES, INTENT_BYTES,
+};
 use crate::remotelog::client::{
     AppendMode, AppendRecord, MethodChoice, RemoteLog,
 };
@@ -25,20 +37,24 @@ use crate::remotelog::crashtest::{check_log_crash_at, CrashReport};
 use crate::remotelog::log::{
     make_record, LogLayout, APP_WORDS, RECORD_BYTES,
 };
-use crate::remotelog::recovery::Scanner;
+use crate::remotelog::recovery::{recover, Scanner};
 use crate::server::memory::Layout;
-use crate::util::rng::SplitMix64;
+use crate::util::rng::{mix, SplitMix64};
 use crate::util::stats::Histogram;
 use std::collections::VecDeque;
 
 /// Result of a pipelined run.
 #[derive(Debug, Clone)]
 pub struct PipelineResult {
+    /// Appends performed.
     pub appends: u64,
+    /// Window depth the run used.
     pub window: usize,
     /// Virtual time from first post to last persistence point.
     pub span_ns: Nanos,
+    /// Mean per-append latency (ns).
     pub mean_latency_ns: f64,
+    /// p99 per-append latency (ns).
     pub p99_latency_ns: u64,
 }
 
@@ -293,9 +309,11 @@ pub struct ShardedRunOpts {
     pub window: usize,
     /// Appends per doorbell train (single wait-point per train).
     pub batch: usize,
+    /// Appends each client performs.
     pub appends_per_client: u64,
     /// Log slots per client (each client gets its own PM region).
     pub capacity: u64,
+    /// Jitter seed.
     pub seed: u64,
     /// Record write timelines + oracles (required for crash sweeps).
     pub record: bool,
@@ -318,10 +336,13 @@ impl Default for ShardedRunOpts {
 
 /// One client of a sharded run: its QP, log region, and oracle history.
 pub struct ShardedClient {
+    /// QP this client's appends ride on.
     pub qp: usize,
+    /// The client's log region on that QP's PM.
     pub log: LogLayout,
     /// Oracle history (populated only when recording).
     pub appends: Vec<AppendRecord>,
+    /// Per-append latencies.
     pub latencies: Histogram,
 }
 
@@ -335,18 +356,23 @@ impl ShardedClient {
 /// A completed multi-client sharded run (fabric + per-client oracles),
 /// ready for crash sweeps.
 pub struct ShardedRun {
+    /// Which REMOTELOG variant ran.
     pub mode: AppendMode,
+    /// The N-QP fabric the run executed on.
     pub fabric: ShardedFabric,
+    /// Per-client regions + oracles.
     pub clients: Vec<ShardedClient>,
     singleton_method: SingletonMethod,
     compound_method: CompoundMethod,
 }
 
 impl ShardedRun {
+    /// The singleton method the run used (singleton mode).
     pub fn singleton_method(&self) -> SingletonMethod {
         self.singleton_method
     }
 
+    /// The compound method the run used (compound mode).
     pub fn compound_method(&self) -> CompoundMethod {
         self.compound_method
     }
@@ -362,16 +388,22 @@ impl ShardedRun {
 /// Aggregate result of a multi-client sharded run.
 #[derive(Debug, Clone)]
 pub struct MultiClientResult {
+    /// Client count.
     pub clients: usize,
+    /// QP count.
     pub shards: usize,
+    /// Effective window depth (1 for non-pipelinable methods).
     pub window: usize,
+    /// Effective doorbell batch (1 for non-pipelinable methods).
     pub batch: usize,
     /// Total appends across all clients.
     pub appends: u64,
     /// Makespan: parallel virtual time from start to the last
     /// persistence point on any QP.
     pub span_ns: Nanos,
+    /// Mean per-append latency (ns).
     pub mean_latency_ns: f64,
+    /// p99 per-append latency (ns).
     pub p99_latency_ns: u64,
 }
 
@@ -672,6 +704,554 @@ pub fn sharded_crash_sweep(
     report
 }
 
+// ---------------------------------------------------------------------
+// Cross-shard transactional runner: every append is a transaction that
+// spans EVERY shard (one record + tail flip per shard), committed with
+// the persist::txn two-phase protocol — the first cross-connection
+// correctness scenario, where per-QP ordering stops helping.
+// ---------------------------------------------------------------------
+
+/// Options for a multi-shard transactional run.
+#[derive(Debug, Clone)]
+pub struct TxnRunOpts {
+    /// Independent coordinators; client `c`'s decision ring lives on QP
+    /// `c % shards`.
+    pub clients: usize,
+    /// QPs; every transaction spans ALL of them.
+    pub shards: usize,
+    /// Transactions per client.
+    pub txns_per_client: u64,
+    /// Log slots (= intent/decision slots) per client per shard.
+    pub capacity: u64,
+    /// Jitter seed.
+    pub seed: u64,
+    /// Record write timelines + oracles (required for crash sweeps).
+    pub record: bool,
+    /// `true`: two-phase commit (atomic). `false`: independent per-shard
+    /// compound appends — the negative control whose crash states are
+    /// NOT all-or-nothing.
+    pub atomic: bool,
+}
+
+impl Default for TxnRunOpts {
+    fn default() -> Self {
+        TxnRunOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 100,
+            capacity: 256,
+            seed: 7,
+            record: false,
+            atomic: true,
+        }
+    }
+}
+
+/// Oracle record of one transaction (recording runs only).
+#[derive(Debug, Clone)]
+pub struct TxnOracle {
+    /// Transaction id (log slot / ring slot on every shard).
+    pub txn_id: u64,
+    /// The record appended to each shard's log, indexed by QP.
+    pub records: Vec<[u8; RECORD_BYTES]>,
+    /// When every shard's PREPARE persistence point was observed
+    /// (atomic runs; equals `acked_at` for independent runs).
+    pub prepared_at: Nanos,
+    /// The decision record's persistence point (atomic runs) or the
+    /// last per-shard append ack (independent runs).
+    pub acked_at: Nanos,
+}
+
+/// One coordinator of a transactional run: its per-shard log regions,
+/// intent rings, decision ring, and oracle history.
+pub struct TxnClient {
+    /// QP holding this client's decision ring.
+    pub coord_qp: usize,
+    /// Per-QP log region.
+    pub logs: Vec<LogLayout>,
+    /// Per-QP intent ring.
+    pub intents: Vec<SlotRing>,
+    /// Decision ring (on `coord_qp`).
+    pub decisions: SlotRing,
+    /// Oracle history (populated only when recording).
+    pub txns: Vec<TxnOracle>,
+    /// Per-transaction commit latencies.
+    pub latencies: Histogram,
+}
+
+/// A completed transactional run, ready for crash sweeps.
+pub struct TxnRun {
+    /// The N-QP fabric the run executed on.
+    pub fabric: ShardedFabric,
+    /// Per-coordinator state.
+    pub clients: Vec<TxnClient>,
+    /// Whether the run used two-phase commit.
+    pub atomic: bool,
+    method: SingletonMethod,
+    compound_method: CompoundMethod,
+}
+
+impl TxnRun {
+    /// The singleton method the 2PC phases used.
+    pub fn txn_method(&self) -> SingletonMethod {
+        self.method
+    }
+
+    /// The compound method independent-mode appends used.
+    pub fn compound_method(&self) -> CompoundMethod {
+        self.compound_method
+    }
+}
+
+/// Aggregate result of a transactional run.
+#[derive(Debug, Clone)]
+pub struct TxnRunResult {
+    /// Coordinators.
+    pub clients: usize,
+    /// QPs (every transaction spans all of them).
+    pub shards: usize,
+    /// Total transactions across all clients.
+    pub txns: u64,
+    /// Makespan in virtual ns.
+    pub span_ns: Nanos,
+    /// Mean commit latency (ns).
+    pub mean_latency_ns: f64,
+    /// p99 commit latency (ns).
+    pub p99_latency_ns: u64,
+}
+
+impl TxnRunResult {
+    /// Aggregate commit throughput in million transactions per
+    /// simulated second.
+    pub fn throughput_mtps(&self) -> f64 {
+        self.txns as f64 / self.span_ns as f64 * 1e3
+    }
+}
+
+/// Deterministic per-(client, shard, txn) record payload.
+fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS] {
+    let salt = mix(
+        client.wrapping_mul(0x9E37_79B9)
+            ^ shard.wrapping_mul(0xC0FF_EE11)
+            ^ txn,
+    );
+    let mut app = [0u32; APP_WORDS];
+    for (k, w) in app.iter_mut().enumerate() {
+        *w = (salt as u32).wrapping_add(k as u32 * 0x85EB_CA6B);
+    }
+    app
+}
+
+/// Drive `clients` coordinators, each appending `txns_per_client`
+/// transactions that span every shard of an N-QP fabric.
+///
+/// Atomic mode runs the [`crate::persist::txn`] protocol per
+/// transaction: PREPARE (record + intent, one train per shard, all
+/// shards in parallel virtual time) → DECIDE (decision record on the
+/// coordinator QP; its persistence point is the commit latency) →
+/// COMMIT (tail flips). Independent mode appends the same records as
+/// per-shard compound updates with no protocol — acked when the last
+/// shard acks, with nothing tying the shards together at a crash.
+pub fn run_txn_multi_shard(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &TxnRunOpts,
+) -> (TxnRun, TxnRunResult) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(
+        !opts.record || opts.txns_per_client <= opts.capacity,
+        "ring wraparound would invalidate the crash oracle"
+    );
+    let method = plan_txn_method(&cfg, primary);
+    let compound_method = plan_compound(&cfg, primary, 8);
+
+    // Region layout: per client per QP, log ‖ intent ring; the decision
+    // ring rides in the same stride (used only on the coordinator QP).
+    let log_stride = LogLayout::region_stride(opts.capacity);
+    let intent_bytes =
+        (opts.capacity * INTENT_BYTES as u64).next_multiple_of(0x1000);
+    let decision_bytes =
+        (opts.capacity * DECISION_BYTES as u64).next_multiple_of(0x1000);
+    let stride = log_stride + intent_bytes + decision_bytes;
+    // Slots sized for the prepare envelope (record + intent + wire
+    // header) — the widest message any txn phase sends.
+    let (rq_count, rq_slot) = (64usize, 2048u64);
+    let pm_size = (stride * opts.clients as u64
+        + 2 * rq_count as u64 * rq_slot
+        + 4096)
+        .next_power_of_two();
+    let layout =
+        Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
+    let mut fabric = ShardedFabric::new(
+        cfg,
+        timing,
+        layout,
+        opts.seed,
+        opts.record,
+        opts.shards,
+    );
+
+    let mut clients: Vec<TxnClient> = (0..opts.clients)
+        .map(|c| {
+            let base = c as u64 * stride;
+            let logs: Vec<LogLayout> = (0..opts.shards)
+                .map(|_| LogLayout::in_region(base, opts.capacity))
+                .collect();
+            let intents: Vec<SlotRing> = (0..opts.shards)
+                .map(|_| SlotRing {
+                    base: base + log_stride,
+                    slots: opts.capacity,
+                    stride: INTENT_BYTES as u64,
+                })
+                .collect();
+            let decisions = SlotRing {
+                base: base + log_stride + intent_bytes,
+                slots: opts.capacity,
+                stride: DECISION_BYTES as u64,
+            };
+            assert!(
+                decisions.end()
+                    <= fabric.qp(0).mem.layout.pm_app_limit(),
+                "client region overlaps the RQWRB ring"
+            );
+            TxnClient {
+                coord_qp: c % opts.shards,
+                logs,
+                intents,
+                decisions,
+                txns: Vec::new(),
+                latencies: Histogram::new(),
+            }
+        })
+        .collect();
+
+    // Each round runs one transaction per client, PHASE-INTERLEAVED:
+    // every client's PREPAREs post before any client waits, so
+    // coordinators pipeline their round trips on shared QPs instead of
+    // serializing whole transactions — the clients axis measures real
+    // concurrency. Per-client protocol ordering is untouched: a client's
+    // decision posts only after observing ITS prepare points, and its
+    // commit markers only after its decision point.
+    let mut msg_seq = 0u32;
+    for txn in 0..opts.txns_per_client {
+        // PREPARE (or, independent mode, the raw compound appends).
+        let mut starts = vec![0u64; opts.clients];
+        let mut recs: Vec<Vec<[u8; RECORD_BYTES]>> =
+            Vec::with_capacity(opts.clients);
+        let mut wpss: Vec<Vec<Option<WaitPoint>>> =
+            Vec::with_capacity(opts.clients);
+        for c in 0..opts.clients {
+            let client = &clients[c];
+            // A transaction cannot complete before its busiest
+            // participant frees up: latency baseline is the max clock.
+            starts[c] = (0..opts.shards)
+                .map(|s| fabric.qp(s).now())
+                .max()
+                .unwrap_or(0);
+            let mut records = Vec::with_capacity(opts.shards);
+            let mut wps = Vec::with_capacity(opts.shards);
+            for s in 0..opts.shards {
+                let record =
+                    make_record(txn, &txn_payload(c as u64, s as u64, txn));
+                let a = Update::new(
+                    client.logs[s].slot_addr(txn),
+                    record.to_vec(),
+                );
+                records.push(record);
+                msg_seq = msg_seq.wrapping_add(4);
+                if opts.atomic {
+                    let intent = IntentRecord {
+                        txn_id: txn,
+                        shard: s as u32,
+                        flips: vec![CommitFlip {
+                            addr: client.logs[s].tail_addr,
+                            value: txn + 1,
+                        }],
+                    };
+                    wps.push(Some(post_prepare(
+                        fabric.qp_mut(s),
+                        method,
+                        std::slice::from_ref(&a),
+                        &intent,
+                        client.intents[s].addr(txn),
+                        msg_seq,
+                    )));
+                } else {
+                    let b = Update::new(
+                        client.logs[s].tail_addr,
+                        (txn + 1).to_le_bytes().to_vec(),
+                    );
+                    match post_compound(
+                        fabric.qp_mut(s),
+                        compound_method,
+                        &a,
+                        &b,
+                        msg_seq,
+                    ) {
+                        Some(wp) => wps.push(Some(wp)),
+                        None => {
+                            // Internal-wait method: synchronous append.
+                            exec_compound(
+                                fabric.qp_mut(s),
+                                compound_method,
+                                &a,
+                                &b,
+                                msg_seq,
+                            );
+                            wps.push(None);
+                        }
+                    }
+                }
+            }
+            recs.push(records);
+            wpss.push(wps);
+        }
+        // Observe every client's PREPARE persistence points.
+        let mut prepared = vec![0u64; opts.clients];
+        for (c, wps) in wpss.iter().enumerate() {
+            for (s, wp) in wps.iter().enumerate() {
+                let t = match wp {
+                    Some(wp) => wp.wait(fabric.qp_mut(s)),
+                    None => fabric.qp(s).now(),
+                };
+                prepared[c] = prepared[c].max(t);
+            }
+        }
+
+        // DECIDE: post every client's decision, then observe the points
+        // (decisions on distinct coordinator QPs overlap).
+        let mut acked = prepared.clone();
+        if opts.atomic {
+            let mut dwps = Vec::with_capacity(opts.clients);
+            for c in 0..opts.clients {
+                let qp = clients[c].coord_qp;
+                sync_clock(fabric.qp_mut(qp), prepared[c]);
+                msg_seq = msg_seq.wrapping_add(1);
+                dwps.push(post_decision(
+                    fabric.qp_mut(qp),
+                    method,
+                    txn,
+                    clients[c].decisions.addr(txn),
+                    msg_seq,
+                ));
+            }
+            for (c, wp) in dwps.iter().enumerate() {
+                acked[c] = wp.wait(fabric.qp_mut(clients[c].coord_qp));
+            }
+            // COMMIT: release the tail markers. Truly lazy — posted
+            // after each client's decision point but never awaited
+            // (recovery roll-forward heals in-flight markers).
+            for c in 0..opts.clients {
+                for s in 0..opts.shards {
+                    sync_clock(fabric.qp_mut(s), acked[c]);
+                    msg_seq = msg_seq.wrapping_add(1);
+                    let flip = CommitFlip {
+                        addr: clients[c].logs[s].tail_addr,
+                        value: txn + 1,
+                    };
+                    let _ = post_commit(
+                        fabric.qp_mut(s),
+                        method,
+                        std::slice::from_ref(&flip),
+                        msg_seq,
+                    );
+                }
+            }
+        }
+
+        for (c, records) in recs.into_iter().enumerate() {
+            clients[c].latencies.record(acked[c] - starts[c]);
+            if opts.record {
+                clients[c].txns.push(TxnOracle {
+                    txn_id: txn,
+                    records,
+                    prepared_at: prepared[c],
+                    acked_at: acked[c],
+                });
+            }
+        }
+    }
+
+    let span_ns = fabric.makespan();
+    let mut summary = Histogram::new();
+    for c in &clients {
+        summary.merge(&c.latencies);
+    }
+    let result = TxnRunResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        txns: opts.txns_per_client * opts.clients as u64,
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+    };
+    let run = TxnRun {
+        fabric,
+        clients,
+        atomic: opts.atomic,
+        method,
+        compound_method,
+    };
+    (run, result)
+}
+
+/// Aggregated result of a transactional crash sweep.
+#[derive(Debug, Clone, Default)]
+pub struct TxnCrashReport {
+    /// Crash instants checked.
+    pub crash_points: u64,
+    /// Crashes where an acked transaction was missing on some shard.
+    pub durability_violations: u64,
+    /// Crashes where shards disagreed on the recovered transaction
+    /// count — a transaction recovered on some shards but not others
+    /// (the all-or-nothing breach 2PC exists to prevent).
+    pub atomicity_violations: u64,
+    /// Crashes where a recovered record didn't match the oracle.
+    pub integrity_violations: u64,
+}
+
+impl TxnCrashReport {
+    /// No violations of any contract?
+    pub fn clean(&self) -> bool {
+        self.durability_violations == 0
+            && self.atomicity_violations == 0
+            && self.integrity_violations == 0
+    }
+
+    /// Accumulate another report.
+    pub fn merge(&mut self, other: &TxnCrashReport) {
+        self.crash_points += other.crash_points;
+        self.durability_violations += other.durability_violations;
+        self.atomicity_violations += other.atomicity_violations;
+        self.integrity_violations += other.integrity_violations;
+    }
+}
+
+/// Check one crash instant of a transactional run: per client, resolve
+/// the committed set (presumed abort) and verify durability (acked ⇒
+/// recovered), atomicity (every shard recovers the same transaction
+/// prefix), and integrity (recovered records match the oracle).
+pub fn check_txn_crash_at(
+    run: &TxnRun,
+    t: Nanos,
+    scanner: &dyn Scanner,
+) -> TxnCrashReport {
+    let mut rep = TxnCrashReport { crash_points: 1, ..Default::default() };
+    // One crash image per QP (images are per-QP, not per-client: client
+    // regions are disjoint slices of the same PM).
+    let shards = run.fabric.shards();
+    let mut images: Vec<_> = (0..shards)
+        .map(|s| {
+            let fab = run.fabric.qp(s);
+            fab.mem.crash_image(t, fab.cfg.pdomain)
+        })
+        .collect();
+    // Resolve every client's committed prefix BEFORE any roll-forward
+    // patches (patches only touch tail words inside log regions, which
+    // never overlap a decision ring — but reading first costs nothing).
+    let committed: Vec<u64> = run
+        .clients
+        .iter()
+        .map(|c| {
+            if run.atomic {
+                recover_decisions(&images[c.coord_qp], &c.decisions)
+            } else {
+                0 // no protocol, nothing to resolve
+            }
+        })
+        .collect();
+    if run.atomic {
+        for (ci, client) in run.clients.iter().enumerate() {
+            for s in 0..shards {
+                let flips = recover_intents(
+                    &images[s],
+                    &client.intents[s],
+                    s as u32,
+                    committed[ci],
+                );
+                roll_forward(&mut images[s], &flips);
+            }
+        }
+    }
+    // The independent control keeps the planner's compound method
+    // verbatim, which may be replay-class (one-sided SEND); atomic runs
+    // never are (plan_txn_method substitutes apply-in-place methods).
+    let replay = !run.atomic && run.compound_method.requires_replay();
+    for client in &run.clients {
+        let acked =
+            client.txns.iter().take_while(|x| x.acked_at <= t).count() as u64;
+        let mut recovered = Vec::with_capacity(client.logs.len());
+        for (s, log) in client.logs.iter().enumerate() {
+            recovered.push(recover(
+                &images[s],
+                &run.fabric.qp(s).mem.layout,
+                log,
+                AppendMode::Compound,
+                replay,
+                scanner,
+            ));
+        }
+        if recovered.iter().any(|r| r.recovered < acked) {
+            rep.durability_violations += 1;
+        }
+        let n0 = recovered[0].recovered;
+        if recovered.iter().any(|r| r.recovered != n0) {
+            rep.atomicity_violations += 1;
+        }
+        for (s, r) in recovered.iter().enumerate() {
+            let n = (r.recovered as usize).min(client.txns.len());
+            for k in 0..n {
+                let got = &r.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES];
+                if got != &client.txns[k].records[s][..] {
+                    rep.integrity_violations += 1;
+                }
+            }
+            if r.recovered as usize > client.txns.len() {
+                rep.integrity_violations += 1;
+            }
+        }
+    }
+    rep
+}
+
+/// Crash sweep over a transactional run: uniform instants plus the
+/// adversarial instants around every transaction's PREPARE completion
+/// and ack (where in-doubt windows open and close).
+pub fn txn_crash_sweep(
+    run: &TxnRun,
+    uniform_points: u64,
+    seed: u64,
+    scanner: &dyn Scanner,
+) -> TxnCrashReport {
+    assert!(
+        run.fabric.qp(0).mem.recording(),
+        "crash sweep requires a recording run"
+    );
+    let end = run.fabric.makespan();
+    let mut rng = SplitMix64::new(seed);
+    let mut report = TxnCrashReport::default();
+    for _ in 0..uniform_points {
+        let t = rng.next_below(end.max(1));
+        report.merge(&check_txn_crash_at(run, t, scanner));
+    }
+    for client in &run.clients {
+        for x in &client.txns {
+            for t in [
+                x.prepared_at,
+                x.prepared_at + 1,
+                x.acked_at.saturating_sub(1),
+                x.acked_at,
+                x.acked_at + 1,
+            ] {
+                report.merge(&check_txn_crash_at(run, t, scanner));
+            }
+        }
+    }
+    report.merge(&check_txn_crash_at(run, end, scanner));
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -857,6 +1437,143 @@ mod tests {
             "4 QPs ({}) should be >2x faster than 1 QP ({})",
             spans[1],
             spans[0]
+        );
+    }
+
+    #[test]
+    fn txn_runner_atomic_survives_crashes() {
+        for (cfg, primary) in [
+            (
+                ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+                Primary::Write,
+            ),
+            (
+                ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+                Primary::Send,
+            ),
+            (
+                ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+                Primary::Write,
+            ),
+        ] {
+            let opts = TxnRunOpts {
+                clients: 2,
+                shards: 3,
+                txns_per_client: 10,
+                capacity: 32,
+                seed: 13,
+                record: true,
+                atomic: true,
+            };
+            let (run, res) = run_txn_multi_shard(
+                cfg,
+                TimingModel::default(),
+                primary,
+                &opts,
+            );
+            assert_eq!(res.txns, 20);
+            let rep = txn_crash_sweep(&run, 60, 5, &RustScanner);
+            assert!(rep.clean(), "{} txn sweep: {rep:?}", cfg.label());
+        }
+    }
+
+    #[test]
+    fn independent_multi_shard_appends_are_not_atomic() {
+        // The negative control: the same workload WITHOUT the commit
+        // protocol must exhibit crash states where shards disagree —
+        // the gap persist::txn exists to close. Per-shard durability
+        // still holds (each connection's method is correct in
+        // isolation); atomicity is what breaks.
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 30,
+            capacity: 64,
+            seed: 17,
+            record: true,
+            atomic: false,
+        };
+        let (run, _) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let rep = txn_crash_sweep(&run, 500, 9, &RustScanner);
+        assert_eq!(rep.durability_violations, 0, "{rep:?}");
+        assert!(
+            rep.atomicity_violations > 0,
+            "independent appends should tear across shards: {rep:?}"
+        );
+    }
+
+    #[test]
+    fn txn_runs_are_deterministic() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 50,
+            capacity: 64,
+            seed: 3,
+            record: false,
+            atomic: true,
+        };
+        let (_, a) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let (_, b) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        assert_eq!(a.span_ns, b.span_ns);
+        assert!(a.throughput_mtps() > 0.0);
+        assert!(a.mean_latency_ns > 0.0);
+    }
+
+    #[test]
+    fn txn_commit_costs_more_than_independent() {
+        // 2PC buys atomicity with an extra decision round trip: the
+        // atomic run must be slower, but not absurdly so.
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let mk = |atomic| TxnRunOpts {
+            clients: 1,
+            shards: 4,
+            txns_per_client: 60,
+            capacity: 64,
+            seed: 21,
+            record: false,
+            atomic,
+        };
+        let (_, atomic) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &mk(true),
+        );
+        let (_, indep) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &mk(false),
+        );
+        assert!(
+            atomic.span_ns > indep.span_ns,
+            "2PC {} should cost more than independent {}",
+            atomic.span_ns,
+            indep.span_ns
+        );
+        assert!(
+            atomic.span_ns < indep.span_ns * 4,
+            "2PC overhead should be bounded: {} vs {}",
+            atomic.span_ns,
+            indep.span_ns
         );
     }
 

@@ -45,6 +45,7 @@ pub trait Scanner {
         n as u64
     }
 
+    /// Backend name (reports and CLI output).
     fn name(&self) -> &'static str;
 }
 

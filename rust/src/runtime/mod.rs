@@ -3,9 +3,10 @@
 //! Two builds:
 //!
 //! * `--features xla-runtime` — the real PJRT-backed [`Runtime`] in
-//!   [`pjrt`], which loads `artifacts/*.hlo.txt` and executes the Pallas
-//!   kernels on the local CPU client. Requires the vendored `xla` and
-//!   `anyhow` crates from the artifact-building toolchain image.
+//!   `pjrt` (the module only exists under that feature, so no doc link),
+//!   which loads `artifacts/*.hlo.txt` and executes the Pallas kernels
+//!   on the local CPU client. Requires the vendored `xla` and `anyhow`
+//!   crates from the artifact-building toolchain image.
 //! * default — a dependency-free stub with the same API whose `load`
 //!   returns an error. Every caller (CLI `--scanner xla`, examples, the
 //!   integration tests) already falls back to the rust mirrors

@@ -102,6 +102,7 @@ impl Runtime {
         Ok(out)
     }
 
+    /// The static batch size the kernels were lowered for.
     pub fn export_n(&self) -> usize {
         self.export_n
     }
@@ -210,14 +211,17 @@ pub struct XlaScanner {
 }
 
 impl XlaScanner {
+    /// Wrap a loaded runtime.
     pub fn new(rt: Runtime) -> Self {
         XlaScanner { rt }
     }
 
+    /// Load the AOT artifacts from `dir` and build a scanner.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         Ok(XlaScanner { rt: Runtime::load(dir)? })
     }
 
+    /// The wrapped runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }

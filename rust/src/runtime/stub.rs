@@ -32,6 +32,7 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Always fails: the feature is off (see [`RuntimeUnavailable`]).
     pub fn load(
         dir: impl AsRef<Path>,
     ) -> Result<Self, RuntimeUnavailable> {
@@ -39,10 +40,12 @@ impl Runtime {
         Err(RuntimeUnavailable)
     }
 
+    /// Statically unreachable (no instance can exist).
     pub fn export_n(&self) -> usize {
         unreachable!("stub Runtime cannot be constructed")
     }
 
+    /// Statically unreachable (no instance can exist).
     pub fn checksum_records(
         &self,
         _payloads: &[u32],
@@ -50,6 +53,7 @@ impl Runtime {
         unreachable!("stub Runtime cannot be constructed")
     }
 
+    /// Statically unreachable (no instance can exist).
     pub fn scan_records(
         &self,
         _records: &[u32],
@@ -57,6 +61,7 @@ impl Runtime {
         unreachable!("stub Runtime cannot be constructed")
     }
 
+    /// Statically unreachable (no instance can exist).
     pub fn verify_chain(
         &self,
         _records: &[u32],
@@ -65,6 +70,7 @@ impl Runtime {
         unreachable!("stub Runtime cannot be constructed")
     }
 
+    /// Statically unreachable (no instance can exist).
     pub fn segment_digests(
         &self,
         _records: &[u32],
@@ -79,16 +85,19 @@ pub struct XlaScanner {
 }
 
 impl XlaScanner {
+    /// Wrap a loaded runtime (unreachable in the stub build).
     pub fn new(rt: Runtime) -> Self {
         XlaScanner { rt }
     }
 
+    /// Always fails: the feature is off (see [`RuntimeUnavailable`]).
     pub fn load(
         dir: impl AsRef<Path>,
     ) -> Result<Self, RuntimeUnavailable> {
         Ok(XlaScanner { rt: Runtime::load(dir)? })
     }
 
+    /// The wrapped runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }

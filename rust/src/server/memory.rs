@@ -30,14 +30,21 @@ pub const NEVER: Nanos = Nanos::MAX;
 /// of `rq_slot_bytes`, placed in PM or DRAM per the server config.
 #[derive(Debug, Clone)]
 pub struct Layout {
+    /// Bytes of persistent memory at the bottom of the address space.
     pub pm_size: u64,
+    /// Bytes of DRAM above PM (lost on power failure).
     pub dram_size: u64,
+    /// Address of RQWRB ring slot 0.
     pub rqwrb_base: u64,
+    /// Bytes per RQWRB slot (max SEND payload).
     pub rq_slot_bytes: u64,
+    /// Number of RQWRB ring slots (posted receive WRs).
     pub rq_count: usize,
 }
 
 impl Layout {
+    /// Build a layout; places the RQWRB ring at the top of PM or DRAM
+    /// per the configuration (panics if the ring does not fit).
     pub fn new(
         pm_size: u64,
         dram_size: u64,
@@ -64,14 +71,17 @@ impl Layout {
         Layout::new(pm_size, pm_size / 2, rq_count, 256, cfg.rqwrb)
     }
 
+    /// Total address-space bytes (PM + DRAM).
     pub fn total_size(&self) -> u64 {
         self.pm_size + self.dram_size
     }
 
+    /// Does `addr` fall inside persistent memory?
     pub fn is_pm(&self, addr: u64) -> bool {
         addr < self.pm_size
     }
 
+    /// Address of RQWRB ring slot `slot`.
     pub fn rqwrb_slot_addr(&self, slot: usize) -> u64 {
         debug_assert!(slot < self.rq_count);
         self.rqwrb_base + slot as u64 * self.rq_slot_bytes
@@ -103,11 +113,17 @@ pub struct WriteEvent {
     /// Global order in which the write became *visible* (posting order
     /// for RDMA, store order for CPU) — the overwrite-resolution order.
     pub seq: u64,
+    /// Destination address.
     pub addr: u64,
+    /// Payload bytes.
     pub data: Vec<u8>,
+    /// Who performed the write (RDMA DMA or responder CPU).
     pub src: WriteSource,
+    /// Arrival at the responder RNIC (WSP persistence milestone).
     pub t_arrive: Nanos,
+    /// Placement into the coherent domain (MHP persistence milestone).
     pub t_place: Nanos,
+    /// Entry into the DMP domain ([`NEVER`] for data stuck in cache).
     pub t_dmp: Nanos,
 }
 
@@ -126,6 +142,7 @@ impl WriteEvent {
 /// The responder's memory: layout + recorded write timelines.
 #[derive(Debug)]
 pub struct MemoryModel {
+    /// The responder's address-space layout.
     pub layout: Layout,
     /// Recorded writes, in seq order. Empty when recording is disabled
     /// (pure-latency benchmarking).
@@ -134,10 +151,13 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
+    /// Build a memory model; `recording` keeps write timelines (needed
+    /// for crash images, off for pure-latency benchmarking).
     pub fn new(layout: Layout, recording: bool) -> Self {
         MemoryModel { layout, writes: Vec::new(), recording }
     }
 
+    /// Record one write event (no-op when recording is off).
     pub fn record(&mut self, ev: WriteEvent) {
         debug_assert!(
             ev.addr + ev.data.len() as u64 <= self.layout.total_size(),
@@ -150,6 +170,7 @@ impl MemoryModel {
         }
     }
 
+    /// All recorded writes in visibility (`seq`) order.
     pub fn writes(&self) -> &[WriteEvent] {
         &self.writes
     }
@@ -160,6 +181,7 @@ impl MemoryModel {
         &mut self.writes
     }
 
+    /// Is write recording enabled?
     pub fn recording(&self) -> bool {
         self.recording
     }
@@ -212,26 +234,42 @@ pub struct Image {
 }
 
 impl Image {
+    /// Read `len` bytes at `addr`.
     pub fn read(&self, addr: u64, len: usize) -> &[u8] {
         &self.mem[addr as usize..addr as usize + len]
     }
 
+    /// Read a little-endian u64 at `addr`.
     pub fn read_u64(&self, addr: u64) -> u64 {
         u64::from_le_bytes(self.read(addr, 8).try_into().unwrap())
     }
 
+    /// Read a little-endian u32 at `addr`.
     pub fn read_u32(&self, addr: u64) -> u32 {
         u32::from_le_bytes(self.read(addr, 4).try_into().unwrap())
     }
 
+    /// Patch bytes at `addr` — the recovery-subsystem write path
+    /// (RQWRB message replay, 2PC commit-marker roll-forward). This
+    /// models recovery code running on the responder after the crash,
+    /// not a surviving write.
+    pub fn apply(&mut self, addr: u64, data: &[u8]) {
+        let a = addr as usize;
+        self.mem[a..a + data.len()].copy_from_slice(data);
+    }
+
+    /// Bytes of PM at the start of the address space (contents beyond
+    /// survive nothing — see [`MemoryModel::crash_image`]).
     pub fn pm_size(&self) -> u64 {
         self.pm_size
     }
 
+    /// Total bytes covered (PM + DRAM).
     pub fn len(&self) -> usize {
         self.mem.len()
     }
 
+    /// True when the image covers no memory.
     pub fn is_empty(&self) -> bool {
         self.mem.is_empty()
     }

@@ -11,19 +11,27 @@ use std::fmt::Write as _;
 /// A JSON value (string keys ordered for deterministic output).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (integers render without a fraction).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key` into an object (panics on non-objects); chainable.
     pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), value);
@@ -33,6 +41,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,6 +49,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -47,10 +57,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to u64, if a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
 
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +70,7 @@ impl Json {
         }
     }
 
+    /// Array items, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -65,6 +78,7 @@ impl Json {
         }
     }
 
+    /// Render with two-space indentation and ordered keys.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0);

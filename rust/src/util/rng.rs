@@ -13,10 +13,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seeded generator; identical seeds replay identical streams.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next uniform u64.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);

@@ -11,10 +11,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty summary.
     pub fn new() -> Self {
         Self { min: u64::MAX, ..Default::default() }
     }
 
+    /// Add one sample.
     pub fn record(&mut self, v: u64) {
         self.count += 1;
         self.sum += v as u128;
@@ -23,10 +25,12 @@ impl Summary {
         self.max = self.max.max(v);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -34,14 +38,17 @@ impl Summary {
         self.sum as f64 / self.count as f64
     }
 
+    /// Smallest sample (0 when empty).
     pub fn min(&self) -> u64 {
         if self.count == 0 { 0 } else { self.min }
     }
 
+    /// Largest sample.
     pub fn max(&self) -> u64 {
         self.max
     }
 
+    /// Population standard deviation (0 below two samples).
     pub fn stddev(&self) -> f64 {
         if self.count < 2 {
             return 0.0;
@@ -52,6 +59,7 @@ impl Summary {
         var.sqrt()
     }
 
+    /// Accumulate another summary.
     pub fn merge(&mut self, other: &Summary) {
         self.count += other.count;
         self.sum += other.sum;
@@ -78,6 +86,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self { buckets: vec![0; 64 * SUB_BUCKETS], summary: Summary::new() }
     }
@@ -102,12 +111,14 @@ impl Histogram {
         ((SUB_BUCKETS + sub) as u64) << shift
     }
 
+    /// Add one sample.
     pub fn record(&mut self, v: u64) {
         self.summary.record(v);
         let idx = Self::index(v).min(self.buckets.len() - 1);
         self.buckets[idx] += 1;
     }
 
+    /// The streaming summary over all samples.
     pub fn summary(&self) -> &Summary {
         &self.summary
     }
@@ -129,6 +140,7 @@ impl Histogram {
         self.summary.max()
     }
 
+    /// Accumulate another histogram.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;

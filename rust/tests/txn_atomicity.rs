@@ -1,0 +1,219 @@
+//! Cross-shard transaction atomicity campaign (acceptance criteria for
+//! the `persist::txn` 2PC layer).
+//!
+//! The crash sweep proves **all-or-nothing recovery at every virtual
+//! time instant**: for every crash point, every shard recovers either
+//! all of a transaction's writes or none — plus durability (acked
+//! transactions are always recovered) and integrity (recovered records
+//! match the oracle byte-for-byte). The independent-update control
+//! demonstrates the gap the protocol closes, and the KV path checks the
+//! same contract through `ShardedKv::put_txn`.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::kvstore::ShardedKv;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::persist::txn::plan_txn_method;
+use rpmem::remotelog::pipeline::{
+    run_txn_multi_shard, txn_crash_sweep, TxnRunOpts,
+};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::util::rng::SplitMix64;
+
+/// Every Table-1 configuration × primary: the transactional runner's
+/// crash sweep must be clean — all-or-nothing at every instant.
+#[test]
+fn txn_campaign_all_configs_all_primaries() {
+    for cfg in ServerConfig::table1() {
+        for primary in Primary::ALL {
+            let opts = TxnRunOpts {
+                clients: 2,
+                shards: 2,
+                txns_per_client: 8,
+                capacity: 32,
+                seed: 41,
+                record: true,
+                atomic: true,
+            };
+            let (run, res) = run_txn_multi_shard(
+                cfg,
+                TimingModel::default(),
+                primary,
+                &opts,
+            );
+            assert_eq!(res.txns, 16);
+            assert_eq!(run.txn_method(), plan_txn_method(&cfg, primary));
+            let rep = txn_crash_sweep(&run, 30, 7, &RustScanner);
+            assert!(
+                rep.clean(),
+                "{} / {}: {rep:?}",
+                cfg.label(),
+                primary.name()
+            );
+            assert!(rep.crash_points > 100);
+        }
+    }
+}
+
+/// Scale up one canonical config: more shards, more clients, more
+/// transactions, denser sweep.
+#[test]
+fn txn_campaign_scaled_canonical() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let opts = TxnRunOpts {
+        clients: 3,
+        shards: 4,
+        txns_per_client: 20,
+        capacity: 64,
+        seed: 97,
+        record: true,
+        atomic: true,
+    };
+    let (run, _) =
+        run_txn_multi_shard(cfg, TimingModel::default(), Primary::Write, &opts);
+    let rep = txn_crash_sweep(&run, 200, 11, &RustScanner);
+    assert!(rep.clean(), "{rep:?}");
+}
+
+/// The control: without the protocol, crash states that tear across
+/// shards exist (per-shard durability still holds — each connection's
+/// compound method is correct in isolation).
+#[test]
+fn independent_updates_tear_where_txns_do_not() {
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let mk = |atomic| TxnRunOpts {
+        clients: 1,
+        shards: 2,
+        txns_per_client: 40,
+        capacity: 64,
+        seed: 29,
+        record: true,
+        atomic,
+    };
+    let (indep, _) = run_txn_multi_shard(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(false),
+    );
+    let rep = txn_crash_sweep(&indep, 600, 3, &RustScanner);
+    assert_eq!(rep.durability_violations, 0, "{rep:?}");
+    assert!(
+        rep.atomicity_violations > 0,
+        "independent multi-shard updates should tear: {rep:?}"
+    );
+
+    let (atomic, _) = run_txn_multi_shard(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(true),
+    );
+    let rep = txn_crash_sweep(&atomic, 600, 3, &RustScanner);
+    assert!(rep.clean(), "2PC must close the gap: {rep:?}");
+}
+
+/// KV path: a mixed workload of plain puts and cross-shard transactional
+/// puts upholds the full crash contract at every instant — acked state
+/// durable, transactions all-or-nothing, values never torn.
+#[test]
+fn sharded_kv_txn_crash_contract() {
+    for cfg in [
+        ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Pm),
+    ] {
+        let mut kv =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 4, 23, true);
+        let mut rng = SplitMix64::new(5);
+        for i in 0..24u64 {
+            if i % 3 == 0 {
+                kv.put(rng.next_below(20), format!("p{i}").as_bytes());
+            } else {
+                let items: Vec<(u64, Vec<u8>)> = (0..3)
+                    .map(|j| {
+                        (
+                            rng.next_below(20),
+                            format!("t{i}-{j}").into_bytes(),
+                        )
+                    })
+                    .collect();
+                kv.put_txn(&items);
+            }
+        }
+        let end = kv.makespan();
+        for i in 0..120u64 {
+            let t = end * i / 119;
+            let state = kv.recover_all_at(t);
+            for (key, acked) in kv.acked_versions_at(t) {
+                let got = state.get(&key).unwrap_or_else(|| {
+                    panic!("{}: acked key {key} missing at t={t}", cfg.label())
+                });
+                assert!(got.0 >= acked.version, "{}", cfg.label());
+            }
+            for txn in &kv.txns {
+                let vis: Vec<bool> = txn
+                    .puts
+                    .iter()
+                    .map(|&(key, version)| {
+                        state
+                            .get(&key)
+                            .map(|(v, _)| *v >= version)
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                assert!(
+                    vis.iter().all(|&v| v) || vis.iter().all(|&v| !v),
+                    "{}: txn {} partial at t={t}: {vis:?}",
+                    cfg.label(),
+                    txn.txn_id
+                );
+            }
+            for (key, (v, val)) in &state {
+                let oracle = (0..kv.shard_count())
+                    .flat_map(|s| kv.shard(s).puts.iter())
+                    .find(|p| p.key == *key && p.version == *v)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "{}: key {key} recovered never-put v{v}",
+                            cfg.label()
+                        )
+                    });
+                assert_eq!(*val, oracle.value, "{}", cfg.label());
+            }
+        }
+    }
+}
+
+/// In-doubt transactions resolve to ABORT at every instant of the
+/// prepare→decision window, and to COMMIT from the decision's
+/// persistence point on — never anything in between.
+#[test]
+fn in_doubt_window_resolves_presumed_abort() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let opts = TxnRunOpts {
+        clients: 1,
+        shards: 3,
+        txns_per_client: 6,
+        capacity: 16,
+        seed: 3,
+        record: true,
+        atomic: true,
+    };
+    let (run, _) =
+        run_txn_multi_shard(cfg, TimingModel::default(), Primary::Write, &opts);
+    let client = &run.clients[0];
+    for x in &client.txns {
+        // Inside the in-doubt window every shard must exclude the txn;
+        // sweep a few instants of (prepared_at, acked_at).
+        for f in 1..4u64 {
+            let t = x.prepared_at + (x.acked_at - x.prepared_at) * f / 4;
+            let rep = rpmem::remotelog::pipeline::check_txn_crash_at(
+                &run,
+                t,
+                &RustScanner,
+            );
+            assert!(rep.clean(), "txn {} at t={t}: {rep:?}", x.txn_id);
+        }
+    }
+}
