@@ -1,0 +1,125 @@
+"""Seeded-example fallback for the ``hypothesis`` API surface these tests use.
+
+When the real ``hypothesis`` package is importable it is re-exported
+verbatim (CI installs it and gets full random generation + shrinking).
+Offline environments without it fall back to a tiny deterministic
+seeded-example mode: each ``@given`` test runs a fixed number of examples
+drawn from a ``random.Random`` seeded by the test's qualified name, so
+runs are reproducible and a failure names the exact generated arguments.
+
+Only the strategy surface the modules under ``python/tests`` need is
+implemented: ``integers``, ``sampled_from``, ``booleans``, ``lists``.
+There is no shrinking — none of the current property tests depend on it
+(they assert exact equality against oracles, so the first failing example
+is already minimal enough to debug). A test that genuinely needs
+shrinking should keep ``pytest.importorskip("hypothesis")`` instead of
+importing from this shim.
+"""
+
+try:  # pragma: no cover - exercised implicitly by which env runs this
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    # Examples per @given test in fallback mode. Comparable to the
+    # max_examples the test profiles request from real hypothesis.
+    _EXAMPLES = 12
+
+    class _Strategy:
+        """A value generator: ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        """Stand-in for ``hypothesis.strategies``."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            lo = 0 if min_value is None else min_value
+            hi = 2**63 if max_value is None else max_value
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    strategies = _StrategiesModule()
+
+    def given(*args, **strategy_kwargs):
+        """Seeded-example ``@given``: keyword strategies only."""
+        if args:
+            raise TypeError(
+                "the hypothesis shim supports keyword strategies only"
+            )
+
+        def decorate(func):
+            def wrapper(*call_args):
+                seed = zlib.crc32(func.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(_EXAMPLES):
+                    kwargs = {
+                        name: strat.draw(rng)
+                        for name, strat in sorted(strategy_kwargs.items())
+                    }
+                    try:
+                        func(*call_args, **kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"seeded example {i + 1}/{_EXAMPLES} failed "
+                            f"(seed {seed}): {kwargs!r}"
+                        ) from exc
+
+            # Copy identity by hand; functools.wraps would also set
+            # __wrapped__, which makes pytest read the original
+            # signature and hunt for fixtures named like the strategy
+            # kwargs.
+            wrapper.__name__ = func.__name__
+            wrapper.__qualname__ = func.__qualname__
+            wrapper.__doc__ = func.__doc__
+            wrapper.__module__ = func.__module__
+            return wrapper
+
+        return decorate
+
+    class settings:  # noqa: N801 - mirrors the hypothesis class name
+        """No-op stand-in: profiles only tune example counts/deadlines,
+        which the fallback fixes at ``_EXAMPLES`` with no deadline."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, func):
+            return func
+
+        @staticmethod
+        def register_profile(name, *args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+
+st = strategies

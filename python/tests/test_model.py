@@ -4,8 +4,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st
+# Real hypothesis when installed; deterministic seeded-example shim
+# otherwise (no case here depends on shrinking).
+from _hypothesis_shim import given, settings, st
 
 from compile.kernels.ref import PAYLOAD_WORDS, RECORD_WORDS, verify_ref
 from compile.model import (

@@ -1,0 +1,121 @@
+//! Coordinator-failover replication tax: 2PC with decision records
+//! mirrored to a witness shard (`persist::failover` — the ack point
+//! moves to the witness shard's persistence point) vs plain single-ring
+//! 2PC, across a clients × shards grid.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_FAILOVER_OUT`,
+//! default `failover_results.json`). Two invariants are asserted:
+//! surviving a coordinator-shard loss is never free (plain >= replicated
+//! throughput at every point) but the tax is bounded (the witness write
+//! rides a parallel QP, so replication keeps more than a third of the
+//! plain-2PC throughput — one overlapped persistence point, not a second
+//! serialized round trip). A small recording run additionally sweeps the
+//! crash × shard-loss cross product so the bench can never report a tax
+//! for a configuration whose recovery is broken.
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::bench::scaled;
+use rpmem::coordinator::scaling::{
+    failover_grid_to_json, render_failover_grid, run_failover_grid,
+    ScalingOpts,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::pipeline::{
+    run_failover_sweep, run_txn_multi_shard, TxnRunOpts,
+};
+use rpmem::remotelog::recovery::RustScanner;
+use std::time::Instant;
+
+fn main() {
+    let txns = scaled(2000);
+    let clients = [1usize, 2];
+    let shards = [2usize, 4, 8];
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    println!(
+        "coordinator failover, {txns} txns/client, grid {clients:?} x {shards:?}\n"
+    );
+
+    let scenarios: [(&str, ServerConfig, Primary); 3] = [
+        (
+            "MHP one-sided Write;Flush phases",
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            "DMP ¬DDIO one-sided Write;Flush phases",
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            "DMP+DDIO two-sided Send phases (responder-CPU-bound)",
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            Primary::Send,
+        ),
+    ];
+
+    let mut all = Vec::new();
+    for (title, cfg, primary) in scenarios {
+        let t0 = Instant::now();
+        let points =
+            run_failover_grid(cfg, primary, &clients, &shards, txns, &opts);
+        let wall = t0.elapsed();
+        let label =
+            format!("{title}  [{} | {}]", points[0].method_name, cfg.label());
+        println!("{}", render_failover_grid(&label, &points));
+        println!("  [harness: {:.2?} wall-clock]\n", wall);
+        for p in &points {
+            assert!(
+                p.plain_mtps >= p.replicated_mtps * 0.999,
+                "failover can't be free: {} clients x {} shards replicated \
+                 {:.3} vs plain {:.3}",
+                p.clients,
+                p.shards,
+                p.replicated_mtps,
+                p.plain_mtps
+            );
+            assert!(
+                p.replicated_mtps * 3.0 > p.plain_mtps,
+                "replication collapsed: {} clients x {} shards {:.3} vs {:.3}",
+                p.clients,
+                p.shards,
+                p.replicated_mtps,
+                p.plain_mtps
+            );
+        }
+        all.extend(points);
+    }
+
+    // Correctness smoke: the replicated protocol whose tax we just
+    // measured must actually survive every single-shard loss.
+    let sweep_opts = TxnRunOpts {
+        clients: 1,
+        shards: 2,
+        txns_per_client: 6,
+        capacity: 16,
+        seed: 31,
+        record: true,
+        atomic: true,
+        replicate: true,
+    };
+    let (run, _) = run_txn_multi_shard(
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        TimingModel::default(),
+        Primary::Write,
+        &sweep_opts,
+    );
+    let rep = run_failover_sweep(&run, 20, 7, &RustScanner);
+    assert!(rep.clean(), "failover recovery sweep: {rep:?}");
+    println!(
+        "failover sweep clean over {} crash × loss points",
+        rep.crash_points
+    );
+
+    let out = std::env::var("RPMEM_FAILOVER_OUT")
+        .unwrap_or_else(|_| "failover_results.json".to_string());
+    std::fs::write(&out, failover_grid_to_json(&all).to_string_pretty())
+        .expect("write failover JSON artifact");
+    println!("wrote {out} ({} points)", all.len());
+}

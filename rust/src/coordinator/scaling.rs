@@ -1,7 +1,7 @@
 //! Throughput-scaling sweeps: clients × shards over the multi-QP fabric
 //! — the scaling table that sits alongside the paper's latency figures.
 //!
-//! Three axes:
+//! Four axes:
 //!
 //! * **scaling axis** — one QP per client (`shards == clients`):
 //!   connections are the unit of RDMA scaling, so aggregate throughput
@@ -15,6 +15,11 @@
 //!   every update is a cross-shard transaction: 2PC commit throughput
 //!   vs. the same workload as independent per-shard updates, i.e. the
 //!   price of atomicity (`benches/txn.rs` persists the table).
+//! * **failover axis** ([`run_failover_grid`]) — the same 2PC stream
+//!   with decision records mirrored to a witness shard
+//!   ([`crate::persist::failover`]) vs plain 2PC: the replication
+//!   latency tax of moving the ack point to the witness shard's
+//!   persistence point (`benches/failover.rs` persists the table).
 
 use crate::fabric::timing::TimingModel;
 use crate::persist::config::ServerConfig;
@@ -310,6 +315,7 @@ pub fn run_txn_point(
         seed: opts.seed,
         record: false,
         atomic,
+        replicate: false,
     };
     let (run, atomic) =
         run_txn_multi_shard(cfg, opts.timing.clone(), primary, &mk(true));
@@ -390,6 +396,180 @@ pub fn render_txn_grid(title: &str, points: &[TxnScalingPoint]) -> String {
 
 /// Serialize a transaction grid for the JSON artifact.
 pub fn txn_grid_to_json(points: &[TxnScalingPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
+// ---------------------------------------------------------------------
+// Failover axis: replicated-decision 2PC vs plain 2PC — the price of
+// surviving a coordinator-shard loss.
+// ---------------------------------------------------------------------
+
+/// One (clients, shards) failover measurement: the same transaction
+/// stream committed with witness-replicated decision records
+/// ([`crate::persist::failover`]) and with plain single-ring 2PC.
+#[derive(Debug, Clone)]
+pub struct FailoverPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Human-readable 2PC phase-method name.
+    pub method_name: String,
+    /// Coordinator count.
+    pub clients: usize,
+    /// QP count (every transaction spans all of them; `>= 2`).
+    pub shards: usize,
+    /// Total transactions across all clients.
+    pub txns: u64,
+    /// Replicated-2PC commit throughput (million txns per simulated
+    /// second).
+    pub replicated_mtps: f64,
+    /// Plain-2PC throughput for the same stream (decision on one ring,
+    /// no failover).
+    pub plain_mtps: f64,
+    /// Mean replicated commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 replicated commit latency (ns).
+    pub p99_commit_ns: u64,
+    /// Mean plain-2PC commit latency (ns).
+    pub plain_mean_commit_ns: f64,
+}
+
+impl FailoverPoint {
+    /// The replication tax as a throughput factor: plain / replicated
+    /// (>= ~1; the witness write rides a parallel QP, so the tax is one
+    /// overlapped persistence point, not a serialization).
+    pub fn overhead_factor(&self) -> f64 {
+        self.plain_mtps / self.replicated_mtps
+    }
+
+    /// The replication tax on the commit latency (ns): replicated mean
+    /// minus plain mean — what moving the ack point to the witness
+    /// shard's persistence point costs each transaction.
+    pub fn latency_tax_ns(&self) -> f64 {
+        self.mean_commit_ns - self.plain_mean_commit_ns
+    }
+
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("method", self.method_name.clone().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("txns", self.txns.into())
+            .set("replicated_mtps", self.replicated_mtps.into())
+            .set("plain_mtps", self.plain_mtps.into())
+            .set("overhead_factor", self.overhead_factor().into())
+            .set("mean_commit_ns", self.mean_commit_ns.into())
+            .set("p99_commit_ns", self.p99_commit_ns.into())
+            .set("plain_mean_commit_ns", self.plain_mean_commit_ns.into())
+            .set("latency_tax_ns", self.latency_tax_ns().into());
+        j
+    }
+}
+
+/// Measure one (clients, shards) failover point: the replicated run and
+/// its plain-2PC control, back to back on identical seeds.
+pub fn run_failover_point(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> FailoverPoint {
+    assert!(shards >= 2, "failover needs a witness shard");
+    let mk = |replicate| TxnRunOpts {
+        clients,
+        shards,
+        txns_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+        atomic: true,
+        replicate,
+    };
+    let (run, replicated) =
+        run_txn_multi_shard(cfg, opts.timing.clone(), primary, &mk(true));
+    let (_, plain) =
+        run_txn_multi_shard(cfg, opts.timing.clone(), primary, &mk(false));
+    FailoverPoint {
+        config: cfg,
+        method_name: run.txn_method().name().to_string(),
+        clients,
+        shards,
+        txns: replicated.txns,
+        replicated_mtps: replicated.throughput_mtps(),
+        plain_mtps: plain.throughput_mtps(),
+        mean_commit_ns: replicated.mean_latency_ns,
+        p99_commit_ns: replicated.p99_latency_ns,
+        plain_mean_commit_ns: plain.mean_latency_ns,
+    }
+}
+
+/// The failover grid: every (clients, shards) combination, measured in
+/// parallel threads — the replication latency tax table.
+pub fn run_failover_grid(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients_list: &[usize],
+    shards_list: &[usize],
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<FailoverPoint> {
+    let points: Vec<(usize, usize)> = clients_list
+        .iter()
+        .flat_map(|&c| shards_list.iter().map(move |&s| (c, s)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = points
+            .iter()
+            .map(|&(clients, shards)| {
+                scope.spawn(move || {
+                    run_failover_point(
+                        cfg,
+                        primary,
+                        clients,
+                        shards,
+                        txns_per_client,
+                        opts,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("failover point panicked"))
+            .collect()
+    })
+}
+
+/// Render a failover grid (replicated vs plain 2PC throughput + the
+/// latency tax).
+pub fn render_failover_grid(title: &str, points: &[FailoverPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<8} {:<7} {:>12} {:>12} {:>9} {:>12} {:>10}\n",
+        "clients", "shards", "replicated", "plain 2PC", "overhead", "lat", "tax"
+    ));
+    out.push_str(&"-".repeat(78));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<8} {:<7} {:>7.3} Mtps {:>7.3} Mtps {:>8.2}x {:>9.2} us {:>7.2} us\n",
+            p.clients,
+            p.shards,
+            p.replicated_mtps,
+            p.plain_mtps,
+            p.overhead_factor(),
+            p.mean_commit_ns / 1e3,
+            p.latency_tax_ns() / 1e3,
+        ));
+    }
+    out
+}
+
+/// Serialize a failover grid for the JSON artifact.
+pub fn failover_grid_to_json(points: &[FailoverPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
@@ -486,6 +666,48 @@ mod tests {
         let j = txn_grid_to_json(&pts);
         assert_eq!(j.as_arr().unwrap().len(), 4);
         assert!(render_txn_grid("t", &pts).contains("overhead"));
+    }
+
+    #[test]
+    fn failover_grid_covers_combinations() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = ScalingOpts { capacity: 256, ..Default::default() };
+        let pts = run_failover_grid(
+            cfg,
+            Primary::Write,
+            &[1, 2],
+            &[2, 4],
+            60,
+            &opts,
+        );
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.replicated_mtps > 0.0);
+            assert!(
+                p.plain_mtps >= p.replicated_mtps * 0.999,
+                "replication can't be free: {} vs {}",
+                p.plain_mtps,
+                p.replicated_mtps
+            );
+            assert!(p.overhead_factor() < 5.0, "{}", p.overhead_factor());
+            // The two runs draw different per-op jitter, so allow small
+            // noise — but the witness write must not systematically
+            // shorten commits, and the tax stays under one plain commit.
+            assert!(
+                p.latency_tax_ns() > -0.05 * p.plain_mean_commit_ns,
+                "witness write can't shorten the commit: {}",
+                p.latency_tax_ns()
+            );
+            assert!(
+                p.latency_tax_ns() < p.plain_mean_commit_ns,
+                "tax must stay under one extra serialized commit: {}",
+                p.latency_tax_ns()
+            );
+        }
+        let j = failover_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 4);
+        assert!(j.as_arr().unwrap()[0].get("latency_tax_ns").is_some());
+        assert!(render_failover_grid("t", &pts).contains("overhead"));
     }
 
     #[test]

@@ -67,6 +67,35 @@ impl ShardedFabric {
         &mut self.qps[i]
     }
 
+    /// Mutably borrow two distinct QPs at once (replicated decision
+    /// posts drive the coordinator and witness QPs in one step).
+    pub fn qp_pair_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+    ) -> (&mut Fabric, &mut Fabric) {
+        assert_ne!(a, b, "need two distinct QPs");
+        if a < b {
+            let (lo, hi) = self.qps.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.qps.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+
+    /// Inject the shard-loss fault on QP `id`'s responder: its PM media
+    /// is gone and every image it reconstructs is blank (see
+    /// [`crate::server::memory::MemoryModel::fail`]).
+    pub fn fail_shard(&mut self, id: usize) {
+        self.qps[id].mem.fail();
+    }
+
+    /// Clear the shard-loss fault on QP `id`'s responder.
+    pub fn restore_shard(&mut self, id: usize) {
+        self.qps[id].mem.restore();
+    }
+
     /// Stable key → QP routing (the bucket → shard → QP map's last hop).
     pub fn shard_for(&self, key: u64) -> usize {
         (mix(key) % self.qps.len() as u64) as usize
@@ -149,6 +178,37 @@ mod tests {
         f.qp_mut(1).post(WorkRequest::write(0x1000, vec![1u8; 8]));
         f.qp_mut(1).post(WorkRequest::write(0x1040, vec![1u8; 8]));
         assert_eq!(f.total_ops(), 3);
+    }
+
+    #[test]
+    fn qp_pair_mut_borrows_both_orders() {
+        let mut f = sharded(3);
+        {
+            let (a, b) = f.qp_pair_mut(0, 2);
+            a.post(WorkRequest::write(0x1000, vec![1u8; 8]));
+            b.post(WorkRequest::write(0x1000, vec![1u8; 8]));
+        }
+        {
+            let (a, b) = f.qp_pair_mut(2, 0);
+            assert!(a.ops_posted() >= 1);
+            assert!(b.ops_posted() >= 1);
+        }
+        assert_eq!(f.total_ops(), 2);
+    }
+
+    #[test]
+    fn failed_shard_images_blank_until_restored() {
+        let mut f = sharded(2);
+        let id = f.qp_mut(1).post(WorkRequest::write(0x2000, vec![7u8; 8]));
+        let t = f.qp_mut(1).wait_comp(id);
+        f.fail_shard(1);
+        assert!(f.qp(1).mem.failed());
+        let cfg_pd = f.qp(1).cfg.pdomain;
+        assert_eq!(f.qp(1).mem.crash_image(t, cfg_pd).read(0x2000, 1)[0], 0);
+        // The other shard is untouched by the fault.
+        assert!(!f.qp(0).mem.failed());
+        f.restore_shard(1);
+        assert_eq!(f.qp(1).mem.crash_image(t, cfg_pd).read(0x2000, 1)[0], 7);
     }
 
     #[test]

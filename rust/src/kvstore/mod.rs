@@ -31,6 +31,9 @@ use crate::persist::config::ServerConfig;
 use crate::persist::exec::{
     exec_compound, post_compound_batch, Update, WaitPoint,
 };
+use crate::persist::failover::{
+    post_decision_replicated, recover_decisions_merged, witness_for,
+};
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::plan_compound;
 use crate::persist::txn::{
@@ -67,6 +70,17 @@ pub fn kv_intent_ring(capacity: u64) -> SlotRing {
 pub fn kv_decision_ring(capacity: u64) -> SlotRing {
     SlotRing {
         base: kv_intent_ring(capacity).end(),
+        slots: KV_TXN_SLOTS,
+        stride: DECISION_BYTES as u64,
+    }
+}
+
+/// Witness replica of the decision ring: sits above the decision ring,
+/// used on shard [`witness_for`]`(0, n)` when decision replication is on
+/// ([`ShardedKv::with_decision_replication`]).
+pub fn kv_witness_ring(capacity: u64) -> SlotRing {
+    SlotRing {
+        base: kv_decision_ring(capacity).end(),
         slots: KV_TXN_SLOTS,
         stride: DECISION_BYTES as u64,
     }
@@ -179,7 +193,7 @@ impl RemoteKv {
         record: bool,
     ) -> Self {
         let (rq_count, rq_slot) = (64u64, 2048u64);
-        let pm_size = (kv_decision_ring(capacity).end()
+        let pm_size = (kv_witness_ring(capacity).end()
             + 2 * rq_count * rq_slot
             + 4096)
             .next_power_of_two();
@@ -416,6 +430,10 @@ pub struct ShardedKv {
     txn_method: SingletonMethod,
     intent_ring: SlotRing,
     decision_ring: SlotRing,
+    witness_ring: SlotRing,
+    /// Mirror decision records to the witness shard before acking
+    /// ([`ShardedKv::with_decision_replication`]).
+    replicate: bool,
     next_txn: u64,
     /// Acked-transaction oracle (recording runs only).
     pub txns: Vec<KvTxnRecord>,
@@ -451,9 +469,58 @@ impl ShardedKv {
             txn_method: plan_txn_method(&cfg, Primary::Write),
             intent_ring: kv_intent_ring(capacity_per_shard),
             decision_ring: kv_decision_ring(capacity_per_shard),
+            witness_ring: kv_witness_ring(capacity_per_shard),
+            replicate: false,
             next_txn: 0,
             txns: Vec::new(),
         }
+    }
+
+    /// Enable (or disable) decision-ring replication: every
+    /// [`ShardedKv::put_txn`] decision record is mirrored to the witness
+    /// shard ([`witness_for`]`(0, n)`) before the transaction is acked,
+    /// so the commit state survives the loss of any single shard's PM —
+    /// the coordinator-failover knob. A no-op on single-shard stores
+    /// (there is no second shard to lose a decision to).
+    ///
+    /// ```
+    /// use rpmem::fabric::timing::TimingModel;
+    /// use rpmem::kvstore::ShardedKv;
+    /// use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    ///
+    /// let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    /// let mut kv = ShardedKv::new(cfg, TimingModel::default(), 64, 4, 7, true)
+    ///     .with_decision_replication(true);
+    /// kv.put_txn(&[(2, b"a".to_vec()), (3, b"b".to_vec())]);
+    /// kv.fail_shard(0); // lose the coordinator shard's PM outright
+    /// let state = kv.recover_all_at(kv.makespan());
+    /// // The decision survived on the witness ring: every key homed on
+    /// // a surviving shard is recovered (keys on shard 0 lost media).
+    /// for key in [2u64, 3] {
+    ///     if kv.shard_for(key) != 0 {
+    ///         assert!(state.contains_key(&key));
+    ///     }
+    /// }
+    /// ```
+    pub fn with_decision_replication(mut self, on: bool) -> Self {
+        self.replicate = on;
+        self
+    }
+
+    /// Is decision-ring replication enabled (and effective)?
+    pub fn replicated(&self) -> bool {
+        self.replicate && self.shards.len() >= 2
+    }
+
+    /// Inject the shard-loss fault on shard `s`: its PM media is gone
+    /// and [`ShardedKv::recover_all_at`] sees a blank image for it.
+    pub fn fail_shard(&mut self, s: usize) {
+        self.shards[s].fab.mem.fail();
+    }
+
+    /// Clear the shard-loss fault on shard `s`.
+    pub fn restore_shard(&mut self, s: usize) {
+        self.shards[s].fab.mem.restore();
     }
 
     /// Number of shards (QPs).
@@ -536,8 +603,12 @@ impl ShardedKv {
             !recording || txn_id < KV_TXN_SLOTS,
             "txn ring wraparound would invalidate the crash oracle"
         );
-        let (method, intent_ring, decision_ring) =
-            (self.txn_method, self.intent_ring, self.decision_ring);
+        let (method, intent_ring, decision_ring, witness_ring) = (
+            self.txn_method,
+            self.intent_ring,
+            self.decision_ring,
+            self.witness_ring,
+        );
 
         // Stage per-shard payloads + commit markers.
         let nshards = self.shards.len();
@@ -603,18 +674,44 @@ impl ShardedKv {
         }
 
         // DECIDE on the coordinator shard: the transaction's atomic
-        // durability point and the application's ack.
-        sync_clock(&mut self.shards[0].fab, prepared_at);
-        let msg = self.shards[0].next_msg;
-        self.shards[0].next_msg += 1;
-        let wp = post_decision(
-            &mut self.shards[0].fab,
-            method,
-            txn_id,
-            decision_ring.addr(txn_id),
-            msg,
-        );
-        let acked = wp.wait(&mut self.shards[0].fab);
+        // durability point and the application's ack. With replication
+        // on, the record is mirrored to the witness shard and the ack
+        // moves to the max of BOTH persistence points, so the decision
+        // survives any single-shard loss from the ack onward.
+        let acked = if self.replicate && nshards >= 2 {
+            let w = witness_for(0, nshards);
+            let cmsg = self.shards[0].next_msg;
+            self.shards[0].next_msg += 1;
+            let wmsg = self.shards[w].next_msg;
+            self.shards[w].next_msg += 1;
+            let (coord, wit) = self.shards.split_at_mut(w);
+            let pair = post_decision_replicated(
+                &mut coord[0].fab,
+                &mut wit[0].fab,
+                method,
+                txn_id,
+                decision_ring.addr(txn_id),
+                witness_ring.addr(txn_id),
+                prepared_at,
+                cmsg,
+                wmsg,
+            );
+            pair.primary
+                .wait(&mut coord[0].fab)
+                .max(pair.witness.wait(&mut wit[0].fab))
+        } else {
+            sync_clock(&mut self.shards[0].fab, prepared_at);
+            let msg = self.shards[0].next_msg;
+            self.shards[0].next_msg += 1;
+            let wp = post_decision(
+                &mut self.shards[0].fab,
+                method,
+                txn_id,
+                decision_ring.addr(txn_id),
+                msg,
+            );
+            wp.wait(&mut self.shards[0].fab)
+        };
 
         // COMMIT: release the version words. Truly lazy — posted after
         // the decision point but never awaited: correctness needs only
@@ -672,14 +769,27 @@ impl ShardedKv {
     /// presumed-abort rule: the coordinator shard's decision ring names
     /// the committed prefix, each shard's committed intents are rolled
     /// forward (version-word `max`), and in-doubt transactions stay
-    /// invisible.
+    /// invisible. With decision replication on, the committed prefix is
+    /// the **merge** of the primary and witness rings
+    /// ([`recover_decisions_merged`]), so it survives the shard-loss
+    /// fault ([`ShardedKv::fail_shard`]) on either holder; a failed
+    /// shard contributes a blank image (its keys are lost media, its
+    /// rings recover nothing).
     pub fn recover_all_at(&self, t: Nanos) -> HashMap<u64, (u32, Vec<u8>)> {
         let mut images: Vec<Image> = self
             .shards
             .iter()
             .map(|sh| sh.fab.mem.crash_image(t, sh.fab.cfg.pdomain))
             .collect();
-        let committed = recover_decisions(&images[0], &self.decision_ring);
+        let committed = if self.replicated() {
+            let w = witness_for(0, self.shards.len());
+            recover_decisions_merged(
+                Some((&images[0], &self.decision_ring)),
+                Some((&images[w], &self.witness_ring)),
+            )
+        } else {
+            recover_decisions(&images[0], &self.decision_ring)
+        };
         let mut out = HashMap::new();
         for (s, img) in images.iter_mut().enumerate() {
             let flips =
@@ -1080,6 +1190,64 @@ mod tests {
         assert_eq!(state[&1].1, b"one", "in-doubt overwrite must roll back");
         assert_eq!(state[&2].1, b"two");
         assert!(!state.contains_key(&3), "in-doubt insert must stay hidden");
+    }
+
+    /// Replication changes the ack point, not the committed state: the
+    /// same workload recovers identically with the knob on or off once
+    /// everything quiesces.
+    #[test]
+    fn replicated_txns_recover_same_state_as_plain() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut states = Vec::new();
+        for replicate in [false, true] {
+            let mut kv = ShardedKv::new(cfg, TimingModel::default(), 64, 3, 9, true)
+                .with_decision_replication(replicate);
+            assert_eq!(kv.replicated(), replicate);
+            for t in 0..6u64 {
+                let items: Vec<(u64, Vec<u8>)> = (0..4u64)
+                    .map(|i| ((t + i) % 10, format!("v{t}-{i}").into_bytes()))
+                    .collect();
+                kv.put_txn(&items);
+            }
+            states.push(kv.recover_all_at(kv.makespan()));
+        }
+        assert_eq!(states[0], states[1]);
+    }
+
+    /// The failover contract at the KV layer: with replication, losing
+    /// the coordinator shard's PM at the ack instant keeps every
+    /// surviving shard's transactional keys visible; without it, the
+    /// acked transaction's decision dies with the shard and its
+    /// surviving keys vanish (presumed abort).
+    #[test]
+    fn coordinator_loss_needs_replication() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        for replicate in [true, false] {
+            let mut kv = ShardedKv::new(cfg, TimingModel::default(), 64, 3, 13, true)
+                .with_decision_replication(replicate);
+            let items: Vec<(u64, Vec<u8>)> = (0..12u64)
+                .map(|k| (k, format!("t{k}").into_bytes()))
+                .collect();
+            let acked = kv.put_txn(&items);
+            let survivors: Vec<u64> =
+                (0..12u64).filter(|&k| kv.shard_for(k) != 0).collect();
+            assert!(!survivors.is_empty(), "keys must span shards");
+            kv.fail_shard(0);
+            // Crash at the ack instant: lazy commit markers are still in
+            // flight, so only the decision record can commit the txn.
+            let state = kv.recover_all_at(acked);
+            for &k in &survivors {
+                assert_eq!(
+                    state.contains_key(&k),
+                    replicate,
+                    "key {k}: replicate={replicate}"
+                );
+            }
+            kv.restore_shard(0);
+            // Fault cleared: everything (incl. shard-0 keys) recovers.
+            let state = kv.recover_all_at(kv.makespan());
+            assert_eq!(state.len(), 12);
+        }
     }
 
     #[test]

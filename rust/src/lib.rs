@@ -25,6 +25,13 @@
 //!   runner ([`remotelog::pipeline::run_txn_multi_shard`]) — the first
 //!   cross-connection correctness scenario, where per-QP ordering stops
 //!   helping and only protocol-level persistence points are load-bearing,
+//! * **coordinator failover** — synchronous decision-ring replication to
+//!   a witness shard ([`persist::failover`]): the ack point moves to the
+//!   witness shard's persistence point, recovery merges primary +
+//!   witness rings, and the shard-loss fault
+//!   ([`server::memory::MemoryModel::fail`]) plus the crash × shard-loss
+//!   sweep ([`remotelog::pipeline::run_failover_sweep`]) prove no
+//!   committed transaction is lost under any single-shard loss,
 //! * and the experiment coordinator that regenerates every table and
 //!   figure of the paper's evaluation plus the clients × shards scaling
 //!   and transaction tables ([`coordinator`]).

@@ -8,13 +8,16 @@
 //! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
 //! rpmem scale [...]                      clients × shards throughput scaling
 //! rpmem txn [...]                        cross-shard 2PC vs independent grid
+//! rpmem failover [...]                   replicated-decision 2PC vs plain 2PC
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
-//! rpmem help
+//! rpmem help [command]
 //! ```
 //!
-//! Unknown subcommands print the usage text and exit non-zero.
+//! Every subcommand prints its own flag/knob list via `--help` (or
+//! `rpmem help <command>`). Unknown subcommands print the usage text and
+//! exit non-zero.
 
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
@@ -38,16 +41,45 @@ use std::process::ExitCode;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, flags) = parse(&args);
-    let result = match cmd.as_deref() {
+    let (positionals, flags) = parse(&args);
+    let cmd = positionals.first().map(String::as_str);
+    // `<command> --help` prints that command's own flag list. parse()
+    // eats a following positional as the flag's value, so honor
+    // `rpmem --help <command>` too (the value is "true" otherwise).
+    if let Some(value) = flags.get("help") {
+        let topic = if value == "true" { cmd } else { Some(value.as_str()) };
+        match topic.and_then(usage_for) {
+            Some(usage) => print!("{usage}"),
+            None => print!("{HELP}"),
+        }
+        return ExitCode::SUCCESS;
+    }
+    let result = match cmd {
         Some("taxonomy") => cmd_taxonomy(&flags),
         Some("sweep") => cmd_sweep(&flags),
         Some("scale") => cmd_scale(&flags),
         Some("txn") => cmd_txn(&flags),
+        Some("failover") => cmd_failover(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
-        Some("help") | None => {
+        Some("help") => match positionals.get(1).map(String::as_str) {
+            None => {
+                print!("{HELP}");
+                Ok(())
+            }
+            Some(topic) => match usage_for(topic) {
+                Some(usage) => {
+                    print!("{usage}");
+                    Ok(())
+                }
+                None => {
+                    eprint!("{HELP}");
+                    Err(format!("no such command `{topic}`"))
+                }
+            },
+        },
+        None => {
             print!("{HELP}");
             Ok(())
         }
@@ -72,48 +104,147 @@ USAGE: rpmem <command> [--flag value]...
 
 COMMANDS
   taxonomy      Regenerate the paper's Tables 1-3 from the planner.
-                  --table 1|2|3          (default: all)
   sweep         REMOTELOG latency sweep — Figure 2 panels.
-                  --domain dmp|mhp|wsp|all   (default: all)
-                  --kind singleton|compound|both (default: both)
-                  --appends N            (default: 20000)
-                  --seed N               (default: 42)
-                  --transport ib|iwarp   (default: ib)
-                  --emulated             (FLUSH via READ, no WRITE_atomic)
-                  --json FILE            (dump results as JSON)
-  scale         Multi-client sharded throughput scaling (the dimension
-                the paper's latency-only evaluation leaves open).
-                  --clients LIST         (default: 1,2,4,8,16)
-                  --shards N             (default: 0 = one QP per client)
-                  --window W             (trains in flight, default: 16)
-                  --batch B              (appends per doorbell train, 4)
-                  --appends N            (per client, default: 2000)
-                  --json FILE            (dump results as JSON)
-  txn           Cross-shard transaction grid: 2PC atomic commit vs the
-                same updates issued independently (the price of
-                atomicity), across clients × shards.
-                  --clients LIST         (default: 1,2,4)
-                  --shards LIST          (default: 1,2,4,8)
-                  --txns N               (per client, default: 500)
-                  --domain dmp|mhp|wsp   (default: mhp)
-                  --primary write|writeimm|send (default: write)
-                  --json FILE            (dump results as JSON)
+  scale         Multi-client sharded throughput scaling.
+  txn           Cross-shard 2PC vs independent-update grid (the price
+                of atomicity).
+  failover      Replicated-decision 2PC vs plain 2PC grid (the
+                coordinator-failover replication tax).
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
-                  --appends N            (default: 20000)
   crash-test    Crash-consistency campaign over the 72 scenarios.
-                  --appends N            (default: 25)
-                  --seeds N              (default: 3)
-                  --points N             (uniform crash points, default 80)
-                  --scanner rust|xla     (default: rust)
-  recover-demo  Run a workload, cut power mid-run, recover (XLA kernels
-                by default), and print the reconstruction.
-                  --scanner rust|xla     (default: xla)
-                  --appends N            (default: 50)
+  recover-demo  Crash + recovery walk-through (XLA kernels by default).
+  help          Show this list, or `rpmem help <command>` for one
+                command's full flag/knob list.
+
+Every command also accepts --help to print its own flag list (knobs
+like --clients/--shards/--window/--batch and their defaults).
 ";
 
-fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+const USAGE_TAXONOMY: &str = "\
+USAGE: rpmem taxonomy [--table 1|2|3]
+
+Regenerate the paper's Tables 1-3 from the planner.
+
+FLAGS
+  --table 1|2|3          which table to print   (default: all)
+";
+
+const USAGE_SWEEP: &str = "\
+USAGE: rpmem sweep [flags]
+
+REMOTELOG latency sweep — Figure 2 panels.
+
+FLAGS
+  --domain dmp|mhp|wsp|all       persistence domain      (default: all)
+  --kind singleton|compound|both update kind             (default: both)
+  --appends N                    appends per scenario    (default: 20000)
+  --seed N                       jitter seed             (default: 42)
+  --transport ib|iwarp           transport flavor        (default: ib)
+  --emulated                     FLUSH via READ, no WRITE_atomic
+  --json FILE                    dump results as JSON
+";
+
+const USAGE_SCALE: &str = "\
+USAGE: rpmem scale [flags]
+
+Multi-client sharded throughput scaling (the dimension the paper's
+latency-only evaluation leaves open).
+
+KNOBS
+  --clients LIST         client counts            (default: 1,2,4,8,16)
+  --shards N             QP count; 0 = one QP per client  (default: 0)
+  --window W             doorbell trains in flight        (default: 16)
+  --batch B              appends per doorbell train       (default: 4)
+  --appends N            appends per client               (default: 2000)
+  --json FILE            dump results as JSON
+";
+
+const USAGE_TXN: &str = "\
+USAGE: rpmem txn [flags]
+
+Cross-shard transaction grid: 2PC atomic commit vs the same updates
+issued independently (the price of atomicity), across clients × shards.
+
+KNOBS
+  --clients LIST         coordinator counts       (default: 1,2,4)
+  --shards LIST          QP counts                (default: 1,2,4,8)
+  --txns N               transactions per client  (default: 500)
+  --domain dmp|mhp|wsp   persistence domain       (default: mhp)
+  --primary write|writeimm|send  primary op       (default: write)
+  --json FILE            dump results as JSON
+";
+
+const USAGE_FAILOVER: &str = "\
+USAGE: rpmem failover [flags]
+
+Coordinator-failover grid: 2PC with every decision record replicated
+to a witness shard (ack moves to the witness shard's persistence
+point, so the commit state survives any single-shard loss) vs plain
+single-ring 2PC — the replication latency tax.
+
+KNOBS
+  --clients LIST         coordinator counts       (default: 1,2,4)
+  --shards LIST          QP counts, each >= 2     (default: 2,4,8)
+  --txns N               transactions per client  (default: 500)
+  --domain dmp|mhp|wsp   persistence domain       (default: mhp)
+  --primary write|writeimm|send  primary op       (default: write)
+  --json FILE            dump results as JSON
+
+Replicas per decision: 1 (the deterministic witness shard, next in
+ring order after the coordinator shard).
+";
+
+const USAGE_CLAIMS: &str = "\
+USAGE: rpmem claims [flags]
+
+Run the sweeps and check every §4.3/§4.4 paper claim.
+
+FLAGS
+  --appends N            appends per scenario     (default: 20000)
+  --json FILE            dump claim results as JSON
+";
+
+const USAGE_CRASH_TEST: &str = "\
+USAGE: rpmem crash-test [flags]
+
+Crash-consistency campaign over the 72 scenarios.
+
+FLAGS
+  --appends N            appends per scenario     (default: 25)
+  --seeds N              seeds per scenario       (default: 3)
+  --points N             uniform crash points     (default: 80)
+  --scanner rust|xla     tail-detection backend   (default: rust)
+";
+
+const USAGE_RECOVER_DEMO: &str = "\
+USAGE: rpmem recover-demo [flags]
+
+Run a workload, cut power mid-run, recover (XLA kernels by default),
+and print the reconstruction.
+
+FLAGS
+  --scanner rust|xla     tail-detection backend   (default: xla)
+  --appends N            appends before the cut   (default: 50)
+";
+
+/// The per-command usage text (the `--help` / `help <command>` payload).
+fn usage_for(cmd: &str) -> Option<&'static str> {
+    match cmd {
+        "taxonomy" => Some(USAGE_TAXONOMY),
+        "sweep" => Some(USAGE_SWEEP),
+        "scale" => Some(USAGE_SCALE),
+        "txn" => Some(USAGE_TXN),
+        "failover" => Some(USAGE_FAILOVER),
+        "claims" => Some(USAGE_CLAIMS),
+        "crash-test" => Some(USAGE_CRASH_TEST),
+        "recover-demo" => Some(USAGE_RECOVER_DEMO),
+        _ => None,
+    }
+}
+
+fn parse(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut flags = HashMap::new();
-    let mut cmd = None;
+    let mut positionals = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
@@ -125,16 +256,36 @@ fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
                 "true".to_string()
             };
             flags.insert(name.to_string(), val);
-        } else if cmd.is_none() {
-            cmd = Some(a.clone());
+        } else {
+            positionals.push(a.clone());
         }
         i += 1;
     }
-    (cmd, flags)
+    (positionals, flags)
 }
 
 fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Single-domain flag shared by the txn/failover grids (default MHP).
+fn parse_domain(flags: &HashMap<String, String>) -> Result<PDomain, String> {
+    match flags.get("domain").map(String::as_str) {
+        None | Some("mhp") => Ok(PDomain::Mhp),
+        Some("dmp") => Ok(PDomain::Dmp),
+        Some("wsp") => Ok(PDomain::Wsp),
+        Some(other) => Err(format!("bad --domain {other}")),
+    }
+}
+
+/// Primary-op flag shared by the txn/failover grids (default write).
+fn parse_primary(flags: &HashMap<String, String>) -> Result<Primary, String> {
+    match flags.get("primary").map(String::as_str) {
+        None | Some("write") => Ok(Primary::Write),
+        Some("writeimm") => Ok(Primary::WriteImm),
+        Some("send") => Ok(Primary::Send),
+        Some(other) => Err(format!("bad --primary {other}")),
+    }
 }
 
 fn domains(flags: &HashMap<String, String>) -> Result<Vec<PDomain>, String> {
@@ -312,18 +463,8 @@ fn cmd_txn(flags: &HashMap<String, String>) -> Result<(), String> {
     let clients = parse_usize_list(flags, "clients", &[1, 2, 4])?;
     let shards = parse_usize_list(flags, "shards", &[1, 2, 4, 8])?;
     let txns = flag_u64(flags, "txns", 500);
-    let domain = match flags.get("domain").map(String::as_str) {
-        None | Some("mhp") => PDomain::Mhp,
-        Some("dmp") => PDomain::Dmp,
-        Some("wsp") => PDomain::Wsp,
-        Some(other) => return Err(format!("bad --domain {other}")),
-    };
-    let primary = match flags.get("primary").map(String::as_str) {
-        None | Some("write") => Primary::Write,
-        Some("writeimm") => Primary::WriteImm,
-        Some("send") => Primary::Send,
-        Some(other) => return Err(format!("bad --primary {other}")),
-    };
+    let domain = parse_domain(flags)?;
+    let primary = parse_primary(flags)?;
     let cfg = ServerConfig::new(domain, false, RqwrbLoc::Dram);
     let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
     let points = run_txn_grid(cfg, primary, &clients, &shards, txns, &opts);
@@ -335,6 +476,37 @@ fn cmd_txn(flags: &HashMap<String, String>) -> Result<(), String> {
     println!("{}", render_txn_grid(&title, &points));
     if let Some(path) = flags.get("json") {
         let j = txn_grid_to_json(&points).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_failover(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        failover_grid_to_json, render_failover_grid, run_failover_grid,
+        ScalingOpts,
+    };
+    let clients = parse_usize_list(flags, "clients", &[1, 2, 4])?;
+    let shards = parse_usize_list(flags, "shards", &[2, 4, 8])?;
+    if shards.iter().any(|&s| s < 2) {
+        return Err("--shards entries must be >= 2 (witness shard)".into());
+    }
+    let txns = flag_u64(flags, "txns", 500);
+    let domain = parse_domain(flags)?;
+    let primary = parse_primary(flags)?;
+    let cfg = ServerConfig::new(domain, false, RqwrbLoc::Dram);
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let points =
+        run_failover_grid(cfg, primary, &clients, &shards, txns, &opts);
+    let title = format!(
+        "coordinator failover on {} [{}] — replicated vs plain 2PC",
+        cfg.label(),
+        points[0].method_name
+    );
+    println!("{}", render_failover_grid(&title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = failover_grid_to_json(&points).to_string_pretty();
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

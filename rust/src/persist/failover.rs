@@ -1,0 +1,263 @@
+//! Coordinator failover: synchronous replication of 2PC decision records
+//! to a witness shard.
+//!
+//! The presumed-abort protocol of [`crate::persist::txn`] makes the
+//! coordinator shard's decision ring the single atomic durability point:
+//! lose that shard's PM and every in-doubt transaction resolves to
+//! ABORT — including transactions the application was already acked for,
+//! if the crash caught their lazy commit markers in flight. This module
+//! closes that availability gap with the synchronous-mirroring
+//! discipline of Tavakkol et al. (arXiv:1810.09360): before the
+//! application is acked, the decision record is persisted **twice** — on
+//! the coordinator shard's primary ring and on a deterministically
+//! chosen *witness* shard's replica ring — each via the planner's
+//! configuration-correct method for its own connection. Aguilera et al.
+//! (arXiv:1905.12143) observe that RDMA-replicated decision state is
+//! exactly what makes fast failover sound; the replica write here is one
+//! extra doorbell train whose persistence point becomes the new ack
+//! point.
+//!
+//! # Protocol delta (persistence points marked ▸)
+//!
+//! ```text
+//! coordinator QP(c)       witness QP(w)        other shard QPs
+//! ─────────────────────────────────────────────────────────────
+//! PREPARE:                                      payload+intent ▸
+//! DECIDE:  decision rec ▸  replica rec ▸                          ← ack =
+//!          «ack = max of BOTH persistence points»                   max(▸,▸)
+//! COMMIT:                                       markers ▸ (lazy)
+//! ```
+//!
+//! The two decision writes ride different QPs, so they overlap in
+//! parallel virtual time — the replication tax is roughly one
+//! persistence point, not two (measured by
+//! [`crate::coordinator::scaling::run_failover_grid`]).
+//!
+//! # Recovery under shard loss
+//!
+//! After a power failure plus the loss of one shard's PM
+//! ([`crate::server::memory::MemoryModel::fail`]),
+//! [`recover_decisions_merged`] resolves the committed prefix as the
+//! union of the two rings: a transaction is committed iff a valid
+//! decision record survives on **either** ring, and both rings are
+//! individually prefix-closed (decisions post in txn-id order on one QP
+//! each), so the union is prefix-closed too. Because the ack point is
+//! the *max* of both persistence points, every acked transaction's
+//! decision survives any single-shard loss; intents were durable even
+//! earlier (PREPARE precedes DECIDE), so the surviving shards roll
+//! forward exactly the merged committed prefix.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::Nanos;
+use crate::persist::exec::WaitPoint;
+use crate::persist::method::SingletonMethod;
+use crate::persist::txn::{
+    decode_decision, post_decision, sync_clock, SlotRing, DECISION_BYTES,
+};
+use crate::server::memory::Image;
+
+/// Deterministic witness-shard choice for a coordinator shard: the next
+/// shard in ring order. Distinct from the coordinator by construction,
+/// so one shard loss never takes out both decision copies.
+pub fn witness_for(coord: usize, shards: usize) -> usize {
+    assert!(shards >= 2, "decision replication needs a second shard");
+    assert!(coord < shards, "coordinator {coord} out of range {shards}");
+    (coord + 1) % shards
+}
+
+/// The two in-flight decision writes of a replicated DECIDE: wait both;
+/// the transaction's ack point is the **max** of the two persistence
+/// points (either copy alone cannot survive the loss of its own shard).
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionPair {
+    /// Wait-point of the primary decision record (coordinator QP).
+    pub primary: WaitPoint,
+    /// Wait-point of the replica record (witness QP).
+    pub witness: WaitPoint,
+}
+
+impl DecisionPair {
+    /// Observe both persistence points; returns the replicated ack point.
+    pub fn wait(self, coord: &mut Fabric, witness: &mut Fabric) -> Nanos {
+        self.primary.wait(coord).max(self.witness.wait(witness))
+    }
+}
+
+/// DECIDE with replication: persist the COMMIT decision for `txn_id` on
+/// the coordinator QP (`decision_addr`) and its replica on the witness
+/// QP (`replica_addr`), each as its own doorbell train posted no earlier
+/// than `not_before` (the observed PREPARE completion). The two trains
+/// overlap in parallel virtual time; await both via
+/// [`DecisionPair::wait`].
+pub fn post_decision_replicated(
+    coord: &mut Fabric,
+    witness: &mut Fabric,
+    method: SingletonMethod,
+    txn_id: u64,
+    decision_addr: u64,
+    replica_addr: u64,
+    not_before: Nanos,
+    coord_seq: u32,
+    witness_seq: u32,
+) -> DecisionPair {
+    sync_clock(coord, not_before);
+    sync_clock(witness, not_before);
+    DecisionPair {
+        primary: post_decision(coord, method, txn_id, decision_addr, coord_seq),
+        witness: post_decision(
+            witness,
+            method,
+            txn_id,
+            replica_addr,
+            witness_seq,
+        ),
+    }
+}
+
+/// Resolve the committed prefix from the primary and witness decision
+/// rings, either of which may be gone (`None`: that shard's PM was
+/// lost). A slot counts as committed when a valid record with the
+/// matching id survives on **either** ring; the first slot present on
+/// neither ends the prefix (presumed abort beyond it). Both rings are
+/// prefix-closed individually — decisions post in txn-id order on one
+/// QP each — so the union prefix is exactly the committed set.
+pub fn recover_decisions_merged(
+    primary: Option<(&Image, &SlotRing)>,
+    witness: Option<(&Image, &SlotRing)>,
+) -> u64 {
+    if let (Some((_, p)), Some((_, w))) = (primary, witness) {
+        assert_eq!(p.slots, w.slots, "rings must agree on capacity");
+    }
+    let slots = match (primary, witness) {
+        (Some((_, r)), _) | (None, Some((_, r))) => r.slots,
+        (None, None) => 0,
+    };
+    let has = |side: Option<(&Image, &SlotRing)>, i: u64| {
+        side.is_some_and(|(img, r)| {
+            decode_decision(img.read(r.addr(i), DECISION_BYTES)) == Some(i)
+        })
+    };
+    for i in 0..slots {
+        if !has(primary, i) && !has(witness, i) {
+            return i;
+        }
+    }
+    slots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::persist::txn::recover_decisions;
+    use crate::server::memory::Layout;
+
+    fn fab(cfg: ServerConfig, seed: u64) -> Fabric {
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 1024, cfg.rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, seed, true)
+    }
+
+    fn ring() -> SlotRing {
+        SlotRing { base: 0x4000, slots: 8, stride: DECISION_BYTES as u64 }
+    }
+
+    fn persist_decisions(f: &mut Fabric, r: &SlotRing, ids: &[u64]) {
+        for (k, &id) in ids.iter().enumerate() {
+            let wp = post_decision(
+                f,
+                SingletonMethod::WriteFlush,
+                id,
+                r.addr(id),
+                k as u32,
+            );
+            wp.wait(f);
+        }
+    }
+
+    #[test]
+    fn witness_is_next_shard_and_never_coordinator() {
+        assert_eq!(witness_for(0, 2), 1);
+        assert_eq!(witness_for(1, 2), 0);
+        assert_eq!(witness_for(3, 4), 0);
+        for n in 2..8 {
+            for c in 0..n {
+                assert_ne!(witness_for(c, n), c, "witness aliases {c}/{n}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "second shard")]
+    fn single_shard_cannot_replicate() {
+        witness_for(0, 1);
+    }
+
+    #[test]
+    fn merged_prefix_is_ring_union() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let r = ring();
+        let mut fp = fab(cfg, 1);
+        persist_decisions(&mut fp, &r, &[0, 1]);
+        let mut fw = fab(cfg, 2);
+        persist_decisions(&mut fw, &r, &[0, 1, 2]);
+        let pi = fp.mem.crash_image(fp.now(), cfg.pdomain);
+        let wi = fw.mem.crash_image(fw.now(), cfg.pdomain);
+        // Union prefix covers what either ring proves.
+        assert_eq!(
+            recover_decisions_merged(Some((&pi, &r)), Some((&wi, &r))),
+            3
+        );
+        // Either ring alone suffices for its own prefix.
+        assert_eq!(recover_decisions_merged(Some((&pi, &r)), None), 2);
+        assert_eq!(recover_decisions_merged(None, Some((&wi, &r))), 3);
+        // Both lost: presumed abort for everything.
+        assert_eq!(recover_decisions_merged(None, None), 0);
+        // Matches the single-ring scanner on a single ring.
+        assert_eq!(recover_decisions(&wi, &r), 3);
+    }
+
+    #[test]
+    fn merged_prefix_stops_at_gap_on_both_rings() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let r = ring();
+        let mut fp = fab(cfg, 3);
+        persist_decisions(&mut fp, &r, &[0, 2]); // gap at 1
+        let mut fw = fab(cfg, 4);
+        persist_decisions(&mut fw, &r, &[0]);
+        let pi = fp.mem.crash_image(fp.now(), cfg.pdomain);
+        let wi = fw.mem.crash_image(fw.now(), cfg.pdomain);
+        assert_eq!(
+            recover_decisions_merged(Some((&pi, &r)), Some((&wi, &r))),
+            1,
+            "slot 1 survives on neither ring"
+        );
+    }
+
+    #[test]
+    fn replicated_ack_covers_both_rings() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let r = ring();
+        let mut coord = fab(cfg, 5);
+        let mut wit = fab(cfg, 6);
+        let pair = post_decision_replicated(
+            &mut coord,
+            &mut wit,
+            SingletonMethod::WriteFlush,
+            0,
+            r.addr(0),
+            r.addr(0),
+            100,
+            0,
+            0,
+        );
+        let acked = pair.wait(&mut coord, &mut wit);
+        assert!(acked >= 100, "ack respects the not-before fence");
+        // At the ack instant the decision survives the loss of EITHER
+        // shard: each ring alone resolves the committed prefix.
+        let pi = coord.mem.crash_image(acked, cfg.pdomain);
+        let wi = wit.mem.crash_image(acked, cfg.pdomain);
+        assert_eq!(recover_decisions_merged(Some((&pi, &r)), None), 1);
+        assert_eq!(recover_decisions_merged(None, Some((&wi, &r))), 1);
+    }
+}

@@ -3,10 +3,13 @@
 //! for singleton (§3.2, Table 2) and compound (§3.3, Table 3) updates,
 //! the planner that selects the correct method for a configuration, and
 //! the cross-shard two-phase-commit layer ([`txn`]) built on top of the
-//! per-connection recipes.
+//! per-connection recipes, and the coordinator-failover layer
+//! ([`failover`]) that mirrors 2PC decision records to a witness shard
+//! so the commit state survives any single-shard loss.
 
 pub mod config;
 pub mod exec;
+pub mod failover;
 pub mod method;
 pub mod planner;
 pub mod taxonomy;
@@ -15,6 +18,7 @@ pub mod wire;
 
 pub use config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
 pub use exec::{exec_compound, exec_singleton, PersistOutcome, Update};
+pub use failover::{recover_decisions_merged, witness_for, DecisionPair};
 pub use method::{CompoundMethod, PersistencePoint, Primary, SingletonMethod};
 pub use planner::{plan_compound, plan_singleton};
 pub use txn::{

@@ -14,7 +14,10 @@
 //! spanning all shards, committed with the [`crate::persist::txn`]
 //! two-phase protocol, and [`txn_crash_sweep`] proves all-or-nothing
 //! recovery at every virtual-time instant (`rust/tests/txn_atomicity.rs`
-//! runs the full campaign).
+//! runs the full campaign). With [`TxnRunOpts::replicate`] the decision
+//! records are mirrored to a witness QP ([`crate::persist::failover`])
+//! and [`run_failover_sweep`] drives the crash × shard-loss cross
+//! product (`rust/tests/failover_recovery.rs` runs that campaign).
 
 use crate::fabric::sharded::ShardedFabric;
 use crate::fabric::timing::{Nanos, TimingModel};
@@ -22,6 +25,9 @@ use crate::persist::config::ServerConfig;
 use crate::persist::exec::{
     exec_compound, post_compound, post_compound_batch, post_singleton,
     post_singleton_batch, Update, WaitPoint,
+};
+use crate::persist::failover::{
+    post_decision_replicated, recover_decisions_merged, witness_for,
 };
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::{plan_compound, plan_singleton};
@@ -731,6 +737,11 @@ pub struct TxnRunOpts {
     /// compound appends — the negative control whose crash states are
     /// NOT all-or-nothing.
     pub atomic: bool,
+    /// Mirror every decision record to the witness QP before acking
+    /// ([`crate::persist::failover`]): the commit state then survives
+    /// any single-shard loss. Requires `shards >= 2`; only meaningful
+    /// with `atomic`.
+    pub replicate: bool,
 }
 
 impl Default for TxnRunOpts {
@@ -743,6 +754,7 @@ impl Default for TxnRunOpts {
             seed: 7,
             record: false,
             atomic: true,
+            replicate: false,
         }
     }
 }
@@ -767,12 +779,17 @@ pub struct TxnOracle {
 pub struct TxnClient {
     /// QP holding this client's decision ring.
     pub coord_qp: usize,
+    /// QP holding this client's replica ring (replicated runs; equals
+    /// `coord_qp` when the fabric has a single QP).
+    pub witness_qp: usize,
     /// Per-QP log region.
     pub logs: Vec<LogLayout>,
     /// Per-QP intent ring.
     pub intents: Vec<SlotRing>,
     /// Decision ring (on `coord_qp`).
     pub decisions: SlotRing,
+    /// Witness replica of the decision ring (on `witness_qp`).
+    pub replicas: SlotRing,
     /// Oracle history (populated only when recording).
     pub txns: Vec<TxnOracle>,
     /// Per-transaction commit latencies.
@@ -787,6 +804,8 @@ pub struct TxnRun {
     pub clients: Vec<TxnClient>,
     /// Whether the run used two-phase commit.
     pub atomic: bool,
+    /// Whether decision records were mirrored to the witness QP.
+    pub replicate: bool,
     method: SingletonMethod,
     compound_method: CompoundMethod,
 }
@@ -863,17 +882,22 @@ pub fn run_txn_multi_shard(
         !opts.record || opts.txns_per_client <= opts.capacity,
         "ring wraparound would invalidate the crash oracle"
     );
+    assert!(
+        !opts.replicate || (opts.atomic && opts.shards >= 2),
+        "decision replication needs 2PC and a second shard"
+    );
     let method = plan_txn_method(&cfg, primary);
     let compound_method = plan_compound(&cfg, primary, 8);
 
     // Region layout: per client per QP, log ‖ intent ring; the decision
-    // ring rides in the same stride (used only on the coordinator QP).
+    // ring and its witness replica ride in the same stride (used only on
+    // the coordinator/witness QP respectively).
     let log_stride = LogLayout::region_stride(opts.capacity);
     let intent_bytes =
         (opts.capacity * INTENT_BYTES as u64).next_multiple_of(0x1000);
     let decision_bytes =
         (opts.capacity * DECISION_BYTES as u64).next_multiple_of(0x1000);
-    let stride = log_stride + intent_bytes + decision_bytes;
+    let stride = log_stride + intent_bytes + 2 * decision_bytes;
     // Slots sized for the prepare envelope (record + intent + wire
     // header) — the widest message any txn phase sends.
     let (rq_count, rq_slot) = (64usize, 2048u64);
@@ -910,16 +934,27 @@ pub fn run_txn_multi_shard(
                 slots: opts.capacity,
                 stride: DECISION_BYTES as u64,
             };
+            let replicas = SlotRing {
+                base: decisions.end(),
+                slots: opts.capacity,
+                stride: DECISION_BYTES as u64,
+            };
             assert!(
-                decisions.end()
-                    <= fabric.qp(0).mem.layout.pm_app_limit(),
+                replicas.end() <= fabric.qp(0).mem.layout.pm_app_limit(),
                 "client region overlaps the RQWRB ring"
             );
+            let coord_qp = c % opts.shards;
             TxnClient {
-                coord_qp: c % opts.shards,
+                coord_qp,
+                witness_qp: if opts.shards >= 2 {
+                    witness_for(coord_qp, opts.shards)
+                } else {
+                    coord_qp
+                },
                 logs,
                 intents,
                 decisions,
+                replicas,
                 txns: Vec::new(),
                 latencies: Histogram::new(),
             }
@@ -1020,24 +1055,53 @@ pub fn run_txn_multi_shard(
         }
 
         // DECIDE: post every client's decision, then observe the points
-        // (decisions on distinct coordinator QPs overlap).
+        // (decisions on distinct coordinator QPs overlap). Replicated
+        // runs mirror each record to the witness QP and ack at the max
+        // of both persistence points ([`crate::persist::failover`]).
         let mut acked = prepared.clone();
         if opts.atomic {
             let mut dwps = Vec::with_capacity(opts.clients);
             for c in 0..opts.clients {
                 let qp = clients[c].coord_qp;
-                sync_clock(fabric.qp_mut(qp), prepared[c]);
-                msg_seq = msg_seq.wrapping_add(1);
-                dwps.push(post_decision(
-                    fabric.qp_mut(qp),
-                    method,
-                    txn,
-                    clients[c].decisions.addr(txn),
-                    msg_seq,
-                ));
+                if opts.replicate {
+                    let wq = clients[c].witness_qp;
+                    let (cseq, wseq) =
+                        (msg_seq.wrapping_add(1), msg_seq.wrapping_add(2));
+                    msg_seq = msg_seq.wrapping_add(2);
+                    let (coord, wit) = fabric.qp_pair_mut(qp, wq);
+                    let pair = post_decision_replicated(
+                        coord,
+                        wit,
+                        method,
+                        txn,
+                        clients[c].decisions.addr(txn),
+                        clients[c].replicas.addr(txn),
+                        prepared[c],
+                        cseq,
+                        wseq,
+                    );
+                    dwps.push((pair.primary, Some(pair.witness)));
+                } else {
+                    sync_clock(fabric.qp_mut(qp), prepared[c]);
+                    msg_seq = msg_seq.wrapping_add(1);
+                    dwps.push((
+                        post_decision(
+                            fabric.qp_mut(qp),
+                            method,
+                            txn,
+                            clients[c].decisions.addr(txn),
+                            msg_seq,
+                        ),
+                        None,
+                    ));
+                }
             }
-            for (c, wp) in dwps.iter().enumerate() {
+            for (c, (wp, rep)) in dwps.iter().enumerate() {
                 acked[c] = wp.wait(fabric.qp_mut(clients[c].coord_qp));
+                if let Some(rep) = rep {
+                    acked[c] = acked[c]
+                        .max(rep.wait(fabric.qp_mut(clients[c].witness_qp)));
+                }
             }
             // COMMIT: release the tail markers. Truly lazy — posted
             // after each client's decision point but never awaited
@@ -1090,6 +1154,7 @@ pub fn run_txn_multi_shard(
         fabric,
         clients,
         atomic: opts.atomic,
+        replicate: opts.replicate,
         method,
         compound_method,
     };
@@ -1137,14 +1202,40 @@ pub fn check_txn_crash_at(
     t: Nanos,
     scanner: &dyn Scanner,
 ) -> TxnCrashReport {
+    check_txn_crash_at_with_loss(run, t, None, scanner)
+}
+
+/// [`check_txn_crash_at`] with the shard-loss fault: the power failure
+/// at `t` additionally destroys shard `failed`'s PM outright (blank
+/// image — see [`crate::server::memory::MemoryModel::failed_image`]).
+///
+/// The committed prefix is resolved from whatever decision state
+/// survives: the merge of primary + witness rings for replicated runs
+/// ([`recover_decisions_merged`]; a blank ring contributes nothing), the
+/// primary ring alone otherwise. The durability / atomicity / integrity
+/// contracts are then checked over the **surviving** shards — losing a
+/// shard's payload is expected media loss; losing another shard's acked
+/// transactions (because the decision died with the coordinator) is the
+/// violation this mode exists to expose.
+pub fn check_txn_crash_at_with_loss(
+    run: &TxnRun,
+    t: Nanos,
+    failed: Option<usize>,
+    scanner: &dyn Scanner,
+) -> TxnCrashReport {
     let mut rep = TxnCrashReport { crash_points: 1, ..Default::default() };
     // One crash image per QP (images are per-QP, not per-client: client
-    // regions are disjoint slices of the same PM).
+    // regions are disjoint slices of the same PM). The lost shard
+    // presents a blank image to every reader below.
     let shards = run.fabric.shards();
     let mut images: Vec<_> = (0..shards)
         .map(|s| {
             let fab = run.fabric.qp(s);
-            fab.mem.crash_image(t, fab.cfg.pdomain)
+            if failed == Some(s) {
+                fab.mem.failed_image()
+            } else {
+                fab.mem.crash_image(t, fab.cfg.pdomain)
+            }
         })
         .collect();
     // Resolve every client's committed prefix BEFORE any roll-forward
@@ -1154,16 +1245,24 @@ pub fn check_txn_crash_at(
         .clients
         .iter()
         .map(|c| {
-            if run.atomic {
-                recover_decisions(&images[c.coord_qp], &c.decisions)
-            } else {
+            if !run.atomic {
                 0 // no protocol, nothing to resolve
+            } else if run.replicate {
+                recover_decisions_merged(
+                    Some((&images[c.coord_qp], &c.decisions)),
+                    Some((&images[c.witness_qp], &c.replicas)),
+                )
+            } else {
+                recover_decisions(&images[c.coord_qp], &c.decisions)
             }
         })
         .collect();
     if run.atomic {
         for (ci, client) in run.clients.iter().enumerate() {
             for s in 0..shards {
+                if failed == Some(s) {
+                    continue; // lost media: nothing to roll forward onto
+                }
                 let flips = recover_intents(
                     &images[s],
                     &client.intents[s],
@@ -1183,27 +1282,35 @@ pub fn check_txn_crash_at(
             client.txns.iter().take_while(|x| x.acked_at <= t).count() as u64;
         let mut recovered = Vec::with_capacity(client.logs.len());
         for (s, log) in client.logs.iter().enumerate() {
-            recovered.push(recover(
-                &images[s],
-                &run.fabric.qp(s).mem.layout,
-                log,
-                AppendMode::Compound,
-                replay,
-                scanner,
+            if failed == Some(s) {
+                continue;
+            }
+            recovered.push((
+                s,
+                recover(
+                    &images[s],
+                    &run.fabric.qp(s).mem.layout,
+                    log,
+                    AppendMode::Compound,
+                    replay,
+                    scanner,
+                ),
             ));
         }
-        if recovered.iter().any(|r| r.recovered < acked) {
+        if recovered.iter().any(|(_, r)| r.recovered < acked) {
             rep.durability_violations += 1;
         }
-        let n0 = recovered[0].recovered;
-        if recovered.iter().any(|r| r.recovered != n0) {
-            rep.atomicity_violations += 1;
+        if let Some((_, first)) = recovered.first() {
+            let n0 = first.recovered;
+            if recovered.iter().any(|(_, r)| r.recovered != n0) {
+                rep.atomicity_violations += 1;
+            }
         }
-        for (s, r) in recovered.iter().enumerate() {
+        for (s, r) in &recovered {
             let n = (r.recovered as usize).min(client.txns.len());
             for k in 0..n {
                 let got = &r.records[k * RECORD_BYTES..(k + 1) * RECORD_BYTES];
-                if got != &client.txns[k].records[s][..] {
+                if got != &client.txns[k].records[*s][..] {
                     rep.integrity_violations += 1;
                 }
             }
@@ -1252,6 +1359,57 @@ pub fn txn_crash_sweep(
     report
 }
 
+/// The failover campaign: the crash × shard-loss cross product. Every
+/// instant of a [`txn_crash_sweep`]-style schedule (uniform points plus
+/// the adversarial instants around each transaction's PREPARE completion
+/// and ack) is checked under every loss mode — no shard lost, then each
+/// shard lost in turn ([`check_txn_crash_at_with_loss`]).
+///
+/// For a replicated run the merged report must be clean: no committed
+/// transaction lost, no aborted one resurrected, under any single-shard
+/// loss at any instant. Run it on an unreplicated run to quantify the
+/// gap instead (the coordinator-loss slice reports durability
+/// violations for in-doubt decisions).
+pub fn run_failover_sweep(
+    run: &TxnRun,
+    uniform_points: u64,
+    seed: u64,
+    scanner: &dyn Scanner,
+) -> TxnCrashReport {
+    assert!(
+        run.fabric.qp(0).mem.recording(),
+        "crash sweep requires a recording run"
+    );
+    let shards = run.fabric.shards();
+    let loss_modes: Vec<Option<usize>> =
+        std::iter::once(None).chain((0..shards).map(Some)).collect();
+    let end = run.fabric.makespan();
+    let mut rng = SplitMix64::new(seed);
+    let mut instants: Vec<Nanos> = (0..uniform_points)
+        .map(|_| rng.next_below(end.max(1)))
+        .collect();
+    for client in &run.clients {
+        for x in &client.txns {
+            instants.extend([
+                x.prepared_at,
+                x.prepared_at + 1,
+                x.acked_at.saturating_sub(1),
+                x.acked_at,
+                x.acked_at + 1,
+            ]);
+        }
+    }
+    instants.push(end);
+    let mut report = TxnCrashReport::default();
+    for t in instants {
+        for &failed in &loss_modes {
+            let rep = check_txn_crash_at_with_loss(run, t, failed, scanner);
+            report.merge(&rep);
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1261,6 +1419,10 @@ mod tests {
     use crate::remotelog::client::MethodChoice;
     use crate::remotelog::crashtest::crash_sweep;
     use crate::remotelog::recovery::RustScanner;
+
+    fn loss_at(run: &TxnRun, t: Nanos, failed: usize) -> TxnCrashReport {
+        check_txn_crash_at_with_loss(run, t, Some(failed), &RustScanner)
+    }
 
     fn client(mode: AppendMode, cfg: ServerConfig, record: bool) -> RemoteLog {
         RemoteLog::new(
@@ -1464,6 +1626,7 @@ mod tests {
                 seed: 13,
                 record: true,
                 atomic: true,
+                replicate: false,
             };
             let (run, res) = run_txn_multi_shard(
                 cfg,
@@ -1493,6 +1656,7 @@ mod tests {
             seed: 17,
             record: true,
             atomic: false,
+            replicate: false,
         };
         let (run, _) = run_txn_multi_shard(
             cfg,
@@ -1519,6 +1683,7 @@ mod tests {
             seed: 3,
             record: false,
             atomic: true,
+            replicate: false,
         };
         let (_, a) = run_txn_multi_shard(
             cfg,
@@ -1550,6 +1715,7 @@ mod tests {
             seed: 21,
             record: false,
             atomic,
+            replicate: false,
         };
         let (_, atomic) = run_txn_multi_shard(
             cfg,
@@ -1574,6 +1740,93 @@ mod tests {
             "2PC overhead should be bounded: {} vs {}",
             atomic.span_ns,
             indep.span_ns
+        );
+    }
+
+    #[test]
+    fn replicated_runner_survives_the_loss_cross_product() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            clients: 2,
+            shards: 3,
+            txns_per_client: 6,
+            capacity: 16,
+            seed: 19,
+            record: true,
+            atomic: true,
+            replicate: true,
+        };
+        let (run, _) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        assert!(run.replicate);
+        let rep = run_failover_sweep(&run, 20, 5, &RustScanner);
+        assert!(rep.clean(), "replicated sweep: {rep:?}");
+        // (no-loss + 3 loss modes) × every instant.
+        assert!(rep.crash_points >= 4 * 20);
+    }
+
+    #[test]
+    fn unreplicated_coordinator_loss_drops_in_doubt_decisions() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 23,
+            record: true,
+            atomic: true,
+            replicate: false,
+        };
+        let (run, _) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let coord = run.clients[0].coord_qp;
+        let mut coord_loss = TxnCrashReport::default();
+        let mut other_loss = TxnCrashReport::default();
+        for x in &run.clients[0].txns {
+            // At the ack instant the lazy commit markers are still in
+            // flight: the decision record alone commits the txn.
+            for t in [x.acked_at, x.acked_at + 1] {
+                let rep = loss_at(&run, t, coord);
+                coord_loss.merge(&rep);
+                let rep = loss_at(&run, t, 1 - coord);
+                other_loss.merge(&rep);
+            }
+        }
+        assert!(
+            coord_loss.durability_violations > 0,
+            "losing the unreplicated coordinator must lose acked txns: \
+             {coord_loss:?}"
+        );
+        assert!(
+            other_loss.clean(),
+            "losing a participant shard keeps the decision ring: \
+             {other_loss:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "second shard")]
+    fn replication_requires_two_shards() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            shards: 1,
+            replicate: true,
+            ..Default::default()
+        };
+        let _ = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
         );
     }
 

@@ -148,13 +148,47 @@ pub struct MemoryModel {
     /// (pure-latency benchmarking).
     writes: Vec<WriteEvent>,
     recording: bool,
+    /// Shard-loss fault: when set, this responder's PM media is gone and
+    /// every reconstructed image is blank (see [`MemoryModel::fail`]).
+    failed: bool,
 }
 
 impl MemoryModel {
     /// Build a memory model; `recording` keeps write timelines (needed
     /// for crash images, off for pure-latency benchmarking).
     pub fn new(layout: Layout, recording: bool) -> Self {
-        MemoryModel { layout, writes: Vec::new(), recording }
+        MemoryModel { layout, writes: Vec::new(), recording, failed: false }
+    }
+
+    /// Inject the shard-loss fault: this responder's PM media is lost
+    /// (power failure *plus* device loss, the failure mode coordinator
+    /// failover exists for). Subsequent [`MemoryModel::crash_image`] /
+    /// [`MemoryModel::visible_image`] calls return all-zero images.
+    /// Reversible with [`MemoryModel::restore`] so a test campaign can
+    /// fail each shard in turn over one recorded run.
+    pub fn fail(&mut self) {
+        self.failed = true;
+    }
+
+    /// Clear the shard-loss fault (the write timeline was never
+    /// discarded, so images reconstruct normally again).
+    pub fn restore(&mut self) {
+        self.failed = false;
+    }
+
+    /// Is the shard-loss fault currently injected?
+    pub fn failed(&self) -> bool {
+        self.failed
+    }
+
+    /// The image a lost shard presents to recovery: every byte zero.
+    /// Usable regardless of the fault flag or recording mode (crash
+    /// sweeps use it to model losing shard `s` without mutating state).
+    pub fn failed_image(&self) -> Image {
+        Image {
+            mem: vec![0u8; self.layout.total_size() as usize],
+            pm_size: self.layout.pm_size,
+        }
     }
 
     /// Record one write event (no-op when recording is off).
@@ -194,6 +228,9 @@ impl MemoryModel {
     /// discarded. DRAM contents are then lost: the returned image covers
     /// the *whole* address space but all DRAM bytes are zero.
     pub fn crash_image(&self, t: Nanos, pd: PDomain) -> Image {
+        if self.failed {
+            return self.failed_image();
+        }
         assert!(self.recording, "crash_image requires write recording");
         let mut mem = vec![0u8; self.layout.total_size() as usize];
         for ev in &self.writes {
@@ -214,6 +251,9 @@ impl MemoryModel {
     /// image: DRAM is intact and placement (not persistence) gates
     /// inclusion.
     pub fn visible_image(&self, t: Nanos) -> Image {
+        if self.failed {
+            return self.failed_image();
+        }
         assert!(self.recording, "visible_image requires write recording");
         let mut mem = vec![0u8; self.layout.total_size() as usize];
         for ev in &self.writes {
@@ -402,5 +442,21 @@ mod tests {
     fn crash_image_requires_recording() {
         let m = MemoryModel::new(layout(), false);
         let _ = m.crash_image(0, PDomain::Dmp);
+    }
+
+    #[test]
+    fn fail_shard_blanks_images_until_restored() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x100, 0xAA, 10, 10, 10));
+        assert!(!m.failed());
+        m.fail();
+        assert!(m.failed());
+        assert_eq!(m.crash_image(100, PDomain::Dmp).read(0x100, 1)[0], 0);
+        assert_eq!(m.visible_image(100).read(0x100, 1)[0], 0);
+        let blank = m.failed_image();
+        assert_eq!(blank.len() as u64, m.layout.total_size());
+        assert_eq!(blank.pm_size(), m.layout.pm_size);
+        m.restore();
+        assert_eq!(m.crash_image(100, PDomain::Dmp).read(0x100, 1)[0], 0xAA);
     }
 }

@@ -1,0 +1,119 @@
+//! CLI smoke tests for the `rpmem` binary's usage text: the top-level
+//! summary, the per-subcommand flag listings (`--help` and
+//! `help <command>` — the knob lists for shards/window/batch and
+//! friends), and the unknown-command error path.
+
+use std::process::{Command, Output};
+
+fn rpmem(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_rpmem"))
+        .args(args)
+        .output()
+        .expect("spawn rpmem")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn bare_invocation_and_help_list_every_command() {
+    for args in [&[][..], &["help"][..]] {
+        let out = rpmem(args);
+        assert!(out.status.success(), "{args:?} must exit 0");
+        let text = stdout(&out);
+        for cmd in [
+            "taxonomy",
+            "sweep",
+            "scale",
+            "txn",
+            "failover",
+            "claims",
+            "crash-test",
+            "recover-demo",
+        ] {
+            assert!(text.contains(cmd), "{args:?} output misses `{cmd}`");
+        }
+        assert!(
+            text.contains("--help"),
+            "the summary must advertise per-command help"
+        );
+    }
+}
+
+#[test]
+fn per_command_help_lists_the_knobs() {
+    // (command, flags its usage text must name)
+    let cases: [(&str, &[&str]); 5] = [
+        ("scale", &["--clients", "--shards", "--window", "--batch"]),
+        ("txn", &["--clients", "--shards", "--txns", "--primary"]),
+        ("failover", &["--clients", "--shards", "--txns", "--json"]),
+        ("sweep", &["--domain", "--kind", "--appends", "--transport"]),
+        ("crash-test", &["--appends", "--seeds", "--points", "--scanner"]),
+    ];
+    for (cmd, knobs) in cases {
+        // All three spellings must work: `rpmem <cmd> --help`,
+        // `rpmem help <cmd>`, and `rpmem --help <cmd>`.
+        for args in
+            [vec![cmd, "--help"], vec!["help", cmd], vec!["--help", cmd]]
+        {
+            let out = rpmem(&args);
+            assert!(out.status.success(), "{args:?} must exit 0");
+            let text = stdout(&out);
+            assert!(
+                text.contains(cmd),
+                "{args:?} usage must name the command"
+            );
+            for knob in knobs {
+                assert!(
+                    text.contains(knob),
+                    "{args:?} usage misses knob `{knob}`"
+                );
+            }
+        }
+    }
+    // The failover usage documents the replica count.
+    let text = stdout(&rpmem(&["help", "failover"]));
+    assert!(
+        text.to_lowercase().contains("replica"),
+        "failover usage must document the replication scheme"
+    );
+}
+
+#[test]
+fn command_help_does_not_run_the_command() {
+    // `scale --help` must print usage, not sweep results.
+    let out = rpmem(&["scale", "--help"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    assert!(text.contains("USAGE: rpmem scale"));
+    assert!(
+        !text.contains("Mops"),
+        "--help must not launch the measurement"
+    );
+}
+
+#[test]
+fn unknown_command_prints_usage_and_fails() {
+    let out = rpmem(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown command must exit non-zero");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"));
+    assert!(err.contains("COMMANDS"), "usage text goes to stderr");
+}
+
+#[test]
+fn help_unknown_topic_fails() {
+    let out = rpmem(&["help", "frobnicate"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no such command"));
+}
+
+#[test]
+fn taxonomy_still_runs() {
+    // A real (cheap) command still executes end to end.
+    let out = rpmem(&["taxonomy", "--table", "1"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("DMP"));
+}

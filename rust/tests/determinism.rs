@@ -1,0 +1,160 @@
+//! Bench-path determinism: the simulator guarantees that every
+//! experiment replays bit-for-bit from its seed, so the JSON artifacts
+//! the bench binaries emit must be **byte-identical** across runs. This
+//! test drives the same code paths as `benches/scaling.rs`,
+//! `benches/txn.rs`, and `benches/failover.rs` at their
+//! `RPMEM_BENCH_FAST=1` sizes, twice each, and compares the serialized
+//! artifacts byte for byte — guarding against hidden nondeterminism
+//! (HashMap iteration leaking into results, thread-scheduling-dependent
+//! aggregation, float formatting drift). CI additionally runs the real
+//! bench binaries twice and `cmp`s their artifact files.
+
+use rpmem::coordinator::scaling::{
+    failover_grid_to_json, run_failover_grid, run_saturation_axis,
+    run_scaling_axis, run_txn_grid, scaling_to_json, txn_grid_to_json,
+    ScalingOpts,
+};
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::AppendMode;
+
+/// The `benches/scaling.rs` path at fast-mode size (appends 20000/100).
+fn scaling_artifact() -> String {
+    let opts = ScalingOpts { appends_per_client: 200, ..Default::default() };
+    let clients = [1usize, 2, 4, 8, 16];
+    let scenarios: [(ServerConfig, AppendMode, Primary); 4] = [
+        (
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram),
+            AppendMode::Compound,
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            AppendMode::Singleton,
+            Primary::Send,
+        ),
+    ];
+    let mut all = Vec::new();
+    for (cfg, mode, primary) in scenarios {
+        all.extend(run_scaling_axis(cfg, mode, primary, &clients, &opts));
+    }
+    let sat_cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    for shards in [1usize, 2, 4, 8, 16] {
+        all.extend(run_saturation_axis(
+            sat_cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            shards,
+            &[16],
+            &opts,
+        ));
+    }
+    scaling_to_json(&all).to_string_pretty()
+}
+
+/// The `benches/txn.rs` path at fast-mode size (txns 2000/100).
+fn txn_artifact() -> String {
+    let txns = 20;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let mut all = Vec::new();
+    for (cfg, primary) in [
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            Primary::Send,
+        ),
+    ] {
+        all.extend(run_txn_grid(
+            cfg,
+            primary,
+            &[1, 2, 4],
+            &[1, 2, 4, 8],
+            txns,
+            &opts,
+        ));
+    }
+    txn_grid_to_json(&all).to_string_pretty()
+}
+
+/// The `benches/failover.rs` path at fast-mode size.
+fn failover_artifact() -> String {
+    let txns = 20;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let points = run_failover_grid(
+        cfg,
+        Primary::Write,
+        &[1, 2],
+        &[2, 4, 8],
+        txns,
+        &opts,
+    );
+    failover_grid_to_json(&points).to_string_pretty()
+}
+
+#[test]
+fn scaling_bench_path_is_byte_deterministic() {
+    let a = scaling_artifact();
+    let b = scaling_artifact();
+    assert!(!a.is_empty() && a.contains("throughput_mops"));
+    assert_eq!(a, b, "scaling artifact must be byte-identical");
+}
+
+#[test]
+fn txn_bench_path_is_byte_deterministic() {
+    let a = txn_artifact();
+    let b = txn_artifact();
+    assert!(!a.is_empty() && a.contains("txn_mtps"));
+    assert_eq!(a, b, "txn artifact must be byte-identical");
+}
+
+#[test]
+fn failover_bench_path_is_byte_deterministic() {
+    let a = failover_artifact();
+    let b = failover_artifact();
+    assert!(!a.is_empty() && a.contains("replicated_mtps"));
+    assert_eq!(a, b, "failover artifact must be byte-identical");
+}
+
+/// Different seeds must actually change the artifact — otherwise the
+/// byte-equality assertions above would pass vacuously on constant
+/// output.
+#[test]
+fn seeds_reach_the_artifact() {
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let mk = |seed| ScalingOpts {
+        appends_per_client: 200,
+        seed,
+        ..Default::default()
+    };
+    let pts_a = run_scaling_axis(
+        cfg,
+        AppendMode::Singleton,
+        Primary::Write,
+        &[2],
+        &mk(42),
+    );
+    let pts_b = run_scaling_axis(
+        cfg,
+        AppendMode::Singleton,
+        Primary::Write,
+        &[2],
+        &mk(43),
+    );
+    let a = scaling_to_json(&pts_a).to_string_pretty();
+    let b = scaling_to_json(&pts_b).to_string_pretty();
+    assert_ne!(a, b, "jitter seed must influence the measurements");
+}

@@ -1,0 +1,273 @@
+//! Coordinator-failover campaign (acceptance criteria for the
+//! `persist::failover` decision-replication layer).
+//!
+//! The sweep drives the **crash × shard-loss cross product**: for every
+//! configuration of the 12-entry taxonomy and every crash instant
+//! (uniform points plus the adversarial instants around each
+//! transaction's PREPARE completion and ack), each shard is failed in
+//! turn — its PM blanked outright — and recovery must still be
+//! all-or-nothing with no committed transaction lost and no aborted one
+//! resurrected. The negative control shows the gap: unreplicated 2PC
+//! loses in-doubt decisions (including acked transactions whose lazy
+//! commit markers were still in flight) the moment the coordinator
+//! shard dies. The KV path checks the same contract through
+//! `ShardedKv::put_txn` with the replication knob on.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::kvstore::ShardedKv;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::persist::txn::plan_txn_method;
+use rpmem::remotelog::pipeline::{
+    check_txn_crash_at_with_loss, run_failover_sweep, run_txn_multi_shard,
+    TxnCrashReport, TxnRun, TxnRunOpts,
+};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::util::rng::SplitMix64;
+
+fn loss_at(run: &TxnRun, t: u64, failed: usize) -> TxnCrashReport {
+    check_txn_crash_at_with_loss(run, t, Some(failed), &RustScanner)
+}
+
+fn replicated_opts(seed: u64) -> TxnRunOpts {
+    TxnRunOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: 6,
+        capacity: 16,
+        seed,
+        record: true,
+        atomic: true,
+        replicate: true,
+    }
+}
+
+/// Every Table-1 configuration: the replicated transactional runner's
+/// crash × shard-loss sweep must be clean — all-or-nothing recovery with
+/// every acked transaction intact under the loss of ANY single shard at
+/// ANY crash instant.
+#[test]
+fn failover_campaign_all_configs() {
+    for cfg in ServerConfig::table1() {
+        let opts = replicated_opts(47);
+        let (run, res) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        assert_eq!(res.txns, 12);
+        assert_eq!(run.txn_method(), plan_txn_method(&cfg, Primary::Write));
+        let rep = run_failover_sweep(&run, 20, 9, &RustScanner);
+        assert!(rep.clean(), "{}: {rep:?}", cfg.label());
+        // (no loss + one mode per shard) × every instant of the schedule.
+        assert!(
+            rep.crash_points >= (1 + opts.shards as u64) * 20,
+            "{}: thin sweep ({} points)",
+            cfg.label(),
+            rep.crash_points
+        );
+    }
+}
+
+/// Every primary op class on one canonical config — the witness write
+/// goes through the same planner method substitution as the other 2PC
+/// phases, so replay-class SEND plans must also survive the cross
+/// product.
+#[test]
+fn failover_campaign_all_primaries_canonical() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    for primary in Primary::ALL {
+        let (run, _) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            primary,
+            &replicated_opts(53),
+        );
+        let rep = run_failover_sweep(&run, 20, 11, &RustScanner);
+        assert!(rep.clean(), "{}: {rep:?}", primary.name());
+    }
+}
+
+/// The negative control: WITHOUT replication, killing the coordinator
+/// shard at the ack instant (lazy commit markers still in flight) loses
+/// acked transactions — the in-doubt decisions died with the shard.
+/// Losing a non-coordinator shard at the same instants is harmless, and
+/// flipping the replication knob on closes the gap at exactly the same
+/// instants.
+#[test]
+fn unreplicated_coordinator_loss_is_the_gap_replication_closes() {
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let mk = |replicate| TxnRunOpts {
+        clients: 1,
+        shards: 2,
+        txns_per_client: 10,
+        capacity: 16,
+        seed: 29,
+        record: true,
+        atomic: true,
+        replicate,
+    };
+    let (plain, _) = run_txn_multi_shard(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(false),
+    );
+    let (replicated, _) = run_txn_multi_shard(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(true),
+    );
+    let coord = plain.clients[0].coord_qp;
+    let mut lost = TxnCrashReport::default();
+    let mut participant_loss = TxnCrashReport::default();
+    let mut healed = TxnCrashReport::default();
+    for (px, rx) in
+        plain.clients[0].txns.iter().zip(&replicated.clients[0].txns)
+    {
+        for t in [px.acked_at, px.acked_at + 1] {
+            lost.merge(&loss_at(&plain, t, coord));
+            participant_loss.merge(&loss_at(&plain, t, 1 - coord));
+        }
+        for t in [rx.acked_at, rx.acked_at + 1] {
+            healed.merge(&loss_at(&replicated, t, coord));
+        }
+    }
+    assert!(
+        lost.durability_violations > 0,
+        "unreplicated 2PC must lose in-doubt decisions with the \
+         coordinator shard: {lost:?}"
+    );
+    assert!(
+        participant_loss.clean(),
+        "participant loss never touches the decision ring: \
+         {participant_loss:?}"
+    );
+    assert!(
+        healed.clean(),
+        "replication must close the coordinator-loss gap: {healed:?}"
+    );
+}
+
+/// KV path: a mixed workload of plain puts and replicated cross-shard
+/// transactional puts, with each shard failed in turn at a dense grid of
+/// crash instants. For keys homed on surviving shards: acked state is
+/// durable, transactions are all-or-nothing over their surviving keys,
+/// and recovered values are never torn or resurrected.
+#[test]
+fn replicated_kv_survives_every_single_shard_loss() {
+    for cfg in [
+        ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Pm),
+    ] {
+        let mut kv = ShardedKv::new(cfg, TimingModel::default(), 64, 3, 23, true)
+            .with_decision_replication(true);
+        let mut rng = SplitMix64::new(5);
+        for i in 0..18u64 {
+            if i % 3 == 0 {
+                kv.put(rng.next_below(20), format!("p{i}").as_bytes());
+            } else {
+                let items: Vec<(u64, Vec<u8>)> = (0..3)
+                    .map(|j| {
+                        (
+                            rng.next_below(20),
+                            format!("t{i}-{j}").into_bytes(),
+                        )
+                    })
+                    .collect();
+                kv.put_txn(&items);
+            }
+        }
+        let end = kv.makespan();
+        for failed in 0..kv.shard_count() {
+            kv.fail_shard(failed);
+            for i in 0..60u64 {
+                let t = end * i / 59;
+                let state = kv.recover_all_at(t);
+                // Durability on surviving shards.
+                for (key, acked) in kv.acked_versions_at(t) {
+                    if kv.shard_for(key) == failed {
+                        continue; // lost media, not lost decisions
+                    }
+                    let got = state.get(&key).unwrap_or_else(|| {
+                        panic!(
+                            "{} loss={failed}: acked key {key} missing at \
+                             t={t}",
+                            cfg.label()
+                        )
+                    });
+                    assert!(
+                        got.0 >= acked.version,
+                        "{} loss={failed}: key {key} regressed",
+                        cfg.label()
+                    );
+                }
+                // All-or-nothing over each txn's surviving keys.
+                for txn in &kv.txns {
+                    let vis: Vec<bool> = txn
+                        .puts
+                        .iter()
+                        .filter(|&&(key, _)| kv.shard_for(key) != failed)
+                        .map(|&(key, version)| {
+                            state
+                                .get(&key)
+                                .map(|(v, _)| *v >= version)
+                                .unwrap_or(false)
+                        })
+                        .collect();
+                    assert!(
+                        vis.iter().all(|&v| v) || vis.iter().all(|&v| !v),
+                        "{} loss={failed}: txn {} partial at t={t}: {vis:?}",
+                        cfg.label(),
+                        txn.txn_id
+                    );
+                }
+                // Integrity: whatever was recovered matches the oracle.
+                for (key, (v, val)) in &state {
+                    let oracle = (0..kv.shard_count())
+                        .flat_map(|s| kv.shard(s).puts.iter())
+                        .find(|p| p.key == *key && p.version == *v)
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "{} loss={failed}: key {key} recovered \
+                                 never-put v{v}",
+                                cfg.label()
+                            )
+                        });
+                    assert_eq!(*val, oracle.value, "{}", cfg.label());
+                }
+            }
+            kv.restore_shard(failed);
+        }
+    }
+}
+
+/// The replication knob changes the ack point but not the quiesced
+/// state, and the shard-loss fault is fully reversible.
+#[test]
+fn fault_is_reversible_and_state_converges() {
+    let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+    let mut kv = ShardedKv::new(cfg, TimingModel::default(), 64, 4, 3, true)
+        .with_decision_replication(true);
+    for k in 0..32u64 {
+        if k % 2 == 0 {
+            kv.put(k, format!("v{k}").as_bytes());
+        } else {
+            kv.put_txn(&[(k, format!("x{k}").into_bytes())]);
+        }
+    }
+    let full = kv.recover_all_at(kv.makespan());
+    assert_eq!(full.len(), 32);
+    kv.fail_shard(2);
+    let degraded = kv.recover_all_at(kv.makespan());
+    assert!(degraded.len() < 32, "shard 2 held some keys");
+    for (key, v) in &degraded {
+        assert_ne!(kv.shard_for(*key), 2);
+        assert_eq!(full.get(key), Some(v), "survivors must match");
+    }
+    kv.restore_shard(2);
+    assert_eq!(kv.recover_all_at(kv.makespan()), full);
+}

@@ -34,6 +34,7 @@ fn txn_campaign_all_configs_all_primaries() {
                 seed: 41,
                 record: true,
                 atomic: true,
+                replicate: false,
             };
             let (run, res) = run_txn_multi_shard(
                 cfg,
@@ -68,6 +69,7 @@ fn txn_campaign_scaled_canonical() {
         seed: 97,
         record: true,
         atomic: true,
+        replicate: false,
     };
     let (run, _) =
         run_txn_multi_shard(cfg, TimingModel::default(), Primary::Write, &opts);
@@ -89,6 +91,7 @@ fn independent_updates_tear_where_txns_do_not() {
         seed: 29,
         record: true,
         atomic,
+        replicate: false,
     };
     let (indep, _) = run_txn_multi_shard(
         cfg,
@@ -199,6 +202,7 @@ fn in_doubt_window_resolves_presumed_abort() {
         seed: 3,
         record: true,
         atomic: true,
+        replicate: false,
     };
     let (run, _) =
         run_txn_multi_shard(cfg, TimingModel::default(), Primary::Write, &opts);
