@@ -1,0 +1,140 @@
+//! Group-commit amortization: concurrent transactions' decision records
+//! released as shared doorbell trains with one persistence point per
+//! group (`persist::groupcommit`), vs the per-transaction 2PC baseline,
+//! across group size × clients × ALL 12 taxonomy configurations.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_GROUP_OUT`, default
+//! `group_results.json`). Three invariants are asserted:
+//!
+//! * **group size 1 is the baseline, exactly** — the degenerate
+//!   schedule replays the ungrouped protocol op for op, so its
+//!   throughput and decision cost must equal `run_txn_multi_shard`'s
+//!   bit for bit;
+//! * **the perf guard** — amortized per-transaction decision cost is
+//!   *strictly decreasing* from group size 1 → 4 → max for every
+//!   (config, clients) scenario (the group-commit analogue of the
+//!   scaling bench's monotonicity assert: a regression here means the
+//!   shared persistence point stopped amortizing);
+//! * grouping never loses throughput against the per-transaction
+//!   baseline.
+//!
+//! A small recording run additionally sweeps crashes and checks the
+//! committed prefix only ever lands on group boundaries, so the bench
+//! can never report an amortization whose recovery story is broken.
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::bench::scaled;
+use rpmem::coordinator::scaling::{
+    group_grid_to_json, render_group_grid, run_group_grid, ScalingOpts,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::pipeline::{
+    assert_group_boundaries, run_txn_grouped, txn_crash_sweep, GroupRunOpts,
+};
+use rpmem::remotelog::recovery::RustScanner;
+use std::time::Instant;
+
+fn main() {
+    let txns = scaled(2000);
+    let groups = [1usize, 4, 16];
+    let clients = [1usize, 2];
+    let shards = 4usize;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    println!(
+        "group commit, {txns} txns/client, {shards} shards, groups \
+         {groups:?} x clients {clients:?} x 12 configs\n"
+    );
+
+    let t0 = Instant::now();
+    let points =
+        run_group_grid(Primary::Write, &groups, &clients, shards, txns, &opts);
+    let wall = t0.elapsed();
+    let title = "group commit across the taxonomy — shared vs per-txn \
+                 decision trains";
+    println!("{}", render_group_grid(title, &points));
+    println!("  [harness: {:.2?} wall-clock]\n", wall);
+
+    // Scenario = (config, clients); group sizes vary fastest.
+    for scenario in points.chunks(groups.len()) {
+        let label = format!(
+            "{} x {} clients",
+            scenario[0].config.label(),
+            scenario[0].clients
+        );
+        let base = &scenario[0];
+        assert_eq!(base.group, 1);
+        assert_eq!(
+            base.grouped_mtps,
+            base.ungrouped_mtps,
+            "{label}: group size 1 must BE the ungrouped protocol"
+        );
+        assert_eq!(
+            base.decision_ns_per_txn,
+            base.ungrouped_decision_ns_per_txn,
+            "{label}: group size 1 decision cost must match the baseline"
+        );
+        for pair in scenario.windows(2) {
+            assert!(
+                pair[1].decision_ns_per_txn < pair[0].decision_ns_per_txn,
+                "{label}: decision cost must strictly amortize \
+                 {} -> {}: {:.1} !< {:.1}",
+                pair[0].group,
+                pair[1].group,
+                pair[1].decision_ns_per_txn,
+                pair[0].decision_ns_per_txn
+            );
+        }
+        for p in scenario {
+            assert!(
+                p.grouped_mtps >= p.ungrouped_mtps * 0.999,
+                "{label}: group {} lost throughput: {:.3} vs {:.3}",
+                p.group,
+                p.grouped_mtps,
+                p.ungrouped_mtps
+            );
+        }
+    }
+
+    // Correctness smoke: the amortization we just measured must come
+    // with whole-group crash atomicity.
+    let gopts = GroupRunOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 16,
+        seed: 31,
+        record: true,
+        replicate: false,
+        group: GroupCommitOpts {
+            max_group: 4,
+            max_hold_ns: 1_000_000,
+            idle_close: true,
+        },
+    };
+    let (run, res) = run_txn_grouped(
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        TimingModel::default(),
+        Primary::Write,
+        &gopts,
+    );
+    let rep = txn_crash_sweep(&run, 40, 7, &RustScanner);
+    assert!(rep.clean(), "group-commit crash sweep: {rep:?}");
+    let end = run.fabric.makespan();
+    let instants: Vec<u64> = (0..=100).map(|i| end * i / 100).collect();
+    assert_group_boundaries(&run, &res, &instants);
+    println!(
+        "group sweep clean over {} crash points; prefixes on group \
+         boundaries",
+        rep.crash_points
+    );
+
+    let out = std::env::var("RPMEM_GROUP_OUT")
+        .unwrap_or_else(|_| "group_results.json".to_string());
+    std::fs::write(&out, group_grid_to_json(&points).to_string_pretty())
+        .expect("write group JSON artifact");
+    println!("wrote {out} ({} points)", points.len());
+}

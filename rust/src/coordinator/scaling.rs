@@ -20,13 +20,22 @@
 //!   ([`crate::persist::failover`]) vs plain 2PC: the replication
 //!   latency tax of moving the ack point to the witness shard's
 //!   persistence point (`benches/failover.rs` persists the table).
+//! * **group-commit axis** ([`run_group_grid`]) — group size × clients
+//!   across ALL 12 taxonomy configurations: concurrent transactions'
+//!   decision records coalesced into shared doorbell trains
+//!   ([`crate::persist::groupcommit`]) vs the per-transaction 2PC
+//!   baseline — the amortized decision-persistence cost
+//!   (`benches/group.rs` persists the table and asserts the
+//!   amortization is strictly monotone in the group size).
 
 use crate::fabric::timing::TimingModel;
 use crate::persist::config::ServerConfig;
+use crate::persist::groupcommit::GroupCommitOpts;
 use crate::persist::method::Primary;
 use crate::remotelog::client::{AppendMode, MethodChoice};
 use crate::remotelog::pipeline::{
-    run_multi_client, run_txn_multi_shard, ShardedRunOpts, TxnRunOpts,
+    run_multi_client, run_txn_grouped, run_txn_multi_shard, GroupRunOpts,
+    ShardedRunOpts, TxnRunOpts,
 };
 use crate::util::json::Json;
 use std::thread;
@@ -573,6 +582,234 @@ pub fn failover_grid_to_json(points: &[FailoverPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
+// ---------------------------------------------------------------------
+// Group-commit axis: shared decision trains vs per-txn 2PC decisions —
+// the amortized decision-persistence cost.
+// ---------------------------------------------------------------------
+
+/// One (config, clients, group size) group-commit measurement: the same
+/// transaction stream committed with grouped decision trains
+/// ([`crate::persist::groupcommit`]) and with per-transaction 2PC
+/// decisions (the PR 3 baseline).
+#[derive(Debug, Clone)]
+pub struct GroupPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Human-readable 2PC phase-method name.
+    pub method_name: String,
+    /// Coordinator count.
+    pub clients: usize,
+    /// QP count (every transaction spans all of them).
+    pub shards: usize,
+    /// Group-size cap (`max_group`; 1 = the ungrouped protocol).
+    pub group: usize,
+    /// Total transactions across all clients.
+    pub txns: u64,
+    /// Decision trains released across all clients.
+    pub groups_formed: u64,
+    /// Group-commit throughput (million txns per simulated second).
+    pub grouped_mtps: f64,
+    /// Per-transaction-decision baseline throughput for the same
+    /// stream.
+    pub ungrouped_mtps: f64,
+    /// Mean grouped commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 grouped commit latency (ns).
+    pub p99_commit_ns: u64,
+    /// Amortized decision-persistence cost per transaction (ns) under
+    /// group commit — the shared point's cost divided across its group.
+    pub decision_ns_per_txn: f64,
+    /// The baseline's decision cost per transaction (ns): one full
+    /// train + persistence point each.
+    pub ungrouped_decision_ns_per_txn: f64,
+}
+
+impl GroupPoint {
+    /// The amortization win: baseline / grouped decision cost per
+    /// transaction (≈ 1 at group size 1, growing with the group).
+    pub fn amortization_factor(&self) -> f64 {
+        self.ungrouped_decision_ns_per_txn / self.decision_ns_per_txn
+    }
+
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("method", self.method_name.clone().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("group", self.group.into())
+            .set("txns", self.txns.into())
+            .set("groups_formed", self.groups_formed.into())
+            .set("grouped_mtps", self.grouped_mtps.into())
+            .set("ungrouped_mtps", self.ungrouped_mtps.into())
+            .set("mean_commit_ns", self.mean_commit_ns.into())
+            .set("p99_commit_ns", self.p99_commit_ns.into())
+            .set("decision_ns_per_txn", self.decision_ns_per_txn.into())
+            .set(
+                "ungrouped_decision_ns_per_txn",
+                self.ungrouped_decision_ns_per_txn.into(),
+            )
+            .set("amortization_factor", self.amortization_factor().into());
+        j
+    }
+}
+
+/// The per-transaction-decision control a grouped run is measured
+/// against. It does not depend on the group size, so the grid runs it
+/// once per (config, clients) scenario and shares it across the group
+/// axis.
+fn run_group_baseline(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> TxnRunResult {
+    let topts = TxnRunOpts {
+        clients,
+        shards,
+        txns_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+        atomic: true,
+        replicate: false,
+    };
+    run_txn_multi_shard(cfg, opts.timing.clone(), primary, &topts).1
+}
+
+/// One grouped measurement against a precomputed baseline. The hold
+/// timer is pinned generously so `group` (the size cap) is the binding
+/// policy — the axis under measurement.
+fn grouped_point(
+    cfg: ServerConfig,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    group: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+    base: &TxnRunResult,
+) -> GroupPoint {
+    let gopts = GroupRunOpts {
+        clients,
+        shards,
+        txns_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+        replicate: false,
+        group: GroupCommitOpts {
+            max_group: group,
+            max_hold_ns: 1_000_000,
+            idle_close: true,
+        },
+    };
+    let (grun, gres) =
+        run_txn_grouped(cfg, opts.timing.clone(), primary, &gopts);
+    GroupPoint {
+        config: cfg,
+        method_name: grun.txn_method().name().to_string(),
+        clients,
+        shards,
+        group,
+        txns: gres.txns,
+        groups_formed: gres.groups,
+        grouped_mtps: gres.throughput_mtps(),
+        ungrouped_mtps: base.throughput_mtps(),
+        mean_commit_ns: gres.mean_latency_ns,
+        p99_commit_ns: gres.p99_latency_ns,
+        decision_ns_per_txn: gres.decision_ns_per_txn(),
+        ungrouped_decision_ns_per_txn: base.decision_ns_per_txn(),
+    }
+}
+
+/// The group-commit grid: **all 12 taxonomy configurations** × every
+/// (clients, group size) combination at a fixed shard count, measured
+/// in parallel threads — the amortized decision-cost table. The
+/// ungrouped baseline is simulated once per (config, clients) scenario
+/// and shared across the group axis (it is group-size-independent).
+pub fn run_group_grid(
+    primary: Primary,
+    groups_list: &[usize],
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<GroupPoint> {
+    let scenarios: Vec<(ServerConfig, usize)> = ServerConfig::table1()
+        .into_iter()
+        .flat_map(|cfg| clients_list.iter().map(move |&c| (cfg, c)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(cfg, clients)| {
+                scope.spawn(move || {
+                    let base = run_group_baseline(
+                        cfg,
+                        primary,
+                        clients,
+                        shards,
+                        txns_per_client,
+                        opts,
+                    );
+                    groups_list
+                        .iter()
+                        .map(|&g| {
+                            grouped_point(
+                                cfg,
+                                primary,
+                                clients,
+                                shards,
+                                g,
+                                txns_per_client,
+                                opts,
+                                &base,
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("group scenario panicked"))
+            .collect()
+    })
+}
+
+/// Render a group-commit grid (grouped vs per-txn decision cost).
+pub fn render_group_grid(title: &str, points: &[GroupPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<14} {:<8} {:<6} {:>12} {:>12} {:>13} {:>9}\n",
+        "config", "clients", "group", "grouped", "per-txn", "decide/txn", "amort"
+    ));
+    out.push_str(&"-".repeat(80));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<14} {:<8} {:<6} {:>7.3} Mtps {:>7.3} Mtps {:>10.2} us {:>8.2}x\n",
+            p.config.label(),
+            p.clients,
+            p.group,
+            p.grouped_mtps,
+            p.ungrouped_mtps,
+            p.decision_ns_per_txn / 1e3,
+            p.amortization_factor(),
+        ));
+    }
+    out
+}
+
+/// Serialize a group-commit grid for the JSON artifact.
+pub fn group_grid_to_json(points: &[GroupPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -708,6 +945,49 @@ mod tests {
         assert_eq!(j.as_arr().unwrap().len(), 4);
         assert!(j.as_arr().unwrap()[0].get("latency_tax_ns").is_some());
         assert!(render_failover_grid("t", &pts).contains("overhead"));
+    }
+
+    #[test]
+    fn group_grid_covers_all_configs_and_amortizes() {
+        let opts = ScalingOpts { capacity: 64, ..Default::default() };
+        let pts = run_group_grid(Primary::Write, &[1, 4], &[1], 2, 40, &opts);
+        // 12 taxonomy configs × 1 client count × 2 group sizes.
+        assert_eq!(pts.len(), 24);
+        let configs: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.config.label()).collect();
+        assert_eq!(configs.len(), 12, "every taxonomy row measured");
+        for p in &pts {
+            assert!(p.grouped_mtps > 0.0);
+            assert!(p.decision_ns_per_txn > 0.0);
+            if p.group == 1 {
+                // The degenerate schedule IS the baseline protocol.
+                assert_eq!(
+                    p.grouped_mtps,
+                    p.ungrouped_mtps,
+                    "{}",
+                    p.config.label()
+                );
+                assert_eq!(
+                    p.decision_ns_per_txn,
+                    p.ungrouped_decision_ns_per_txn,
+                    "{}",
+                    p.config.label()
+                );
+                assert_eq!(p.groups_formed, p.txns);
+            } else {
+                assert!(
+                    p.amortization_factor() > 1.0,
+                    "{} group {}: no amortization ({}x)",
+                    p.config.label(),
+                    p.group,
+                    p.amortization_factor()
+                );
+            }
+        }
+        let j = group_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 24);
+        assert!(j.as_arr().unwrap()[0].get("amortization_factor").is_some());
+        assert!(render_group_grid("t", &pts).contains("amort"));
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //! flips become the transaction's commit markers, and
 //! [`ShardedKv::recover_all_at`] resolves in-doubt transactions
 //! (presumed abort) before reading the buckets.
+//! [`ShardedKv::put_txn_grouped`] commits a *batch* of independent
+//! transactions with group commit ([`crate::persist::groupcommit`]):
+//! their decision records coalesce into shared doorbell trains, one
+//! persistence point per group.
 
 use crate::fabric::engine::Fabric;
 use crate::fabric::timing::{Nanos, TimingModel};
@@ -31,15 +35,17 @@ use crate::persist::config::ServerConfig;
 use crate::persist::exec::{
     exec_compound, post_compound_batch, Update, WaitPoint,
 };
-use crate::persist::failover::{
-    post_decision_replicated, recover_decisions_merged, witness_for,
+use crate::persist::failover::{recover_decisions_merged, witness_for};
+use crate::persist::groupcommit::{
+    post_decision_group, post_decision_group_replicated, GroupCommitOpts,
+    GroupScheduler,
 };
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::plan_compound;
 use crate::persist::txn::{
-    plan_txn_method, post_commit, post_decision, post_prepare,
-    recover_decisions, recover_intents, roll_forward, sync_clock, CommitFlip,
-    IntentRecord, SlotRing, DECISION_BYTES, INTENT_BYTES, MAX_TXN_FLIPS,
+    plan_txn_method, post_commit, post_prepare, recover_decisions,
+    recover_intents, roll_forward, sync_clock, CommitFlip, IntentRecord,
+    SlotRing, DECISION_BYTES, INTENT_BYTES, MAX_TXN_FLIPS,
 };
 use crate::server::memory::{Image, Layout};
 use crate::util::rng::mix;
@@ -159,6 +165,16 @@ pub struct KvTxnRecord {
     /// The decision record's persistence point: the transaction's
     /// atomic durability point.
     pub acked_at: Nanos,
+}
+
+/// One staged (not yet persisted) multi-key transaction: per-shard
+/// payload updates, commit markers, and oracle metadata, with versions
+/// and buckets already assigned.
+struct StagedTxn {
+    txn_id: u64,
+    payload: Vec<Vec<Update>>,
+    flips: Vec<Vec<CommitFlip>>,
+    meta: Vec<(u64, usize, u32, Vec<u8>)>,
 }
 
 /// A replicated KV client bound to one simulated responder.
@@ -588,6 +604,141 @@ impl ShardedKv {
         if items.is_empty() {
             return self.makespan();
         }
+        let st = self.stage_txn(items);
+
+        // PREPARE every participating shard (parallel virtual time).
+        let wps = self.post_prepares(&st);
+        let mut prepared_at = 0;
+        for (s, wp) in wps.iter().enumerate() {
+            if let Some(wp) = wp {
+                prepared_at = prepared_at.max(wp.wait(&mut self.shards[s].fab));
+            }
+        }
+
+        // DECIDE on the coordinator shard: the transaction's atomic
+        // durability point and the application's ack. With replication
+        // on, the record is mirrored to the witness shard and the ack
+        // moves to the max of BOTH persistence points, so the decision
+        // survives any single-shard loss from the ack onward.
+        let acked = self.decide_group(st.txn_id, 1, prepared_at);
+
+        // COMMIT: release the version words. Truly lazy — posted after
+        // the decision point but never awaited: correctness needs only
+        // posting order (a durable marker implies a durable decision),
+        // and recovery roll-forward heals markers a crash catches
+        // in flight.
+        self.commit_flips(&st.flips, acked);
+        self.record_staged(st, prepared_at, acked);
+        acked
+    }
+
+    /// Atomically replicate a *batch* of independent multi-key
+    /// transactions with **group commit**
+    /// ([`crate::persist::groupcommit`]): every transaction PREPAREs as
+    /// usual, but all PREPARE trains post before any is awaited (the
+    /// whole batch is concurrently in flight), and the decision records
+    /// release in groups — one shared doorbell train and ONE shared
+    /// persistence point per group, scheduled by `gopts` (size cap /
+    /// hold timer / idle close). Every transaction acks at its group's
+    /// point; recovery ([`ShardedKv::recover_all_at`]) is unchanged,
+    /// and a crash can only expose whole groups (the committed prefix
+    /// always lands on a group boundary).
+    ///
+    /// Member transactions must be **write-disjoint**: a key may appear
+    /// in only one transaction of the batch (duplicates *within* a
+    /// transaction still keep the last write). The whole batch stages
+    /// before any decision, and a key with two in-flight versions would
+    /// occupy both of its bucket's A/B slots at once — clobbering the
+    /// committed fallback slot the crash contract depends on. `put_txn`
+    /// never has this problem (one in-flight version per key at a
+    /// time), so racing writers to one key belong in separate batches.
+    ///
+    /// Returns each transaction's ack time in input order — members of
+    /// one group share it. Panics on an empty member transaction or a
+    /// key spanning transactions. `gopts.max_group == 1` is
+    /// per-transaction commit, unchanged.
+    pub fn put_txn_grouped(
+        &mut self,
+        txns: &[Vec<(u64, Vec<u8>)>],
+        gopts: &GroupCommitOpts,
+    ) -> Vec<Nanos> {
+        if txns.is_empty() {
+            return Vec::new();
+        }
+        assert!(
+            txns.iter().all(|t| !t.is_empty()),
+            "empty transaction in a commit group"
+        );
+        let mut seen: std::collections::HashSet<u64> =
+            std::collections::HashSet::new();
+        for t in txns {
+            let keys: std::collections::HashSet<u64> =
+                t.iter().map(|(k, _)| *k).collect();
+            for k in keys {
+                assert!(
+                    seen.insert(k),
+                    "key {k:#x} spans transactions in one commit-group \
+                     batch; staged A/B slots allow one in-flight version \
+                     per key"
+                );
+            }
+        }
+        let staged: Vec<StagedTxn> =
+            txns.iter().map(|t| self.stage_txn(t)).collect();
+
+        // PREPARE everything before observing any point: the whole
+        // batch is in flight together, feeding the scheduler.
+        let wpss: Vec<Vec<Option<WaitPoint>>> =
+            staged.iter().map(|st| self.post_prepares(st)).collect();
+        let mut prepared = vec![0u64; staged.len()];
+        for (i, wps) in wpss.iter().enumerate() {
+            for (s, wp) in wps.iter().enumerate() {
+                if let Some(wp) = wp {
+                    prepared[i] =
+                        prepared[i].max(wp.wait(&mut self.shards[s].fab));
+                }
+            }
+        }
+
+        // Schedule the decision groups, then release each as one
+        // shared train (plus its group marker trains).
+        let mut sched = GroupScheduler::new(*gopts);
+        let mut groups = Vec::new();
+        for (i, st) in staged.iter().enumerate() {
+            if let Some(g) = sched.offer(st.txn_id, prepared[i]) {
+                groups.push(g);
+            }
+        }
+        if let Some(g) = sched.drain() {
+            groups.push(g);
+        }
+        let first_id = staged[0].txn_id;
+        let nshards = self.shards.len();
+        let mut acks = vec![0u64; staged.len()];
+        for g in &groups {
+            let acked = self.decide_group(g.first, g.len, g.release_at);
+            let mut flips: Vec<Vec<CommitFlip>> = vec![Vec::new(); nshards];
+            for k in 0..g.len as u64 {
+                let i = (g.first + k - first_id) as usize;
+                acks[i] = acked;
+                for s in 0..nshards {
+                    flips[s].extend_from_slice(&staged[i].flips[s]);
+                }
+            }
+            self.commit_flips(&flips, acked);
+        }
+        for (i, st) in staged.into_iter().enumerate() {
+            self.record_staged(st, prepared[i], acks[i]);
+        }
+        acks
+    }
+
+    /// Stage one multi-key transaction: dedupe (last write wins),
+    /// allocate the transaction id, assign versions and buckets, and
+    /// build each participating shard's payload updates plus commit
+    /// markers.
+    fn stage_txn(&mut self, items: &[(u64, Vec<u8>)]) -> StagedTxn {
+        debug_assert!(!items.is_empty());
         // Last write wins within one transaction.
         let mut order: Vec<u64> = Vec::new();
         let mut latest: HashMap<u64, &[u8]> = HashMap::new();
@@ -603,14 +754,6 @@ impl ShardedKv {
             !recording || txn_id < KV_TXN_SLOTS,
             "txn ring wraparound would invalidate the crash oracle"
         );
-        let (method, intent_ring, decision_ring, witness_ring) = (
-            self.txn_method,
-            self.intent_ring,
-            self.decision_ring,
-            self.witness_ring,
-        );
-
-        // Stage per-shard payloads + commit markers.
         let nshards = self.shards.len();
         let mut payload: Vec<Vec<Update>> = vec![Vec::new(); nshards];
         let mut flips: Vec<Vec<CommitFlip>> = vec![Vec::new(); nshards];
@@ -642,57 +785,72 @@ impl ShardedKv {
                 f.len()
             );
         }
+        StagedTxn { txn_id, payload, flips, meta }
+    }
 
-        // PREPARE every participating shard (parallel virtual time).
-        let mut wps: Vec<Option<WaitPoint>> = vec![None; nshards];
-        for s in 0..nshards {
-            if payload[s].is_empty() {
+    /// PREPARE every participating shard of a staged transaction: post
+    /// the payload + intent trains without waiting, so callers can
+    /// overlap in-flight transactions before observing the points.
+    fn post_prepares(&mut self, st: &StagedTxn) -> Vec<Option<WaitPoint>> {
+        let method = self.txn_method;
+        let intent_ring = self.intent_ring;
+        let mut wps: Vec<Option<WaitPoint>> = vec![None; self.shards.len()];
+        for s in 0..self.shards.len() {
+            if st.payload[s].is_empty() {
                 continue;
             }
             let intent = IntentRecord {
-                txn_id,
+                txn_id: st.txn_id,
                 shard: s as u32,
-                flips: flips[s].clone(),
+                flips: st.flips[s].clone(),
             };
             let shard = &mut self.shards[s];
             let msg = shard.next_msg;
-            shard.next_msg += payload[s].len() as u32 + 1;
+            shard.next_msg += st.payload[s].len() as u32 + 1;
             wps[s] = Some(post_prepare(
                 &mut shard.fab,
                 method,
-                &payload[s],
+                &st.payload[s],
                 &intent,
-                intent_ring.addr(txn_id),
+                intent_ring.addr(st.txn_id),
                 msg,
             ));
         }
-        let mut prepared_at = 0;
-        for (s, wp) in wps.iter().enumerate() {
-            if let Some(wp) = wp {
-                prepared_at = prepared_at.max(wp.wait(&mut self.shards[s].fab));
-            }
-        }
+        wps
+    }
 
-        // DECIDE on the coordinator shard: the transaction's atomic
-        // durability point and the application's ack. With replication
-        // on, the record is mirrored to the witness shard and the ack
-        // moves to the max of BOTH persistence points, so the decision
-        // survives any single-shard loss from the ack onward.
-        let acked = if self.replicate && nshards >= 2 {
+    /// GROUP DECIDE on the coordinator shard for transactions
+    /// `first .. first + len`: one doorbell train, one shared
+    /// persistence point — the returned ack covers every member
+    /// (`len == 1` is the plain per-transaction DECIDE). With
+    /// replication on, the witness mirror train posts before either
+    /// point is awaited and the ack is the max of both group points.
+    fn decide_group(
+        &mut self,
+        first: u64,
+        len: usize,
+        not_before: Nanos,
+    ) -> Nanos {
+        let method = self.txn_method;
+        let (decision_ring, witness_ring) =
+            (self.decision_ring, self.witness_ring);
+        let nshards = self.shards.len();
+        if self.replicate && nshards >= 2 {
             let w = witness_for(0, nshards);
             let cmsg = self.shards[0].next_msg;
             self.shards[0].next_msg += 1;
             let wmsg = self.shards[w].next_msg;
             self.shards[w].next_msg += 1;
             let (coord, wit) = self.shards.split_at_mut(w);
-            let pair = post_decision_replicated(
+            let pair = post_decision_group_replicated(
                 &mut coord[0].fab,
                 &mut wit[0].fab,
                 method,
-                txn_id,
-                decision_ring.addr(txn_id),
-                witness_ring.addr(txn_id),
-                prepared_at,
+                first,
+                len,
+                &decision_ring,
+                &witness_ring,
+                not_before,
                 cmsg,
                 wmsg,
             );
@@ -700,25 +858,28 @@ impl ShardedKv {
                 .wait(&mut coord[0].fab)
                 .max(pair.witness.wait(&mut wit[0].fab))
         } else {
-            sync_clock(&mut self.shards[0].fab, prepared_at);
             let msg = self.shards[0].next_msg;
             self.shards[0].next_msg += 1;
-            let wp = post_decision(
+            let wp = post_decision_group(
                 &mut self.shards[0].fab,
                 method,
-                txn_id,
-                decision_ring.addr(txn_id),
+                first,
+                len,
+                &decision_ring,
+                not_before,
                 msg,
             );
             wp.wait(&mut self.shards[0].fab)
-        };
+        }
+    }
 
-        // COMMIT: release the version words. Truly lazy — posted after
-        // the decision point but never awaited: correctness needs only
-        // posting order (a durable marker implies a durable decision),
-        // and recovery roll-forward heals markers a crash catches
-        // in flight.
-        for s in 0..nshards {
+    /// COMMIT: release version-word markers as one train per
+    /// participating shard, posted after `acked` but never awaited
+    /// (lazy — recovery roll-forward heals markers a crash catches in
+    /// flight).
+    fn commit_flips(&mut self, flips: &[Vec<CommitFlip>], acked: Nanos) {
+        let method = self.txn_method;
+        for s in 0..self.shards.len() {
             if flips[s].is_empty() {
                 continue;
             }
@@ -728,26 +889,35 @@ impl ShardedKv {
             shard.next_msg += flips[s].len() as u32;
             let _ = post_commit(&mut shard.fab, method, &flips[s], msg);
         }
+    }
 
-        if recording {
-            let mut rec = KvTxnRecord {
-                txn_id,
-                puts: Vec::new(),
-                prepared_at,
-                acked_at: acked,
-            };
-            for (key, s, version, value) in meta {
-                rec.puts.push((key, version));
-                self.shards[s].puts.push(PutRecord {
-                    key,
-                    version,
-                    value,
-                    acked_at: acked,
-                });
-            }
-            self.txns.push(rec);
+    /// Record a completed staged transaction into the crash oracle
+    /// (no-op for non-recording runs).
+    fn record_staged(
+        &mut self,
+        st: StagedTxn,
+        prepared_at: Nanos,
+        acked: Nanos,
+    ) {
+        if !self.shards[0].fab.mem.recording() {
+            return;
         }
-        acked
+        let mut rec = KvTxnRecord {
+            txn_id: st.txn_id,
+            puts: Vec::new(),
+            prepared_at,
+            acked_at: acked,
+        };
+        for (key, s, version, value) in st.meta {
+            rec.puts.push((key, version));
+            self.shards[s].puts.push(PutRecord {
+                key,
+                version,
+                value,
+                acked_at: acked,
+            });
+        }
+        self.txns.push(rec);
     }
 
     /// Latest per-shard requester clock — the parallel virtual-time cost
@@ -1248,6 +1418,121 @@ mod tests {
             let state = kv.recover_all_at(kv.makespan());
             assert_eq!(state.len(), 12);
         }
+    }
+
+    /// Group commit at the KV layer: members of a group ack at one
+    /// shared point, the grouped path converges to the same state as
+    /// per-transaction commits, and at every crash instant transaction
+    /// visibility moves in whole groups.
+    #[test]
+    fn grouped_puts_share_points_and_recover_whole_groups() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        for replicate in [false, true] {
+            let mut kv =
+                ShardedKv::new(cfg, TimingModel::default(), 64, 3, 7, true)
+                    .with_decision_replication(replicate);
+            // Write-disjoint members: each key belongs to one txn.
+            let batch: Vec<Vec<(u64, Vec<u8>)>> = (0..9u64)
+                .map(|t| {
+                    (0..3u64)
+                        .map(|i| (t * 3 + i, format!("g{t}-{i}").into_bytes()))
+                        .collect()
+                })
+                .collect();
+            let gopts = GroupCommitOpts {
+                max_group: 4,
+                max_hold_ns: 1_000_000,
+                idle_close: true,
+            };
+            let acks = kv.put_txn_grouped(&batch, &gopts);
+            assert_eq!(acks.len(), 9);
+            // Groups close by size at 4: [0..4), [4..8), [8..9).
+            assert_eq!(acks[0], acks[3], "group members share the point");
+            assert_eq!(acks[4], acks[7]);
+            assert!(acks[3] <= acks[4], "groups release in order");
+            // Per-transaction control converges to the same state.
+            let mut seq =
+                ShardedKv::new(cfg, TimingModel::default(), 64, 3, 7, true)
+                    .with_decision_replication(replicate);
+            for t in &batch {
+                seq.put_txn(t);
+            }
+            assert_eq!(
+                kv.recover_all_at(kv.makespan()),
+                seq.recover_all_at(seq.makespan()),
+                "replicate={replicate}"
+            );
+            // Whole-group visibility at every instant: within a group,
+            // either every member transaction is recovered or none.
+            let end = kv.makespan();
+            for i in 0..=150u64 {
+                let t = end * i / 150;
+                let state = kv.recover_all_at(t);
+                for group in [&kv.txns[0..4], &kv.txns[4..8], &kv.txns[8..9]]
+                {
+                    let vis: Vec<bool> = group
+                        .iter()
+                        .map(|txn| {
+                            txn.puts.iter().all(|&(key, version)| {
+                                state
+                                    .get(&key)
+                                    .map(|(v, _)| *v >= version)
+                                    .unwrap_or(false)
+                            })
+                        })
+                        .collect();
+                    assert!(
+                        vis.iter().all(|&v| v) || vis.iter().all(|&v| !v),
+                        "replicate={replicate}: partial group at t={t}: \
+                         {vis:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// A unit group through the grouped entry point degenerates to the
+    /// per-transaction protocol: one decision train per transaction and
+    /// the same converged state as sequential `put_txn` calls.
+    #[test]
+    fn unit_grouped_put_matches_put_txn() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let batch: Vec<Vec<(u64, Vec<u8>)>> = (0..5u64)
+            .map(|t| vec![(t, format!("v{t}").into_bytes())])
+            .collect();
+        let gopts = GroupCommitOpts { max_group: 1, ..Default::default() };
+        let mut grouped =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 2, 3, true);
+        let acks = grouped.put_txn_grouped(&batch, &gopts);
+        let mut plain =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 2, 3, true);
+        let mut plain_acks = Vec::new();
+        for t in &batch {
+            plain_acks.push(plain.put_txn(t));
+        }
+        // Not byte-identical schedules (the grouped path pipelines all
+        // PREPAREs), but unit groups must pay exactly one decision each
+        // and converge to the same state.
+        assert_eq!(acks.len(), plain_acks.len());
+        assert_eq!(
+            grouped.recover_all_at(grouped.makespan()),
+            plain.recover_all_at(plain.makespan())
+        );
+        assert_eq!(grouped.txns.len(), plain.txns.len());
+    }
+
+    /// One key in two member transactions would stage two in-flight
+    /// versions onto the same bucket's A/B slot pair — refused.
+    #[test]
+    #[should_panic(expected = "spans transactions")]
+    fn grouped_batch_requires_write_disjoint_txns() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut kv =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 2, 1, false);
+        let _ = kv.put_txn_grouped(
+            &[vec![(1, b"a".to_vec())], vec![(1, b"b".to_vec())]],
+            &GroupCommitOpts::default(),
+        );
     }
 
     #[test]

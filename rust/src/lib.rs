@@ -32,6 +32,13 @@
 //!   ([`server::memory::MemoryModel::fail`]) plus the crash × shard-loss
 //!   sweep ([`remotelog::pipeline::run_failover_sweep`]) prove no
 //!   committed transaction is lost under any single-shard loss,
+//! * **group commit** — per-coordinator-shard schedulers
+//!   ([`persist::groupcommit`]) that coalesce concurrent transactions'
+//!   decision records into shared doorbell trains with ONE persistence
+//!   point per group, amortizing the dominant per-transaction cost
+//!   ([`remotelog::pipeline::run_txn_grouped`],
+//!   [`kvstore::ShardedKv::put_txn_grouped`]) while crashes only ever
+//!   expose whole groups,
 //! * and the experiment coordinator that regenerates every table and
 //!   figure of the paper's evaluation plus the clients × shards scaling
 //!   and transaction tables ([`coordinator`]).

@@ -9,6 +9,7 @@
 //! rpmem scale [...]                      clients × shards throughput scaling
 //! rpmem txn [...]                        cross-shard 2PC vs independent grid
 //! rpmem failover [...]                   replicated-decision 2PC vs plain 2PC
+//! rpmem group [...]                      group-commit vs per-txn decision grid
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
@@ -60,6 +61,7 @@ fn main() -> ExitCode {
         Some("scale") => cmd_scale(&flags),
         Some("txn") => cmd_txn(&flags),
         Some("failover") => cmd_failover(&flags),
+        Some("group") => cmd_group(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -110,6 +112,9 @@ COMMANDS
                 of atomicity).
   failover      Replicated-decision 2PC vs plain 2PC grid (the
                 coordinator-failover replication tax).
+  group         Group-commit grid: shared decision trains vs per-txn
+                2PC decisions (amortized decision cost), across all 12
+                taxonomy configs.
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
   crash-test    Crash-consistency campaign over the 72 scenarios.
   recover-demo  Crash + recovery walk-through (XLA kernels by default).
@@ -194,6 +199,28 @@ Replicas per decision: 1 (the deterministic witness shard, next in
 ring order after the coordinator shard).
 ";
 
+const USAGE_GROUP: &str = "\
+USAGE: rpmem group [flags]
+
+Group-commit grid: concurrent transactions' decision records released
+as shared doorbell trains with ONE persistence point per group
+(persist::groupcommit), vs the per-transaction 2PC baseline — the
+amortized decision-persistence cost, across group size x clients x
+ALL 12 taxonomy configurations.
+
+KNOBS
+  --groups LIST          group-size caps          (default: 1,4,16)
+  --clients LIST         coordinator counts       (default: 1,2)
+  --shards N             QPs per transaction      (default: 4)
+  --txns N               transactions per client  (default: 500)
+  --primary write|writeimm|send  primary op       (default: write)
+  --json FILE            dump results as JSON
+
+Group size 1 is the unchanged per-transaction protocol (the grid's
+baseline column must match it exactly); crashes can only ever expose
+whole groups — see rust/tests/group_commit.rs.
+";
+
 const USAGE_CLAIMS: &str = "\
 USAGE: rpmem claims [flags]
 
@@ -235,6 +262,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
         "scale" => Some(USAGE_SCALE),
         "txn" => Some(USAGE_TXN),
         "failover" => Some(USAGE_FAILOVER),
+        "group" => Some(USAGE_GROUP),
         "claims" => Some(USAGE_CLAIMS),
         "crash-test" => Some(USAGE_CRASH_TEST),
         "recover-demo" => Some(USAGE_RECOVER_DEMO),
@@ -507,6 +535,38 @@ fn cmd_failover(flags: &HashMap<String, String>) -> Result<(), String> {
     println!("{}", render_failover_grid(&title, &points));
     if let Some(path) = flags.get("json") {
         let j = failover_grid_to_json(&points).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_group(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        group_grid_to_json, render_group_grid, run_group_grid, ScalingOpts,
+    };
+    let groups = parse_usize_list(flags, "groups", &[1, 4, 16])?;
+    let clients = parse_usize_list(flags, "clients", &[1, 2])?;
+    let shards = flag_u64(flags, "shards", 4) as usize;
+    if shards == 0 {
+        return Err("--shards must be positive".into());
+    }
+    let txns = flag_u64(flags, "txns", 500);
+    if groups.iter().any(|&g| g as u64 > txns.max(16)) {
+        return Err("--groups entries must fit the decision ring".into());
+    }
+    let primary = parse_primary(flags)?;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let points =
+        run_group_grid(primary, &groups, &clients, shards, txns, &opts);
+    let title = format!(
+        "group commit across the taxonomy [{}] — shared vs per-txn \
+         decision trains",
+        points[0].method_name
+    );
+    println!("{}", render_group_grid(&title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = group_grid_to_json(&points).to_string_pretty();
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

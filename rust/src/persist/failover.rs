@@ -52,7 +52,8 @@ use crate::fabric::timing::Nanos;
 use crate::persist::exec::WaitPoint;
 use crate::persist::method::SingletonMethod;
 use crate::persist::txn::{
-    decode_decision, post_decision, sync_clock, SlotRing, DECISION_BYTES,
+    decode_decision, post_decision, sync_clock, DecisionScan, SlotRing,
+    DECISION_BYTES,
 };
 use crate::server::memory::Image;
 
@@ -81,14 +82,28 @@ impl DecisionPair {
     pub fn wait(self, coord: &mut Fabric, witness: &mut Fabric) -> Nanos {
         self.primary.wait(coord).max(self.witness.wait(witness))
     }
+
+    /// Peek both persistence points WITHOUT advancing either requester
+    /// clock — both trains were posted before either point is awaited,
+    /// so the points are already determined. Tests use this to pin the
+    /// overlap (the ack must be exactly the max of the two, never the
+    /// sum of a serialized pair).
+    pub fn points(&self, coord: &Fabric, witness: &Fabric) -> (Nanos, Nanos) {
+        (self.primary.ready_at(coord), self.witness.ready_at(witness))
+    }
 }
 
 /// DECIDE with replication: persist the COMMIT decision for `txn_id` on
 /// the coordinator QP (`decision_addr`) and its replica on the witness
 /// QP (`replica_addr`), each as its own doorbell train posted no earlier
-/// than `not_before` (the observed PREPARE completion). The two trains
-/// overlap in parallel virtual time; await both via
-/// [`DecisionPair::wait`].
+/// than `not_before` (the observed PREPARE completion). **Both trains
+/// are posted before either persistence point is awaited**: they ride
+/// distinct QPs and overlap in parallel virtual time, so the
+/// replication tax is one overlapped persistence point, not two
+/// serialized round trips (pinned by the
+/// `replicated_decide_overlaps_not_serializes` regression test). Await
+/// both via [`DecisionPair::wait`]; the ack is the max of the two
+/// points.
 pub fn post_decision_replicated(
     coord: &mut Fabric,
     witness: &mut Fabric,
@@ -114,6 +129,40 @@ pub fn post_decision_replicated(
     }
 }
 
+impl DecisionScan {
+    /// Merged-prefix variant of [`DecisionScan::committed`]: resume the
+    /// union scan over the primary and witness rings from the cached
+    /// high-water mark. The same monotonicity argument applies (a
+    /// decision durable on either ring stays durable at any later
+    /// instant of a recording run), so sweeps visiting instants in
+    /// ascending order make one pass over the ring pair.
+    pub fn committed_merged(
+        &mut self,
+        primary: Option<(&Image, &SlotRing)>,
+        witness: Option<(&Image, &SlotRing)>,
+    ) -> u64 {
+        if let (Some((_, p)), Some((_, w))) = (primary, witness) {
+            assert_eq!(p.slots, w.slots, "rings must agree on capacity");
+        }
+        let slots = match (primary, witness) {
+            (Some((_, r)), _) | (None, Some((_, r))) => r.slots,
+            (None, None) => 0,
+        };
+        let has = |side: Option<(&Image, &SlotRing)>, i: u64| {
+            side.is_some_and(|(img, r)| {
+                decode_decision(img.read(r.addr(i), DECISION_BYTES)) == Some(i)
+            })
+        };
+        while self.hwm < slots {
+            if !has(primary, self.hwm) && !has(witness, self.hwm) {
+                break;
+            }
+            self.hwm += 1;
+        }
+        self.hwm
+    }
+}
+
 /// Resolve the committed prefix from the primary and witness decision
 /// rings, either of which may be gone (`None`: that shard's PM was
 /// lost). A slot counts as committed when a valid record with the
@@ -121,28 +170,12 @@ pub fn post_decision_replicated(
 /// neither ends the prefix (presumed abort beyond it). Both rings are
 /// prefix-closed individually — decisions post in txn-id order on one
 /// QP each — so the union prefix is exactly the committed set.
+/// One-shot form of [`DecisionScan::committed_merged`].
 pub fn recover_decisions_merged(
     primary: Option<(&Image, &SlotRing)>,
     witness: Option<(&Image, &SlotRing)>,
 ) -> u64 {
-    if let (Some((_, p)), Some((_, w))) = (primary, witness) {
-        assert_eq!(p.slots, w.slots, "rings must agree on capacity");
-    }
-    let slots = match (primary, witness) {
-        (Some((_, r)), _) | (None, Some((_, r))) => r.slots,
-        (None, None) => 0,
-    };
-    let has = |side: Option<(&Image, &SlotRing)>, i: u64| {
-        side.is_some_and(|(img, r)| {
-            decode_decision(img.read(r.addr(i), DECISION_BYTES)) == Some(i)
-        })
-    };
-    for i in 0..slots {
-        if !has(primary, i) && !has(witness, i) {
-            return i;
-        }
-    }
-    slots
+    DecisionScan::default().committed_merged(primary, witness)
 }
 
 #[cfg(test)]
@@ -259,5 +292,87 @@ mod tests {
         let wi = wit.mem.crash_image(acked, cfg.pdomain);
         assert_eq!(recover_decisions_merged(Some((&pi, &r)), None), 1);
         assert_eq!(recover_decisions_merged(None, Some((&wi, &r))), 1);
+    }
+
+    /// The two decision trains must overlap, not serialize: the ack is
+    /// exactly the max of the two persistence points, and a control
+    /// that waits the primary before posting the witness is strictly
+    /// slower. Guards `post_decision_replicated` against regressing
+    /// into back-to-back trains.
+    #[test]
+    fn replicated_decide_overlaps_not_serializes() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let r = ring();
+        let mut coord = fab(cfg, 7);
+        let mut wit = fab(cfg, 8);
+        let pair = post_decision_replicated(
+            &mut coord,
+            &mut wit,
+            SingletonMethod::WriteFlush,
+            0,
+            r.addr(0),
+            r.addr(0),
+            0,
+            0,
+            1,
+        );
+        let (p, w) = pair.points(&coord, &wit);
+        let acked = pair.wait(&mut coord, &mut wit);
+        assert_eq!(acked, p.max(w), "ack must be the max of the two points");
+        // Serialized control on identical seeds.
+        let mut c2 = fab(cfg, 7);
+        let mut w2 = fab(cfg, 8);
+        let wp = post_decision(
+            &mut c2,
+            SingletonMethod::WriteFlush,
+            0,
+            r.addr(0),
+            0,
+        );
+        let t1 = wp.wait(&mut c2);
+        sync_clock(&mut w2, t1);
+        let wp = post_decision(
+            &mut w2,
+            SingletonMethod::WriteFlush,
+            0,
+            r.addr(0),
+            1,
+        );
+        let t2 = wp.wait(&mut w2);
+        assert!(
+            acked < t2,
+            "overlapped pair ({acked}) must beat serialized trains ({t2})"
+        );
+    }
+
+    /// The cached merged scanner tracks the one-shot scan at ascending
+    /// instants, including under the loss of either ring.
+    #[test]
+    fn merged_scan_cache_matches_one_shot() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let r = ring();
+        let mut fp = fab(cfg, 9);
+        persist_decisions(&mut fp, &r, &[0, 1, 2]);
+        let mut fw = fab(cfg, 10);
+        persist_decisions(&mut fw, &r, &[0, 1, 2, 3]);
+        let end = fp.now().max(fw.now());
+        let mut both = DecisionScan::default();
+        let mut wit_only = DecisionScan::default();
+        for i in 0..=20u64 {
+            let t = end * i / 20;
+            let pi = fp.mem.crash_image(t, cfg.pdomain);
+            let wi = fw.mem.crash_image(t, cfg.pdomain);
+            assert_eq!(
+                both.committed_merged(Some((&pi, &r)), Some((&wi, &r))),
+                recover_decisions_merged(Some((&pi, &r)), Some((&wi, &r))),
+                "t={t}"
+            );
+            assert_eq!(
+                wit_only.committed_merged(None, Some((&wi, &r))),
+                recover_decisions(&wi, &r),
+                "t={t}"
+            );
+        }
+        assert_eq!(both.high_water(), 4);
     }
 }

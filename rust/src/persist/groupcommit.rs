@@ -1,0 +1,516 @@
+//! Group commit: amortize 2PC decision persistence across concurrent
+//! transactions.
+//!
+//! The paper's cost model says every remote-persistence method ends at
+//! an explicit persistence point, and the transaction layer
+//! ([`crate::persist::txn`]) pays one full decision-record doorbell
+//! train plus persistence point *per transaction* on the coordinator
+//! shard — the dominant per-transaction cost in
+//! [`crate::coordinator::scaling::run_txn_grid`]. Group commit is the
+//! classic amortization (cf. Tavakkol et al., arXiv:1810.09360, and
+//! the flush-coalescing discipline of write-optimized RDMA/NVM
+//! systems): a per-coordinator-shard scheduler collects the DECIDE
+//! requests of concurrent in-flight transactions and releases them as
+//! **one** doorbell-batched train of decision records ending at a
+//! **single** persistence point shared by the whole group. Every
+//! transaction in the group is acked at that shared point; in
+//! replicated mode ([`crate::persist::failover`]) the witness mirror
+//! is likewise one paired group train and the ack is the max of the
+//! two group points.
+//!
+//! # Whole-group atomicity without touching recovery
+//!
+//! Recovery stays the unchanged committed-prefix scan
+//! ([`crate::persist::txn::recover_decisions`] /
+//! [`crate::persist::failover::recover_decisions_merged`]). The train
+//! posts the group's records in **reverse** transaction order: slot
+//! `first` is written *last*. Per-QP FIFO placement makes persist
+//! milestones monotone in posting order (the same property that makes
+//! per-transaction decisions prefix-closed), so at any crash instant
+//! the durable records of a half-placed train form a *suffix* of the
+//! group's ids — and the prefix scan, which stops at the first absent
+//! slot, therefore resolves either **none** of the group or **all**
+//! of it. A crash can truncate the committed set only at a group
+//! boundary; no partial group is ever visible after recovery.
+//!
+//! ```text
+//! per-txn DECIDE (PR 3):        group DECIDE (this module):
+//!   d0 ▸  d1 ▸  d2 ▸  d3 ▸        [d3 d2 d1 d0] ▸
+//!   4 trains, 4 points            1 train, 1 shared point
+//! ```
+//!
+//! # Policy knobs
+//!
+//! [`GroupCommitOpts`] models the three classic group-commit policies:
+//! a size cap (`max_group`), a hold timer (`max_hold_ns`, simulated
+//! virtual time), and adaptive idle close (`idle_close`: release a
+//! partial group as soon as the coordinator has no more in-flight
+//! feeders instead of running out the timer). `max_group == 1`
+//! degenerates to the per-transaction protocol exactly — byte-identical
+//! virtual-time evolution, asserted by `rust/tests/group_commit.rs`.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::Nanos;
+use crate::persist::exec::{post_singleton_batch, Update, WaitPoint};
+use crate::persist::failover::DecisionPair;
+use crate::persist::method::SingletonMethod;
+use crate::persist::txn::{encode_decision, sync_clock, SlotRing};
+
+/// Policy knobs for the per-coordinator-shard group-commit scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupCommitOpts {
+    /// Maximum transactions per group: the group closes (and its train
+    /// is released immediately) when it reaches this size. `1` is the
+    /// per-transaction protocol, unchanged.
+    pub max_group: usize,
+    /// Maximum simulated hold (virtual ns): a DECIDE request becoming
+    /// ready more than this after the group's first member closes the
+    /// group at timer expiry and opens the next one.
+    pub max_hold_ns: Nanos,
+    /// Adaptive close: when the stream of feeders goes idle, release
+    /// the partial group at its last member's readiness instead of
+    /// holding until `max_hold_ns` expires.
+    pub idle_close: bool,
+}
+
+impl Default for GroupCommitOpts {
+    fn default() -> Self {
+        GroupCommitOpts { max_group: 8, max_hold_ns: 5_000, idle_close: true }
+    }
+}
+
+/// One closed decision group: transactions `first .. first + len` share
+/// a single doorbell train and persistence point, released no earlier
+/// than `release_at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedGroup {
+    /// First transaction id of the group (ids are contiguous).
+    pub first: u64,
+    /// Number of transactions in the group.
+    pub len: usize,
+    /// Virtual time the group's train may post (scheduler release).
+    pub release_at: Nanos,
+}
+
+impl PlannedGroup {
+    /// One past the last transaction id of the group.
+    pub fn end(&self) -> u64 {
+        self.first + self.len as u64
+    }
+}
+
+/// The per-coordinator-shard commit scheduler: feed it DECIDE requests
+/// in transaction order ([`GroupScheduler::offer`]); it closes groups by
+/// the [`GroupCommitOpts`] policy and hands each back as a
+/// [`PlannedGroup`] ready for [`post_decision_group`].
+#[derive(Debug, Clone)]
+pub struct GroupScheduler {
+    opts: GroupCommitOpts,
+    first: Option<u64>,
+    open_ready: Nanos,
+    last_ready: Nanos,
+    len: usize,
+}
+
+impl GroupScheduler {
+    /// A scheduler with an empty pending group.
+    pub fn new(opts: GroupCommitOpts) -> Self {
+        assert!(opts.max_group >= 1, "a group holds at least one decision");
+        GroupScheduler {
+            opts,
+            first: None,
+            open_ready: 0,
+            last_ready: 0,
+            len: 0,
+        }
+    }
+
+    /// Transactions currently held in the open group.
+    pub fn pending(&self) -> usize {
+        self.len
+    }
+
+    /// Offer the next transaction's DECIDE request (`ready_at` is its
+    /// PREPARE-completion time; ids must be offered in order). Returns
+    /// the group this offer closed, if any:
+    ///
+    /// * the offer filled the group to `max_group` — it closes
+    ///   *including* the offer, released at the offer's readiness;
+    /// * the offer's readiness breached the hold window — the pending
+    ///   group closes *without* it at timer expiry
+    ///   (`open + max_hold_ns`), and the offer opens the next group.
+    pub fn offer(
+        &mut self,
+        txn_id: u64,
+        ready_at: Nanos,
+    ) -> Option<PlannedGroup> {
+        let Some(first) = self.first else {
+            if self.opts.max_group == 1 {
+                return Some(PlannedGroup {
+                    first: txn_id,
+                    len: 1,
+                    release_at: ready_at,
+                });
+            }
+            self.first = Some(txn_id);
+            self.open_ready = ready_at;
+            self.last_ready = ready_at;
+            self.len = 1;
+            return None;
+        };
+        debug_assert_eq!(
+            first + self.len as u64,
+            txn_id,
+            "DECIDE requests must be offered in transaction order"
+        );
+        if ready_at > self.open_ready + self.opts.max_hold_ns {
+            // The hold timer expired before this request was ready: the
+            // open group releases at expiry; the offer starts the next.
+            let closed = PlannedGroup {
+                first,
+                len: self.len,
+                release_at: self.open_ready + self.opts.max_hold_ns,
+            };
+            self.first = Some(txn_id);
+            self.open_ready = ready_at;
+            self.last_ready = ready_at;
+            self.len = 1;
+            return Some(closed);
+        }
+        self.len += 1;
+        self.last_ready = self.last_ready.max(ready_at);
+        if self.len == self.opts.max_group {
+            let closed = PlannedGroup {
+                first,
+                len: self.len,
+                release_at: self.last_ready,
+            };
+            self.first = None;
+            self.len = 0;
+            return Some(closed);
+        }
+        None
+    }
+
+    /// The feeder stream went idle (no more in-flight PREPAREs can
+    /// reach this scheduler): close the pending partial group, if any.
+    /// With `idle_close` the group releases at its last member's
+    /// readiness; without it the scheduler runs out the hold timer
+    /// (`open + max_hold_ns`) — the classic group-commit timeout cost.
+    pub fn drain(&mut self) -> Option<PlannedGroup> {
+        let first = self.first.take()?;
+        let release_at = if self.opts.idle_close {
+            self.last_ready
+        } else {
+            (self.open_ready + self.opts.max_hold_ns).max(self.last_ready)
+        };
+        let g = PlannedGroup { first, len: self.len, release_at };
+        self.len = 0;
+        Some(g)
+    }
+}
+
+/// Post one group's decision records — without the clock fence — as a
+/// single doorbell train in reverse transaction order (see the module
+/// docs for why reverse order is what makes the group atomic under the
+/// unchanged prefix scan).
+fn post_group_train(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    first: u64,
+    len: usize,
+    ring: &SlotRing,
+    msg_seq: u32,
+) -> WaitPoint {
+    assert!(len >= 1, "empty decision group");
+    assert!(
+        len as u64 <= ring.slots,
+        "group of {len} exceeds the {}-slot decision ring",
+        ring.slots
+    );
+    let updates: Vec<Update> = (0..len as u64)
+        .rev()
+        .map(|k| {
+            let id = first + k;
+            Update::new(ring.addr(id), encode_decision(id).to_vec())
+        })
+        .collect();
+    post_singleton_batch(fab, method, &updates, msg_seq)
+}
+
+/// GROUP DECIDE: persist the COMMIT decision records of transactions
+/// `first .. first + len` on the coordinator QP as ONE doorbell train
+/// with a single shared persistence point, posted no earlier than
+/// `not_before` (the group's scheduler release). The returned
+/// wait-point's resolution is every member transaction's atomic
+/// durability point (and ack). With `len == 1` this is exactly
+/// [`crate::persist::txn::post_decision`].
+pub fn post_decision_group(
+    fab: &mut Fabric,
+    method: SingletonMethod,
+    first: u64,
+    len: usize,
+    ring: &SlotRing,
+    not_before: Nanos,
+    msg_seq: u32,
+) -> WaitPoint {
+    sync_clock(fab, not_before);
+    post_group_train(fab, method, first, len, ring, msg_seq)
+}
+
+/// GROUP DECIDE with replication: the coordinator group train plus its
+/// witness mirror, **both posted before either persistence point is
+/// awaited** — the trains ride distinct QPs and overlap in parallel
+/// virtual time, so the replication tax stays one overlapped group
+/// point. Ack every member at [`DecisionPair::wait`] (the max of the
+/// two group points).
+pub fn post_decision_group_replicated(
+    coord: &mut Fabric,
+    witness: &mut Fabric,
+    method: SingletonMethod,
+    first: u64,
+    len: usize,
+    decision_ring: &SlotRing,
+    replica_ring: &SlotRing,
+    not_before: Nanos,
+    coord_seq: u32,
+    witness_seq: u32,
+) -> DecisionPair {
+    sync_clock(coord, not_before);
+    sync_clock(witness, not_before);
+    DecisionPair {
+        primary: post_group_train(
+            coord,
+            method,
+            first,
+            len,
+            decision_ring,
+            coord_seq,
+        ),
+        witness: post_group_train(
+            witness,
+            method,
+            first,
+            len,
+            replica_ring,
+            witness_seq,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::persist::txn::{post_decision, recover_decisions};
+    use crate::server::memory::Layout;
+
+    fn fab(cfg: ServerConfig, seed: u64) -> Fabric {
+        let layout = Layout::new(1 << 19, 1 << 19, 64, 4096, cfg.rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, seed, true)
+    }
+
+    fn ring() -> SlotRing {
+        SlotRing { base: 0x4000, slots: 32, stride: 64 }
+    }
+
+    #[test]
+    fn size_closes_groups_at_max() {
+        let mut s = GroupScheduler::new(GroupCommitOpts {
+            max_group: 3,
+            max_hold_ns: 1_000_000,
+            idle_close: true,
+        });
+        assert_eq!(s.offer(0, 100), None);
+        assert_eq!(s.offer(1, 110), None);
+        let g = s.offer(2, 120).expect("third offer fills the group");
+        assert_eq!(g, PlannedGroup { first: 0, len: 3, release_at: 120 });
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.drain(), None);
+    }
+
+    #[test]
+    fn hold_breach_closes_at_timer_expiry() {
+        let mut s = GroupScheduler::new(GroupCommitOpts {
+            max_group: 8,
+            max_hold_ns: 50,
+            idle_close: true,
+        });
+        assert_eq!(s.offer(0, 100), None);
+        assert_eq!(s.offer(1, 140), None);
+        // Ready 200 > 100 + 50: the pending pair closes at expiry 150.
+        let g = s.offer(2, 200).expect("breach closes the open group");
+        assert_eq!(g, PlannedGroup { first: 0, len: 2, release_at: 150 });
+        // The breaching offer opened the next group.
+        assert_eq!(s.pending(), 1);
+        let g = s.drain().expect("partial group drains");
+        assert_eq!(g, PlannedGroup { first: 2, len: 1, release_at: 200 });
+    }
+
+    #[test]
+    fn drain_release_follows_idle_close_knob() {
+        for (idle_close, want) in [(true, 130u64), (false, 600)] {
+            let mut s = GroupScheduler::new(GroupCommitOpts {
+                max_group: 8,
+                max_hold_ns: 500,
+                idle_close,
+            });
+            assert_eq!(s.offer(0, 100), None);
+            assert_eq!(s.offer(1, 130), None);
+            let g = s.drain().expect("partial group drains");
+            assert_eq!(
+                g,
+                PlannedGroup { first: 0, len: 2, release_at: want },
+                "idle_close={idle_close}"
+            );
+        }
+    }
+
+    #[test]
+    fn unit_groups_release_immediately() {
+        // max_group == 1: every offer closes its own group at its own
+        // readiness, whatever the other knobs say — the degenerate
+        // per-transaction protocol.
+        let mut s = GroupScheduler::new(GroupCommitOpts {
+            max_group: 1,
+            max_hold_ns: 1_000_000,
+            idle_close: false,
+        });
+        for (id, ready) in [(7u64, 300u64), (8, 301)] {
+            assert_eq!(
+                s.offer(id, ready),
+                Some(PlannedGroup { first: id, len: 1, release_at: ready })
+            );
+        }
+        assert_eq!(s.drain(), None);
+    }
+
+    /// The load-bearing property: at ANY crash instant, the committed
+    /// prefix lands on a group boundary — a half-placed group train
+    /// never commits a partial group.
+    #[test]
+    fn crash_mid_train_commits_whole_groups_only() {
+        for cfg in ServerConfig::table1() {
+            let method = crate::persist::txn::plan_txn_method(
+                &cfg,
+                crate::persist::method::Primary::Write,
+            );
+            let r = ring();
+            let mut f = fab(cfg, 11);
+            // Two groups: [0..4) then [4..6).
+            let wp = post_decision_group(&mut f, method, 0, 4, &r, 0, 1);
+            let t1 = wp.wait(&mut f);
+            let wp = post_decision_group(&mut f, method, 4, 2, &r, t1, 2);
+            let end = wp.wait(&mut f);
+            for i in 0..=200u64 {
+                let t = end * i / 200;
+                let committed =
+                    recover_decisions(&f.mem.crash_image(t, cfg.pdomain), &r);
+                assert!(
+                    committed == 0 || committed == 4 || committed == 6,
+                    "{}: partial group visible: {committed} at t={t}",
+                    cfg.label()
+                );
+            }
+            assert_eq!(
+                recover_decisions(&f.mem.crash_image(end, cfg.pdomain), &r),
+                6,
+                "{}: both groups durable at the shared point",
+                cfg.label()
+            );
+        }
+    }
+
+    /// A unit group is op-for-op the per-transaction DECIDE.
+    #[test]
+    fn unit_group_matches_post_decision() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let m = SingletonMethod::WriteFlush;
+        let r = ring();
+        let mut a = fab(cfg, 3);
+        let t_a = post_decision_group(&mut a, m, 5, 1, &r, 0, 9).wait(&mut a);
+        let mut b = fab(cfg, 3);
+        let t_b = post_decision(&mut b, m, 5, r.addr(5), 9).wait(&mut b);
+        assert_eq!(t_a, t_b, "unit group must cost exactly one decision");
+        assert_eq!(a.ops_posted(), b.ops_posted());
+    }
+
+    /// One shared point beats N per-txn points: the amortization the
+    /// module exists for.
+    #[test]
+    fn group_train_amortizes_decision_points() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let m = SingletonMethod::WriteFlush;
+        let r = ring();
+        let mut grouped = fab(cfg, 7);
+        let wp = post_decision_group(&mut grouped, m, 0, 8, &r, 0, 1);
+        let span_g = wp.wait(&mut grouped);
+        let mut single = fab(cfg, 7);
+        let mut span_s = 0;
+        for id in 0..8u64 {
+            span_s = post_decision(&mut single, m, id, r.addr(id), id as u32)
+                .wait(&mut single);
+        }
+        assert!(
+            span_g * 3 < span_s,
+            "8 decisions in one train ({span_g}) should be >3x cheaper \
+             than 8 trains ({span_s})"
+        );
+    }
+
+    /// Replicated group trains overlap: the paired ack is the max of
+    /// the two group points and strictly cheaper than serializing them.
+    #[test]
+    fn replicated_group_overlaps_and_acks_at_max() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let m = SingletonMethod::WriteFlush;
+        let r = ring();
+        let mut coord = fab(cfg, 5);
+        let mut wit = fab(cfg, 6);
+        let pair = post_decision_group_replicated(
+            &mut coord,
+            &mut wit,
+            m,
+            0,
+            4,
+            &r,
+            &r,
+            100,
+            1,
+            2,
+        );
+        let (p, w) = pair.points(&coord, &wit);
+        let acked = pair.wait(&mut coord, &mut wit);
+        assert_eq!(acked, p.max(w), "ack is the max of the two points");
+        // Serialized control on identical seeds: wait the primary
+        // before even posting the witness train.
+        let mut c2 = fab(cfg, 5);
+        let mut w2 = fab(cfg, 6);
+        let wp = post_decision_group(&mut c2, m, 0, 4, &r, 100, 1);
+        let t1 = wp.wait(&mut c2);
+        let wp = post_decision_group(&mut w2, m, 0, 4, &r, t1, 2);
+        let t2 = wp.wait(&mut w2);
+        assert!(
+            acked < t2,
+            "overlapped pair ({acked}) must beat serialization ({t2})"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn oversized_group_rejected() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let mut f = fab(cfg, 1);
+        let r = SlotRing { base: 0x4000, slots: 4, stride: 64 };
+        let _ = post_decision_group(
+            &mut f,
+            SingletonMethod::WriteComp,
+            0,
+            5,
+            &r,
+            0,
+            0,
+        );
+    }
+}

@@ -3,13 +3,17 @@
 //! for singleton (§3.2, Table 2) and compound (§3.3, Table 3) updates,
 //! the planner that selects the correct method for a configuration, and
 //! the cross-shard two-phase-commit layer ([`txn`]) built on top of the
-//! per-connection recipes, and the coordinator-failover layer
+//! per-connection recipes, the coordinator-failover layer
 //! ([`failover`]) that mirrors 2PC decision records to a witness shard
-//! so the commit state survives any single-shard loss.
+//! so the commit state survives any single-shard loss, and the
+//! group-commit layer ([`groupcommit`]) that amortizes decision
+//! persistence across concurrent transactions — one doorbell train and
+//! one shared persistence point per group.
 
 pub mod config;
 pub mod exec;
 pub mod failover;
+pub mod groupcommit;
 pub mod method;
 pub mod planner;
 pub mod taxonomy;
@@ -19,9 +23,13 @@ pub mod wire;
 pub use config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
 pub use exec::{exec_compound, exec_singleton, PersistOutcome, Update};
 pub use failover::{recover_decisions_merged, witness_for, DecisionPair};
+pub use groupcommit::{
+    post_decision_group, post_decision_group_replicated, GroupCommitOpts,
+    GroupScheduler, PlannedGroup,
+};
 pub use method::{CompoundMethod, PersistencePoint, Primary, SingletonMethod};
 pub use planner::{plan_compound, plan_singleton};
 pub use txn::{
     plan_txn_method, recover_decisions, recover_intents, roll_forward,
-    CommitFlip, IntentRecord, SlotRing,
+    CommitFlip, DecisionScan, IntentRecord, SlotRing,
 };

@@ -305,21 +305,55 @@ pub fn sync_clock(fab: &mut Fabric, t: Nanos) {
     }
 }
 
+/// Committed-prefix scanner with a cached high-water mark.
+///
+/// [`recover_decisions`] walks the decision ring from slot 0 on every
+/// call, but crash sweeps resolve the committed prefix at hundreds of
+/// instants per recorded run. On a recording run a durable decision
+/// never un-persists and ring slots are never rewritten, so when the
+/// instants are visited in ascending order the committed prefix is
+/// monotone — the scan can resume from the last slot it proved
+/// committed instead of re-walking the whole prefix. Across an entire
+/// sweep that is a single pass over each ring. The merged failover
+/// path reuses the same cache
+/// ([`DecisionScan::committed_merged`][merged]).
+///
+/// [merged]: DecisionScan::committed_merged
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionScan {
+    pub(crate) hwm: u64,
+}
+
+impl DecisionScan {
+    /// Longest committed prefix of `ring` on `image`, resuming from the
+    /// cached high-water mark. Sound only when successive calls see
+    /// images of the *same* ring at non-decreasing crash times (fresh
+    /// scanner per ring otherwise).
+    pub fn committed(&mut self, image: &Image, ring: &SlotRing) -> u64 {
+        while self.hwm < ring.slots {
+            let rec = image.read(ring.addr(self.hwm), DECISION_BYTES);
+            match decode_decision(rec) {
+                Some(id) if id == self.hwm => self.hwm += 1,
+                _ => break,
+            }
+        }
+        self.hwm
+    }
+
+    /// Slots proven committed so far (the cached high-water mark).
+    pub fn high_water(&self) -> u64 {
+        self.hwm
+    }
+}
+
 /// Scan the coordinator's decision ring on a crash image: the number of
 /// committed transactions, as the longest prefix of slots holding valid
 /// COMMIT records with matching ids. Decisions are persisted in txn-id
 /// order on one QP, so durability is prefix-closed and the first
 /// empty/torn slot ends the committed set (presumed abort for
-/// everything after).
+/// everything after). One-shot form of [`DecisionScan::committed`].
 pub fn recover_decisions(image: &Image, ring: &SlotRing) -> u64 {
-    for i in 0..ring.slots {
-        let rec = image.read(ring.addr(i), DECISION_BYTES);
-        match decode_decision(rec) {
-            Some(id) if id == i => {}
-            _ => return i,
-        }
-    }
-    ring.slots
+    DecisionScan::default().committed(image, ring)
 }
 
 /// Collect the commit markers a shard must re-release: intents of
@@ -462,6 +496,37 @@ mod tests {
         }
         let img = fab.mem.crash_image(fab.now(), cfg.pdomain);
         assert_eq!(recover_decisions(&img, &ring), 1, "gap ends the prefix");
+    }
+
+    /// The cached scanner agrees with the from-scratch scan at every
+    /// ascending instant while only ever moving its high-water mark
+    /// forward (the single-pass property sweeps rely on).
+    #[test]
+    fn decision_scan_resumes_from_high_water() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 1024, cfg.rqwrb);
+        let mut fab =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 1, true);
+        let ring = SlotRing { base: 0x4000, slots: 8, stride: 64 };
+        let mut acks = Vec::new();
+        for id in 0..4u64 {
+            let wp = post_decision(
+                &mut fab,
+                SingletonMethod::WriteFlush,
+                id,
+                ring.addr(id),
+                id as u32,
+            );
+            acks.push(wp.wait(&mut fab));
+        }
+        let mut scan = DecisionScan::default();
+        for (k, &t) in acks.iter().enumerate() {
+            let img = fab.mem.crash_image(t, cfg.pdomain);
+            let cached = scan.committed(&img, &ring);
+            assert_eq!(cached, recover_decisions(&img, &ring), "t={t}");
+            assert_eq!(cached, k as u64 + 1);
+            assert_eq!(scan.high_water(), cached);
+        }
     }
 
     #[test]

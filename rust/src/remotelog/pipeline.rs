@@ -18,6 +18,11 @@
 //! records are mirrored to a witness QP ([`crate::persist::failover`])
 //! and [`run_failover_sweep`] drives the crash × shard-loss cross
 //! product (`rust/tests/failover_recovery.rs` runs that campaign).
+//! [`run_txn_grouped`] is the **group-commit** variant
+//! ([`crate::persist::groupcommit`]): concurrent transactions' DECIDEs
+//! coalesce into shared doorbell trains with one persistence point per
+//! group, and the same crash machinery proves all-or-nothing *per
+//! group* (`rust/tests/group_commit.rs`).
 
 use crate::fabric::sharded::ShardedFabric;
 use crate::fabric::timing::{Nanos, TimingModel};
@@ -26,14 +31,16 @@ use crate::persist::exec::{
     exec_compound, post_compound, post_compound_batch, post_singleton,
     post_singleton_batch, Update, WaitPoint,
 };
-use crate::persist::failover::{
-    post_decision_replicated, recover_decisions_merged, witness_for,
+use crate::persist::failover::{post_decision_replicated, witness_for};
+use crate::persist::groupcommit::{
+    post_decision_group, post_decision_group_replicated, GroupCommitOpts,
+    GroupScheduler, PlannedGroup,
 };
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::{plan_compound, plan_singleton};
 use crate::persist::txn::{
     plan_txn_method, post_commit, post_decision, post_prepare,
-    recover_decisions, recover_intents, roll_forward, sync_clock, CommitFlip,
+    recover_intents, roll_forward, sync_clock, CommitFlip, DecisionScan,
     IntentRecord, SlotRing, DECISION_BYTES, INTENT_BYTES,
 };
 use crate::remotelog::client::{
@@ -837,6 +844,11 @@ pub struct TxnRunResult {
     pub mean_latency_ns: f64,
     /// p99 commit latency (ns).
     pub p99_latency_ns: u64,
+    /// Total DECIDE-phase cost (virtual ns): for every transaction, the
+    /// span from its observed PREPARE completion to its decision ack —
+    /// the per-transaction decision-persistence cost group commit
+    /// amortizes. Zero for independent (non-atomic) runs.
+    pub decision_ns_total: u64,
 }
 
 impl TxnRunResult {
@@ -844,6 +856,11 @@ impl TxnRunResult {
     /// simulated second.
     pub fn throughput_mtps(&self) -> f64 {
         self.txns as f64 / self.span_ns as f64 * 1e3
+    }
+
+    /// Amortized decision-persistence cost per transaction (ns).
+    pub fn decision_ns_per_txn(&self) -> f64 {
+        self.decision_ns_total as f64 / self.txns.max(1) as f64
     }
 }
 
@@ -859,6 +876,84 @@ fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS] {
         *w = (salt as u32).wrapping_add(k as u32 * 0x85EB_CA6B);
     }
     app
+}
+
+/// Build the N-QP fabric and per-coordinator region maps shared by the
+/// transactional runners ([`run_txn_multi_shard`], [`run_txn_grouped`]):
+/// per client per QP, log ‖ intent ring; the decision ring and its
+/// witness replica ride in the same stride (used only on the
+/// coordinator/witness QP respectively).
+fn txn_fabric_and_clients(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    clients: usize,
+    shards: usize,
+    capacity: u64,
+    seed: u64,
+    record: bool,
+) -> (ShardedFabric, Vec<TxnClient>) {
+    let log_stride = LogLayout::region_stride(capacity);
+    let intent_bytes =
+        (capacity * INTENT_BYTES as u64).next_multiple_of(0x1000);
+    let decision_bytes =
+        (capacity * DECISION_BYTES as u64).next_multiple_of(0x1000);
+    let stride = log_stride + intent_bytes + 2 * decision_bytes;
+    // Slots sized for the prepare envelope (record + intent + wire
+    // header) — the widest message any txn phase sends.
+    let (rq_count, rq_slot) = (64usize, 2048u64);
+    let pm_size = (stride * clients as u64
+        + 2 * rq_count as u64 * rq_slot
+        + 4096)
+        .next_power_of_two();
+    let layout =
+        Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
+    let fabric = ShardedFabric::new(cfg, timing, layout, seed, record, shards);
+
+    let clients: Vec<TxnClient> = (0..clients)
+        .map(|c| {
+            let base = c as u64 * stride;
+            let logs: Vec<LogLayout> = (0..shards)
+                .map(|_| LogLayout::in_region(base, capacity))
+                .collect();
+            let intents: Vec<SlotRing> = (0..shards)
+                .map(|_| SlotRing {
+                    base: base + log_stride,
+                    slots: capacity,
+                    stride: INTENT_BYTES as u64,
+                })
+                .collect();
+            let decisions = SlotRing {
+                base: base + log_stride + intent_bytes,
+                slots: capacity,
+                stride: DECISION_BYTES as u64,
+            };
+            let replicas = SlotRing {
+                base: decisions.end(),
+                slots: capacity,
+                stride: DECISION_BYTES as u64,
+            };
+            assert!(
+                replicas.end() <= fabric.qp(0).mem.layout.pm_app_limit(),
+                "client region overlaps the RQWRB ring"
+            );
+            let coord_qp = c % shards;
+            TxnClient {
+                coord_qp,
+                witness_qp: if shards >= 2 {
+                    witness_for(coord_qp, shards)
+                } else {
+                    coord_qp
+                },
+                logs,
+                intents,
+                decisions,
+                replicas,
+                txns: Vec::new(),
+                latencies: Histogram::new(),
+            }
+        })
+        .collect();
+    (fabric, clients)
 }
 
 /// Drive `clients` coordinators, each appending `txns_per_client`
@@ -888,78 +983,16 @@ pub fn run_txn_multi_shard(
     );
     let method = plan_txn_method(&cfg, primary);
     let compound_method = plan_compound(&cfg, primary, 8);
-
-    // Region layout: per client per QP, log ‖ intent ring; the decision
-    // ring and its witness replica ride in the same stride (used only on
-    // the coordinator/witness QP respectively).
-    let log_stride = LogLayout::region_stride(opts.capacity);
-    let intent_bytes =
-        (opts.capacity * INTENT_BYTES as u64).next_multiple_of(0x1000);
-    let decision_bytes =
-        (opts.capacity * DECISION_BYTES as u64).next_multiple_of(0x1000);
-    let stride = log_stride + intent_bytes + 2 * decision_bytes;
-    // Slots sized for the prepare envelope (record + intent + wire
-    // header) — the widest message any txn phase sends.
-    let (rq_count, rq_slot) = (64usize, 2048u64);
-    let pm_size = (stride * opts.clients as u64
-        + 2 * rq_count as u64 * rq_slot
-        + 4096)
-        .next_power_of_two();
-    let layout =
-        Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
-    let mut fabric = ShardedFabric::new(
+    let (mut fabric, mut clients) = txn_fabric_and_clients(
         cfg,
         timing,
-        layout,
+        opts.clients,
+        opts.shards,
+        opts.capacity,
         opts.seed,
         opts.record,
-        opts.shards,
     );
-
-    let mut clients: Vec<TxnClient> = (0..opts.clients)
-        .map(|c| {
-            let base = c as u64 * stride;
-            let logs: Vec<LogLayout> = (0..opts.shards)
-                .map(|_| LogLayout::in_region(base, opts.capacity))
-                .collect();
-            let intents: Vec<SlotRing> = (0..opts.shards)
-                .map(|_| SlotRing {
-                    base: base + log_stride,
-                    slots: opts.capacity,
-                    stride: INTENT_BYTES as u64,
-                })
-                .collect();
-            let decisions = SlotRing {
-                base: base + log_stride + intent_bytes,
-                slots: opts.capacity,
-                stride: DECISION_BYTES as u64,
-            };
-            let replicas = SlotRing {
-                base: decisions.end(),
-                slots: opts.capacity,
-                stride: DECISION_BYTES as u64,
-            };
-            assert!(
-                replicas.end() <= fabric.qp(0).mem.layout.pm_app_limit(),
-                "client region overlaps the RQWRB ring"
-            );
-            let coord_qp = c % opts.shards;
-            TxnClient {
-                coord_qp,
-                witness_qp: if opts.shards >= 2 {
-                    witness_for(coord_qp, opts.shards)
-                } else {
-                    coord_qp
-                },
-                logs,
-                intents,
-                decisions,
-                replicas,
-                txns: Vec::new(),
-                latencies: Histogram::new(),
-            }
-        })
-        .collect();
+    let mut decision_ns_total = 0u64;
 
     // Each round runs one transaction per client, PHASE-INTERLEAVED:
     // every client's PREPAREs post before any client waits, so
@@ -1102,6 +1135,7 @@ pub fn run_txn_multi_shard(
                     acked[c] = acked[c]
                         .max(rep.wait(fabric.qp_mut(clients[c].witness_qp)));
                 }
+                decision_ns_total += acked[c] - prepared[c];
             }
             // COMMIT: release the tail markers. Truly lazy — posted
             // after each client's decision point but never awaited
@@ -1149,11 +1183,420 @@ pub fn run_txn_multi_shard(
         span_ns,
         mean_latency_ns: summary.summary().mean(),
         p99_latency_ns: summary.quantile(0.99),
+        decision_ns_total,
     };
     let run = TxnRun {
         fabric,
         clients,
         atomic: opts.atomic,
+        replicate: opts.replicate,
+        method,
+        compound_method,
+    };
+    (run, result)
+}
+
+// ---------------------------------------------------------------------
+// Group-commit runner: concurrent transactions' DECIDEs coalesced into
+// shared doorbell trains with a single persistence point per group
+// (persist::groupcommit) — the amortization axis.
+// ---------------------------------------------------------------------
+
+/// Options for a group-commit transactional run.
+#[derive(Debug, Clone)]
+pub struct GroupRunOpts {
+    /// Independent coordinators; client `c`'s decision ring lives on QP
+    /// `c % shards`.
+    pub clients: usize,
+    /// QPs; every transaction spans ALL of them.
+    pub shards: usize,
+    /// Transactions per client.
+    pub txns_per_client: u64,
+    /// Log slots (= intent/decision slots) per client per shard.
+    pub capacity: u64,
+    /// Jitter seed.
+    pub seed: u64,
+    /// Record write timelines + oracles (required for crash sweeps).
+    pub record: bool,
+    /// Mirror every group's decision train to the witness QP before
+    /// acking ([`crate::persist::failover`]); ack = max of the two
+    /// group points. Requires `shards >= 2`.
+    pub replicate: bool,
+    /// Group-commit policy knobs ([`crate::persist::groupcommit`]).
+    pub group: GroupCommitOpts,
+}
+
+impl Default for GroupRunOpts {
+    fn default() -> Self {
+        GroupRunOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 100,
+            capacity: 256,
+            seed: 7,
+            record: false,
+            replicate: false,
+            group: GroupCommitOpts::default(),
+        }
+    }
+}
+
+/// Aggregate result of a group-commit run.
+#[derive(Debug, Clone)]
+pub struct GroupRunResult {
+    /// Coordinators.
+    pub clients: usize,
+    /// QPs (every transaction spans all of them).
+    pub shards: usize,
+    /// Total transactions across all clients.
+    pub txns: u64,
+    /// Decision trains released across all clients.
+    pub groups: u64,
+    /// Makespan in virtual ns.
+    pub span_ns: Nanos,
+    /// Mean commit latency (ns).
+    pub mean_latency_ns: f64,
+    /// p99 commit latency (ns).
+    pub p99_latency_ns: u64,
+    /// Total DECIDE-phase cost (virtual ns): per group, the span from
+    /// its scheduler release to its shared ack point — directly
+    /// comparable to [`TxnRunResult::decision_ns_total`], which pays
+    /// that span once per *transaction*.
+    pub decision_ns_total: u64,
+    /// Per client, the released groups in order as `(first txn, len)` —
+    /// the boundaries every recovered committed prefix must land on.
+    pub group_sizes: Vec<Vec<(u64, u32)>>,
+}
+
+impl GroupRunResult {
+    /// Aggregate commit throughput in million transactions per
+    /// simulated second.
+    pub fn throughput_mtps(&self) -> f64 {
+        self.txns as f64 / self.span_ns as f64 * 1e3
+    }
+
+    /// Amortized decision-persistence cost per transaction (ns) — the
+    /// quantity group commit exists to shrink.
+    pub fn decision_ns_per_txn(&self) -> f64 {
+        self.decision_ns_total as f64 / self.txns.max(1) as f64
+    }
+
+    /// The committed-prefix boundaries group atomicity allows for
+    /// client `c`: 0, then the running prefix sum of its group sizes.
+    pub fn boundaries(&self, c: usize) -> Vec<u64> {
+        let mut out = vec![0u64];
+        for &(first, len) in &self.group_sizes[c] {
+            debug_assert_eq!(first, *out.last().unwrap(), "gap in groups");
+            out.push(first + len as u64);
+        }
+        out
+    }
+}
+
+/// Check that every committed prefix recoverable from a grouped run
+/// lands on a group boundary: for each client, scan the primary
+/// decision ring — and, for replicated runs, the witness ring — on
+/// crash images at each of `instants`, and assert the recovered prefix
+/// is one of [`GroupRunResult::boundaries`]. The single checker behind
+/// `benches/group.rs` and the `rust/tests/group_commit.rs` campaign,
+/// so the whole-group contract cannot drift between them.
+pub fn assert_group_boundaries(
+    run: &TxnRun,
+    res: &GroupRunResult,
+    instants: &[Nanos],
+) {
+    use crate::persist::txn::recover_decisions;
+    for (ci, client) in run.clients.iter().enumerate() {
+        let bounds = res.boundaries(ci);
+        for &t in instants {
+            let mut rings = vec![(client.coord_qp, &client.decisions)];
+            if run.replicate {
+                rings.push((client.witness_qp, &client.replicas));
+            }
+            for (qp, ring) in rings {
+                let pd = run.fabric.qp(qp).cfg.pdomain;
+                let img = run.fabric.qp(qp).mem.crash_image(t, pd);
+                let committed = recover_decisions(&img, ring);
+                assert!(
+                    bounds.contains(&committed),
+                    "client {ci} qp {qp}: prefix {committed} off the \
+                     group boundaries {bounds:?} at t={t}"
+                );
+            }
+        }
+    }
+}
+
+/// Drive `clients` coordinators through `txns_per_client` cross-shard
+/// transactions with **group commit**: transactions proceed in waves of
+/// up to `max_group` concurrent in-flight transactions per client —
+/// every PREPARE train of the wave posts before any is awaited — and
+/// each client's [`GroupScheduler`] coalesces the wave's DECIDEs into
+/// doorbell-batched trains with **one shared persistence point per
+/// group** ([`post_decision_group`]); every member transaction acks at
+/// its group's point. COMMIT markers release lazily as one train per
+/// group per shard.
+///
+/// With `group.max_group == 1` the schedule degenerates to exactly
+/// [`run_txn_multi_shard`]'s atomic path — same posting order, same
+/// message sequence numbers, same virtual-time evolution — asserted by
+/// `rust/tests/group_commit.rs`.
+///
+/// The returned [`TxnRun`] feeds the unchanged crash machinery
+/// ([`txn_crash_sweep`], [`run_failover_sweep`]): recovery is still the
+/// plain committed-prefix scan, and the reverse-posted group trains
+/// guarantee the recovered prefix always lands on a group boundary.
+pub fn run_txn_grouped(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &GroupRunOpts,
+) -> (TxnRun, GroupRunResult) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.group.max_group >= 1);
+    assert!(
+        !opts.record || opts.txns_per_client <= opts.capacity,
+        "ring wraparound would invalidate the crash oracle"
+    );
+    assert!(
+        opts.group.max_group as u64 <= opts.capacity,
+        "a group must fit the decision ring"
+    );
+    assert!(
+        !opts.replicate || opts.shards >= 2,
+        "decision replication needs a second shard"
+    );
+    let method = plan_txn_method(&cfg, primary);
+    let compound_method = plan_compound(&cfg, primary, 8);
+    let (mut fabric, mut clients) = txn_fabric_and_clients(
+        cfg,
+        timing,
+        opts.clients,
+        opts.shards,
+        opts.capacity,
+        opts.seed,
+        opts.record,
+    );
+
+    let total = opts.txns_per_client;
+    let mut msg_seq = 0u32;
+    let mut decision_ns_total = 0u64;
+    let mut group_sizes: Vec<Vec<(u64, u32)>> = vec![Vec::new(); opts.clients];
+
+    let mut wave_first = 0u64;
+    while wave_first < total {
+        let wave =
+            (opts.group.max_group as u64).min(total - wave_first) as usize;
+
+        // PREPARE the whole wave: every client's every transaction, all
+        // trains posted before any wait — the in-flight concurrency the
+        // scheduler collects DECIDEs from.
+        let mut starts = vec![vec![0u64; wave]; opts.clients];
+        let mut recs: Vec<Vec<Vec<[u8; RECORD_BYTES]>>> =
+            vec![Vec::with_capacity(wave); opts.clients];
+        let mut wpss: Vec<Vec<Vec<WaitPoint>>> =
+            vec![Vec::with_capacity(wave); opts.clients];
+        for w in 0..wave {
+            let txn = wave_first + w as u64;
+            for c in 0..opts.clients {
+                let client = &clients[c];
+                starts[c][w] = (0..opts.shards)
+                    .map(|s| fabric.qp(s).now())
+                    .max()
+                    .unwrap_or(0);
+                let mut records = Vec::with_capacity(opts.shards);
+                let mut wps = Vec::with_capacity(opts.shards);
+                for s in 0..opts.shards {
+                    let record =
+                        make_record(txn, &txn_payload(c as u64, s as u64, txn));
+                    let a = Update::new(
+                        client.logs[s].slot_addr(txn),
+                        record.to_vec(),
+                    );
+                    records.push(record);
+                    msg_seq = msg_seq.wrapping_add(4);
+                    let intent = IntentRecord {
+                        txn_id: txn,
+                        shard: s as u32,
+                        flips: vec![CommitFlip {
+                            addr: client.logs[s].tail_addr,
+                            value: txn + 1,
+                        }],
+                    };
+                    wps.push(post_prepare(
+                        fabric.qp_mut(s),
+                        method,
+                        std::slice::from_ref(&a),
+                        &intent,
+                        client.intents[s].addr(txn),
+                        msg_seq,
+                    ));
+                }
+                recs[c].push(records);
+                wpss[c].push(wps);
+            }
+        }
+        // Observe every PREPARE point: per-transaction readiness (the
+        // DECIDE request times the scheduler sees).
+        let mut prepared = vec![vec![0u64; wave]; opts.clients];
+        for w in 0..wave {
+            for c in 0..opts.clients {
+                for (s, wp) in wpss[c][w].iter().enumerate() {
+                    prepared[c][w] =
+                        prepared[c][w].max(wp.wait(fabric.qp_mut(s)));
+                }
+            }
+        }
+
+        // Schedule: each coordinator's DECIDE requests, in transaction
+        // order, through the group-commit policy.
+        let mut groups: Vec<Vec<PlannedGroup>> =
+            Vec::with_capacity(opts.clients);
+        for c in 0..opts.clients {
+            let mut sched = GroupScheduler::new(opts.group);
+            let mut gs = Vec::new();
+            for w in 0..wave {
+                let txn = wave_first + w as u64;
+                if let Some(g) = sched.offer(txn, prepared[c][w]) {
+                    gs.push(g);
+                }
+            }
+            if let Some(g) = sched.drain() {
+                gs.push(g);
+            }
+            groups.push(gs);
+        }
+
+        // GROUP DECIDE: post every client's trains, then observe the
+        // shared points (trains on distinct coordinator QPs overlap;
+        // replicated runs post the witness mirror before waiting
+        // either point).
+        let mut dwps: Vec<Vec<(WaitPoint, Option<WaitPoint>)>> =
+            Vec::with_capacity(opts.clients);
+        for c in 0..opts.clients {
+            let qp = clients[c].coord_qp;
+            let mut v = Vec::with_capacity(groups[c].len());
+            for g in &groups[c] {
+                if opts.replicate {
+                    let wq = clients[c].witness_qp;
+                    let (cseq, wseq) =
+                        (msg_seq.wrapping_add(1), msg_seq.wrapping_add(2));
+                    msg_seq = msg_seq.wrapping_add(2);
+                    let (coord, wit) = fabric.qp_pair_mut(qp, wq);
+                    let pair = post_decision_group_replicated(
+                        coord,
+                        wit,
+                        method,
+                        g.first,
+                        g.len,
+                        &clients[c].decisions,
+                        &clients[c].replicas,
+                        g.release_at,
+                        cseq,
+                        wseq,
+                    );
+                    v.push((pair.primary, Some(pair.witness)));
+                } else {
+                    msg_seq = msg_seq.wrapping_add(1);
+                    v.push((
+                        post_decision_group(
+                            fabric.qp_mut(qp),
+                            method,
+                            g.first,
+                            g.len,
+                            &clients[c].decisions,
+                            g.release_at,
+                            msg_seq,
+                        ),
+                        None,
+                    ));
+                }
+            }
+            dwps.push(v);
+        }
+        let mut gacks: Vec<Vec<Nanos>> = vec![Vec::new(); opts.clients];
+        for c in 0..opts.clients {
+            for (gi, g) in groups[c].iter().enumerate() {
+                let (wp, rep) = dwps[c][gi];
+                let mut t = wp.wait(fabric.qp_mut(clients[c].coord_qp));
+                if let Some(rep) = rep {
+                    t = t.max(rep.wait(fabric.qp_mut(clients[c].witness_qp)));
+                }
+                decision_ns_total += t - g.release_at;
+                gacks[c].push(t);
+            }
+        }
+
+        // GROUP COMMIT: one train of the whole group's markers per
+        // shard, posted after the group's shared point (lazy, never
+        // awaited — recovery roll-forward heals in-flight markers).
+        for c in 0..opts.clients {
+            for (gi, g) in groups[c].iter().enumerate() {
+                for s in 0..opts.shards {
+                    sync_clock(fabric.qp_mut(s), gacks[c][gi]);
+                    msg_seq = msg_seq.wrapping_add(g.len as u32);
+                    let flips: Vec<CommitFlip> = (0..g.len as u64)
+                        .map(|k| CommitFlip {
+                            addr: clients[c].logs[s].tail_addr,
+                            value: g.first + k + 1,
+                        })
+                        .collect();
+                    let _ = post_commit(
+                        fabric.qp_mut(s),
+                        method,
+                        &flips,
+                        msg_seq,
+                    );
+                }
+            }
+        }
+
+        // Book-keeping: every member acks at its group's shared point.
+        for c in 0..opts.clients {
+            let mut acked = Vec::with_capacity(wave);
+            for (gi, g) in groups[c].iter().enumerate() {
+                group_sizes[c].push((g.first, g.len as u32));
+                for _ in 0..g.len {
+                    acked.push(gacks[c][gi]);
+                }
+            }
+            debug_assert_eq!(acked.len(), wave);
+            for (w, rec) in recs[c].drain(..).enumerate() {
+                clients[c].latencies.record(acked[w] - starts[c][w]);
+                if opts.record {
+                    clients[c].txns.push(TxnOracle {
+                        txn_id: wave_first + w as u64,
+                        records: rec,
+                        prepared_at: prepared[c][w],
+                        acked_at: acked[w],
+                    });
+                }
+            }
+        }
+
+        wave_first += wave as u64;
+    }
+
+    let span_ns = fabric.makespan();
+    let mut summary = Histogram::new();
+    for c in &clients {
+        summary.merge(&c.latencies);
+    }
+    let result = GroupRunResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        txns: total * opts.clients as u64,
+        groups: group_sizes.iter().map(|g| g.len() as u64).sum(),
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+        decision_ns_total,
+        group_sizes,
+    };
+    let run = TxnRun {
+        fabric,
+        clients,
+        atomic: true,
         replicate: opts.replicate,
         method,
         compound_method,
@@ -1211,8 +1654,9 @@ pub fn check_txn_crash_at(
 ///
 /// The committed prefix is resolved from whatever decision state
 /// survives: the merge of primary + witness rings for replicated runs
-/// ([`recover_decisions_merged`]; a blank ring contributes nothing), the
-/// primary ring alone otherwise. The durability / atomicity / integrity
+/// ([`crate::persist::failover::recover_decisions_merged`]; a blank
+/// ring contributes nothing), the primary ring alone otherwise.
+/// The durability / atomicity / integrity
 /// contracts are then checked over the **surviving** shards — losing a
 /// shard's payload is expected media loss; losing another shard's acked
 /// transactions (because the decision died with the coordinator) is the
@@ -1223,6 +1667,27 @@ pub fn check_txn_crash_at_with_loss(
     failed: Option<usize>,
     scanner: &dyn Scanner,
 ) -> TxnCrashReport {
+    let mut scans = vec![DecisionScan::default(); run.clients.len()];
+    check_txn_crash_at_scanned(run, t, failed, scanner, &mut scans)
+}
+
+/// [`check_txn_crash_at_with_loss`] with caller-owned committed-prefix
+/// scanners, one per client ([`DecisionScan`]). A sweep that visits its
+/// crash instants in **ascending order** passes the same scanners to
+/// every call: the committed prefix is monotone in the crash time on a
+/// recording run, so each call resumes from the cached high-water mark
+/// and the whole sweep makes a single pass over every decision ring
+/// (instead of re-walking the full prefix at each of the hundreds of
+/// instants). The cache is per (run, loss-mode): use fresh scanners
+/// when either changes.
+pub fn check_txn_crash_at_scanned(
+    run: &TxnRun,
+    t: Nanos,
+    failed: Option<usize>,
+    scanner: &dyn Scanner,
+    scans: &mut [DecisionScan],
+) -> TxnCrashReport {
+    assert_eq!(scans.len(), run.clients.len(), "one scanner per client");
     let mut rep = TxnCrashReport { crash_points: 1, ..Default::default() };
     // One crash image per QP (images are per-QP, not per-client: client
     // regions are disjoint slices of the same PM). The lost shard
@@ -1244,16 +1709,17 @@ pub fn check_txn_crash_at_with_loss(
     let committed: Vec<u64> = run
         .clients
         .iter()
-        .map(|c| {
+        .zip(scans.iter_mut())
+        .map(|(c, scan)| {
             if !run.atomic {
                 0 // no protocol, nothing to resolve
             } else if run.replicate {
-                recover_decisions_merged(
+                scan.committed_merged(
                     Some((&images[c.coord_qp], &c.decisions)),
                     Some((&images[c.witness_qp], &c.replicas)),
                 )
             } else {
-                recover_decisions(&images[c.coord_qp], &c.decisions)
+                scan.committed(&images[c.coord_qp], &c.decisions)
             }
         })
         .collect();
@@ -1322,9 +1788,39 @@ pub fn check_txn_crash_at_with_loss(
     rep
 }
 
+/// The crash schedule of a transactional sweep: `uniform_points` seeded
+/// uniform instants plus the adversarial instants around every
+/// transaction's PREPARE completion and ack (where in-doubt windows
+/// open and close), plus the makespan — **sorted ascending** so the
+/// sweep can reuse cached committed-prefix scanners
+/// ([`check_txn_crash_at_scanned`]).
+fn sweep_instants(run: &TxnRun, uniform_points: u64, seed: u64) -> Vec<Nanos> {
+    let end = run.fabric.makespan();
+    let mut rng = SplitMix64::new(seed);
+    let mut instants: Vec<Nanos> = (0..uniform_points)
+        .map(|_| rng.next_below(end.max(1)))
+        .collect();
+    for client in &run.clients {
+        for x in &client.txns {
+            instants.extend([
+                x.prepared_at,
+                x.prepared_at + 1,
+                x.acked_at.saturating_sub(1),
+                x.acked_at,
+                x.acked_at + 1,
+            ]);
+        }
+    }
+    instants.push(end);
+    instants.sort_unstable();
+    instants
+}
+
 /// Crash sweep over a transactional run: uniform instants plus the
 /// adversarial instants around every transaction's PREPARE completion
-/// and ack (where in-doubt windows open and close).
+/// and ack (where in-doubt windows open and close). Instants are
+/// visited in ascending order with per-client cached prefix scanners,
+/// so the whole sweep is a single pass over each decision ring.
 pub fn txn_crash_sweep(
     run: &TxnRun,
     uniform_points: u64,
@@ -1335,27 +1831,13 @@ pub fn txn_crash_sweep(
         run.fabric.qp(0).mem.recording(),
         "crash sweep requires a recording run"
     );
-    let end = run.fabric.makespan();
-    let mut rng = SplitMix64::new(seed);
+    let mut scans = vec![DecisionScan::default(); run.clients.len()];
     let mut report = TxnCrashReport::default();
-    for _ in 0..uniform_points {
-        let t = rng.next_below(end.max(1));
-        report.merge(&check_txn_crash_at(run, t, scanner));
+    for t in sweep_instants(run, uniform_points, seed) {
+        report.merge(&check_txn_crash_at_scanned(
+            run, t, None, scanner, &mut scans,
+        ));
     }
-    for client in &run.clients {
-        for x in &client.txns {
-            for t in [
-                x.prepared_at,
-                x.prepared_at + 1,
-                x.acked_at.saturating_sub(1),
-                x.acked_at,
-                x.acked_at + 1,
-            ] {
-                report.merge(&check_txn_crash_at(run, t, scanner));
-            }
-        }
-    }
-    report.merge(&check_txn_crash_at(run, end, scanner));
     report
 }
 
@@ -1383,27 +1865,17 @@ pub fn run_failover_sweep(
     let shards = run.fabric.shards();
     let loss_modes: Vec<Option<usize>> =
         std::iter::once(None).chain((0..shards).map(Some)).collect();
-    let end = run.fabric.makespan();
-    let mut rng = SplitMix64::new(seed);
-    let mut instants: Vec<Nanos> = (0..uniform_points)
-        .map(|_| rng.next_below(end.max(1)))
-        .collect();
-    for client in &run.clients {
-        for x in &client.txns {
-            instants.extend([
-                x.prepared_at,
-                x.prepared_at + 1,
-                x.acked_at.saturating_sub(1),
-                x.acked_at,
-                x.acked_at + 1,
-            ]);
-        }
-    }
-    instants.push(end);
+    let instants = sweep_instants(run, uniform_points, seed);
     let mut report = TxnCrashReport::default();
-    for t in instants {
-        for &failed in &loss_modes {
-            let rep = check_txn_crash_at_with_loss(run, t, failed, scanner);
+    // Loss mode outer, ascending instants inner: each mode gets its own
+    // cached scanners (the surviving ring set differs per mode), and
+    // within a mode the committed prefix is monotone, so every decision
+    // ring is walked once per loss mode.
+    for &failed in &loss_modes {
+        let mut scans = vec![DecisionScan::default(); run.clients.len()];
+        for &t in &instants {
+            let rep =
+                check_txn_crash_at_scanned(run, t, failed, scanner, &mut scans);
             report.merge(&rep);
         }
     }
@@ -1828,6 +2300,137 @@ mod tests {
             Primary::Write,
             &opts,
         );
+    }
+
+    #[test]
+    fn grouped_runner_amortizes_decision_cost() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mk = |max_group| GroupRunOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 64,
+            capacity: 64,
+            seed: 11,
+            record: false,
+            replicate: false,
+            // Generous hold: max_group is the binding policy here.
+            group: GroupCommitOpts {
+                max_group,
+                max_hold_ns: 1_000_000,
+                idle_close: true,
+            },
+        };
+        let (_, g1) = run_txn_grouped(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &mk(1),
+        );
+        let (_, g8) = run_txn_grouped(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &mk(8),
+        );
+        assert_eq!(g1.groups, 128, "unit groups: one train per txn");
+        assert_eq!(g8.groups, 16, "64 txns / 8 per group x 2 clients");
+        assert!(
+            g8.decision_ns_per_txn() < g1.decision_ns_per_txn() / 2.0,
+            "grouping 8 decisions must amortize: {} vs {}",
+            g8.decision_ns_per_txn(),
+            g1.decision_ns_per_txn()
+        );
+        assert!(
+            g8.throughput_mtps() > g1.throughput_mtps(),
+            "group commit must raise commit throughput: {} vs {}",
+            g8.throughput_mtps(),
+            g1.throughput_mtps()
+        );
+    }
+
+    #[test]
+    fn grouped_runner_survives_crashes_and_losses() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        for replicate in [false, true] {
+            let opts = GroupRunOpts {
+                clients: 2,
+                shards: 3,
+                txns_per_client: 8,
+                capacity: 32,
+                seed: 17,
+                record: true,
+                replicate,
+                group: GroupCommitOpts { max_group: 4, ..Default::default() },
+            };
+            let (run, res) = run_txn_grouped(
+                cfg,
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            assert_eq!(res.txns, 16);
+            let rep = if replicate {
+                run_failover_sweep(&run, 40, 5, &RustScanner)
+            } else {
+                txn_crash_sweep(&run, 40, 5, &RustScanner)
+            };
+            assert!(rep.clean(), "replicate={replicate}: {rep:?}");
+        }
+    }
+
+    #[test]
+    fn grouped_runs_are_deterministic() {
+        let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+        let opts = GroupRunOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 40,
+            capacity: 64,
+            seed: 9,
+            record: false,
+            replicate: false,
+            group: GroupCommitOpts::default(),
+        };
+        let (_, a) = run_txn_grouped(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let (_, b) = run_txn_grouped(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        assert_eq!(a.span_ns, b.span_ns);
+        assert_eq!(a.decision_ns_total, b.decision_ns_total);
+        assert_eq!(a.group_sizes, b.group_sizes);
+    }
+
+    #[test]
+    fn sweep_schedules_are_sorted_for_the_scan_cache() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = TxnRunOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 6,
+            capacity: 16,
+            seed: 3,
+            record: true,
+            atomic: true,
+            replicate: false,
+        };
+        let (run, _) = run_txn_multi_shard(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let instants = sweep_instants(&run, 30, 7);
+        assert!(instants.windows(2).all(|w| w[0] <= w[1]), "must ascend");
+        // Count preserved: uniform + 5 per txn per client + makespan.
+        assert_eq!(instants.len() as u64, 30 + 5 * 6 * 2 + 1);
     }
 
     #[test]

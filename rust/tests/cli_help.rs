@@ -28,6 +28,7 @@ fn bare_invocation_and_help_list_every_command() {
             "scale",
             "txn",
             "failover",
+            "group",
             "claims",
             "crash-test",
             "recover-demo",
@@ -44,10 +45,11 @@ fn bare_invocation_and_help_list_every_command() {
 #[test]
 fn per_command_help_lists_the_knobs() {
     // (command, flags its usage text must name)
-    let cases: [(&str, &[&str]); 5] = [
+    let cases: [(&str, &[&str]); 6] = [
         ("scale", &["--clients", "--shards", "--window", "--batch"]),
         ("txn", &["--clients", "--shards", "--txns", "--primary"]),
         ("failover", &["--clients", "--shards", "--txns", "--json"]),
+        ("group", &["--groups", "--clients", "--shards", "--txns"]),
         ("sweep", &["--domain", "--kind", "--appends", "--transport"]),
         ("crash-test", &["--appends", "--seeds", "--points", "--scanner"]),
     ];

@@ -2,17 +2,17 @@
 //! experiment replays bit-for-bit from its seed, so the JSON artifacts
 //! the bench binaries emit must be **byte-identical** across runs. This
 //! test drives the same code paths as `benches/scaling.rs`,
-//! `benches/txn.rs`, and `benches/failover.rs` at their
-//! `RPMEM_BENCH_FAST=1` sizes, twice each, and compares the serialized
+//! `benches/txn.rs`, `benches/failover.rs`, and `benches/group.rs` at
+//! their `RPMEM_BENCH_FAST=1` sizes, twice each, and compares the serialized
 //! artifacts byte for byte — guarding against hidden nondeterminism
 //! (HashMap iteration leaking into results, thread-scheduling-dependent
 //! aggregation, float formatting drift). CI additionally runs the real
 //! bench binaries twice and `cmp`s their artifact files.
 
 use rpmem::coordinator::scaling::{
-    failover_grid_to_json, run_failover_grid, run_saturation_axis,
-    run_scaling_axis, run_txn_grid, scaling_to_json, txn_grid_to_json,
-    ScalingOpts,
+    failover_grid_to_json, group_grid_to_json, run_failover_grid,
+    run_group_grid, run_saturation_axis, run_scaling_axis, run_txn_grid,
+    scaling_to_json, txn_grid_to_json, ScalingOpts,
 };
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
 use rpmem::persist::method::Primary;
@@ -105,6 +105,21 @@ fn failover_artifact() -> String {
     failover_grid_to_json(&points).to_string_pretty()
 }
 
+/// The `benches/group.rs` path at fast-mode size.
+fn group_artifact() -> String {
+    let txns = 20;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let points = run_group_grid(
+        Primary::Write,
+        &[1, 4, 16],
+        &[1, 2],
+        4,
+        txns,
+        &opts,
+    );
+    group_grid_to_json(&points).to_string_pretty()
+}
+
 #[test]
 fn scaling_bench_path_is_byte_deterministic() {
     let a = scaling_artifact();
@@ -127,6 +142,14 @@ fn failover_bench_path_is_byte_deterministic() {
     let b = failover_artifact();
     assert!(!a.is_empty() && a.contains("replicated_mtps"));
     assert_eq!(a, b, "failover artifact must be byte-identical");
+}
+
+#[test]
+fn group_bench_path_is_byte_deterministic() {
+    let a = group_artifact();
+    let b = group_artifact();
+    assert!(!a.is_empty() && a.contains("amortization_factor"));
+    assert_eq!(a, b, "group artifact must be byte-identical");
 }
 
 /// Different seeds must actually change the artifact — otherwise the

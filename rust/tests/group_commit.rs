@@ -1,0 +1,268 @@
+//! Group-commit campaign (acceptance criteria for the
+//! `persist::groupcommit` layer).
+//!
+//! Three obligations:
+//!
+//! * **all-or-nothing per group** — at every crash instant, with and
+//!   without decision replication, the recovered committed prefix
+//!   lands on a group boundary: no partial group is ever visible (the
+//!   reverse-posted group train plus the unchanged prefix scan);
+//! * **group size 1 ≡ ungrouped** — the degenerate schedule replays
+//!   `run_txn_multi_shard`'s atomic path op for op: identical spans,
+//!   latencies, decision costs, oracles, and recovered prefixes;
+//! * the policy knobs (hold timer, idle close) behave as modeled.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::persist::txn::recover_decisions;
+use rpmem::remotelog::pipeline::{
+    assert_group_boundaries, run_failover_sweep, run_txn_grouped,
+    run_txn_multi_shard, txn_crash_sweep, GroupRunOpts, GroupRunResult,
+    TxnRun, TxnRunOpts,
+};
+use rpmem::remotelog::recovery::RustScanner;
+
+fn grouped_opts(max_group: usize, replicate: bool) -> GroupRunOpts {
+    GroupRunOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 32,
+        seed: 47,
+        record: true,
+        replicate,
+        // Generous hold: the size cap is the policy under test; the
+        // hold/idle knobs get their own tests below.
+        group: GroupCommitOpts {
+            max_group,
+            max_hold_ns: 1_000_000,
+            idle_close: true,
+        },
+    }
+}
+
+/// Every committed prefix recoverable from the run — primary ring,
+/// witness ring (replicated runs), at dense uniform instants plus the
+/// adversarial edges around every PREPARE/ack — must land on a group
+/// boundary of the client that owns the ring (the shared library
+/// checker, fed this campaign's adversarial schedule).
+fn assert_whole_group_prefixes(run: &TxnRun, res: &GroupRunResult) {
+    let end = run.fabric.makespan();
+    let mut instants: Vec<u64> = (0..=120).map(|i| end * i / 120).collect();
+    for client in &run.clients {
+        for x in &client.txns {
+            instants.extend([
+                x.prepared_at,
+                x.acked_at.saturating_sub(1),
+                x.acked_at,
+                x.acked_at + 1,
+            ]);
+        }
+    }
+    assert_group_boundaries(run, res, &instants);
+}
+
+/// The full campaign: all 12 taxonomy configurations × group sizes
+/// {1, 4, max} × replication on/off. Every sweep must be clean and
+/// every recoverable prefix must land on a group boundary.
+#[test]
+fn group_campaign_all_configs_sizes_and_replication() {
+    for cfg in ServerConfig::table1() {
+        for max_group in [1usize, 4, 8] {
+            for replicate in [false, true] {
+                let opts = grouped_opts(max_group, replicate);
+                let (run, res) = run_txn_grouped(
+                    cfg,
+                    TimingModel::default(),
+                    Primary::Write,
+                    &opts,
+                );
+                assert_eq!(res.txns, 16);
+                if max_group == 8 {
+                    // 8 txns/client, one full-wave group each.
+                    assert_eq!(res.groups, 2, "{}", cfg.label());
+                }
+                let rep = txn_crash_sweep(&run, 20, 9, &RustScanner);
+                assert!(
+                    rep.clean(),
+                    "{} group={max_group} replicate={replicate}: {rep:?}",
+                    cfg.label()
+                );
+                assert_whole_group_prefixes(&run, &res);
+            }
+        }
+    }
+}
+
+/// The crash × shard-loss cross product on grouped runs: replicated
+/// group trains survive the loss of any single shard at any instant.
+#[test]
+fn grouped_failover_cross_product() {
+    for cfg in [
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+    ] {
+        for max_group in [4usize, 8] {
+            let mut opts = grouped_opts(max_group, true);
+            opts.shards = 3;
+            let (run, res) = run_txn_grouped(
+                cfg,
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            let rep = run_failover_sweep(&run, 20, 11, &RustScanner);
+            assert!(rep.clean(), "{} group={max_group}: {rep:?}", cfg.label());
+            assert!(rep.crash_points >= 4 * 20);
+            assert_whole_group_prefixes(&run, &res);
+        }
+    }
+}
+
+/// Group size 1 replays the ungrouped atomic path EXACTLY: the same
+/// virtual-time evolution, op for op — spans, latency statistics,
+/// decision costs, per-transaction oracles, and recovered prefixes are
+/// all identical.
+#[test]
+fn group_size_one_is_identical_to_ungrouped() {
+    for (cfg, primary) in [
+        (
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            Primary::Write,
+        ),
+        (
+            ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+            Primary::Send,
+        ),
+        (
+            ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Pm),
+            Primary::Write,
+        ),
+    ] {
+        for replicate in [false, true] {
+            let gopts = grouped_opts(1, replicate);
+            let (grun, gres) = run_txn_grouped(
+                cfg,
+                TimingModel::default(),
+                primary,
+                &gopts,
+            );
+            let topts = TxnRunOpts {
+                clients: gopts.clients,
+                shards: gopts.shards,
+                txns_per_client: gopts.txns_per_client,
+                capacity: gopts.capacity,
+                seed: gopts.seed,
+                record: true,
+                atomic: true,
+                replicate,
+            };
+            let (trun, tres) = run_txn_multi_shard(
+                cfg,
+                TimingModel::default(),
+                primary,
+                &topts,
+            );
+            let label = format!("{} replicate={replicate}", cfg.label());
+            assert_eq!(gres.span_ns, tres.span_ns, "{label}");
+            assert_eq!(gres.mean_latency_ns, tres.mean_latency_ns, "{label}");
+            assert_eq!(gres.p99_latency_ns, tres.p99_latency_ns, "{label}");
+            assert_eq!(
+                gres.decision_ns_total,
+                tres.decision_ns_total,
+                "{label}"
+            );
+            assert_eq!(gres.groups, gres.txns, "{label}: one train per txn");
+            for (gc, tc) in grun.clients.iter().zip(&trun.clients) {
+                assert_eq!(gc.txns.len(), tc.txns.len(), "{label}");
+                for (gx, tx) in gc.txns.iter().zip(&tc.txns) {
+                    assert_eq!(gx.txn_id, tx.txn_id, "{label}");
+                    assert_eq!(gx.prepared_at, tx.prepared_at, "{label}");
+                    assert_eq!(gx.acked_at, tx.acked_at, "{label}");
+                    assert_eq!(gx.records, tx.records, "{label}");
+                }
+            }
+            // Same recovered prefixes at shared instants.
+            let end = grun.fabric.makespan();
+            for i in 0..=60u64 {
+                let t = end * i / 60;
+                for (gc, tc) in grun.clients.iter().zip(&trun.clients) {
+                    let pd = cfg.pdomain;
+                    let gi = grun
+                        .fabric
+                        .qp(gc.coord_qp)
+                        .mem
+                        .crash_image(t, pd);
+                    let ti = trun
+                        .fabric
+                        .qp(tc.coord_qp)
+                        .mem
+                        .crash_image(t, pd);
+                    assert_eq!(
+                        recover_decisions(&gi, &gc.decisions),
+                        recover_decisions(&ti, &tc.decisions),
+                        "{label} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The hold timer splits groups: a zero hold window forces every
+/// decision into its own train even under a large size cap.
+#[test]
+fn zero_hold_degenerates_to_unit_groups() {
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let mut opts = grouped_opts(8, false);
+    opts.group.max_hold_ns = 0;
+    let (run, res) =
+        run_txn_grouped(cfg, TimingModel::default(), Primary::Write, &opts);
+    assert_eq!(res.groups, res.txns, "zero hold: one train per txn");
+    let rep = txn_crash_sweep(&run, 20, 3, &RustScanner);
+    assert!(rep.clean(), "{rep:?}");
+}
+
+/// Disabling adaptive idle close makes partial groups run out the hold
+/// timer: same schedule, strictly later acks.
+#[test]
+fn idle_close_off_pays_the_hold_timer() {
+    let cfg = ServerConfig::new(PDomain::Wsp, false, RqwrbLoc::Dram);
+    let mk = |idle_close| GroupRunOpts {
+        clients: 1,
+        shards: 2,
+        txns_per_client: 5, // never fills the 8-wide group: drain path
+        capacity: 32,
+        seed: 13,
+        record: false,
+        replicate: false,
+        group: GroupCommitOpts {
+            max_group: 8,
+            max_hold_ns: 50_000,
+            idle_close,
+        },
+    };
+    let (_, adaptive) = run_txn_grouped(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(true),
+    );
+    let (_, timer) = run_txn_grouped(
+        cfg,
+        TimingModel::default(),
+        Primary::Write,
+        &mk(false),
+    );
+    assert_eq!(adaptive.groups, 1);
+    assert_eq!(timer.groups, 1);
+    assert!(
+        timer.mean_latency_ns > adaptive.mean_latency_ns + 10_000.0,
+        "running out a 50us hold timer must show up in commit latency: \
+         {} vs {}",
+        timer.mean_latency_ns,
+        adaptive.mean_latency_ns
+    );
+}
