@@ -1,0 +1,206 @@
+//! Hostile-network soak campaign: grouped 2PC with decision replication
+//! under a seeded drop/jitter/partition/churn fault schedule
+//! (`remotelog::soak`), across ALL 12 taxonomy configurations × 4
+//! seeds, the retry engine re-posting lost trains. Every run is
+//! crash-swept for the invariants — acked ⇒ recovered, committed
+//! prefixes only on group boundaries — at uniform instants plus every
+//! ack boundary.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_SOAK_OUT`, default
+//! `soak_results.json`); the artifact is a pure function of the seeds,
+//! so CI double-runs it and diffs the bytes. Three guards are asserted:
+//!
+//! * **the campaign is clean** — any violated run panics with the
+//!   shrunk minimal fault schedule as a replayable `rpmem soak` line;
+//! * **the faults really fired** — drops, retries, and the churn event
+//!   are all non-zero somewhere in the grid (a soak that soaked
+//!   nothing proves nothing);
+//! * **the harness can still fail** — the same schedule with a
+//!   sabotaged retry engine (acks fabricated over dropped trains, no
+//!   re-post) MUST report violations, and a zero-fault max_group=1
+//!   soak must replay the plain 2PC pipeline bit for bit.
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::coordinator::scaling::{
+    render_soak_grid, run_soak_grid, soak_grid_to_json,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::pipeline::{run_txn_multi_shard, TxnRunOpts};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::remotelog::soak::{
+    replay_line, run_soak_case, run_txn_soak, shrink_soak_failure, FaultPlan,
+    SoakOpts, SoakStats,
+};
+use std::time::Instant;
+
+fn main() {
+    // Fast mode still needs >= 3 group-commit waves so the partition
+    // (wave 1) and the churn event (wave 2) actually land.
+    let txns: u64 = if rpmem::bench::fast() { 12 } else { 240 };
+    let uniform_points: u64 = if rpmem::bench::fast() { 20 } else { 60 };
+    let seeds = [1u64, 2, 3, 4];
+    let base = SoakOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: txns,
+        capacity: txns.max(32),
+        replicate: true,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan {
+            drop_per_mille: 20,
+            jitter_ns: 200,
+            duplicate_per_mille: 10,
+            partition: Some((1, 60_000)),
+            churn: Some((2, 60_000)),
+        },
+        ..Default::default()
+    };
+    println!(
+        "hostile-network soak, {txns} txns/client, {} shards, 12 configs x \
+         {} seeds (drop 20‰, jitter 200ns, dup 10‰, partition + churn)\n",
+        base.shards,
+        seeds.len()
+    );
+
+    let timing = TimingModel::default();
+    let t0 = Instant::now();
+    let points =
+        run_soak_grid(Primary::Write, &seeds, &base, uniform_points, &timing);
+    let wall = t0.elapsed();
+    let title = "hostile-network soak across the taxonomy — 2PC invariants \
+                 under drop/jitter/partition/churn";
+    println!("{}", render_soak_grid(title, &points));
+    println!("  [harness: {:.2?} wall-clock]\n", wall);
+
+    // Guard 1: every run clean — shrink any failure to a minimal
+    // replayable repro before dying.
+    let table = ServerConfig::table1();
+    for p in &points {
+        if !p.clean {
+            let ci = table
+                .iter()
+                .position(|c| c.label() == p.config.label())
+                .expect("point config is a taxonomy row");
+            let failing = SoakOpts { seed: p.seed, ..base };
+            let minimal = shrink_soak_failure(
+                p.config,
+                &timing,
+                Primary::Write,
+                &failing,
+                uniform_points,
+                &RustScanner,
+            );
+            panic!(
+                "{} seed {}: {} violations; minimal repro: {}",
+                p.config.label(),
+                p.seed,
+                p.violations,
+                replay_line(ci, &minimal)
+            );
+        }
+    }
+
+    // Guard 2: the soak actually soaked.
+    let drops: u64 = points.iter().map(|p| p.dropped_ops).sum();
+    let retries: u64 = points.iter().map(|p| p.retries).sum();
+    assert!(drops > 0, "no train was ever dropped");
+    assert!(retries > 0, "the retry engine never had to work");
+    for p in &points {
+        assert_eq!(
+            p.churn_events,
+            1,
+            "{} seed {}: the churn event never landed",
+            p.config.label(),
+            p.seed
+        );
+        assert_eq!(
+            p.txns + p.aborted_txns,
+            txns * 2,
+            "{} seed {}: acked + aborted must cover the stream",
+            p.config.label(),
+            p.seed
+        );
+    }
+
+    // Guard 3a: a sabotaged retry engine (fabricated acks, no re-post)
+    // must make the campaign fail — the harness can detect the bug
+    // class it exists for.
+    let broken = SoakOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 16,
+        seed: 5,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan { drop_per_mille: 400, ..FaultPlan::none() },
+        broken_retry: true,
+        ..Default::default()
+    };
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let (_, stats, report) = run_soak_case(
+        cfg,
+        TimingModel::deterministic(),
+        Primary::Write,
+        &broken,
+        30,
+        &RustScanner,
+    );
+    assert!(stats.dropped_ops > 0);
+    assert!(
+        !report.clean(),
+        "a broken retry engine must fail the campaign"
+    );
+    println!(
+        "negative control: broken retry engine over {} drops -> {} \
+         durability violations (detected, as required)",
+        stats.dropped_ops, report.crash.durability_violations
+    );
+
+    // Guard 3b: a zero-fault max_group=1 soak IS the plain 2PC
+    // pipeline, bit for bit.
+    let benign = SoakOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 16,
+        seed: 7,
+        group: GroupCommitOpts { max_group: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let (_, soak, stats) = run_txn_soak(
+        cfg,
+        TimingModel::deterministic(),
+        Primary::Write,
+        &benign,
+    );
+    let (_, plain) = run_txn_multi_shard(
+        cfg,
+        TimingModel::deterministic(),
+        Primary::Write,
+        &TxnRunOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 7,
+            record: true,
+            atomic: true,
+            replicate: false,
+        },
+    );
+    assert_eq!(soak.span_ns, plain.span_ns);
+    assert_eq!(soak.mean_latency_ns, plain.mean_latency_ns);
+    assert_eq!(soak.decision_ns_total, plain.decision_ns_total);
+    assert_eq!(stats, SoakStats::default(), "benign plan must be free");
+    println!("zero-fault identity: soak(group=1, no faults) == plain 2PC\n");
+
+    let out = std::env::var("RPMEM_SOAK_OUT")
+        .unwrap_or_else(|_| "soak_results.json".to_string());
+    std::fs::write(&out, soak_grid_to_json(&points).to_string_pretty())
+        .expect("write soak JSON artifact");
+    println!("wrote {out} ({} points)", points.len());
+}

@@ -27,6 +27,14 @@
 //!   baseline — the amortized decision-persistence cost
 //!   (`benches/group.rs` persists the table and asserts the
 //!   amortization is strictly monotone in the group size).
+//! * **soak axis** ([`run_soak_grid`]) — the hostile-network campaign:
+//!   ALL 12 taxonomy configurations × seeds, every run under a
+//!   drop/jitter/partition/churn fault schedule
+//!   ([`crate::remotelog::soak`]) with the retry engine re-posting lost
+//!   trains, then crash-swept for the 2PC invariants (acked ⇒
+//!   recovered, whole-group atomicity) at every instant
+//!   (`benches/soak.rs` persists the table; any violation fails the
+//!   build).
 
 use crate::fabric::timing::TimingModel;
 use crate::persist::config::ServerConfig;
@@ -35,8 +43,10 @@ use crate::persist::method::Primary;
 use crate::remotelog::client::{AppendMode, MethodChoice};
 use crate::remotelog::pipeline::{
     run_multi_client, run_txn_grouped, run_txn_multi_shard, GroupRunOpts,
-    ShardedRunOpts, TxnRunOpts,
+    ShardedRunOpts, TxnRunOpts, TxnRunResult,
 };
+use crate::remotelog::recovery::RustScanner;
+use crate::remotelog::soak::{run_soak_case, SoakOpts};
 use crate::util::json::Json;
 use std::thread;
 
@@ -810,6 +820,207 @@ pub fn group_grid_to_json(points: &[GroupPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
+// ---------------------------------------------------------------------
+// Soak axis: the hostile-network campaign — every taxonomy config under
+// a drop/jitter/partition/churn schedule, crash-swept for the 2PC
+// invariants.
+// ---------------------------------------------------------------------
+
+/// One (config, seed) soak measurement: a full hostile-network grouped
+/// 2PC run ([`crate::remotelog::soak`]) plus the verdict of its crash
+/// sweep.
+#[derive(Debug, Clone)]
+pub struct SoakPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Engine-jitter and fault-draw seed of this run.
+    pub seed: u64,
+    /// Transactions acked (committed) across all clients.
+    pub txns: u64,
+    /// Decision trains released across all clients.
+    pub groups_formed: u64,
+    /// Makespan in virtual ns.
+    pub span_ns: u64,
+    /// Committed-transaction throughput (million txns per simulated
+    /// second).
+    pub throughput_mtps: f64,
+    /// Mean commit latency (ns) — retries included.
+    pub mean_commit_ns: f64,
+    /// p99 commit latency (ns).
+    pub p99_commit_ns: u64,
+    /// Re-posts issued by the retry engine.
+    pub retries: u64,
+    /// Ops dropped on the wire.
+    pub dropped_ops: u64,
+    /// Update payloads redelivered.
+    pub duplicated: u64,
+    /// Anti-entropy segments shipped to rejoining shards.
+    pub resync_segments: u64,
+    /// Writes a rebooting shard lost (posted but not yet persistent).
+    pub discarded_writes: u64,
+    /// Shard reboot (leave + rejoin) events.
+    pub churn_events: u64,
+    /// Transactions aborted cleanly after retry exhaustion.
+    pub aborted_txns: u64,
+    /// Crash instants swept.
+    pub crash_points: u64,
+    /// Total invariant violations (durability + atomicity + integrity +
+    /// group-boundary) across the sweep — 0 on a correct protocol.
+    pub violations: u64,
+    /// Every invariant held at every crash instant?
+    pub clean: bool,
+}
+
+impl SoakPoint {
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("seed", self.seed.into())
+            .set("txns", self.txns.into())
+            .set("groups_formed", self.groups_formed.into())
+            .set("span_ns", self.span_ns.into())
+            .set("throughput_mtps", self.throughput_mtps.into())
+            .set("mean_commit_ns", self.mean_commit_ns.into())
+            .set("p99_commit_ns", self.p99_commit_ns.into())
+            .set("retries", self.retries.into())
+            .set("dropped_ops", self.dropped_ops.into())
+            .set("duplicated", self.duplicated.into())
+            .set("resync_segments", self.resync_segments.into())
+            .set("discarded_writes", self.discarded_writes.into())
+            .set("churn_events", self.churn_events.into())
+            .set("aborted_txns", self.aborted_txns.into())
+            .set("crash_points", self.crash_points.into())
+            .set("violations", self.violations.into())
+            .set("clean", self.clean.into());
+        j
+    }
+}
+
+/// One soak cell: run `base` (with its seed replaced by `seed`) on
+/// `cfg` and fold the run, its fault tallies, and the sweep verdict
+/// into a [`SoakPoint`].
+pub fn run_soak_point(
+    cfg: ServerConfig,
+    primary: Primary,
+    seed: u64,
+    base: &SoakOpts,
+    uniform_points: u64,
+    timing: &TimingModel,
+) -> SoakPoint {
+    let opts = SoakOpts { seed, ..*base };
+    let (res, stats, report) = run_soak_case(
+        cfg,
+        timing.clone(),
+        primary,
+        &opts,
+        uniform_points,
+        &RustScanner,
+    );
+    SoakPoint {
+        config: cfg,
+        seed,
+        txns: res.txns,
+        groups_formed: res.groups,
+        span_ns: res.span_ns,
+        throughput_mtps: res.throughput_mtps(),
+        mean_commit_ns: res.mean_latency_ns,
+        p99_commit_ns: res.p99_latency_ns,
+        retries: stats.retries,
+        dropped_ops: stats.dropped_ops,
+        duplicated: stats.duplicated,
+        resync_segments: stats.resync_segments,
+        discarded_writes: stats.discarded_writes,
+        churn_events: stats.churn_events,
+        aborted_txns: stats.aborted_txns,
+        crash_points: report.crash.crash_points,
+        violations: report.crash.durability_violations
+            + report.crash.atomicity_violations
+            + report.crash.integrity_violations
+            + report.boundary_violations,
+        clean: report.clean(),
+    }
+}
+
+/// The soak grid: **all 12 taxonomy configurations** × every seed, each
+/// run under `base`'s fault schedule (the seed field of `base` is
+/// overridden per point) and crash-swept at `uniform_points` uniform
+/// instants plus every ack boundary. Scenarios run in parallel threads.
+pub fn run_soak_grid(
+    primary: Primary,
+    seeds: &[u64],
+    base: &SoakOpts,
+    uniform_points: u64,
+    timing: &TimingModel,
+) -> Vec<SoakPoint> {
+    let scenarios: Vec<(ServerConfig, u64)> = ServerConfig::table1()
+        .into_iter()
+        .flat_map(|cfg| seeds.iter().map(move |&s| (cfg, s)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(cfg, seed)| {
+                scope.spawn(move || {
+                    run_soak_point(
+                        cfg,
+                        primary,
+                        seed,
+                        base,
+                        uniform_points,
+                        timing,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("soak scenario panicked"))
+            .collect()
+    })
+}
+
+/// Render a soak grid (per-run fault tallies and the sweep verdict).
+pub fn render_soak_grid(title: &str, points: &[SoakPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<14} {:>5} {:>6} {:>7} {:>7} {:>6} {:>6} {:>5} {:>10} {:>9}\n",
+        "config",
+        "seed",
+        "txns",
+        "aborted",
+        "retries",
+        "drops",
+        "resync",
+        "churn",
+        "commit",
+        "verdict"
+    ));
+    out.push_str(&"-".repeat(84));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<14} {:>5} {:>6} {:>7} {:>7} {:>6} {:>6} {:>5} {:>7.2} us {:>9}\n",
+            p.config.label(),
+            p.seed,
+            p.txns,
+            p.aborted_txns,
+            p.retries,
+            p.dropped_ops,
+            p.resync_segments,
+            p.churn_events,
+            p.mean_commit_ns / 1e3,
+            if p.clean { "clean" } else { "VIOLATED" },
+        ));
+    }
+    out
+}
+
+/// Serialize a soak grid for the JSON artifact.
+pub fn soak_grid_to_json(points: &[SoakPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -988,6 +1199,61 @@ mod tests {
         assert_eq!(j.as_arr().unwrap().len(), 24);
         assert!(j.as_arr().unwrap()[0].get("amortization_factor").is_some());
         assert!(render_group_grid("t", &pts).contains("amort"));
+    }
+
+    #[test]
+    fn soak_grid_covers_all_configs_and_stays_clean_under_faults() {
+        use crate::persist::groupcommit::GroupCommitOpts;
+        use crate::remotelog::soak::FaultPlan;
+        let base = SoakOpts {
+            clients: 2,
+            shards: 3,
+            txns_per_client: 10,
+            capacity: 16,
+            replicate: true,
+            group: GroupCommitOpts { max_group: 4, ..Default::default() },
+            plan: FaultPlan {
+                drop_per_mille: 20,
+                jitter_ns: 200,
+                duplicate_per_mille: 10,
+                partition: Some((1, 40_000)),
+                churn: Some((2, 40_000)),
+            },
+            ..Default::default()
+        };
+        let pts = run_soak_grid(
+            Primary::Write,
+            &[3, 4],
+            &base,
+            20,
+            &TimingModel::default(),
+        );
+        // 12 taxonomy configs × 2 seeds.
+        assert_eq!(pts.len(), 24);
+        let configs: std::collections::HashSet<String> =
+            pts.iter().map(|p| p.config.label()).collect();
+        assert_eq!(configs.len(), 12, "every taxonomy row soaked");
+        for p in &pts {
+            assert!(p.clean, "{} seed {}: violated", p.config.label(), p.seed);
+            assert!(p.crash_points > 0);
+            assert_eq!(p.violations, 0);
+            assert_eq!(p.churn_events, 1, "{}", p.config.label());
+            assert_eq!(
+                p.txns + p.aborted_txns,
+                20,
+                "{} seed {}: acked + aborted must cover the stream",
+                p.config.label(),
+                p.seed
+            );
+        }
+        // The schedule really was hostile: faults fired and the retry
+        // engine worked for its acks somewhere in the grid.
+        assert!(pts.iter().map(|p| p.dropped_ops).sum::<u64>() > 0);
+        assert!(pts.iter().map(|p| p.retries).sum::<u64>() > 0);
+        let j = soak_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 24);
+        assert!(j.as_arr().unwrap()[0].get("violations").is_some());
+        assert!(render_soak_grid("t", &pts).contains("verdict"));
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! * SEND/WRITEIMM consume receive WRs; receive completions surface to
 //!   the responder CPU in posting order, after placement.
 
+use crate::fabric::faults::NetworkModel;
 use crate::fabric::ops::{OnRecv, OpId, OpKind, WorkRequest};
 use crate::fabric::timing::{Nanos, TimingModel};
 use crate::persist::config::{ServerConfig, Transport};
@@ -117,6 +118,11 @@ pub struct Fabric {
     // ---- doorbell-batched post train (see `doorbell_begin`) ----
     train_active: bool,
     train_posted: bool,
+    // ---- hostile-network fault injection (None = pristine wire) ----
+    faults: Option<NetworkModel>,
+    /// Drop decision of the current doorbell train's first op — a lost
+    /// doorbell loses every WQE it rang for.
+    train_dropped: bool,
 }
 
 impl Fabric {
@@ -152,6 +158,50 @@ impl Fabric {
             pending_copies: Vec::new(),
             train_active: false,
             train_posted: false,
+            faults: None,
+            train_dropped: false,
+        }
+    }
+
+    /// Attach (or detach, with `None`) a hostile-network fault model.
+    /// With no model — or a model whose knobs are all zero — the
+    /// simulation is bit-for-bit identical to a pristine run: no random
+    /// draws are taken and no timestamps change.
+    pub fn set_faults(&mut self, model: Option<NetworkModel>) {
+        self.faults = model;
+        self.train_dropped = false;
+    }
+
+    /// The attached fault model, if any (stats inspection).
+    pub fn faults(&self) -> Option<&NetworkModel> {
+        self.faults.as_ref()
+    }
+
+    /// Mutable access to the attached fault model (partition scheduling
+    /// mid-run).
+    pub fn faults_mut(&mut self) -> Option<&mut NetworkModel> {
+        self.faults.as_mut()
+    }
+
+    /// Record a responder-local CPU store of `data` at `addr` that is
+    /// placed and durable at `at` (all persistence domains). Used by
+    /// anti-entropy catch-up: a rejoining responder's CPU writes shipped
+    /// segments locally, with no fabric hop and no completion. The write
+    /// sequence counter advances even when recording is off so recording
+    /// and non-recording runs stay aligned.
+    pub fn record_cpu_write(&mut self, addr: u64, data: Vec<u8>, at: Nanos) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if self.mem.recording() {
+            self.mem.record(WriteEvent {
+                seq,
+                addr,
+                data,
+                src: WriteSource::Cpu,
+                t_arrive: at,
+                t_place: at,
+                t_dmp: at,
+            });
         }
     }
 
@@ -208,10 +258,15 @@ impl Fabric {
             self.timing.wire_ns,
             self.timing.iwarp_local_comp_ns,
         );
-        let post_ns = if self.train_active && self.train_posted {
-            self.timing.batched_post_ns
-        } else {
+        // First op of a doorbell train (ops outside trains are trains of
+        // one) — captured before `train_posted` flips, because the train
+        // head both pays the doorbell cost and decides the train's fate
+        // under fault injection.
+        let train_first = !(self.train_active && self.train_posted);
+        let post_ns = if train_first {
             self.timing.post_ns
+        } else {
+            self.timing.batched_post_ns
         };
         self.train_posted = true;
         let id = OpId(self.ops.len() as u32);
@@ -224,9 +279,58 @@ impl Fabric {
             self.now
         };
 
-        // Wire: in-order delivery to the responder RNIC.
-        let mut t_arrive =
-            (launch + rnic_op_ns + wire_ns + rnic_op_ns).max(self.last_arrive);
+        // Hostile-network drop: the train head's decision covers the
+        // whole train — a lost doorbell loses every WQE it rang for.
+        // Partition windows drop everything launched inside them.
+        let dropped = match &self.faults {
+            Some(m) if train_first => {
+                let d = m.partitioned_at(launch) || m.drops(id.0 as u64);
+                self.train_dropped = d;
+                d
+            }
+            Some(_) => self.train_dropped,
+            None => false,
+        };
+        if dropped {
+            // The requester paid the post/doorbell cost and the fence
+            // hold, but the op never reaches the responder: no arrival,
+            // no placement, no RQ slot consumed, no ack. On IB/RoCE
+            // there is no completion either (the responder RNIC never
+            // acked); on iWARP the local transport layer still completes
+            // POSTED ops before any wire traversal — the completion
+            // fallacy, now observable as a CQE for a write that was
+            // lost. Non-posted ops (READ/FLUSH) complete only when their
+            // response arrives, so a dropped request never completes on
+            // either transport.
+            let comp_at = match self.cfg.transport {
+                _ if wr.kind.is_non_posted() => None,
+                Transport::IbRoce => None,
+                Transport::Iwarp => Some(launch + iwarp_local_comp_ns),
+            };
+            if let Some(m) = self.faults.as_mut() {
+                m.stats.dropped_ops += 1;
+            }
+            self.ops.push(OpState {
+                kind: wr.kind,
+                t_posted: launch,
+                t_arrive: NEVER,
+                t_place: 0,
+                comp_at,
+                ack_at: None,
+                write_seq: None,
+            });
+            return id;
+        }
+
+        // Wire: in-order delivery to the responder RNIC, plus any
+        // injected per-op wire jitter (zero-cost when no model attached).
+        let fault_jit = self
+            .faults
+            .as_ref()
+            .map_or(0, |m| m.extra_wire_ns(id.0 as u64));
+        let mut t_arrive = (launch + rnic_op_ns + wire_ns + fault_jit
+            + rnic_op_ns)
+            .max(self.last_arrive);
 
         // Recv-WR consumers stall until a receive buffer is free
         // (RNR back-pressure, §4.3).
@@ -358,6 +462,36 @@ impl Fabric {
                 t_place,
                 t_dmp,
             });
+        }
+
+        // Hostile-network duplicate: the NIC retransmits and the payload
+        // lands a second time shortly after the original. Modeled as
+        // payload-level redelivery only — no RQ slot consumed, no
+        // handler re-fired — so idempotent (same bytes, same address)
+        // records absorb it; the knob exists to prove they do.
+        if self
+            .faults
+            .as_ref()
+            .is_some_and(|m| m.duplicates(id.0 as u64))
+        {
+            // Fixed retransmit delay after the original delivery.
+            const REDELIVERY_NS: Nanos = 120;
+            let dup_seq = self.next_seq;
+            self.next_seq += 1;
+            if self.mem.recording() {
+                self.mem.record(WriteEvent {
+                    seq: dup_seq,
+                    addr: target,
+                    data: wr.payload.clone(),
+                    src: WriteSource::Rdma { op_index: id.0 },
+                    t_arrive: st.t_arrive + REDELIVERY_NS,
+                    t_place: t_place + REDELIVERY_NS,
+                    t_dmp: if ddio { NEVER } else { t_place + REDELIVERY_NS },
+                });
+            }
+            if let Some(m) = self.faults.as_mut() {
+                m.stats.duplicated += 1;
+            }
         }
 
         // Ordering chains.
@@ -541,6 +675,7 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::faults::FaultStats;
     use crate::persist::config::{PDomain, RqwrbLoc};
 
     fn fabric(pd: PDomain, ddio: bool, rqwrb: RqwrbLoc) -> Fabric {
@@ -873,5 +1008,141 @@ mod tests {
         // One ns earlier it was still on the wire.
         let img = f.mem.crash_image(arrive - 1, PDomain::Wsp);
         assert_eq!(img.read(0x1000, 1)[0], 0);
+    }
+
+    // ---- hostile-network fault injection ----
+
+    #[test]
+    fn benign_model_is_bit_identical() {
+        // Attaching a model with all-zero knobs must leave every
+        // milestone and the requester clock untouched.
+        let mut a = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut b = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        b.set_faults(Some(NetworkModel::new(999)));
+        for i in 0..8u64 {
+            let wr = WorkRequest::write(0x1000 + i * 0x100, vec![i as u8; 64]);
+            a.post(wr.clone());
+            b.post(wr);
+        }
+        assert_eq!(a.now(), b.now());
+        for i in 0..8 {
+            let (x, y) = (a.op(OpId(i)), b.op(OpId(i)));
+            assert_eq!(x.t_arrive, y.t_arrive);
+            assert_eq!(x.t_place, y.t_place);
+            assert_eq!(x.comp_at, y.comp_at);
+        }
+        assert_eq!(b.faults().unwrap().stats, FaultStats::default());
+    }
+
+    #[test]
+    fn dropped_write_never_arrives_or_persists() {
+        let mut f = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        f.set_faults(Some(NetworkModel::new(7).with_drop(1000)));
+        let id = f.post(WorkRequest::write(0x1000, vec![5u8; 64]));
+        let st = f.op(id);
+        assert_eq!(st.t_arrive, NEVER);
+        assert!(st.comp_at.is_none(), "IB/RoCE: no ack for a lost write");
+        assert!(st.write_seq.is_none());
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x1000, 1)[0], 0, "lost write must not land");
+        assert_eq!(f.faults().unwrap().stats.dropped_ops, 1);
+    }
+
+    #[test]
+    fn iwarp_completes_dropped_writes_anyway() {
+        // The completion fallacy, made observable: iWARP generates the
+        // CQE at the local transport layer, so a dropped write still
+        // "completes" at the requester.
+        let cfg = ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Dram)
+            .with_transport(Transport::Iwarp);
+        let layout = Layout::new(1 << 16, 1 << 16, 8, 256, RqwrbLoc::Dram);
+        let mut f =
+            Fabric::new(cfg, TimingModel::deterministic(), layout, 7, true);
+        f.set_faults(Some(NetworkModel::new(7).with_drop(1000)));
+        let id = f.post(WorkRequest::write(0x1000, vec![5u8; 64]));
+        let st = f.op(id);
+        assert_eq!(st.t_arrive, NEVER);
+        assert!(st.comp_at.is_some(), "iWARP local completion fires");
+    }
+
+    #[test]
+    fn dropped_doorbell_train_drops_every_wqe() {
+        let mut f = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        // Seed/key chosen so the head op (id 0) is a drop victim.
+        let model = NetworkModel::new(7).with_drop(1000);
+        assert!(model.drops(0));
+        f.set_faults(Some(model));
+        f.doorbell_begin();
+        for i in 0..4u64 {
+            f.post(WorkRequest::write(0x1000 + i * 0x100, vec![1u8; 64]));
+        }
+        f.doorbell_end();
+        for i in 0..4 {
+            assert_eq!(
+                f.op(OpId(i)).t_arrive,
+                NEVER,
+                "op {i} of the lost train must be lost too"
+            );
+        }
+        assert_eq!(f.faults().unwrap().stats.dropped_ops, 4);
+    }
+
+    #[test]
+    fn partition_window_blackholes_posts() {
+        let mut f = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut model = NetworkModel::new(7);
+        // Window comfortably covering the first post's launch time.
+        model.add_partition(0, 1_000_000);
+        f.set_faults(Some(model));
+        let a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        assert_eq!(f.op(a).t_arrive, NEVER);
+        // Heal the partition by advancing past the window: posts flow.
+        let gap = 1_000_000u64.saturating_sub(f.now());
+        f.advance(gap);
+        let b = f.post(WorkRequest::write(0x2000, vec![2u8; 64]));
+        assert_ne!(f.op(b).t_arrive, NEVER);
+        assert_eq!(f.faults().unwrap().stats.dropped_ops, 1);
+    }
+
+    #[test]
+    fn jitter_delays_arrival_and_completion() {
+        let mut a = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut b = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        b.set_faults(Some(NetworkModel::new(3).with_jitter(5_000)));
+        let mut delayed = false;
+        for i in 0..16u64 {
+            let wr = WorkRequest::write(0x1000 + i * 0x100, vec![1u8; 64]);
+            let x = a.post(wr.clone());
+            let y = b.post(wr);
+            assert!(b.op(y).t_arrive >= a.op(x).t_arrive);
+            assert!(b.op(y).comp_at.unwrap() >= a.op(x).comp_at.unwrap());
+            delayed |= b.op(y).t_arrive > a.op(x).t_arrive;
+        }
+        assert!(delayed, "5µs jitter over 16 ops must delay at least one");
+    }
+
+    #[test]
+    fn duplicate_redelivers_payload_idempotently() {
+        let mut f = fabric(PDomain::Mhp, false, RqwrbLoc::Dram);
+        f.set_faults(Some(NetworkModel::new(7).with_duplicates(1000)));
+        let id = f.post(WorkRequest::write(0x1000, vec![9u8; 64]));
+        f.wait_comp(id);
+        assert_eq!(f.faults().unwrap().stats.duplicated, 1);
+        // Same bytes at the same address: the image is unchanged by the
+        // redelivery, no matter when we crash.
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x1000, 1)[0], 9);
+    }
+
+    #[test]
+    fn record_cpu_write_is_durable_at_its_instant() {
+        let mut f = fabric(PDomain::Dmp, true, RqwrbLoc::Dram);
+        f.record_cpu_write(0x3000, vec![7u8; 64], 500);
+        // Durable in every domain at t=500, even under DDIO (it is a
+        // local CPU store, not a DMA).
+        let img = f.mem.crash_image(500, PDomain::Dmp);
+        assert_eq!(img.read(0x3000, 1)[0], 7);
+        let img = f.mem.crash_image(499, PDomain::Dmp);
+        assert_eq!(img.read(0x3000, 1)[0], 0);
     }
 }

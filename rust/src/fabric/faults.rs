@@ -1,0 +1,218 @@
+//! Hostile-network fault model: seeded, deterministic per-QP faults.
+//!
+//! Every fault decision is a **pure function of (seed, key)** via the
+//! stateless SplitMix64 finalizer — no generator state is consumed, so
+//! attaching a model with all knobs at zero leaves the simulation
+//! bit-for-bit identical to a fault-free run, and any failing schedule
+//! replays exactly from its seed line.
+//!
+//! Faults injected (see README "Fault injection" for the knob list):
+//!
+//! - **Drop** (`drop_per_mille`): a posted op vanishes on the wire. The
+//!   requester still pays the post/doorbell cost, and on iWARP still
+//!   observes a local completion (the *completion fallacy*: the CQE says
+//!   nothing about delivery). Train-aware — if the first op of a
+//!   doorbell train is dropped, the whole train is dropped, because a
+//!   lost doorbell loses every WQE it rang for.
+//! - **Jitter** (`jitter_ns`): extra per-op wire delay in
+//!   `[0, jitter_ns]`, delaying arrival and therefore placement,
+//!   persistence, and completion.
+//! - **Duplicate** (`duplicate_per_mille`): the payload of an update is
+//!   redelivered shortly after the original (NIC-level retransmit whose
+//!   first copy actually arrived). Idempotent writes make this harmless;
+//!   the knob exists to prove that.
+//! - **Partition** (`add_partition`): a wall-clock window during which
+//!   every op posted to this QP is unreachable — dropped with the same
+//!   train semantics as random drops.
+
+use crate::fabric::timing::Nanos;
+use crate::util::rng::{jitter, mix};
+
+/// Domain-separation salts so fault draws never correlate with the
+/// engine's own jitter streams (which key on raw op ids and the salts
+/// 0x9E37 / 0xC0DE / 0xD0_0DBE11 / 0x5AD).
+const DROP_SALT: u64 = 0x4452_4F50; // "DROP"
+const DUP_SALT: u64 = 0x4455_5054; // "DUPT"
+const JITTER_SALT: u64 = 0x4A49_5454; // "JITT"
+
+/// Counters for what the model actually did to a run — surfaced in soak
+/// reports so a "passing" campaign can prove its faults really fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Ops (including whole dropped trains, one count per op) that never
+    /// reached the responder.
+    pub dropped_ops: u64,
+    /// Update payloads redelivered a second time.
+    pub duplicated: u64,
+}
+
+/// Seeded per-QP fault model. All-zero knobs (the `new` default) inject
+/// nothing and perturb nothing.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Probability of dropping a doorbell train, in 1/1000ths.
+    pub drop_per_mille: u32,
+    /// Maximum extra wire latency per op (uniform in `[0, jitter_ns]`).
+    pub jitter_ns: Nanos,
+    /// Probability of redelivering an update payload, in 1/1000ths.
+    pub duplicate_per_mille: u32,
+    /// Seed for all fault draws on this QP.
+    pub seed: u64,
+    /// Half-open unreachability windows `[from, until)` in virtual time.
+    partitions: Vec<(Nanos, Nanos)>,
+    /// What this model did so far.
+    pub stats: FaultStats,
+}
+
+impl NetworkModel {
+    /// A model that injects nothing until knobs are set.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            drop_per_mille: 0,
+            jitter_ns: 0,
+            duplicate_per_mille: 0,
+            seed,
+            partitions: Vec::new(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Set the train drop rate (per-mille).
+    pub fn with_drop(mut self, per_mille: u32) -> Self {
+        self.drop_per_mille = per_mille;
+        self
+    }
+
+    /// Set the maximum per-op wire jitter.
+    pub fn with_jitter(mut self, ns: Nanos) -> Self {
+        self.jitter_ns = ns;
+        self
+    }
+
+    /// Set the payload duplication rate (per-mille).
+    pub fn with_duplicates(mut self, per_mille: u32) -> Self {
+        self.duplicate_per_mille = per_mille;
+        self
+    }
+
+    /// Make this QP unreachable during `[from, until)`: every train whose
+    /// first op launches inside the window is dropped whole.
+    pub fn add_partition(&mut self, from: Nanos, until: Nanos) {
+        assert!(from < until, "empty partition window");
+        self.partitions.push((from, until));
+    }
+
+    /// Is the QP inside a partition window at time `t`?
+    pub fn partitioned_at(&self, t: Nanos) -> bool {
+        self.partitions.iter().any(|&(a, b)| a <= t && t < b)
+    }
+
+    /// Deterministic drop decision for the train whose first op is `key`.
+    pub fn drops(&self, key: u64) -> bool {
+        self.drop_per_mille > 0
+            && mix(self.seed ^ mix(key ^ DROP_SALT)) % 1000
+                < self.drop_per_mille as u64
+    }
+
+    /// Deterministic duplicate decision for op `key`.
+    pub fn duplicates(&self, key: u64) -> bool {
+        self.duplicate_per_mille > 0
+            && mix(self.seed ^ mix(key ^ DUP_SALT)) % 1000
+                < self.duplicate_per_mille as u64
+    }
+
+    /// Deterministic extra wire latency for op `key`, in
+    /// `[0, jitter_ns]`. Zero when the knob is zero (no draw taken).
+    pub fn extra_wire_ns(&self, key: u64) -> Nanos {
+        jitter(self.seed ^ JITTER_SALT, key, self.jitter_ns)
+    }
+
+    /// True when every knob is zero and no partitions are scheduled —
+    /// attaching such a model is a guaranteed no-op.
+    pub fn is_benign(&self) -> bool {
+        self.drop_per_mille == 0
+            && self.jitter_ns == 0
+            && self.duplicate_per_mille == 0
+            && self.partitions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_knobs_inject_nothing() {
+        let m = NetworkModel::new(7);
+        assert!(m.is_benign());
+        for key in 0..256 {
+            assert!(!m.drops(key));
+            assert!(!m.duplicates(key));
+            assert_eq!(m.extra_wire_ns(key), 0);
+        }
+        assert!(!m.partitioned_at(0));
+        assert!(!m.partitioned_at(Nanos::MAX - 1));
+    }
+
+    #[test]
+    fn drop_rate_is_seeded_and_roughly_calibrated() {
+        let m = NetworkModel::new(42).with_drop(100); // 10%
+        let hits = (0..10_000u64).filter(|&k| m.drops(k)).count();
+        // Avalanche-quality hash: expect ~1000 ± a wide margin.
+        assert!((700..1300).contains(&hits), "drop rate off: {hits}");
+        // Same seed replays the identical decision stream.
+        let m2 = NetworkModel::new(42).with_drop(100);
+        for k in 0..1000 {
+            assert_eq!(m.drops(k), m2.drops(k));
+        }
+        // A different seed picks different victims.
+        let m3 = NetworkModel::new(43).with_drop(100);
+        assert!((0..1000).any(|k| m.drops(k) != m3.drops(k)));
+    }
+
+    #[test]
+    fn jitter_bounded_and_stable() {
+        let m = NetworkModel::new(5).with_jitter(300);
+        for k in 0..500 {
+            let j = m.extra_wire_ns(k);
+            assert!(j <= 300);
+            assert_eq!(j, m.extra_wire_ns(k));
+        }
+        // Spreads across keys.
+        let vals: Vec<Nanos> = (0..32).map(|k| m.extra_wire_ns(k)).collect();
+        assert!(vals.iter().any(|&v| v != vals[0]));
+    }
+
+    #[test]
+    fn fault_streams_are_independent() {
+        // The drop and duplicate decisions for the same key must not be
+        // the same coin (domain separation via salts).
+        let m = NetworkModel::new(9).with_drop(500).with_duplicates(500);
+        let agree = (0..2000u64)
+            .filter(|&k| m.drops(k) == m.duplicates(k))
+            .count();
+        assert!(
+            (600..1400).contains(&agree),
+            "drop/dup streams correlated: {agree}/2000 agree"
+        );
+    }
+
+    #[test]
+    fn partition_windows_are_half_open() {
+        let mut m = NetworkModel::new(1);
+        m.add_partition(100, 200);
+        m.add_partition(500, 600);
+        assert!(!m.partitioned_at(99));
+        assert!(m.partitioned_at(100));
+        assert!(m.partitioned_at(199));
+        assert!(!m.partitioned_at(200));
+        assert!(m.partitioned_at(550));
+        assert!(!m.is_benign());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty partition window")]
+    fn empty_partition_rejected() {
+        NetworkModel::new(1).add_partition(5, 5);
+    }
+}

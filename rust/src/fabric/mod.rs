@@ -3,11 +3,13 @@
 //! semantics (§2).
 
 pub mod engine;
+pub mod faults;
 pub mod ops;
 pub mod sharded;
 pub mod timing;
 
 pub use engine::{CopySpec, Fabric, OpState};
+pub use faults::{FaultStats, NetworkModel};
 pub use ops::{OnRecv, OpId, OpKind, WorkRequest};
 pub use sharded::ShardedFabric;
 pub use timing::{Nanos, TimingModel};

@@ -20,6 +20,7 @@
 //! equivalently a symmetric set of mirror targets).
 
 use crate::fabric::engine::Fabric;
+use crate::fabric::faults::NetworkModel;
 use crate::fabric::timing::{Nanos, TimingModel};
 use crate::persist::config::ServerConfig;
 use crate::server::memory::Layout;
@@ -84,14 +85,54 @@ impl ShardedFabric {
         }
     }
 
+    /// Attach a hostile-network fault model to **every** QP. Each QP
+    /// gets a clone of `model` with a distinct derived seed, so shards
+    /// see independent (but seed-replayable) fault streams. Partition
+    /// windows added to `model` beforehand are replicated verbatim;
+    /// per-shard windows go through [`Self::partition_shard`] afterward.
+    pub fn attach_faults(&mut self, model: &NetworkModel) {
+        for (i, qp) in self.qps.iter_mut().enumerate() {
+            let mut m = model.clone();
+            m.seed = mix(model.seed ^ (i as u64).wrapping_mul(0xFAB1_7E55));
+            qp.set_faults(Some(m));
+        }
+    }
+
+    /// Schedule a partition window `[from, until)` on QP `id`: every
+    /// train launched into the window is dropped whole. Requires a fault
+    /// model attached first (see [`Self::attach_faults`]).
+    pub fn partition_shard(&mut self, id: usize, from: Nanos, until: Nanos) {
+        self.qps[id]
+            .faults_mut()
+            .expect("attach_faults before partition_shard")
+            .add_partition(from, until);
+    }
+
     /// Inject the shard-loss fault on QP `id`'s responder: its PM media
     /// is gone and every image it reconstructs is blank (see
     /// [`crate::server::memory::MemoryModel::fail`]).
+    ///
+    /// # Loss contract
+    ///
+    /// Failure is a *media* fault, scoped to reconstructed images. The
+    /// QP's requester clock, ordering chains, open doorbell-train state,
+    /// and recorded write timeline are all untouched — ops may keep
+    /// being posted (and are timed normally) while the shard is failed,
+    /// exactly like writes racing a dying target.
     pub fn fail_shard(&mut self, id: usize) {
         self.qps[id].mem.fail();
     }
 
     /// Clear the shard-loss fault on QP `id`'s responder.
+    ///
+    /// # Loss contract
+    ///
+    /// Restore brings back the *recorded timeline*, not lost traffic:
+    /// crash images reconstruct again from every write that was actually
+    /// delivered and recorded. Writes dropped by a [`NetworkModel`]
+    /// (including whole dropped doorbell trains) were never recorded, so
+    /// a restore — even one landing mid-train — cannot resurrect them.
+    /// Clocks and train state are unchanged by the round-trip.
     pub fn restore_shard(&mut self, id: usize) {
         self.qps[id].mem.restore();
     }
@@ -216,5 +257,71 @@ mod tests {
         let f = sharded(1);
         assert_eq!(f.shards(), 1);
         assert_eq!(f.shard_for(0xDEAD_BEEF), 0);
+    }
+
+    #[test]
+    fn attach_faults_derives_distinct_per_qp_seeds() {
+        let mut f = sharded(3);
+        f.attach_faults(&NetworkModel::new(42).with_drop(500));
+        let seeds: Vec<u64> =
+            (0..3).map(|i| f.qp(i).faults().unwrap().seed).collect();
+        assert_ne!(seeds[0], seeds[1]);
+        assert_ne!(seeds[1], seeds[2]);
+        // Shards pick different drop victims (independent streams).
+        let m0 = f.qp(0).faults().unwrap();
+        let m1 = f.qp(1).faults().unwrap();
+        assert!((0..64).any(|k| m0.drops(k) != m1.drops(k)));
+    }
+
+    #[test]
+    fn partition_shard_is_per_qp() {
+        let mut f = sharded(2);
+        f.attach_faults(&NetworkModel::new(7));
+        f.partition_shard(1, 0, 1_000_000);
+        let a = f.qp_mut(0).post(WorkRequest::write(0x1000, vec![1u8; 8]));
+        let b = f.qp_mut(1).post(WorkRequest::write(0x1000, vec![1u8; 8]));
+        assert_ne!(f.qp(0).op(a).t_arrive, crate::server::memory::NEVER);
+        assert_eq!(f.qp(1).op(b).t_arrive, crate::server::memory::NEVER);
+    }
+
+    /// Satellite regression: a `fail_shard`/`restore_shard` round-trip —
+    /// even one landing in the middle of an open doorbell train whose
+    /// head was dropped by the network — leaves the QP clock and train
+    /// state consistent and does NOT resurrect the dropped writes.
+    #[test]
+    fn fail_restore_roundtrip_keeps_clock_and_never_resurrects_drops() {
+        let mut f = sharded(2);
+        // A write that was delivered and persisted before any fault.
+        let ok = f.qp_mut(1).post(WorkRequest::write(0x2000, vec![7u8; 8]));
+        let t_ok = f.qp_mut(1).wait_comp(ok);
+
+        // Drop-everything model: the next train is lost on the wire.
+        f.qp_mut(1).set_faults(Some(NetworkModel::new(9).with_drop(1000)));
+        f.qp_mut(1).doorbell_begin();
+        let d0 = f.qp_mut(1).post(WorkRequest::write(0x3000, vec![1u8; 8]));
+        let clock_mid_train = f.qp(1).now();
+
+        // Fail + restore mid-train.
+        f.fail_shard(1);
+        f.restore_shard(1);
+        assert_eq!(
+            f.qp(1).now(),
+            clock_mid_train,
+            "fail/restore must not move the QP clock"
+        );
+
+        // The train is still open and still dropped: the next WQE rides
+        // the lost doorbell.
+        let d1 = f.qp_mut(1).post(WorkRequest::write(0x3040, vec![2u8; 8]));
+        f.qp_mut(1).doorbell_end();
+        let end = f.qp(1).now() + 1_000_000;
+        let pd = f.qp(1).cfg.pdomain;
+        let img = f.qp(1).mem.crash_image(end, pd);
+        assert_eq!(img.read(0x2000, 1)[0], 7, "pre-fault write survives");
+        assert_eq!(img.read(0x3000, 1)[0], 0, "dropped write stays lost");
+        assert_eq!(img.read(0x3040, 1)[0], 0, "whole train stays lost");
+        assert_eq!(f.qp(1).op(d0).t_arrive, crate::server::memory::NEVER);
+        assert_eq!(f.qp(1).op(d1).t_arrive, crate::server::memory::NEVER);
+        let _ = t_ok;
     }
 }

@@ -29,6 +29,7 @@
 //! persistence point per group.
 
 use crate::fabric::engine::Fabric;
+use crate::fabric::faults::NetworkModel;
 use crate::fabric::timing::{Nanos, TimingModel};
 use crate::integrity::fletcher_words;
 use crate::persist::config::ServerConfig;
@@ -526,6 +527,21 @@ impl ShardedKv {
     /// Is decision-ring replication enabled (and effective)?
     pub fn replicated(&self) -> bool {
         self.replicate && self.shards.len() >= 2
+    }
+
+    /// Attach a hostile-network fault model to **every** shard's QP —
+    /// the KV-layer mirror of
+    /// [`crate::fabric::sharded::ShardedFabric::attach_faults`]. Each
+    /// shard gets a clone of `model` with a distinct derived seed (the
+    /// same derivation the sharded fabric uses), so shards draw
+    /// independent but seed-replayable fault streams. A model whose
+    /// knobs are all zero leaves every put bit-for-bit unchanged.
+    pub fn attach_faults(&mut self, model: &NetworkModel) {
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let mut m = model.clone();
+            m.seed = mix(model.seed ^ (i as u64).wrapping_mul(0xFAB1_7E55));
+            shard.fab.set_faults(Some(m));
+        }
     }
 
     /// Inject the shard-loss fault on shard `s`: its PM media is gone
@@ -1533,6 +1549,33 @@ mod tests {
             &[vec![(1, b"a".to_vec())], vec![(1, b"b".to_vec())]],
             &GroupCommitOpts::default(),
         );
+    }
+
+    /// The KV fault hook: every shard carries its own independently
+    /// seeded model, and an all-zero-knob model changes nothing —
+    /// the same zero-cost-when-disabled contract the fabric gives.
+    #[test]
+    fn attach_faults_covers_every_shard_with_distinct_seeds() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut kv =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 1, false);
+        kv.attach_faults(&NetworkModel::new(42).with_drop(500));
+        let seeds: Vec<u64> = (0..3)
+            .map(|s| kv.shard(s).fab.faults().unwrap().seed)
+            .collect();
+        assert_ne!(seeds[0], seeds[1]);
+        assert_ne!(seeds[1], seeds[2]);
+        // Benign model: identical workload, identical virtual time.
+        let mut a =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 2, false);
+        let mut b =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 2, false);
+        b.attach_faults(&NetworkModel::new(99));
+        for k in 0..12u64 {
+            a.put(k, b"x");
+            b.put(k, b"x");
+        }
+        assert_eq!(a.makespan(), b.makespan());
     }
 
     #[test]

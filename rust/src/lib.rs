@@ -39,6 +39,15 @@
 //!   ([`remotelog::pipeline::run_txn_grouped`],
 //!   [`kvstore::ShardedKv::put_txn_grouped`]) while crashes only ever
 //!   expose whole groups,
+//! * **hostile-network robustness** — a seeded per-QP fault layer
+//!   ([`fabric::faults`]: drops, jitter, duplicates, partition windows)
+//!   with zero cost when disabled, an op-level retry-backoff engine
+//!   threaded through the 2PC phases ([`persist::retry`]: transactions
+//!   complete or abort cleanly, never half-ack), responder churn healed
+//!   by anti-entropy catch-up, and the seeded soak campaign that crosses
+//!   all twelve taxonomy configurations with the full fault mix and
+//!   shrinks failures to replayable `rpmem soak` lines
+//!   ([`remotelog::soak`]),
 //! * and the experiment coordinator that regenerates every table and
 //!   figure of the paper's evaluation plus the clients × shards scaling
 //!   and transaction tables ([`coordinator`]).

@@ -10,6 +10,7 @@
 //! rpmem txn [...]                        cross-shard 2PC vs independent grid
 //! rpmem failover [...]                   replicated-decision 2PC vs plain 2PC
 //! rpmem group [...]                      group-commit vs per-txn decision grid
+//! rpmem soak [...]                       hostile-network soak campaign
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
@@ -17,8 +18,8 @@
 //! ```
 //!
 //! Every subcommand prints its own flag/knob list via `--help` (or
-//! `rpmem help <command>`). Unknown subcommands print the usage text and
-//! exit non-zero.
+//! `rpmem help <command>`). Unknown subcommands — and unknown flags on
+//! any subcommand — print the relevant usage text and exit non-zero.
 
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
@@ -55,6 +56,13 @@ fn main() -> ExitCode {
         }
         return ExitCode::SUCCESS;
     }
+    // Unknown flags are an error on EVERY subcommand: print that
+    // command's usage and exit non-zero (a misspelled knob silently
+    // falling back to its default would corrupt a measurement).
+    if let Some(err) = cmd.and_then(|c| reject_unknown_flags(c, &flags)) {
+        eprintln!("error: {err}");
+        return ExitCode::FAILURE;
+    }
     let result = match cmd {
         Some("taxonomy") => cmd_taxonomy(&flags),
         Some("sweep") => cmd_sweep(&flags),
@@ -62,6 +70,7 @@ fn main() -> ExitCode {
         Some("txn") => cmd_txn(&flags),
         Some("failover") => cmd_failover(&flags),
         Some("group") => cmd_group(&flags),
+        Some("soak") => cmd_soak(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -115,6 +124,10 @@ COMMANDS
   group         Group-commit grid: shared decision trains vs per-txn
                 2PC decisions (amortized decision cost), across all 12
                 taxonomy configs.
+  soak          Hostile-network soak campaign: grouped 2PC under seeded
+                drop/jitter/partition/churn schedules with op-level
+                retry, crash-swept for the 2PC invariants; failures are
+                shrunk to a replayable minimal repro line.
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
   crash-test    Crash-consistency campaign over the 72 scenarios.
   recover-demo  Crash + recovery walk-through (XLA kernels by default).
@@ -221,6 +234,44 @@ baseline column must match it exactly); crashes can only ever expose
 whole groups — see rust/tests/group_commit.rs.
 ";
 
+const USAGE_SOAK: &str = "\
+USAGE: rpmem soak [flags]
+
+Hostile-network soak campaign: grouped 2PC under seeded
+drop/jitter/partition/churn fault schedules (remotelog::soak), the
+retry engine re-posting lost trains, every run crash-swept for the
+invariants (acked => recovered, whole groups only). A failing campaign
+is shrunk to a minimal fault schedule and printed as a replayable
+`rpmem soak ...` repro line on stderr.
+
+KNOBS
+  --configs LIST         taxonomy row indices, 0-11  (default: all 12)
+  --seeds LIST           fault/jitter seeds          (default: 1,2,3,4)
+  --clients N            coordinators                (default: 2)
+  --shards N             QPs per transaction         (default: 3)
+  --txns N               transactions per client     (default: 16)
+  --group N              group-commit size cap       (default: 4)
+  --replicate            mirror decisions to the witness shard
+  --points N             uniform crash points per run (default: 40)
+  --json FILE            dump the grid as JSON
+
+FAULT SCHEDULE (give none for the standard hostile campaign: drop 20,
+jitter 200, duplicate 10, partition at wave 1, churn at wave 2; give
+ANY and the schedule is exactly what the flags say — unset knobs stay
+off — so shrunk repro lines replay exactly)
+  --drop N               doorbell-train drop rate, per mille
+  --jitter NS            max extra wire latency per op
+  --duplicate N          payload redelivery rate, per mille
+  --partition-round R    wave at which the witness shard partitions
+  --partition-ns NS      partition duration           (default: 50000)
+  --churn-round R        wave at which the last shard reboots (losing
+                         non-persistent writes; anti-entropy resyncs
+                         it before it serves again)
+  --churn-ns NS          reboot outage duration       (default: 50000)
+  --broken-retry         sabotage the retry engine (negative control;
+                         the campaign MUST fail)
+";
+
 const USAGE_CLAIMS: &str = "\
 USAGE: rpmem claims [flags]
 
@@ -254,6 +305,55 @@ FLAGS
   --appends N            appends before the cut   (default: 50)
 ";
 
+/// The flags each command accepts (`--help` is intercepted earlier and
+/// is always legal). `None` means the command itself is unknown — the
+/// dispatcher reports that separately.
+fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    Some(match cmd {
+        "taxonomy" => &["table"],
+        "sweep" => {
+            &["domain", "kind", "appends", "seed", "transport", "emulated",
+              "json"]
+        }
+        "scale" => &["clients", "shards", "window", "batch", "appends", "json"],
+        "txn" => &["clients", "shards", "txns", "domain", "primary", "json"],
+        "failover" => {
+            &["clients", "shards", "txns", "domain", "primary", "json"]
+        }
+        "group" => &["groups", "clients", "shards", "txns", "primary", "json"],
+        "soak" => &[
+            "configs", "seeds", "clients", "shards", "txns", "group",
+            "replicate", "drop", "jitter", "duplicate", "partition-round",
+            "partition-ns", "churn-round", "churn-ns", "broken-retry",
+            "points", "json",
+        ],
+        "claims" => &["appends", "json"],
+        "crash-test" => &["appends", "seeds", "points", "scanner"],
+        "recover-demo" => &["scanner", "appends"],
+        "help" => &[],
+        _ => return None,
+    })
+}
+
+/// Validate `flags` against [`known_flags`]. On the first unknown flag
+/// (alphabetically, for a deterministic message) the command's usage is
+/// printed to stderr and the error returned.
+fn reject_unknown_flags(
+    cmd: &str,
+    flags: &HashMap<String, String>,
+) -> Option<String> {
+    let allowed = known_flags(cmd)?;
+    let mut names: Vec<&str> = flags.keys().map(String::as_str).collect();
+    names.sort_unstable();
+    let bad = names.into_iter().find(|n| !allowed.contains(n))?;
+    if let Some(usage) = usage_for(cmd) {
+        eprint!("{usage}");
+    } else {
+        eprint!("{HELP}");
+    }
+    Some(format!("unknown flag --{bad} for `{cmd}`"))
+}
+
 /// The per-command usage text (the `--help` / `help <command>` payload).
 fn usage_for(cmd: &str) -> Option<&'static str> {
     match cmd {
@@ -263,6 +363,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
         "txn" => Some(USAGE_TXN),
         "failover" => Some(USAGE_FAILOVER),
         "group" => Some(USAGE_GROUP),
+        "soak" => Some(USAGE_SOAK),
         "claims" => Some(USAGE_CLAIMS),
         "crash-test" => Some(USAGE_CRASH_TEST),
         "recover-demo" => Some(USAGE_RECOVER_DEMO),
@@ -570,6 +671,168 @@ fn cmd_group(flags: &HashMap<String, String>) -> Result<(), String> {
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Comma-separated u64 list flag. Unlike [`parse_usize_list`], zero
+/// entries are legal — `--configs 0` names the first taxonomy row.
+fn parse_u64_list(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: &[u64],
+) -> Result<Vec<u64>, String> {
+    let list: Vec<u64> = match flags.get(key) {
+        None => default.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("bad --{key}: {e}"))?,
+    };
+    if list.is_empty() {
+        return Err(format!("--{key} needs at least one entry"));
+    }
+    Ok(list)
+}
+
+fn cmd_soak(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        render_soak_grid, run_soak_point, soak_grid_to_json,
+    };
+    use rpmem::persist::groupcommit::GroupCommitOpts;
+    use rpmem::remotelog::soak::{
+        replay_line, shrink_soak_failure, FaultPlan, SoakOpts,
+    };
+
+    let table = ServerConfig::table1();
+    let every: Vec<u64> = (0..table.len() as u64).collect();
+    let configs = parse_u64_list(flags, "configs", &every)?;
+    if configs.iter().any(|&i| i >= table.len() as u64) {
+        return Err(format!("--configs entries must be < {}", table.len()));
+    }
+    let seeds = parse_u64_list(flags, "seeds", &[1, 2, 3, 4])?;
+    let clients = flag_u64(flags, "clients", 2) as usize;
+    let shards = flag_u64(flags, "shards", 3) as usize;
+    if clients == 0 || shards == 0 {
+        return Err("--clients and --shards must be positive".into());
+    }
+    let txns = flag_u64(flags, "txns", 16);
+    if txns == 0 {
+        return Err("--txns must be positive".into());
+    }
+    let group = flag_u64(flags, "group", 4) as usize;
+    if group == 0 {
+        return Err("--group must be positive".into());
+    }
+
+    // Any explicit fault knob switches from the standard hostile
+    // campaign to exactly the schedule the flags spell out, so shrunk
+    // repro lines (which omit the faults they eliminated) replay
+    // exactly.
+    const FAULT_FLAGS: [&str; 8] = [
+        "drop", "jitter", "duplicate", "partition-round", "partition-ns",
+        "churn-round", "churn-ns", "broken-retry",
+    ];
+    let explicit = FAULT_FLAGS.iter().any(|f| flags.contains_key(*f));
+    let plan = if explicit {
+        let partition = (flags.contains_key("partition-round")
+            || flags.contains_key("partition-ns"))
+        .then(|| {
+            (
+                flag_u64(flags, "partition-round", 1),
+                flag_u64(flags, "partition-ns", 50_000),
+            )
+        });
+        let churn = (flags.contains_key("churn-round")
+            || flags.contains_key("churn-ns"))
+        .then(|| {
+            (
+                flag_u64(flags, "churn-round", 2),
+                flag_u64(flags, "churn-ns", 50_000),
+            )
+        });
+        FaultPlan {
+            drop_per_mille: flag_u64(flags, "drop", 0) as u32,
+            jitter_ns: flag_u64(flags, "jitter", 0),
+            duplicate_per_mille: flag_u64(flags, "duplicate", 0) as u32,
+            partition,
+            churn,
+        }
+    } else {
+        FaultPlan {
+            drop_per_mille: 20,
+            jitter_ns: 200,
+            duplicate_per_mille: 10,
+            partition: Some((1, 50_000)),
+            churn: Some((2, 50_000)),
+        }
+    };
+    let base = SoakOpts {
+        clients,
+        shards,
+        txns_per_client: txns,
+        capacity: txns.max(32),
+        replicate: flags.contains_key("replicate"),
+        group: GroupCommitOpts { max_group: group, ..Default::default() },
+        plan,
+        broken_retry: flags.contains_key("broken-retry"),
+        ..Default::default()
+    };
+    let uniform_points = flag_u64(flags, "points", 40);
+    let timing = TimingModel::default();
+
+    let mut points = Vec::new();
+    for &ci in &configs {
+        for &seed in &seeds {
+            points.push((
+                ci as usize,
+                run_soak_point(
+                    table[ci as usize],
+                    Primary::Write,
+                    seed,
+                    &base,
+                    uniform_points,
+                    &timing,
+                ),
+            ));
+        }
+    }
+    let grid: Vec<_> = points.iter().map(|(_, p)| p.clone()).collect();
+    let title = format!(
+        "hostile-network soak — {} configs x {} seeds, {} txns/client",
+        configs.len(),
+        seeds.len(),
+        txns
+    );
+    println!("{}", render_soak_grid(&title, &grid));
+    if let Some(path) = flags.get("json") {
+        let j = soak_grid_to_json(&grid).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    let failing = points.iter().filter(|(_, p)| !p.clean).count();
+    if let Some((ci, p)) = points.iter().find(|(_, p)| !p.clean) {
+        // Shrink the first failure to a minimal fault schedule and
+        // print it as a replayable repro line.
+        let opts = SoakOpts { seed: p.seed, ..base };
+        let minimal = shrink_soak_failure(
+            table[*ci],
+            &timing,
+            Primary::Write,
+            &opts,
+            uniform_points,
+            &RustScanner,
+        );
+        eprintln!("minimal repro: {}", replay_line(*ci, &minimal));
+        return Err(format!(
+            "{failing} of {} soak runs violated an invariant",
+            points.len()
+        ));
+    }
+    println!(
+        "all {} runs clean (acked => recovered, whole groups only)",
+        points.len()
+    );
     Ok(())
 }
 

@@ -89,6 +89,19 @@ impl WaitPoint {
             }
         }
     }
+
+    /// Non-panicking probe of the persistence point: `None` when the
+    /// awaited event will never fire — the op (or its whole doorbell
+    /// train) was dropped by a hostile network, so no completion/ack is
+    /// coming and the requester's only options are timeout + re-post or
+    /// abort (see [`crate::persist::retry`]). A pure read: neither the
+    /// requester clock nor any engine state moves.
+    pub fn try_ready_at(self, fab: &Fabric) -> Option<Nanos> {
+        match self {
+            WaitPoint::Comp(id) => fab.op(id).comp_at,
+            WaitPoint::Ack(id) => fab.op(id).ack_at,
+        }
+    }
 }
 
 /// Post one singleton update's work requests without waiting; returns

@@ -8,7 +8,9 @@
 //! so the commit state survives any single-shard loss, and the
 //! group-commit layer ([`groupcommit`]) that amortizes decision
 //! persistence across concurrent transactions — one doorbell train and
-//! one shared persistence point per group.
+//! one shared persistence point per group — and the retry engine
+//! ([`retry`]) that re-posts idempotent trains lost to a hostile
+//! network until 2PC either completes or aborts cleanly.
 
 pub mod config;
 pub mod exec;
@@ -16,6 +18,7 @@ pub mod failover;
 pub mod groupcommit;
 pub mod method;
 pub mod planner;
+pub mod retry;
 pub mod taxonomy;
 pub mod txn;
 pub mod wire;
@@ -29,6 +32,7 @@ pub use groupcommit::{
 };
 pub use method::{CompoundMethod, PersistencePoint, Primary, SingletonMethod};
 pub use planner::{plan_compound, plan_singleton};
+pub use retry::{await_pair_with_retry, await_with_retry, RetryPolicy};
 pub use txn::{
     plan_txn_method, recover_decisions, recover_intents, roll_forward,
     CommitFlip, DecisionScan, IntentRecord, SlotRing,

@@ -1,0 +1,477 @@
+//! Op-level retry/timeout/backoff engine for hostile networks.
+//!
+//! The fabric's wait-points are *eager*: a posted op either has its
+//! completion/ack milestone computed at post time, or — when a
+//! [`crate::fabric::faults::NetworkModel`] dropped the op (or its whole
+//! doorbell train) — the milestone is absent and no amount of waiting
+//! will produce it. The retry engine turns that into the real-world
+//! protocol: probe the wait-point without blocking
+//! ([`WaitPoint::try_ready_at`]); if the event is never coming, charge a
+//! timeout plus capped exponential backoff to the requester clock and
+//! re-post the *identical* train (same addresses, same payload, same
+//! message sequence number — the records are self-describing and
+//! checksummed, so redelivery is idempotent); give up after
+//! `max_attempts` and surface `None` so 2PC aborts cleanly instead of
+//! half-acking.
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────┐
+//!            ▼                                            │
+//!   post ──► probe ──ready──► wait ──► ACK                │
+//!            │                                            │
+//!          never                                          │
+//!            │ attempt < max: +timeout, +backoff(attempt) │
+//!            ├────────────────── re-post ─────────────────┘
+//!            │
+//!          attempt == max
+//!            ▼
+//!          ABORT (never half-acked)
+//! ```
+//!
+//! On a pristine wire (no fault model, or all knobs zero) the probe is a
+//! pure read that always reports ready, so `await_with_retry` reduces to
+//! exactly one [`WaitPoint::wait`] — zero extra posts, zero clock
+//! perturbation, bit-for-bit identical results.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::timing::Nanos;
+use crate::persist::exec::{post_singleton_batch, Update, WaitPoint};
+use crate::persist::failover::DecisionPair;
+use crate::persist::groupcommit::{
+    post_decision_group, post_decision_group_replicated,
+};
+use crate::persist::method::SingletonMethod;
+use crate::persist::txn::{post_prepare, sync_clock, IntentRecord, SlotRing};
+
+/// Timeout + capped exponential backoff policy for one retried unit
+/// (a doorbell train with a single persistence point).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Virtual time the requester waits for a persistence point before
+    /// declaring the train lost.
+    pub timeout_ns: Nanos,
+    /// Backoff before re-post attempt 0's successor: doubles per
+    /// attempt.
+    pub backoff_base_ns: Nanos,
+    /// Backoff ceiling.
+    pub backoff_cap_ns: Nanos,
+    /// Re-posts allowed before the operation aborts.
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            timeout_ns: 20_000,
+            backoff_base_ns: 1_000,
+            backoff_cap_ns: 64_000,
+            max_attempts: 8,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff charged before re-post number `attempt + 1`:
+    /// `min(cap, base << attempt)`, saturating.
+    pub fn backoff_ns(&self, attempt: u32) -> Nanos {
+        let shifted = self
+            .backoff_base_ns
+            .checked_shl(attempt)
+            .unwrap_or(Nanos::MAX);
+        shifted.min(self.backoff_cap_ns)
+    }
+}
+
+/// Await `wp0`, re-posting via `repost` on loss, per `policy`. Returns
+/// `Some((ack_time, attempts_used))` on success, `None` when every
+/// attempt was lost (the caller must abort — it may NOT ack). `repost`
+/// must re-post the identical idempotent train and return its new
+/// wait-point.
+pub fn await_with_retry(
+    fab: &mut Fabric,
+    policy: &RetryPolicy,
+    wp0: WaitPoint,
+    mut repost: impl FnMut(&mut Fabric) -> WaitPoint,
+) -> Option<(Nanos, u32)> {
+    let mut wp = wp0;
+    let mut attempt = 0u32;
+    loop {
+        if wp.try_ready_at(fab).is_some() {
+            return Some((wp.wait(fab), attempt));
+        }
+        if attempt >= policy.max_attempts {
+            return None;
+        }
+        // The train is gone: charge the detection timeout plus backoff,
+        // then re-post the identical train.
+        let resume = fab.now() + policy.timeout_ns + policy.backoff_ns(attempt);
+        sync_clock(fab, resume);
+        wp = repost(fab);
+        attempt += 1;
+    }
+}
+
+/// Retrying [`post_singleton_batch`] + wait: the exec-layer entry point.
+/// The whole train is re-posted verbatim (same `msg_seq`) on loss.
+pub fn singleton_batch_with_retry(
+    fab: &mut Fabric,
+    policy: &RetryPolicy,
+    method: SingletonMethod,
+    updates: &[Update],
+    msg_seq: u32,
+) -> Option<(Nanos, u32)> {
+    let wp = post_singleton_batch(fab, method, updates, msg_seq);
+    await_with_retry(fab, policy, wp, |f| {
+        post_singleton_batch(f, method, updates, msg_seq)
+    })
+}
+
+/// Retrying 2PC PREPARE: [`post_prepare`] + wait, re-posting the
+/// identical payload+intent train (same `msg_seq`) on loss.
+#[allow(clippy::too_many_arguments)]
+pub fn prepare_with_retry(
+    fab: &mut Fabric,
+    policy: &RetryPolicy,
+    method: SingletonMethod,
+    payload: &[Update],
+    intent: &IntentRecord,
+    intent_addr: u64,
+    msg_seq: u32,
+) -> Option<(Nanos, u32)> {
+    let wp = post_prepare(fab, method, payload, intent, intent_addr, msg_seq);
+    await_with_retry(fab, policy, wp, |f| {
+        post_prepare(f, method, payload, intent, intent_addr, msg_seq)
+    })
+}
+
+/// Retrying GROUP DECIDE (unreplicated): [`post_decision_group`] + wait.
+#[allow(clippy::too_many_arguments)]
+pub fn decision_group_with_retry(
+    fab: &mut Fabric,
+    policy: &RetryPolicy,
+    method: SingletonMethod,
+    first: u64,
+    len: usize,
+    ring: &SlotRing,
+    not_before: Nanos,
+    msg_seq: u32,
+) -> Option<(Nanos, u32)> {
+    let wp =
+        post_decision_group(fab, method, first, len, ring, not_before, msg_seq);
+    await_with_retry(fab, policy, wp, |f| {
+        // `not_before` already fenced the first post; re-posts are
+        // fenced by the backoff clock (f.now() has advanced past it).
+        let nb = f.now();
+        post_decision_group(f, method, first, len, ring, nb, msg_seq)
+    })
+}
+
+/// Await an already-posted replicated decision pair: both trains are
+/// probed together and — if either was lost — `repost` must re-post
+/// **both** (idempotent) fenced at the supplied resume time, so a
+/// decision is acked only when durable on both rings. Returns
+/// `Some((ack, attempts))` where ack is the max of the two points, or
+/// `None` after exhaustion (abort; never half-acked).
+pub fn await_pair_with_retry(
+    coord: &mut Fabric,
+    witness: &mut Fabric,
+    policy: &RetryPolicy,
+    pair0: DecisionPair,
+    mut repost: impl FnMut(&mut Fabric, &mut Fabric, Nanos) -> DecisionPair,
+) -> Option<(Nanos, u32)> {
+    let mut pair = pair0;
+    let mut attempt = 0u32;
+    loop {
+        let p = pair.primary.try_ready_at(coord);
+        let w = pair.witness.try_ready_at(witness);
+        if p.is_some() && w.is_some() {
+            return Some((pair.wait(coord, witness), attempt));
+        }
+        if attempt >= policy.max_attempts {
+            return None;
+        }
+        let resume = coord.now().max(witness.now())
+            + policy.timeout_ns
+            + policy.backoff_ns(attempt);
+        pair = repost(coord, witness, resume);
+        attempt += 1;
+    }
+}
+
+/// Retrying replicated GROUP DECIDE: post + [`await_pair_with_retry`].
+#[allow(clippy::too_many_arguments)]
+pub fn group_pair_with_retry(
+    coord: &mut Fabric,
+    witness: &mut Fabric,
+    policy: &RetryPolicy,
+    method: SingletonMethod,
+    first: u64,
+    len: usize,
+    decision_ring: &SlotRing,
+    replica_ring: &SlotRing,
+    not_before: Nanos,
+    coord_seq: u32,
+    witness_seq: u32,
+) -> Option<(Nanos, u32)> {
+    let pair = post_decision_group_replicated(
+        coord,
+        witness,
+        method,
+        first,
+        len,
+        decision_ring,
+        replica_ring,
+        not_before,
+        coord_seq,
+        witness_seq,
+    );
+    await_pair_with_retry(coord, witness, policy, pair, |co, wi, resume| {
+        // post_decision_group_replicated's not_before fence advances
+        // both QP clocks to `resume` before the re-posts.
+        post_decision_group_replicated(
+            co,
+            wi,
+            method,
+            first,
+            len,
+            decision_ring,
+            replica_ring,
+            resume,
+            coord_seq,
+            witness_seq,
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::faults::NetworkModel;
+    use crate::fabric::timing::TimingModel;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::persist::txn::{recover_decisions, CommitFlip};
+    use crate::server::memory::Layout;
+
+    fn fab(cfg: ServerConfig, seed: u64) -> Fabric {
+        let layout = Layout::new(1 << 19, 1 << 19, 64, 4096, cfg.rqwrb);
+        Fabric::new(cfg, TimingModel::deterministic(), layout, seed, true)
+    }
+
+    fn mhp() -> ServerConfig {
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    fn ring() -> SlotRing {
+        SlotRing { base: 0x8000, slots: 32, stride: 64 }
+    }
+
+    fn updates() -> Vec<Update> {
+        (0..3)
+            .map(|i| Update::new(0x1000 + i * 0x100, vec![0x40 + i as u8; 64]))
+            .collect()
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            backoff_base_ns: 1_000,
+            backoff_cap_ns: 6_000,
+            ..Default::default()
+        };
+        assert_eq!(p.backoff_ns(0), 1_000);
+        assert_eq!(p.backoff_ns(1), 2_000);
+        assert_eq!(p.backoff_ns(2), 4_000);
+        assert_eq!(p.backoff_ns(3), 6_000); // capped
+        assert_eq!(p.backoff_ns(63), 6_000);
+        assert_eq!(p.backoff_ns(200), 6_000); // shift overflow saturates
+    }
+
+    /// On a pristine wire the retry wrapper is exactly one plain wait:
+    /// same ack, same clock, zero attempts, zero extra posts.
+    #[test]
+    fn pristine_wire_retry_is_identity() {
+        let ups = updates();
+        let mut plain = fab(mhp(), 7);
+        let wp = post_singleton_batch(
+            &mut plain,
+            SingletonMethod::WriteFlush,
+            &ups,
+            1,
+        );
+        let ack_plain = wp.wait(&mut plain);
+
+        let mut retried = fab(mhp(), 7);
+        let (ack, attempts) = singleton_batch_with_retry(
+            &mut retried,
+            &RetryPolicy::default(),
+            SingletonMethod::WriteFlush,
+            &ups,
+            1,
+        )
+        .expect("pristine wire cannot exhaust retries");
+        assert_eq!(attempts, 0);
+        assert_eq!(ack, ack_plain);
+        assert_eq!(retried.now(), plain.now());
+        assert_eq!(retried.ops_posted(), plain.ops_posted());
+    }
+
+    /// A train lost to a partition window is re-posted after the window
+    /// and everything it carried is persistent at the (later) ack.
+    #[test]
+    fn lost_train_is_reposted_and_persists() {
+        let ups = updates();
+        let mut f = fab(mhp(), 7);
+        let mut m = NetworkModel::new(7);
+        m.add_partition(0, 50_000); // swallows the first post
+        f.set_faults(Some(m));
+        let policy = RetryPolicy {
+            timeout_ns: 30_000,
+            backoff_base_ns: 10_000,
+            backoff_cap_ns: 80_000,
+            max_attempts: 4,
+        };
+        let (ack, attempts) = singleton_batch_with_retry(
+            &mut f,
+            &policy,
+            SingletonMethod::WriteFlush,
+            &ups,
+            1,
+        )
+        .expect("retry must heal a bounded partition");
+        assert!(attempts >= 1, "the first train must have been lost");
+        // Each lost attempt drops the whole 4-op train (3 writes + flush).
+        let dropped = f.faults().unwrap().stats.dropped_ops;
+        assert_eq!(dropped, 4 * attempts as u64);
+        let img = f.mem.crash_image(ack, PDomain::Mhp);
+        for u in &ups {
+            assert_eq!(img.read(u.addr, u.data.len()), &u.data[..]);
+        }
+    }
+
+    /// A permanent partition exhausts the policy: `None`, never a
+    /// fabricated ack, and nothing persisted.
+    #[test]
+    fn exhaustion_aborts_cleanly() {
+        let ups = updates();
+        let mut f = fab(mhp(), 7);
+        let mut m = NetworkModel::new(7);
+        m.add_partition(0, Nanos::MAX - 1);
+        f.set_faults(Some(m));
+        let policy = RetryPolicy { max_attempts: 3, ..Default::default() };
+        let out = singleton_batch_with_retry(
+            &mut f,
+            &policy,
+            SingletonMethod::WriteFlush,
+            &ups,
+            1,
+        );
+        assert!(out.is_none(), "a dead wire must abort, not half-ack");
+        // 4 posts of the 4-op train: the original + 3 re-posts.
+        assert_eq!(f.ops_posted(), 16);
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x1000, 1)[0], 0);
+    }
+
+    /// Prepare retry: the identical intent+payload train is re-posted
+    /// with the same msg_seq and is durable at the retried ack.
+    #[test]
+    fn prepare_retry_is_idempotent() {
+        let mut f = fab(mhp(), 7);
+        let mut m = NetworkModel::new(7);
+        m.add_partition(0, 40_000);
+        f.set_faults(Some(m));
+        let intent = IntentRecord {
+            txn_id: 3,
+            shard: 0,
+            flips: vec![CommitFlip { addr: 0x40, value: 4 }],
+        };
+        let payload =
+            [Update::new(0x2000, vec![0x77; 64])];
+        let intents = ring();
+        let (ack, attempts) = prepare_with_retry(
+            &mut f,
+            &RetryPolicy::default(),
+            SingletonMethod::WriteFlush,
+            &payload,
+            &intent,
+            intents.addr(3),
+            8,
+        )
+        .expect("bounded partition heals");
+        assert!(attempts >= 1);
+        let img = f.mem.crash_image(ack, PDomain::Mhp);
+        assert_eq!(img.read(0x2000, 64), &[0x77; 64][..]);
+        let got = crate::persist::txn::decode_intent(
+            img.read(intents.addr(3), crate::persist::txn::INTENT_BYTES),
+        )
+        .expect("intent durable at retried ack");
+        assert_eq!(got.txn_id, 3);
+        assert_eq!(got.flips.len(), 1);
+    }
+
+    /// Replicated group decide: losing only the witness train re-posts
+    /// both; the decision is acked only once durable on BOTH rings.
+    #[test]
+    fn pair_retry_never_half_acks() {
+        let cfg = mhp();
+        let mut coord = fab(cfg, 7);
+        let mut witness = fab(cfg, 8);
+        let mut m = NetworkModel::new(9);
+        m.add_partition(0, 60_000);
+        witness.set_faults(Some(m)); // only the witness drops
+        let decisions = ring();
+        let replicas = SlotRing { base: 0xA000, slots: 32, stride: 64 };
+        let policy = RetryPolicy {
+            timeout_ns: 30_000,
+            backoff_base_ns: 10_000,
+            backoff_cap_ns: 80_000,
+            max_attempts: 5,
+        };
+        let (ack, attempts) = group_pair_with_retry(
+            &mut coord,
+            &mut witness,
+            &policy,
+            SingletonMethod::WriteFlush,
+            0,
+            4,
+            &decisions,
+            &replicas,
+            0,
+            1,
+            2,
+        )
+        .expect("bounded witness partition heals");
+        assert!(attempts >= 1);
+        // All four decisions durable on both rings at the ack.
+        let ci = coord.mem.crash_image(ack, cfg.pdomain);
+        let wi = witness.mem.crash_image(ack, cfg.pdomain);
+        assert_eq!(recover_decisions(&ci, &decisions), 4);
+        assert_eq!(recover_decisions(&wi, &replicas), 4);
+    }
+
+    /// Pair exhaustion aborts without acking even though the coordinator
+    /// side kept succeeding.
+    #[test]
+    fn pair_exhaustion_aborts() {
+        let cfg = mhp();
+        let mut coord = fab(cfg, 7);
+        let mut witness = fab(cfg, 8);
+        let mut m = NetworkModel::new(9);
+        m.add_partition(0, Nanos::MAX - 1);
+        witness.set_faults(Some(m));
+        let out = group_pair_with_retry(
+            &mut coord,
+            &mut witness,
+            &RetryPolicy { max_attempts: 2, ..Default::default() },
+            SingletonMethod::WriteFlush,
+            0,
+            2,
+            &ring(),
+            &SlotRing { base: 0xA000, slots: 32, stride: 64 },
+            0,
+            1,
+            2,
+        );
+        assert!(out.is_none());
+    }
+}

@@ -109,6 +109,33 @@ mod tests {
     }
 
     #[test]
+    fn empty_logs_digest_and_compare_to_nothing() {
+        // A rejoining replica with no history yet: zero segments, zero
+        // divergence, zero bytes shipped — not a panic.
+        assert!(segment_digests(&[]).is_empty());
+        assert!(diverging_segments(&[], &[]).is_empty());
+        let mut empty: Vec<u8> = Vec::new();
+        assert_eq!(resync(&[], &mut empty), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "partial segment")]
+    fn trailing_partial_segment_is_rejected() {
+        // Callers must pad to segment granularity; a ragged tail would
+        // silently fall out of chunks_exact and never be compared.
+        let a = log(SEG_RECORDS, 7);
+        segment_digests(&a[..SEG_BYTES - RECORD_BYTES]);
+    }
+
+    #[test]
+    fn identical_images_resync_is_a_no_op() {
+        let a = log(4 * SEG_RECORDS, 8);
+        let mut b = a.clone();
+        assert_eq!(resync(&a, &mut b), 0, "nothing to ship");
+        assert_eq!(a, b, "a no-op resync must not touch the replica");
+    }
+
+    #[test]
     fn record_swap_within_segment_detected() {
         let a = log(SEG_RECORDS, 6);
         let mut b = a.clone();

@@ -2,7 +2,9 @@
 //! RDMA with checksummed records (singleton updates) or an explicitly
 //! managed tail pointer (compound updates), plus the crash-recovery
 //! subsystem and the crash-consistency harness that *proves* each
-//! persistence method correct (or demonstrably incorrect).
+//! persistence method correct (or demonstrably incorrect), plus the
+//! hostile-network soak campaign ([`soak`]) that re-proves the 2PC
+//! invariants under drop/jitter/partition/churn fault schedules.
 
 pub mod antientropy;
 pub mod client;
@@ -10,8 +12,13 @@ pub mod crashtest;
 pub mod log;
 pub mod pipeline;
 pub mod recovery;
+pub mod soak;
 
 pub use client::{AppendMode, AppendRecord, MethodChoice, RemoteLog};
 pub use crashtest::{check_crash_at, crash_sweep, CrashReport};
 pub use log::{LogLayout, APP_WORDS, PAYLOAD_WORDS, RECORD_BYTES, RECORD_WORDS};
 pub use recovery::{recover, RecoveryResult, RustScanner, Scanner};
+pub use soak::{
+    replay_line, run_soak_case, run_txn_soak, shrink_soak_failure,
+    soak_check, FaultPlan, SoakOpts, SoakReport, SoakStats,
+};

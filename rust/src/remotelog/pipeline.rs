@@ -813,8 +813,8 @@ pub struct TxnRun {
     pub atomic: bool,
     /// Whether decision records were mirrored to the witness QP.
     pub replicate: bool,
-    method: SingletonMethod,
-    compound_method: CompoundMethod,
+    pub(crate) method: SingletonMethod,
+    pub(crate) compound_method: CompoundMethod,
 }
 
 impl TxnRun {
@@ -865,7 +865,7 @@ impl TxnRunResult {
 }
 
 /// Deterministic per-(client, shard, txn) record payload.
-fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS] {
+pub(crate) fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS] {
     let salt = mix(
         client.wrapping_mul(0x9E37_79B9)
             ^ shard.wrapping_mul(0xC0FF_EE11)
@@ -883,7 +883,7 @@ fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS] {
 /// per client per QP, log ‖ intent ring; the decision ring and its
 /// witness replica ride in the same stride (used only on the
 /// coordinator/witness QP respectively).
-fn txn_fabric_and_clients(
+pub(crate) fn txn_fabric_and_clients(
     cfg: ServerConfig,
     timing: TimingModel,
     clients: usize,
@@ -1794,7 +1794,11 @@ pub fn check_txn_crash_at_scanned(
 /// open and close), plus the makespan — **sorted ascending** so the
 /// sweep can reuse cached committed-prefix scanners
 /// ([`check_txn_crash_at_scanned`]).
-fn sweep_instants(run: &TxnRun, uniform_points: u64, seed: u64) -> Vec<Nanos> {
+pub(crate) fn sweep_instants(
+    run: &TxnRun,
+    uniform_points: u64,
+    seed: u64,
+) -> Vec<Nanos> {
     let end = run.fabric.makespan();
     let mut rng = SplitMix64::new(seed);
     let mut instants: Vec<Nanos> = (0..uniform_points)

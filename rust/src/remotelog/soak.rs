@@ -1,0 +1,1215 @@
+//! Seeded long-horizon soak campaign over a hostile network.
+//!
+//! [`run_txn_soak`] drives the group-commit transactional workload
+//! ([`super::pipeline::run_txn_grouped`]) with the full hostile-network
+//! stack engaged: per-QP seeded drop/jitter/duplicate faults
+//! ([`crate::fabric::faults`]), scheduled partition windows, responder
+//! **churn** (a shard reboots mid-workload, losing its unpersisted
+//! writes, and is caught up by anti-entropy resync before serving
+//! again), and every wait routed through the retry/backoff engine
+//! ([`crate::persist::retry`]) so each transaction either completes or
+//! aborts cleanly — never half-acks.
+//!
+//! After the run, [`soak_check`] replays the crash machinery at every
+//! adversarial instant: acked ⇒ recovered, all-or-nothing across
+//! shards, record integrity, and whole-group commit boundaries. A
+//! failing configuration is greedily shrunk ([`shrink_soak_failure`])
+//! to a minimal still-failing fault schedule and printed as a
+//! replayable `rpmem soak` seed line ([`replay_line`]).
+//!
+//! With a benign [`FaultPlan`] and `max_group == 1` the runner replays
+//! [`super::pipeline::run_txn_multi_shard`] bit-for-bit (no fault model
+//! attached, no RNG draws, the retry probe is a pure read) — asserted
+//! by the tests below, so the hostile path can never drift from the
+//! calibrated one.
+
+use crate::fabric::engine::Fabric;
+use crate::fabric::faults::NetworkModel;
+use crate::fabric::sharded::ShardedFabric;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::persist::config::ServerConfig;
+use crate::persist::exec::{Update, WaitPoint};
+use crate::persist::failover::{witness_for, DecisionPair};
+use crate::persist::groupcommit::{
+    post_decision_group, post_decision_group_replicated, GroupCommitOpts,
+    GroupScheduler, PlannedGroup,
+};
+use crate::persist::method::Primary;
+use crate::persist::planner::plan_compound;
+use crate::persist::retry::{
+    await_pair_with_retry, await_with_retry, RetryPolicy,
+};
+use crate::persist::txn::{
+    plan_txn_method, post_commit, post_prepare, recover_decisions,
+    sync_clock, CommitFlip, DecisionScan, IntentRecord,
+};
+use crate::remotelog::antientropy::{diverging_segments, SEG_BYTES};
+use crate::remotelog::log::{make_record, RECORD_BYTES};
+use crate::remotelog::pipeline::{
+    check_txn_crash_at_scanned, sweep_instants, txn_fabric_and_clients,
+    txn_payload, GroupRunResult, TxnClient, TxnCrashReport, TxnOracle,
+    TxnRun,
+};
+use crate::remotelog::recovery::Scanner;
+use crate::util::stats::Histogram;
+
+/// One soak run's fault schedule. All-defaults ([`FaultPlan::none`])
+/// injects nothing and leaves the run bit-for-bit fault-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Doorbell-train drop rate, per mille ([`NetworkModel`]).
+    pub drop_per_mille: u32,
+    /// Max extra per-op wire latency (uniform in `[0, jitter_ns]`).
+    pub jitter_ns: Nanos,
+    /// Update-payload redelivery rate, per mille.
+    pub duplicate_per_mille: u32,
+    /// `(round, duration_ns)`: at the start of wave `round`, the witness
+    /// shard becomes unreachable for `duration_ns` of virtual time.
+    pub partition: Option<(u64, Nanos)>,
+    /// `(round, duration_ns)`: at the start of wave `round`, the last
+    /// shard **reboots** — it is unreachable for `duration_ns`, loses
+    /// every write not yet persistent, and rejoins only after
+    /// anti-entropy resync + tail catch-up restore its log image.
+    pub churn: Option<(u64, Nanos)>,
+}
+
+impl FaultPlan {
+    /// No faults at all: the runner attaches no model and perturbs
+    /// nothing.
+    pub fn none() -> Self {
+        FaultPlan {
+            drop_per_mille: 0,
+            jitter_ns: 0,
+            duplicate_per_mille: 0,
+            partition: None,
+            churn: None,
+        }
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_benign(&self) -> bool {
+        self.drop_per_mille == 0
+            && self.jitter_ns == 0
+            && self.duplicate_per_mille == 0
+            && self.partition.is_none()
+            && self.churn.is_none()
+    }
+}
+
+/// Options for a soak run: the group-commit workload knobs plus the
+/// fault schedule and retry policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SoakOpts {
+    /// Independent coordinators; client `c`'s decision ring lives on QP
+    /// `c % shards`.
+    pub clients: usize,
+    /// QPs; every transaction spans ALL of them.
+    pub shards: usize,
+    /// Transactions per client.
+    pub txns_per_client: u64,
+    /// Log slots (= intent/decision slots) per client per shard.
+    pub capacity: u64,
+    /// Seed for engine jitter AND all fault draws.
+    pub seed: u64,
+    /// Mirror decisions to the witness QP ([`crate::persist::failover`]).
+    pub replicate: bool,
+    /// Group-commit policy ([`crate::persist::groupcommit`]).
+    pub group: GroupCommitOpts,
+    /// The fault schedule.
+    pub plan: FaultPlan,
+    /// Timeout/backoff policy for every retried wait.
+    pub retry: RetryPolicy,
+    /// Negative control: on timeout, ack WITHOUT re-posting (a broken
+    /// retry implementation). Must make the campaign fail — a soak
+    /// harness that can't catch this proves nothing.
+    pub broken_retry: bool,
+}
+
+impl Default for SoakOpts {
+    fn default() -> Self {
+        SoakOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 16,
+            capacity: 32,
+            seed: 7,
+            replicate: false,
+            group: GroupCommitOpts::default(),
+            plan: FaultPlan::none(),
+            retry: RetryPolicy::default(),
+            broken_retry: false,
+        }
+    }
+}
+
+/// What the fault stack actually did during a soak run — a passing
+/// campaign must show nonzero counters here, or it tested nothing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SoakStats {
+    /// Re-posts issued by the retry engine across all waits.
+    pub retries: u64,
+    /// Ops dropped on the wire (whole trains count each op).
+    pub dropped_ops: u64,
+    /// Update payloads redelivered.
+    pub duplicated: u64,
+    /// Anti-entropy segments shipped to rejoining shards.
+    pub resync_segments: u64,
+    /// Writes a rebooting shard lost (posted but not yet persistent).
+    pub discarded_writes: u64,
+    /// Shard reboot (leave + rejoin) events.
+    pub churn_events: u64,
+    /// Transactions the run aborted after retry exhaustion (presumed
+    /// abort: prepared state is garbage-collected by recovery, never
+    /// acked, never counted).
+    pub aborted_txns: u64,
+}
+
+/// Crash-invariant verdict of a soak run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SoakReport {
+    /// Durability / atomicity / integrity over the full crash sweep.
+    pub crash: TxnCrashReport,
+    /// Crash instants where a recovered committed prefix fell off a
+    /// group boundary (partial group = torn group commit).
+    pub boundary_violations: u64,
+}
+
+impl SoakReport {
+    /// Every invariant held at every crash instant?
+    pub fn clean(&self) -> bool {
+        self.crash.clean() && self.boundary_violations == 0
+    }
+}
+
+/// Fabricated-ack wait for the broken-retry negative control: if the
+/// point is never coming, charge the timeout and "ack" anyway, without
+/// re-posting. The crash sweep must catch the resulting loss.
+fn broken_await(
+    fab: &mut Fabric,
+    policy: &RetryPolicy,
+    wp: WaitPoint,
+) -> Option<(Nanos, u32)> {
+    if wp.try_ready_at(fab).is_some() {
+        return Some((wp.wait(fab), 0));
+    }
+    let t = fab.now() + policy.timeout_ns;
+    sync_clock(fab, t);
+    Some((t, 0))
+}
+
+/// Pair-flavoured [`broken_await`].
+fn broken_await_pair(
+    coord: &mut Fabric,
+    witness: &mut Fabric,
+    policy: &RetryPolicy,
+    pair: DecisionPair,
+) -> Option<(Nanos, u32)> {
+    if pair.primary.try_ready_at(coord).is_some()
+        && pair.witness.try_ready_at(witness).is_some()
+    {
+        return Some((pair.wait(coord, witness), 0));
+    }
+    let t = coord.now().max(witness.now()) + policy.timeout_ns;
+    sync_clock(coord, t);
+    sync_clock(witness, t);
+    Some((t, 0))
+}
+
+/// Reboot shard `s` at the current makespan: unreachable for `dur`,
+/// every not-yet-persistent write lost, then — at the rejoin instant —
+/// anti-entropy resync ships any log segment diverging from the acked
+/// oracle state ([`crate::remotelog::antientropy`]) and a tail
+/// catch-up write restores each client's tail pointer, so the shard
+/// serves a consistent image again. Runs at a wave boundary only: no
+/// prepare is in flight, so the acked oracle IS the expected log.
+fn churn_shard(
+    fabric: &mut ShardedFabric,
+    clients: &[TxnClient],
+    s: usize,
+    dur: Nanos,
+    capacity: u64,
+    stats: &mut SoakStats,
+) {
+    let p0 = fabric.makespan();
+    sync_clock(fabric.qp_mut(s), p0);
+    fabric.partition_shard(s, p0, p0 + dur);
+    let pd = fabric.qp(s).cfg.pdomain;
+    stats.discarded_writes +=
+        fabric.qp_mut(s).mem.discard_after(p0, pd) as u64;
+    let rejoin = p0 + dur;
+    let region = capacity as usize * RECORD_BYTES;
+    let buf_len = region.div_ceil(SEG_BYTES) * SEG_BYTES;
+    for client in clients {
+        // Expected image: exactly the acked transactions' records
+        // (presumed abort: anything else in the region is garbage a
+        // rejoining replica must NOT serve).
+        let mut expected = vec![0u8; buf_len];
+        for x in &client.txns {
+            let off =
+                (x.txn_id % capacity) as usize * RECORD_BYTES;
+            expected[off..off + RECORD_BYTES]
+                .copy_from_slice(&x.records[s]);
+        }
+        let mut replica = vec![0u8; buf_len];
+        {
+            let img = fabric.qp(s).mem.crash_image(rejoin, pd);
+            replica[..region]
+                .copy_from_slice(img.read(client.logs[s].base, region));
+        }
+        for &seg in &diverging_segments(&expected, &replica) {
+            let start = seg * SEG_BYTES;
+            let end = (start + SEG_BYTES).min(region);
+            fabric.qp_mut(s).record_cpu_write(
+                client.logs[s].base + start as u64,
+                expected[start..end].to_vec(),
+                rejoin,
+            );
+            stats.resync_segments += 1;
+        }
+        let tail = client.txns.len() as u64;
+        fabric.qp_mut(s).record_cpu_write(
+            client.logs[s].tail_addr,
+            tail.to_le_bytes().to_vec(),
+            rejoin,
+        );
+    }
+    stats.churn_events += 1;
+}
+
+/// Drive the group-commit transactional workload under the fault plan,
+/// with every wait routed through the retry engine. Always records
+/// (the run exists to be crash-checked). On retry exhaustion the run
+/// aborts cleanly: the failing transaction and everything after it are
+/// never acked and never entered in the oracle — the crash sweep then
+/// proves recovery treats them as aborted (presumed abort), not torn.
+pub fn run_txn_soak(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &SoakOpts,
+) -> (TxnRun, GroupRunResult, SoakStats) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.group.max_group >= 1);
+    assert!(
+        opts.txns_per_client <= opts.capacity,
+        "ring wraparound would invalidate the crash oracle"
+    );
+    assert!(
+        opts.group.max_group as u64 <= opts.capacity,
+        "a group must fit the decision ring"
+    );
+    assert!(
+        !opts.replicate || opts.shards >= 2,
+        "decision replication needs a second shard"
+    );
+    let method = plan_txn_method(&cfg, primary);
+    let compound_method = plan_compound(&cfg, primary, 8);
+    let (mut fabric, mut clients) = txn_fabric_and_clients(
+        cfg,
+        timing,
+        opts.clients,
+        opts.shards,
+        opts.capacity,
+        opts.seed,
+        true,
+    );
+    if !opts.plan.is_benign() {
+        let model = NetworkModel::new(opts.seed)
+            .with_drop(opts.plan.drop_per_mille)
+            .with_jitter(opts.plan.jitter_ns)
+            .with_duplicates(opts.plan.duplicate_per_mille);
+        fabric.attach_faults(&model);
+    }
+
+    let total = opts.txns_per_client;
+    let mut msg_seq = 0u32;
+    let mut decision_ns_total = 0u64;
+    let mut group_sizes: Vec<Vec<(u64, u32)>> =
+        vec![Vec::new(); opts.clients];
+    let mut stats = SoakStats::default();
+    let mut aborted = false;
+
+    let mut round = 0u64;
+    let mut wave_first = 0u64;
+    while wave_first < total && !aborted {
+        // Scheduled faults fire at wave boundaries (no prepare in
+        // flight; acked state is exactly the oracle).
+        if let Some((r, dur)) = opts.plan.partition {
+            if round == r {
+                let s = if opts.shards >= 2 {
+                    witness_for(0, opts.shards)
+                } else {
+                    0
+                };
+                let p0 = fabric.makespan();
+                sync_clock(fabric.qp_mut(s), p0);
+                fabric.partition_shard(s, p0, p0 + dur);
+            }
+        }
+        if let Some((r, dur)) = opts.plan.churn {
+            if round == r {
+                churn_shard(
+                    &mut fabric,
+                    &clients,
+                    opts.shards - 1,
+                    dur,
+                    opts.capacity,
+                    &mut stats,
+                );
+            }
+        }
+
+        let wave =
+            (opts.group.max_group as u64).min(total - wave_first) as usize;
+
+        // PREPARE the whole wave — identical posting order and message
+        // sequencing to run_txn_grouped, remembering each train's seq
+        // for idempotent re-posts.
+        let mut starts = vec![vec![0u64; wave]; opts.clients];
+        let mut recs: Vec<Vec<Vec<[u8; RECORD_BYTES]>>> =
+            vec![Vec::with_capacity(wave); opts.clients];
+        let mut wpss: Vec<Vec<Vec<(WaitPoint, u32)>>> =
+            vec![Vec::with_capacity(wave); opts.clients];
+        for w in 0..wave {
+            let txn = wave_first + w as u64;
+            for c in 0..opts.clients {
+                let client = &clients[c];
+                starts[c][w] = (0..opts.shards)
+                    .map(|s| fabric.qp(s).now())
+                    .max()
+                    .unwrap_or(0);
+                let mut records = Vec::with_capacity(opts.shards);
+                let mut wps = Vec::with_capacity(opts.shards);
+                for s in 0..opts.shards {
+                    let record = make_record(
+                        txn,
+                        &txn_payload(c as u64, s as u64, txn),
+                    );
+                    let a = Update::new(
+                        client.logs[s].slot_addr(txn),
+                        record.to_vec(),
+                    );
+                    records.push(record);
+                    msg_seq = msg_seq.wrapping_add(4);
+                    let intent = IntentRecord {
+                        txn_id: txn,
+                        shard: s as u32,
+                        flips: vec![CommitFlip {
+                            addr: client.logs[s].tail_addr,
+                            value: txn + 1,
+                        }],
+                    };
+                    wps.push((
+                        post_prepare(
+                            fabric.qp_mut(s),
+                            method,
+                            std::slice::from_ref(&a),
+                            &intent,
+                            client.intents[s].addr(txn),
+                            msg_seq,
+                        ),
+                        msg_seq,
+                    ));
+                }
+                recs[c].push(records);
+                wpss[c].push(wps);
+            }
+        }
+        // Await every PREPARE through the retry engine. Exhaustion
+        // truncates the wave at the first failed transaction: earlier
+        // ones proceed to DECIDE, later ones are presumed aborted.
+        let mut prepared = vec![vec![0u64; wave]; opts.clients];
+        let mut trunc = wave;
+        'prep: for w in 0..wave {
+            let txn = wave_first + w as u64;
+            for c in 0..opts.clients {
+                for s in 0..opts.shards {
+                    let (wp, seq) = wpss[c][w][s];
+                    let rec = recs[c][w][s];
+                    let slot_addr = clients[c].logs[s].slot_addr(txn);
+                    let tail_addr = clients[c].logs[s].tail_addr;
+                    let intent_addr = clients[c].intents[s].addr(txn);
+                    let shard = s as u32;
+                    let out = if opts.broken_retry {
+                        broken_await(fabric.qp_mut(s), &opts.retry, wp)
+                    } else {
+                        await_with_retry(
+                            fabric.qp_mut(s),
+                            &opts.retry,
+                            wp,
+                            move |f| {
+                                let a = Update::new(
+                                    slot_addr,
+                                    rec.to_vec(),
+                                );
+                                let intent = IntentRecord {
+                                    txn_id: txn,
+                                    shard,
+                                    flips: vec![CommitFlip {
+                                        addr: tail_addr,
+                                        value: txn + 1,
+                                    }],
+                                };
+                                post_prepare(
+                                    f,
+                                    method,
+                                    std::slice::from_ref(&a),
+                                    &intent,
+                                    intent_addr,
+                                    seq,
+                                )
+                            },
+                        )
+                    };
+                    match out {
+                        Some((t, attempts)) => {
+                            stats.retries += attempts as u64;
+                            prepared[c][w] = prepared[c][w].max(t);
+                        }
+                        None => {
+                            trunc = w;
+                            aborted = true;
+                            break 'prep;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Schedule the surviving prefix of the wave into groups.
+        let mut groups: Vec<Vec<PlannedGroup>> =
+            Vec::with_capacity(opts.clients);
+        for c in 0..opts.clients {
+            let mut sched = GroupScheduler::new(opts.group);
+            let mut gs = Vec::new();
+            for w in 0..trunc {
+                let txn = wave_first + w as u64;
+                if let Some(g) = sched.offer(txn, prepared[c][w]) {
+                    gs.push(g);
+                }
+            }
+            if let Some(g) = sched.drain() {
+                gs.push(g);
+            }
+            groups.push(gs);
+        }
+
+        // GROUP DECIDE: post every client's trains (identical order to
+        // run_txn_grouped), then await each through the retry engine.
+        let mut dwps: Vec<Vec<(WaitPoint, Option<WaitPoint>, u32, u32)>> =
+            Vec::with_capacity(opts.clients);
+        for c in 0..opts.clients {
+            let qp = clients[c].coord_qp;
+            let mut v = Vec::with_capacity(groups[c].len());
+            for g in &groups[c] {
+                if opts.replicate {
+                    let wq = clients[c].witness_qp;
+                    let (cseq, wseq) =
+                        (msg_seq.wrapping_add(1), msg_seq.wrapping_add(2));
+                    msg_seq = msg_seq.wrapping_add(2);
+                    let (coord, wit) = fabric.qp_pair_mut(qp, wq);
+                    let pair = post_decision_group_replicated(
+                        coord,
+                        wit,
+                        method,
+                        g.first,
+                        g.len,
+                        &clients[c].decisions,
+                        &clients[c].replicas,
+                        g.release_at,
+                        cseq,
+                        wseq,
+                    );
+                    v.push((pair.primary, Some(pair.witness), cseq, wseq));
+                } else {
+                    msg_seq = msg_seq.wrapping_add(1);
+                    v.push((
+                        post_decision_group(
+                            fabric.qp_mut(qp),
+                            method,
+                            g.first,
+                            g.len,
+                            &clients[c].decisions,
+                            g.release_at,
+                            msg_seq,
+                        ),
+                        None,
+                        msg_seq,
+                        0,
+                    ));
+                }
+            }
+            dwps.push(v);
+        }
+        let mut gacks: Vec<Vec<Nanos>> = vec![Vec::new(); opts.clients];
+        for c in 0..opts.clients {
+            let qp = clients[c].coord_qp;
+            let wq = clients[c].witness_qp;
+            for (gi, g) in groups[c].iter().enumerate() {
+                let (wp, rep, cseq, wseq) = dwps[c][gi];
+                let (first, len) = (g.first, g.len);
+                let out = if let Some(repwp) = rep {
+                    let pair =
+                        DecisionPair { primary: wp, witness: repwp };
+                    let decisions = &clients[c].decisions;
+                    let replicas = &clients[c].replicas;
+                    let (coord, wit) = fabric.qp_pair_mut(qp, wq);
+                    if opts.broken_retry {
+                        broken_await_pair(coord, wit, &opts.retry, pair)
+                    } else {
+                        await_pair_with_retry(
+                            coord,
+                            wit,
+                            &opts.retry,
+                            pair,
+                            |co, wi, resume| {
+                                post_decision_group_replicated(
+                                    co, wi, method, first, len,
+                                    decisions, replicas, resume, cseq,
+                                    wseq,
+                                )
+                            },
+                        )
+                    }
+                } else if opts.broken_retry {
+                    broken_await(fabric.qp_mut(qp), &opts.retry, wp)
+                } else {
+                    let ring = &clients[c].decisions;
+                    await_with_retry(
+                        fabric.qp_mut(qp),
+                        &opts.retry,
+                        wp,
+                        |f| {
+                            let nb = f.now();
+                            post_decision_group(
+                                f, method, first, len, ring, nb, cseq,
+                            )
+                        },
+                    )
+                };
+                match out {
+                    Some((t, attempts)) => {
+                        stats.retries += attempts as u64;
+                        decision_ns_total += t - g.release_at;
+                        gacks[c].push(t);
+                    }
+                    None => {
+                        // This coordinator acks nothing from here on;
+                        // presumed abort covers the undecided tail.
+                        aborted = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // GROUP COMMIT for acked groups only (lazy, never awaited —
+        // recovery roll-forward heals in-flight markers).
+        for c in 0..opts.clients {
+            for (gi, g) in
+                groups[c].iter().enumerate().take(gacks[c].len())
+            {
+                for s in 0..opts.shards {
+                    sync_clock(fabric.qp_mut(s), gacks[c][gi]);
+                    msg_seq = msg_seq.wrapping_add(g.len as u32);
+                    let flips: Vec<CommitFlip> = (0..g.len as u64)
+                        .map(|k| CommitFlip {
+                            addr: clients[c].logs[s].tail_addr,
+                            value: g.first + k + 1,
+                        })
+                        .collect();
+                    let _ = post_commit(
+                        fabric.qp_mut(s),
+                        method,
+                        &flips,
+                        msg_seq,
+                    );
+                }
+            }
+        }
+
+        // Book-keeping for acked transactions only.
+        for c in 0..opts.clients {
+            let mut acked = Vec::new();
+            for (gi, g) in
+                groups[c].iter().enumerate().take(gacks[c].len())
+            {
+                group_sizes[c].push((g.first, g.len as u32));
+                for _ in 0..g.len {
+                    acked.push(gacks[c][gi]);
+                }
+            }
+            for (w, &t) in acked.iter().enumerate() {
+                clients[c].latencies.record(t - starts[c][w]);
+                clients[c].txns.push(TxnOracle {
+                    txn_id: wave_first + w as u64,
+                    records: recs[c][w].clone(),
+                    prepared_at: prepared[c][w],
+                    acked_at: t,
+                });
+            }
+        }
+
+        wave_first += wave as u64;
+        round += 1;
+    }
+
+    for s in 0..opts.shards {
+        if let Some(m) = fabric.qp(s).faults() {
+            stats.dropped_ops += m.stats.dropped_ops;
+            stats.duplicated += m.stats.duplicated;
+        }
+    }
+    let acked_total: u64 =
+        clients.iter().map(|c| c.txns.len() as u64).sum();
+    stats.aborted_txns = total * opts.clients as u64 - acked_total;
+
+    let span_ns = fabric.makespan();
+    let mut summary = Histogram::new();
+    for c in &clients {
+        summary.merge(&c.latencies);
+    }
+    let result = GroupRunResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        txns: acked_total,
+        groups: group_sizes.iter().map(|g| g.len() as u64).sum(),
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+        decision_ns_total,
+        group_sizes,
+    };
+    let run = TxnRun {
+        fabric,
+        clients,
+        atomic: true,
+        replicate: opts.replicate,
+        method,
+        compound_method,
+    };
+    (run, result, stats)
+}
+
+/// Count crash instants where a recovered committed prefix falls off a
+/// group boundary — the non-panicking sibling of
+/// [`super::pipeline::assert_group_boundaries`], so the soak campaign
+/// can report violations alongside the crash report instead of dying
+/// on the first one.
+pub fn group_boundary_violations(
+    run: &TxnRun,
+    res: &GroupRunResult,
+    instants: &[Nanos],
+) -> u64 {
+    let mut violations = 0;
+    for (ci, client) in run.clients.iter().enumerate() {
+        let bounds = res.boundaries(ci);
+        for &t in instants {
+            let mut rings = vec![(client.coord_qp, &client.decisions)];
+            if run.replicate {
+                rings.push((client.witness_qp, &client.replicas));
+            }
+            for (qp, ring) in rings {
+                let pd = run.fabric.qp(qp).cfg.pdomain;
+                let img = run.fabric.qp(qp).mem.crash_image(t, pd);
+                if !bounds.contains(&recover_decisions(&img, ring)) {
+                    violations += 1;
+                }
+            }
+        }
+    }
+    violations
+}
+
+/// Full invariant sweep over a soak run: durability (acked ⇒
+/// recovered), atomicity (all-or-nothing across shards), integrity
+/// (records match the oracle), and whole-group boundaries, at
+/// `uniform_points` seeded instants plus the adversarial instants
+/// around every prepare/ack.
+pub fn soak_check(
+    run: &TxnRun,
+    res: &GroupRunResult,
+    uniform_points: u64,
+    seed: u64,
+    scanner: &dyn Scanner,
+) -> SoakReport {
+    let instants = sweep_instants(run, uniform_points, seed);
+    let mut scans = vec![DecisionScan::default(); run.clients.len()];
+    let mut crash = TxnCrashReport::default();
+    for &t in &instants {
+        crash.merge(&check_txn_crash_at_scanned(
+            run, t, None, scanner, &mut scans,
+        ));
+    }
+    SoakReport {
+        crash,
+        boundary_violations: group_boundary_violations(
+            run, res, &instants,
+        ),
+    }
+}
+
+/// Run + check one soak case. The sweep seed is derived from the run
+/// seed so a replayed seed line reproduces the identical verdict.
+pub fn run_soak_case(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &SoakOpts,
+    uniform_points: u64,
+    scanner: &dyn Scanner,
+) -> (GroupRunResult, SoakStats, SoakReport) {
+    let (run, res, stats) = run_txn_soak(cfg, timing, primary, opts);
+    let report =
+        soak_check(&run, &res, uniform_points, opts.seed ^ 0x50AC, scanner);
+    (res, stats, report)
+}
+
+/// Greedily shrink a failing soak configuration: try zeroing each fault
+/// knob, dropping each scheduled event, and halving the workload; keep
+/// any mutation that still fails, until no single mutation does. The
+/// result is the minimal repro to print via [`replay_line`].
+pub fn shrink_soak_failure(
+    cfg: ServerConfig,
+    timing: &TimingModel,
+    primary: Primary,
+    opts: &SoakOpts,
+    uniform_points: u64,
+    scanner: &dyn Scanner,
+) -> SoakOpts {
+    let fails = |o: &SoakOpts| {
+        let (_, _, report) = run_soak_case(
+            cfg,
+            timing.clone(),
+            primary,
+            o,
+            uniform_points,
+            scanner,
+        );
+        !report.clean()
+    };
+    let mut best = *opts;
+    loop {
+        let mut candidates: Vec<SoakOpts> = Vec::new();
+        if best.plan.drop_per_mille > 0 {
+            let mut o = best;
+            o.plan.drop_per_mille = 0;
+            candidates.push(o);
+        }
+        if best.plan.jitter_ns > 0 {
+            let mut o = best;
+            o.plan.jitter_ns = 0;
+            candidates.push(o);
+        }
+        if best.plan.duplicate_per_mille > 0 {
+            let mut o = best;
+            o.plan.duplicate_per_mille = 0;
+            candidates.push(o);
+        }
+        if best.plan.partition.is_some() {
+            let mut o = best;
+            o.plan.partition = None;
+            candidates.push(o);
+        }
+        if best.plan.churn.is_some() {
+            let mut o = best;
+            o.plan.churn = None;
+            candidates.push(o);
+        }
+        if best.txns_per_client > 1 {
+            let mut o = best;
+            o.txns_per_client /= 2;
+            candidates.push(o);
+        }
+        if best.clients > 1 {
+            let mut o = best;
+            o.clients -= 1;
+            candidates.push(o);
+        }
+        let mut improved = false;
+        for o in candidates {
+            if fails(&o) {
+                best = o;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
+/// Render a soak configuration as the `rpmem soak` invocation that
+/// replays it exactly — the seed line printed for every shrunk failure.
+pub fn replay_line(config: usize, opts: &SoakOpts) -> String {
+    use std::fmt::Write as _;
+    let mut s = format!(
+        "rpmem soak --configs {config} --seeds {} --clients {} \
+         --shards {} --txns {} --group {}",
+        opts.seed,
+        opts.clients,
+        opts.shards,
+        opts.txns_per_client,
+        opts.group.max_group
+    );
+    if opts.replicate {
+        s.push_str(" --replicate");
+    }
+    if opts.plan.drop_per_mille > 0 {
+        let _ = write!(s, " --drop {}", opts.plan.drop_per_mille);
+    }
+    if opts.plan.jitter_ns > 0 {
+        let _ = write!(s, " --jitter {}", opts.plan.jitter_ns);
+    }
+    if opts.plan.duplicate_per_mille > 0 {
+        let _ = write!(s, " --duplicate {}", opts.plan.duplicate_per_mille);
+    }
+    if let Some((r, ns)) = opts.plan.partition {
+        let _ =
+            write!(s, " --partition-round {r} --partition-ns {ns}");
+    }
+    if let Some((r, ns)) = opts.plan.churn {
+        let _ = write!(s, " --churn-round {r} --churn-ns {ns}");
+    }
+    if opts.broken_retry {
+        s.push_str(" --broken-retry");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+    use crate::remotelog::pipeline::{run_txn_multi_shard, TxnRunOpts};
+    use crate::remotelog::recovery::RustScanner;
+
+    fn mhp() -> ServerConfig {
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    /// The hostile fault mix every campaign-shaped test uses: drops,
+    /// jitter, duplicates, one partition window, one churn event.
+    fn hostile() -> FaultPlan {
+        FaultPlan {
+            drop_per_mille: 20,
+            jitter_ns: 300,
+            duplicate_per_mille: 10,
+            partition: Some((1, 60_000)),
+            churn: Some((2, 60_000)),
+        }
+    }
+
+    #[test]
+    fn zero_fault_max_group_one_replays_multi_shard_bit_for_bit() {
+        let opts = SoakOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 7,
+            group: GroupCommitOpts {
+                max_group: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (_, soak, stats) = run_txn_soak(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &opts,
+        );
+        let (_, plain) = run_txn_multi_shard(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &TxnRunOpts {
+                clients: 2,
+                shards: 2,
+                txns_per_client: 8,
+                capacity: 16,
+                seed: 7,
+                record: true,
+                atomic: true,
+                replicate: false,
+            },
+        );
+        assert_eq!(soak.txns, plain.txns);
+        assert_eq!(soak.span_ns, plain.span_ns);
+        assert_eq!(soak.mean_latency_ns, plain.mean_latency_ns);
+        assert_eq!(soak.p99_latency_ns, plain.p99_latency_ns);
+        assert_eq!(soak.decision_ns_total, plain.decision_ns_total);
+        assert_eq!(stats, SoakStats::default(), "benign plan must be free");
+    }
+
+    /// The full fault mix — drops, jitter, duplicates, a partition
+    /// window, a churn event — with the retry engine on: every acked
+    /// transaction recovers, whole groups only, and the stats prove
+    /// the faults really fired.
+    #[test]
+    fn hostile_run_is_clean_and_faults_really_fired() {
+        let opts = SoakOpts {
+            clients: 2,
+            shards: 3,
+            txns_per_client: 12,
+            capacity: 16,
+            seed: 11,
+            replicate: true,
+            group: GroupCommitOpts {
+                max_group: 4,
+                ..Default::default()
+            },
+            plan: hostile(),
+            ..Default::default()
+        };
+        let (res, stats, report) = run_soak_case(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &opts,
+            40,
+            &RustScanner,
+        );
+        assert!(report.clean(), "hostile soak must stay clean: {report:?}");
+        assert_eq!(res.txns, 24, "every transaction must have acked");
+        assert_eq!(stats.aborted_txns, 0);
+        assert_eq!(stats.churn_events, 1);
+        assert!(
+            stats.dropped_ops > 0,
+            "a 2% drop rate over this run must hit something"
+        );
+        assert!(
+            stats.retries > 0,
+            "dropped trains must have been re-posted"
+        );
+    }
+
+    /// Churn on a healthy log ships nothing (digests match: every acked
+    /// record was persistent before the reboot) but still restores the
+    /// tail pointer; the run stays clean through the rejoin.
+    #[test]
+    fn healthy_churn_ships_zero_segments_and_stays_clean() {
+        let opts = SoakOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 12,
+            capacity: 16,
+            seed: 3,
+            group: GroupCommitOpts {
+                max_group: 4,
+                ..Default::default()
+            },
+            plan: FaultPlan {
+                churn: Some((1, 50_000)),
+                ..FaultPlan::none()
+            },
+            ..Default::default()
+        };
+        let (res, stats, report) = run_soak_case(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &opts,
+            30,
+            &RustScanner,
+        );
+        assert!(report.clean(), "{report:?}");
+        assert_eq!(res.txns, 12);
+        assert_eq!(stats.churn_events, 1);
+        assert_eq!(
+            stats.resync_segments, 0,
+            "acked-only logs are already in sync"
+        );
+    }
+
+    /// Anti-entropy earns its keep when the rejoining shard's log image
+    /// diverges from the acked state: an orphan record (e.g. a prepare
+    /// left by an aborted transaction) is wiped back to the expected
+    /// image — presumed-abort cleanup, counted in resync_segments.
+    #[test]
+    fn churn_resync_wipes_diverging_segments() {
+        let cfg = mhp();
+        let (mut fabric, clients) = txn_fabric_and_clients(
+            cfg,
+            TimingModel::deterministic(),
+            1,
+            2,
+            16,
+            7,
+            true,
+        );
+        fabric.attach_faults(&NetworkModel::new(7));
+        // An orphan record in shard 1's log region, persistent well
+        // before the reboot so the discard doesn't remove it.
+        let orphan = make_record(3, &txn_payload(0, 1, 3));
+        let slot = clients[0].logs[1].slot_addr(3);
+        fabric.qp_mut(1).record_cpu_write(slot, orphan.to_vec(), 10);
+        sync_clock(fabric.qp_mut(1), 1_000);
+
+        let mut stats = SoakStats::default();
+        churn_shard(&mut fabric, &clients, 1, 5_000, 16, &mut stats);
+        assert!(
+            stats.resync_segments > 0,
+            "the orphan record must diverge a segment"
+        );
+        // After the rejoin instant the orphan is gone: the region
+        // matches the (empty) acked oracle again.
+        let pd = fabric.qp(1).cfg.pdomain;
+        let rejoin = fabric.qp(1).now() + 5_000;
+        let img = fabric.qp(1).mem.crash_image(rejoin, pd);
+        assert_eq!(
+            img.read(slot, RECORD_BYTES),
+            &[0u8; RECORD_BYTES][..],
+            "presumed-abort cleanup must wipe the orphan"
+        );
+    }
+
+    /// Negative control: a retry implementation that acks on timeout
+    /// WITHOUT re-posting must make the campaign fail — otherwise the
+    /// soak harness proves nothing.
+    #[test]
+    fn broken_retry_fails_the_campaign() {
+        let opts = SoakOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 5,
+            group: GroupCommitOpts {
+                max_group: 4,
+                ..Default::default()
+            },
+            plan: FaultPlan {
+                drop_per_mille: 400,
+                ..FaultPlan::none()
+            },
+            broken_retry: true,
+            ..Default::default()
+        };
+        let (_, stats, report) = run_soak_case(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &opts,
+            30,
+            &RustScanner,
+        );
+        assert!(stats.dropped_ops > 0, "40% drops must hit something");
+        assert!(
+            !report.clean(),
+            "fabricated acks over dropped trains must violate \
+             durability: {report:?}"
+        );
+        // The same schedule with the real retry engine is clean.
+        let good = SoakOpts { broken_retry: false, ..opts };
+        let (_, _, report) = run_soak_case(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &good,
+            30,
+            &RustScanner,
+        );
+        assert!(report.clean(), "{report:?}");
+    }
+
+    /// Retry exhaustion aborts the run cleanly: nothing past the failed
+    /// transaction acks, the crash sweep stays clean (presumed abort),
+    /// and the aborted count is surfaced.
+    #[test]
+    fn exhaustion_aborts_cleanly_never_half_acks() {
+        let opts = SoakOpts {
+            clients: 1,
+            shards: 2,
+            txns_per_client: 6,
+            capacity: 16,
+            seed: 9,
+            group: GroupCommitOpts {
+                max_group: 2,
+                ..Default::default()
+            },
+            // A partition far longer than the whole retry budget.
+            plan: FaultPlan {
+                partition: Some((0, 100_000_000)),
+                ..FaultPlan::none()
+            },
+            retry: RetryPolicy {
+                max_attempts: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (run, res, stats) = run_txn_soak(
+            mhp(),
+            TimingModel::deterministic(),
+            Primary::Write,
+            &opts,
+        );
+        assert_eq!(res.txns, 0, "nothing may ack through a dead witness");
+        assert_eq!(stats.aborted_txns, 6);
+        let report = soak_check(&run, &res, 30, 1, &RustScanner);
+        assert!(
+            report.clean(),
+            "aborted transactions must recover as aborted: {report:?}"
+        );
+    }
+
+    /// The shrinker strips fault knobs that don't matter and keeps the
+    /// one that does, ending on a minimal still-failing schedule whose
+    /// replay line round-trips the failure.
+    #[test]
+    fn shrinker_finds_minimal_failing_schedule() {
+        let noisy = SoakOpts {
+            clients: 2,
+            shards: 2,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 5,
+            group: GroupCommitOpts {
+                max_group: 4,
+                ..Default::default()
+            },
+            plan: FaultPlan {
+                drop_per_mille: 400,
+                jitter_ns: 200,
+                duplicate_per_mille: 10,
+                partition: None,
+                churn: None,
+            },
+            broken_retry: true,
+            ..Default::default()
+        };
+        let timing = TimingModel::deterministic();
+        let shrunk = shrink_soak_failure(
+            mhp(),
+            &timing,
+            Primary::Write,
+            &noisy,
+            20,
+            &RustScanner,
+        );
+        // The failure needs drops + the broken retry; jitter and
+        // duplicates are noise the shrinker must remove.
+        assert!(shrunk.plan.drop_per_mille > 0);
+        assert!(shrunk.broken_retry);
+        assert_eq!(shrunk.plan.jitter_ns, 0);
+        assert_eq!(shrunk.plan.duplicate_per_mille, 0);
+        // Still failing, so the printed line reproduces it.
+        let (_, _, report) = run_soak_case(
+            mhp(),
+            timing,
+            Primary::Write,
+            &shrunk,
+            20,
+            &RustScanner,
+        );
+        assert!(!report.clean());
+        let line = replay_line(0, &shrunk);
+        assert!(line.starts_with("rpmem soak --configs 0 --seeds 5"));
+        assert!(line.contains("--drop 400"));
+        assert!(line.contains("--broken-retry"));
+        assert!(!line.contains("--jitter"));
+    }
+}

@@ -220,6 +220,18 @@ impl MemoryModel {
         self.recording
     }
 
+    /// Responder reboot at time `t` under persistence domain `pd`:
+    /// every write that had not persisted by `t` is gone for good.
+    /// Drops those events from the timeline and returns how many were
+    /// discarded. Used by churn — a shard that leaves the fabric loses
+    /// its in-flight writes, then catches up via anti-entropy before
+    /// serving again.
+    pub fn discard_after(&mut self, t: Nanos, pd: PDomain) -> usize {
+        let before = self.writes.len();
+        self.writes.retain(|ev| ev.persist_time(pd) <= t);
+        before - self.writes.len()
+    }
+
     /// Reconstruct the post-power-failure memory image for a crash at
     /// time `t` under persistence domain `pd`.
     ///
@@ -442,6 +454,23 @@ mod tests {
     fn crash_image_requires_recording() {
         let m = MemoryModel::new(layout(), false);
         let _ = m.crash_image(0, PDomain::Dmp);
+    }
+
+    #[test]
+    fn discard_after_drops_unpersisted_writes_for_good() {
+        let mut m = MemoryModel::new(layout(), true);
+        m.record(ev(0, 0x100, 0xAA, 10, 10, 10));
+        m.record(ev(1, 0x200, 0xBB, 50, 60, 70)); // not DMP-durable at 65
+        m.record(ev(2, 0x300, 0xCC, 90, 95, NEVER)); // never DMP-durable
+        // Reboot at t=65 under DMP: writes 1 and 2 are lost forever.
+        assert_eq!(m.discard_after(65, PDomain::Dmp), 2);
+        // Even querying far in the future, the discarded writes are gone.
+        let img = m.crash_image(Nanos::MAX - 1, PDomain::Mhp);
+        assert_eq!(img.read(0x100, 1)[0], 0xAA);
+        assert_eq!(img.read(0x200, 1)[0], 0);
+        assert_eq!(img.read(0x300, 1)[0], 0);
+        // Idempotent: a second reboot at the same instant drops nothing.
+        assert_eq!(m.discard_after(65, PDomain::Dmp), 0);
     }
 
     #[test]

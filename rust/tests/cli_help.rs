@@ -29,6 +29,7 @@ fn bare_invocation_and_help_list_every_command() {
             "txn",
             "failover",
             "group",
+            "soak",
             "claims",
             "crash-test",
             "recover-demo",
@@ -45,13 +46,26 @@ fn bare_invocation_and_help_list_every_command() {
 #[test]
 fn per_command_help_lists_the_knobs() {
     // (command, flags its usage text must name)
-    let cases: [(&str, &[&str]); 6] = [
+    let cases: [(&str, &[&str]); 7] = [
         ("scale", &["--clients", "--shards", "--window", "--batch"]),
         ("txn", &["--clients", "--shards", "--txns", "--primary"]),
         ("failover", &["--clients", "--shards", "--txns", "--json"]),
         ("group", &["--groups", "--clients", "--shards", "--txns"]),
         ("sweep", &["--domain", "--kind", "--appends", "--transport"]),
         ("crash-test", &["--appends", "--seeds", "--points", "--scanner"]),
+        (
+            "soak",
+            &[
+                "--configs",
+                "--seeds",
+                "--txns",
+                "--drop",
+                "--jitter",
+                "--partition-round",
+                "--churn-round",
+                "--broken-retry",
+            ],
+        ),
     ];
     for (cmd, knobs) in cases {
         // All three spellings must work: `rpmem <cmd> --help`,
@@ -102,6 +116,44 @@ fn unknown_command_prints_usage_and_fails() {
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("unknown command"));
     assert!(err.contains("COMMANDS"), "usage text goes to stderr");
+}
+
+#[test]
+fn unknown_flag_prints_usage_and_fails_on_every_command() {
+    // A misspelled knob silently falling back to its default would
+    // corrupt a measurement, so EVERY subcommand must reject it with
+    // its own usage text and a non-zero exit.
+    for cmd in [
+        "taxonomy",
+        "sweep",
+        "scale",
+        "txn",
+        "failover",
+        "group",
+        "soak",
+        "claims",
+        "crash-test",
+        "recover-demo",
+    ] {
+        let out = rpmem(&[cmd, "--bogus", "7"]);
+        assert!(
+            !out.status.success(),
+            "`{cmd} --bogus` must exit non-zero"
+        );
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("unknown flag --bogus"),
+            "`{cmd}` stderr must name the bad flag: {err}"
+        );
+        assert!(
+            err.contains(&format!("USAGE: rpmem {cmd}")),
+            "`{cmd}` must print its own usage on a bad flag: {err}"
+        );
+        assert!(
+            stdout(&out).is_empty(),
+            "`{cmd} --bogus` must not run the measurement"
+        );
+    }
 }
 
 #[test]

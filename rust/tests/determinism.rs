@@ -11,12 +11,16 @@
 
 use rpmem::coordinator::scaling::{
     failover_grid_to_json, group_grid_to_json, run_failover_grid,
-    run_group_grid, run_saturation_axis, run_scaling_axis, run_txn_grid,
-    scaling_to_json, txn_grid_to_json, ScalingOpts,
+    run_group_grid, run_saturation_axis, run_scaling_axis, run_soak_grid,
+    run_txn_grid, scaling_to_json, soak_grid_to_json, txn_grid_to_json,
+    ScalingOpts,
 };
+use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
 use rpmem::persist::method::Primary;
 use rpmem::remotelog::client::AppendMode;
+use rpmem::remotelog::soak::{FaultPlan, SoakOpts};
 
 /// The `benches/scaling.rs` path at fast-mode size (appends 20000/100).
 fn scaling_artifact() -> String {
@@ -120,6 +124,37 @@ fn group_artifact() -> String {
     group_grid_to_json(&points).to_string_pretty()
 }
 
+/// The `benches/soak.rs` path at fast-mode size: the hostile-network
+/// campaign is seeded end to end (fault draws included), so its
+/// artifact must replay byte for byte like every other bench — the
+/// property that makes shrunk repro lines trustworthy.
+fn soak_artifact() -> String {
+    let base = SoakOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: 12,
+        capacity: 32,
+        replicate: true,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan {
+            drop_per_mille: 20,
+            jitter_ns: 200,
+            duplicate_per_mille: 10,
+            partition: Some((1, 60_000)),
+            churn: Some((2, 60_000)),
+        },
+        ..Default::default()
+    };
+    let points = run_soak_grid(
+        Primary::Write,
+        &[1, 2],
+        &base,
+        20,
+        &TimingModel::default(),
+    );
+    soak_grid_to_json(&points).to_string_pretty()
+}
+
 #[test]
 fn scaling_bench_path_is_byte_deterministic() {
     let a = scaling_artifact();
@@ -150,6 +185,15 @@ fn group_bench_path_is_byte_deterministic() {
     let b = group_artifact();
     assert!(!a.is_empty() && a.contains("amortization_factor"));
     assert_eq!(a, b, "group artifact must be byte-identical");
+}
+
+#[test]
+fn soak_bench_path_is_byte_deterministic() {
+    let a = soak_artifact();
+    let b = soak_artifact();
+    assert!(!a.is_empty() && a.contains("resync_segments"));
+    assert!(a.contains("\"clean\": true"), "the fast campaign is clean");
+    assert_eq!(a, b, "soak artifact must be byte-identical");
 }
 
 /// Different seeds must actually change the artifact — otherwise the

@@ -1,0 +1,261 @@
+//! Replayed minimal fault schedules — regression pins for the
+//! hostile-network soak campaign (`remotelog::soak`).
+//!
+//! Each repro below is a shrunk schedule (the form `rpmem soak` prints
+//! on a failing campaign) that once exposed — or by construction
+//! exposes — a distinct hazard class:
+//!
+//! * heavy train drops racing the retry engine's idempotent re-posts;
+//! * a partition window swallowing a replicated decision wave (both
+//!   the primary AND the witness persistence point must be re-earned);
+//! * a shard reboot losing non-persistent writes, healed by
+//!   anti-entropy before the shard serves again;
+//! * retry-budget exhaustion, which must abort cleanly — presumed
+//!   abort, never a half-acked transaction;
+//! * a sabotaged retry engine (fabricated acks over dropped trains),
+//!   which the campaign MUST catch — the negative control that proves
+//!   the harness can fail.
+//!
+//! The full-mix campaign test at the bottom is the acceptance gate:
+//! all 12 taxonomy configurations × 4 seeds × (drop ≥ 1% + jitter +
+//! one partition window + one churn event), every run clean.
+
+use rpmem::coordinator::scaling::run_soak_grid;
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::persist::retry::RetryPolicy;
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::remotelog::soak::{
+    replay_line, run_soak_case, run_txn_soak, soak_check, FaultPlan, SoakOpts,
+};
+
+fn mhp() -> ServerConfig {
+    ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+}
+
+/// Run one repro schedule and return (acked txns, report clean?).
+fn replay(cfg: ServerConfig, opts: &SoakOpts) -> (u64, bool) {
+    let (res, _, report) = run_soak_case(
+        cfg,
+        TimingModel::deterministic(),
+        Primary::Write,
+        opts,
+        40,
+        &RustScanner,
+    );
+    (res.txns, report.clean())
+}
+
+/// rpmem soak --configs 4 --seeds 5 --clients 2 --shards 2 --txns 8
+///            --group 4 --drop 400
+///
+/// 40% train drops: every 2PC phase loses trains and the retry engine
+/// must re-post checksummed duplicates until each persistence point is
+/// genuinely earned. (The same schedule with `--broken-retry` is the
+/// negative control below.)
+#[test]
+fn repro_heavy_drops_with_retry_stays_clean() {
+    let opts = SoakOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 16,
+        seed: 5,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan { drop_per_mille: 400, ..FaultPlan::none() },
+        ..Default::default()
+    };
+    let (res, stats, report) = run_soak_case(
+        mhp(),
+        TimingModel::deterministic(),
+        Primary::Write,
+        &opts,
+        40,
+        &RustScanner,
+    );
+    // Every transaction either earned its acks through re-posts or
+    // aborted cleanly — and at 40% drops the engine definitely worked.
+    assert_eq!(res.txns + stats.aborted_txns, 16);
+    assert!(res.txns > 0, "the retry budget beats 40% drops");
+    assert!(stats.retries > 0 && stats.dropped_ops > 0);
+    assert!(report.clean(), "{report:?}");
+}
+
+/// rpmem soak --configs 4 --seeds 11 --clients 2 --shards 3 --txns 12
+///            --group 4 --replicate --partition-round 1
+///            --partition-ns 60000
+///
+/// The witness shard partitions for a whole decision wave while
+/// decisions are replicated to it: acks must stall until BOTH the
+/// primary and the witness persistence points are re-earned after the
+/// window lifts — fabricating either one is a durability violation at
+/// the failover boundary.
+#[test]
+fn repro_witness_partition_over_replicated_decisions() {
+    let opts = SoakOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: 12,
+        capacity: 16,
+        seed: 11,
+        replicate: true,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan {
+            partition: Some((1, 60_000)),
+            ..FaultPlan::none()
+        },
+        ..Default::default()
+    };
+    let (acked, clean) = replay(mhp(), &opts);
+    assert_eq!(acked, 24);
+    assert!(clean);
+}
+
+/// rpmem soak --configs 0 --seeds 13 --clients 2 --shards 3 --txns 12
+///            --group 4 --duplicate 40 --churn-round 1 --churn-ns 50000
+///
+/// A shard reboot (losing every non-persistent write) combined with
+/// payload redelivery, on the DMP+DDIO config whose persistence point
+/// rides a responder-CPU ack: anti-entropy must ship exactly the
+/// diverging segments before the shard serves again, and duplicated
+/// payloads must never double-apply into the crash oracle.
+#[test]
+fn repro_churn_with_duplicates_heals_via_antientropy() {
+    let opts = SoakOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: 12,
+        capacity: 16,
+        seed: 13,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan {
+            duplicate_per_mille: 40,
+            churn: Some((1, 50_000)),
+            ..FaultPlan::none()
+        },
+        ..Default::default()
+    };
+    let (res, stats, report) = run_soak_case(
+        ServerConfig::new(PDomain::Dmp, true, RqwrbLoc::Dram),
+        TimingModel::deterministic(),
+        Primary::Write,
+        &opts,
+        40,
+        &RustScanner,
+    );
+    assert_eq!(res.txns, 24);
+    assert_eq!(stats.churn_events, 1);
+    assert!(report.clean(), "{report:?}");
+}
+
+/// rpmem soak --configs 4 --seeds 9 --clients 1 --shards 2 --txns 6
+///            --group 2 --partition-round 0 --partition-ns 100000000
+///
+/// A partition far longer than the whole retry budget: the coordinator
+/// must give up and abort — presumed abort. Nothing may ack through
+/// the dead window, and the crash sweep must see the aborted tail as
+/// exactly that (no half-acked transaction at any instant).
+#[test]
+fn repro_retry_exhaustion_aborts_never_half_acks() {
+    let opts = SoakOpts {
+        clients: 1,
+        shards: 2,
+        txns_per_client: 6,
+        capacity: 16,
+        seed: 9,
+        group: GroupCommitOpts { max_group: 2, ..Default::default() },
+        plan: FaultPlan {
+            partition: Some((0, 100_000_000)),
+            ..FaultPlan::none()
+        },
+        retry: RetryPolicy { max_attempts: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let (run, res, stats) = run_txn_soak(
+        mhp(),
+        TimingModel::deterministic(),
+        Primary::Write,
+        &opts,
+    );
+    assert_eq!(res.txns, 0, "nothing may ack through a dead witness");
+    assert_eq!(stats.aborted_txns, 6);
+    let report = soak_check(&run, &res, 40, 9, &RustScanner);
+    assert!(report.clean(), "{report:?}");
+}
+
+/// rpmem soak --configs 4 --seeds 5 --clients 2 --shards 2 --txns 8
+///            --group 4 --drop 400 --broken-retry
+///
+/// The negative control: a retry engine that fabricates acks over
+/// dropped trains instead of re-posting them MUST make the campaign
+/// fail. If this test ever sees a clean report, the soak harness has
+/// lost the ability to detect the bug class it exists for.
+#[test]
+fn repro_broken_retry_must_fail_the_campaign() {
+    let opts = SoakOpts {
+        clients: 2,
+        shards: 2,
+        txns_per_client: 8,
+        capacity: 16,
+        seed: 5,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan { drop_per_mille: 400, ..FaultPlan::none() },
+        broken_retry: true,
+        ..Default::default()
+    };
+    let (_, clean) = replay(mhp(), &opts);
+    assert!(!clean, "fabricated acks must be caught as violations");
+    // The repro line documents itself: the schedule round-trips
+    // through the CLI vocabulary.
+    let line = replay_line(4, &opts);
+    assert!(line.contains("--drop 400"));
+    assert!(line.contains("--broken-retry"));
+}
+
+/// The acceptance gate: ALL 12 taxonomy configurations × 4 seeds under
+/// the full fault mix — drops ≥ 1%, wire jitter, payload duplicates,
+/// one partition window, one churn event — and every run holds every
+/// invariant at every crash instant.
+#[test]
+fn full_campaign_12_configs_4_seeds_full_fault_mix_is_clean() {
+    let base = SoakOpts {
+        clients: 2,
+        shards: 3,
+        txns_per_client: 12,
+        capacity: 32,
+        replicate: true,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+        plan: FaultPlan {
+            drop_per_mille: 20,
+            jitter_ns: 200,
+            duplicate_per_mille: 10,
+            partition: Some((1, 60_000)),
+            churn: Some((2, 60_000)),
+        },
+        ..Default::default()
+    };
+    let points = run_soak_grid(
+        Primary::Write,
+        &[1, 2, 3, 4],
+        &base,
+        20,
+        &TimingModel::default(),
+    );
+    assert_eq!(points.len(), 48, "12 configs x 4 seeds");
+    for p in &points {
+        assert!(
+            p.clean,
+            "{} seed {}: {} violations",
+            p.config.label(),
+            p.seed,
+            p.violations
+        );
+        assert_eq!(p.churn_events, 1);
+        assert_eq!(p.txns + p.aborted_txns, 24);
+    }
+    let drops: u64 = points.iter().map(|p| p.dropped_ops).sum();
+    let retries: u64 = points.iter().map(|p| p.retries).sum();
+    assert!(drops > 0 && retries > 0, "the campaign must actually soak");
+}
