@@ -1,0 +1,185 @@
+//! Reactor event-loop scale sweep: the `runtime::reactor` virtual-time
+//! scheduler driving 1k–10k client tasks (one QP each) through the
+//! free-running completion-driven schedule, next to the lockstep
+//! adapters' bit-for-bit equivalence with the legacy wave-pipelined
+//! runners at conventional sizes.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_REACTOR_OUT`,
+//! default `reactor_results.json`); the artifact is a pure function of
+//! the seeds, so CI double-runs it and diffs the bytes. Three guards
+//! are asserted:
+//!
+//! * **scaling monotonicity** — one QP per client means connections are
+//!   the unit of RDMA scaling, so aggregate throughput must be
+//!   monotonically non-decreasing along the client axis (noise floor
+//!   0.1%); any regression fails the build;
+//! * **adapter equivalence** — the put/txn/grouped reactor adapters
+//!   reproduce the legacy runners' span, mean, and p99 *bit for bit* at
+//!   matching client counts (the refactor cannot drift);
+//! * **the loop really ran** — every point dispatched at least one
+//!   event per append (posting and retiring are separate events).
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job) still sweeps
+//! 1000+ clients — the whole point of the reactor is that this is
+//! cheap.
+
+use rpmem::coordinator::scaling::{
+    reactor_grid_to_json, render_reactor_grid, run_reactor_grid, ScalingOpts,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::{AppendMode, MethodChoice};
+use rpmem::remotelog::pipeline::{
+    run_multi_client, run_txn_grouped, run_txn_multi_shard, GroupRunOpts,
+    ShardedRunOpts, TxnRunOpts,
+};
+use rpmem::runtime::reactor::{
+    run_multi_client_reactor, run_txn_grouped_reactor,
+    run_txn_multi_shard_reactor,
+};
+use std::time::Instant;
+
+fn main() {
+    let fast = rpmem::bench::fast();
+    let clients: &[usize] =
+        if fast { &[1000, 2000] } else { &[1000, 2500, 5000, 10000] };
+    let appends: u64 = if fast { 8 } else { 100 };
+    let capacity: u64 = if fast { 16 } else { 128 };
+    let opts = ScalingOpts {
+        appends_per_client: appends,
+        capacity,
+        ..Default::default()
+    };
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    println!(
+        "reactor event-loop sweep, {appends} appends/client, one QP per \
+         client, clients {clients:?}\n"
+    );
+
+    let t0 = Instant::now();
+    let points = run_reactor_grid(
+        cfg,
+        AppendMode::Singleton,
+        Primary::Write,
+        clients,
+        &opts,
+    );
+    let wall = t0.elapsed();
+    println!(
+        "{}",
+        render_reactor_grid(
+            "reactor free-running schedule — MHP singleton, shards == clients",
+            &points
+        )
+    );
+    println!("  [harness: {:.2?} wall-clock]\n", wall);
+
+    // Guard 1: throughput monotone along the client axis — one QP per
+    // client adds capacity, so the event loop must deliver it.
+    for w in points.windows(2) {
+        assert!(
+            w[1].throughput_mops >= w[0].throughput_mops * 0.999,
+            "reactor scaling regressed: {} clients -> {:.3} Mops, {} \
+             clients -> {:.3} Mops",
+            w[0].clients,
+            w[0].throughput_mops,
+            w[1].clients,
+            w[1].throughput_mops
+        );
+    }
+    // Guard 3: the loop really ran — at least one dispatch per append.
+    for p in &points {
+        assert!(
+            p.events >= p.appends,
+            "{} clients: {} events for {} appends — the reactor cannot \
+             have driven this run",
+            p.clients,
+            p.events,
+            p.appends
+        );
+    }
+
+    // Guard 2: lockstep adapters == legacy runners, bit for bit, at a
+    // conventional size on every workload shape.
+    let timing = TimingModel::default();
+    let popts = ShardedRunOpts {
+        clients: 12,
+        shards: 3,
+        window: 8,
+        batch: 4,
+        appends_per_client: 60,
+        capacity: 64,
+        seed: 42,
+        record: false,
+    };
+    for mode in [AppendMode::Singleton, AppendMode::Compound] {
+        let (_, legacy) = run_multi_client(
+            cfg,
+            timing.clone(),
+            mode,
+            MethodChoice::Planned(Primary::Write),
+            &popts,
+        );
+        let (_, adapted) = run_multi_client_reactor(
+            cfg,
+            timing.clone(),
+            mode,
+            MethodChoice::Planned(Primary::Write),
+            &popts,
+        );
+        assert_eq!(legacy.span_ns, adapted.span_ns, "{mode:?} span drifted");
+        assert_eq!(
+            legacy.mean_latency_ns.to_bits(),
+            adapted.mean_latency_ns.to_bits(),
+            "{mode:?} mean drifted"
+        );
+        assert_eq!(
+            legacy.p99_latency_ns, adapted.p99_latency_ns,
+            "{mode:?} p99 drifted"
+        );
+    }
+    let topts = TxnRunOpts {
+        clients: 4,
+        shards: 3,
+        txns_per_client: 24,
+        capacity: 32,
+        seed: 42,
+        record: false,
+        atomic: true,
+        replicate: true,
+    };
+    let (_, tl) = run_txn_multi_shard(cfg, timing.clone(), Primary::Write, &topts);
+    let (_, tr) =
+        run_txn_multi_shard_reactor(cfg, timing.clone(), Primary::Write, &topts);
+    assert_eq!(tl.span_ns, tr.span_ns, "txn span drifted");
+    assert_eq!(tl.decision_ns_total, tr.decision_ns_total);
+    assert_eq!(tl.mean_latency_ns.to_bits(), tr.mean_latency_ns.to_bits());
+    let gopts = GroupRunOpts {
+        clients: 4,
+        shards: 3,
+        txns_per_client: 24,
+        capacity: 32,
+        seed: 42,
+        record: false,
+        replicate: false,
+        group: GroupCommitOpts { max_group: 4, ..Default::default() },
+    };
+    let (_, gl) = run_txn_grouped(cfg, timing.clone(), Primary::Write, &gopts);
+    let (_, gr) =
+        run_txn_grouped_reactor(cfg, timing.clone(), Primary::Write, &gopts);
+    assert_eq!(gl.span_ns, gr.span_ns, "grouped span drifted");
+    assert_eq!(gl.group_sizes, gr.group_sizes, "group boundaries drifted");
+    assert_eq!(gl.mean_latency_ns.to_bits(), gr.mean_latency_ns.to_bits());
+    println!(
+        "adapter equivalence: put (singleton + compound), 2PC, grouped — \
+         all bit-for-bit with the legacy runners\n"
+    );
+
+    let out = std::env::var("RPMEM_REACTOR_OUT")
+        .unwrap_or_else(|_| "reactor_results.json".to_string());
+    std::fs::write(&out, reactor_grid_to_json(&points).to_string_pretty())
+        .expect("write reactor JSON artifact");
+    println!("wrote {out} ({} points)", points.len());
+}

@@ -27,6 +27,13 @@
 //!   baseline — the amortized decision-persistence cost
 //!   (`benches/group.rs` persists the table and asserts the
 //!   amortization is strictly monotone in the group size).
+//! * **reactor axis** ([`run_reactor_grid`]) — the event-loop scale
+//!   sweep: the same one-QP-per-client workload as the scaling axis,
+//!   but driven by the [`crate::runtime::reactor`] free-running
+//!   scheduler — one binary-heap event queue dispatching thousands of
+//!   client tasks on completion events. This is the axis that actually
+//!   reaches 1k–10k clients (`benches/reactor.rs` persists the table
+//!   and asserts throughput monotonicity along the client axis).
 //! * **soak axis** ([`run_soak_grid`]) — the hostile-network campaign:
 //!   ALL 12 taxonomy configurations × seeds, every run under a
 //!   drop/jitter/partition/churn fault schedule
@@ -47,6 +54,7 @@ use crate::remotelog::pipeline::{
 };
 use crate::remotelog::recovery::RustScanner;
 use crate::remotelog::soak::{run_soak_case, SoakOpts};
+use crate::runtime::reactor::run_reactor_free;
 use crate::util::json::Json;
 use std::thread;
 
@@ -1021,6 +1029,170 @@ pub fn soak_grid_to_json(points: &[SoakPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
+// ---------------------------------------------------------------------
+// Reactor axis: the event-loop scheduler at 1k–10k clients.
+// ---------------------------------------------------------------------
+
+/// One reactor-driven (clients, shards) measurement.
+#[derive(Debug, Clone)]
+pub struct ReactorPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// REMOTELOG variant.
+    pub mode: AppendMode,
+    /// Human-readable method name.
+    pub method_name: String,
+    /// Client count (== reactor task count).
+    pub clients: usize,
+    /// QP count.
+    pub shards: usize,
+    /// Effective window depth.
+    pub window: usize,
+    /// Effective doorbell batch.
+    pub batch: usize,
+    /// Total appends across all clients.
+    pub appends: u64,
+    /// Makespan in virtual ns.
+    pub span_ns: u64,
+    /// Aggregate throughput (million appends per simulated second).
+    pub throughput_mops: f64,
+    /// Mean per-append latency (ns).
+    pub mean_latency_ns: f64,
+    /// p99 per-append latency (ns).
+    pub p99_latency_ns: u64,
+    /// Reactor events dispatched over the run — the scheduler-overhead
+    /// axis (events per append is the cost of event-driven dispatch).
+    pub events: u64,
+}
+
+impl ReactorPoint {
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("mode", self.mode.name().into())
+            .set("method", self.method_name.clone().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("window", self.window.into())
+            .set("batch", self.batch.into())
+            .set("appends", self.appends.into())
+            .set("span_ns", self.span_ns.into())
+            .set("throughput_mops", self.throughput_mops.into())
+            .set("mean_latency_ns", self.mean_latency_ns.into())
+            .set("p99_latency_ns", self.p99_latency_ns.into())
+            .set("events", self.events.into());
+        j
+    }
+}
+
+/// Measure one (clients, shards) point through the reactor's
+/// free-running scheduler ([`run_reactor_free`]).
+pub fn run_reactor_point(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    clients: usize,
+    shards: usize,
+    opts: &ScalingOpts,
+) -> ReactorPoint {
+    let ropts = ShardedRunOpts {
+        clients,
+        shards,
+        window: opts.window,
+        batch: opts.batch,
+        appends_per_client: opts.appends_per_client,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+    };
+    let (run, res, events) = run_reactor_free(
+        cfg,
+        opts.timing.clone(),
+        mode,
+        MethodChoice::Planned(primary),
+        &ropts,
+    );
+    let method_name = match mode {
+        AppendMode::Singleton => run.singleton_method().name().to_string(),
+        AppendMode::Compound => run.compound_method().name().to_string(),
+    };
+    ReactorPoint {
+        config: cfg,
+        mode,
+        method_name,
+        clients,
+        shards,
+        window: res.window,
+        batch: res.batch,
+        appends: res.appends,
+        span_ns: res.span_ns,
+        throughput_mops: res.throughput_mops(),
+        mean_latency_ns: res.mean_latency_ns,
+        p99_latency_ns: res.p99_latency_ns,
+        events,
+    }
+}
+
+/// Reactor scale sweep: one QP per client (`shards == clients`, the
+/// unit of RDMA scaling) for each entry of `clients_list` — the axis
+/// `benches/reactor.rs` drives to 10k clients. Points run on parallel
+/// OS threads; each point's virtual-time schedule is single-threaded
+/// and deterministic.
+pub fn run_reactor_grid(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    primary: Primary,
+    clients_list: &[usize],
+    opts: &ScalingOpts,
+) -> Vec<ReactorPoint> {
+    thread::scope(|scope| {
+        let handles: Vec<_> = clients_list
+            .iter()
+            .map(|&m| {
+                scope.spawn(move || {
+                    run_reactor_point(cfg, mode, primary, m, m, opts)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("reactor point panicked"))
+            .collect()
+    })
+}
+
+/// Render a reactor grid (throughput, latency, and event counts).
+pub fn render_reactor_grid(title: &str, points: &[ReactorPoint]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<8} {:<7} {:<7} {:<6} {:>14} {:>11} {:>10} {:>12}\n",
+        "clients", "shards", "window", "batch", "throughput", "mean lat",
+        "p99 lat", "events"
+    ));
+    out.push_str(&"-".repeat(83));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<8} {:<7} {:<7} {:<6} {:>9.2} Mops {:>8.2} us {:>7.2} us {:>12}\n",
+            p.clients,
+            p.shards,
+            p.window,
+            p.batch,
+            p.throughput_mops,
+            p.mean_latency_ns / 1e3,
+            p.p99_latency_ns as f64 / 1e3,
+            p.events,
+        ));
+    }
+    out
+}
+
+/// Serialize a reactor grid for the JSON artifact.
+pub fn reactor_grid_to_json(points: &[ReactorPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1254,6 +1426,60 @@ mod tests {
         assert_eq!(j.as_arr().unwrap().len(), 24);
         assert!(j.as_arr().unwrap()[0].get("violations").is_some());
         assert!(render_soak_grid("t", &pts).contains("verdict"));
+    }
+
+    #[test]
+    fn reactor_grid_covers_points_and_is_deterministic() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let opts = ScalingOpts {
+            appends_per_client: 40,
+            capacity: 64,
+            ..Default::default()
+        };
+        let pts = run_reactor_grid(
+            cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            &[1, 8, 32],
+            &opts,
+        );
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[2].clients, 32);
+        assert_eq!(pts[2].shards, 32);
+        assert_eq!(pts[2].appends, 32 * 40);
+        for p in &pts {
+            assert!(p.throughput_mops > 0.0);
+            assert!(p.events > 0, "the event loop must have dispatched");
+        }
+        // One QP per client: adding clients adds capacity, so aggregate
+        // throughput must not degrade (the bench asserts this at 10k).
+        for w in pts.windows(2) {
+            assert!(
+                w[1].throughput_mops >= w[0].throughput_mops * 0.999,
+                "reactor scaling regressed: {} clients {} Mops vs {} \
+                 clients {} Mops",
+                w[0].clients,
+                w[0].throughput_mops,
+                w[1].clients,
+                w[1].throughput_mops
+            );
+        }
+        let again = run_reactor_grid(
+            cfg,
+            AppendMode::Singleton,
+            Primary::Write,
+            &[1, 8, 32],
+            &opts,
+        );
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.span_ns, b.span_ns);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.throughput_mops.to_bits(), b.throughput_mops.to_bits());
+        }
+        let j = reactor_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 3);
+        assert!(j.as_arr().unwrap()[0].get("events").is_some());
+        assert!(render_reactor_grid("t", &pts).contains("events"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! rpmem taxonomy [--table 1|2|3]         regenerate the paper's tables
 //! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
 //! rpmem scale [...]                      clients × shards throughput scaling
+//! rpmem reactor [...]                    event-loop scale sweep (1k-10k clients)
 //! rpmem txn [...]                        cross-shard 2PC vs independent grid
 //! rpmem failover [...]                   replicated-decision 2PC vs plain 2PC
 //! rpmem group [...]                      group-commit vs per-txn decision grid
@@ -67,6 +68,7 @@ fn main() -> ExitCode {
         Some("taxonomy") => cmd_taxonomy(&flags),
         Some("sweep") => cmd_sweep(&flags),
         Some("scale") => cmd_scale(&flags),
+        Some("reactor") => cmd_reactor(&flags),
         Some("txn") => cmd_txn(&flags),
         Some("failover") => cmd_failover(&flags),
         Some("group") => cmd_group(&flags),
@@ -117,6 +119,9 @@ COMMANDS
   taxonomy      Regenerate the paper's Tables 1-3 from the planner.
   sweep         REMOTELOG latency sweep — Figure 2 panels.
   scale         Multi-client sharded throughput scaling.
+  reactor       Event-loop scale sweep: one virtual-time reactor
+                driving thousands of client tasks (one QP each) on
+                completion events — the 1k-10k-client axis.
   txn           Cross-shard 2PC vs independent-update grid (the price
                 of atomicity).
   failover      Replicated-decision 2PC vs plain 2PC grid (the
@@ -174,6 +179,25 @@ KNOBS
   --window W             doorbell trains in flight        (default: 16)
   --batch B              appends per doorbell train       (default: 4)
   --appends N            appends per client               (default: 2000)
+  --json FILE            dump results as JSON
+";
+
+const USAGE_REACTOR: &str = "\
+USAGE: rpmem reactor [flags]
+
+Event-loop scale sweep: every client is a pollable task of the
+runtime::reactor virtual-time scheduler (one QP per client), so the
+client count is a memory cost, not a code-structure cost — this is
+the axis that reaches thousands of clients.
+
+KNOBS
+  --clients LIST         client counts          (default: 100,1000,2000)
+  --window W             doorbell trains in flight        (default: 16)
+  --batch B              appends per doorbell train       (default: 4)
+  --appends N            appends per client               (default: 100)
+  --capacity N           log slots per client             (default: 128)
+  --domain dmp|mhp|wsp   persistence domain               (default: mhp)
+  --primary write|writeimm|send  primary op               (default: write)
   --json FILE            dump results as JSON
 ";
 
@@ -316,6 +340,10 @@ fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
               "json"]
         }
         "scale" => &["clients", "shards", "window", "batch", "appends", "json"],
+        "reactor" => &[
+            "clients", "window", "batch", "appends", "capacity", "domain",
+            "primary", "json",
+        ],
         "txn" => &["clients", "shards", "txns", "domain", "primary", "json"],
         "failover" => {
             &["clients", "shards", "txns", "domain", "primary", "json"]
@@ -360,6 +388,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
         "taxonomy" => Some(USAGE_TAXONOMY),
         "sweep" => Some(USAGE_SWEEP),
         "scale" => Some(USAGE_SCALE),
+        "reactor" => Some(USAGE_REACTOR),
         "txn" => Some(USAGE_TXN),
         "failover" => Some(USAGE_FAILOVER),
         "group" => Some(USAGE_GROUP),
@@ -560,6 +589,45 @@ fn cmd_scale(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(path) = flags.get("json") {
         let j = scaling_to_json(&all).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_reactor(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        reactor_grid_to_json, render_reactor_grid, run_reactor_grid,
+        ScalingOpts,
+    };
+    let clients = parse_usize_list(flags, "clients", &[100, 1000, 2000])?;
+    let domain = parse_domain(flags)?;
+    let primary = parse_primary(flags)?;
+    let appends = flag_u64(flags, "appends", 100);
+    let opts = ScalingOpts {
+        appends_per_client: appends,
+        window: flag_u64(flags, "window", 16) as usize,
+        batch: flag_u64(flags, "batch", 4) as usize,
+        capacity: flag_u64(flags, "capacity", 128).max(1),
+        ..Default::default()
+    };
+    let cfg = ServerConfig::new(domain, false, RqwrbLoc::Dram);
+    let points = run_reactor_grid(
+        cfg,
+        AppendMode::Singleton,
+        primary,
+        &clients,
+        &opts,
+    );
+    let title = format!(
+        "Reactor event-loop scale sweep — {} singleton, one QP per client \
+         [{}]",
+        cfg.label(),
+        points[0].method_name
+    );
+    println!("{}", render_reactor_grid(&title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = reactor_grid_to_json(&points).to_string_pretty();
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }

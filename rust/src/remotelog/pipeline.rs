@@ -380,6 +380,19 @@ pub struct ShardedRun {
 }
 
 impl ShardedRun {
+    /// Assemble a completed run from parts. Crate-visible so alternate
+    /// drivers (the reactor adapters in [`crate::runtime::reactor`]) can
+    /// hand their fabrics to the unchanged crash machinery.
+    pub(crate) fn assemble(
+        mode: AppendMode,
+        fabric: ShardedFabric,
+        clients: Vec<ShardedClient>,
+        singleton_method: SingletonMethod,
+        compound_method: CompoundMethod,
+    ) -> Self {
+        ShardedRun { mode, fabric, clients, singleton_method, compound_method }
+    }
+
     /// The singleton method the run used (singleton mode).
     pub fn singleton_method(&self) -> SingletonMethod {
         self.singleton_method

@@ -1,6 +1,12 @@
-//! Runtime bridge to the AOT-compiled XLA/Pallas kernels.
+//! Runtime layer: the event-driven [`reactor`] scheduler plus the
+//! bridge to the AOT-compiled XLA/Pallas kernels.
 //!
-//! Two builds:
+//! [`reactor`] is unconditional — the virtual-time event loop that
+//! drives every client of a sharded run as a pollable task (see its
+//! module docs for the event-loop diagram and the equivalence story
+//! with the legacy wave-pipelined runners).
+//!
+//! The kernel bridge has two builds:
 //!
 //! * `--features xla-runtime` — the real PJRT-backed [`Runtime`] in
 //!   `pjrt` (the module only exists under that feature, so no doc link),
@@ -14,6 +20,8 @@
 //!   [`crate::remotelog::antientropy`]) when loading fails, so the
 //!   offline build loses no coverage of the *semantics* — the kernels and
 //!   the mirrors are pinned to the same oracle by the python tests.
+
+pub mod reactor;
 
 #[cfg(feature = "xla-runtime")]
 pub mod pjrt;

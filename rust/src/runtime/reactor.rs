@@ -1,0 +1,2007 @@
+//! Event-driven reactor runtime: ONE virtual-time scheduler driving
+//! every client of a sharded run as a pollable task.
+//!
+//! Every legacy runner in [`crate::remotelog::pipeline`] hand-rolls its
+//! own client interleaving as sequential waves (`for pass { for client
+//! { … } }`), so each new workload rebuilt pipelining logic and client
+//! counts topped out in the dozens. The reactor inverts that: a single
+//! [`Reactor`] owns a binary-heap event queue of `(key, task)` pairs and
+//! repeatedly dispatches the earliest event to its task's state machine;
+//! tasks reschedule themselves (`Step::Runnable`) or retire
+//! (`Step::Done`). Client count becomes a memory cost — one task struct
+//! and one heap slot each — not a code-structure cost, which is what the
+//! 1k–10k-client grid ([`crate::coordinator::scaling::run_reactor_grid`])
+//! exercises.
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             │              Reactor (min-heap)                │
+//!             │   pop earliest (key, task) ── tie → task id    │
+//!             └───────┬────────────────────────────▲───────────┘
+//!                     │ dispatch(task, key)        │ Step::Runnable(next)
+//!             ┌───────▼────────────────────────────┴───────────┐
+//!             │ task state machine (one per client)            │
+//!             │   PutTask: post train │ await completion │     │
+//!             │            retry timer │ drain            │    │
+//!             │   TxnTask: P0 prepare-post → P1 prepare-wait → │
+//!             │            P2 decide-post → P3 decide-wait →   │
+//!             │            P4 commit-post → P5 record          │
+//!             │   GroupedTxnTask: G0 prepare-post(w) →         │
+//!             │            G1 prepare-wait(w) → G2 schedule →  │
+//!             │            G3 group-decide-post → G4 wait →    │
+//!             │            G5 group-commit → G6 bookkeeping    │
+//!             └───────┬────────────────────────────────────────┘
+//!                     │ posts / waits
+//!             ┌───────▼────────────────────────────────────────┐
+//!             │ ShardedFabric: all QPs, faults, virtual clocks │
+//!             └────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Two time bases.** The reactor is a discrete-event scheduler over an
+//! ordered key; what the key *means* is a per-runner policy:
+//!
+//! * **Lockstep** ([`run_multi_client_reactor`],
+//!   [`run_txn_multi_shard_reactor`], [`run_txn_grouped_reactor`]) —
+//!   keys are *logical step numbers* (pass index, `round*phases+phase`,
+//!   wave-block offsets) with ties broken by task id. The heap then pops
+//!   events in exactly the order the legacy nested loops visited them,
+//!   so these adapters reproduce the legacy runners **bit for bit**
+//!   (asserted across all 12 taxonomy configs by
+//!   `rust/tests/reactor_equivalence.rs`) while every dispatch still
+//!   flows through the real event queue.
+//! * **Free-running** ([`run_reactor_free`], [`run_reactor_faulted`]) —
+//!   keys are *virtual fabric time*: a task sleeps until its oldest
+//!   train's completion milestone (or a retry timer) and other tasks run
+//!   in the gap. This is the completion-driven schedule the scaling
+//!   grid and the hostile-wire runner use.
+//!
+//! **Retry as timer events.** The legacy
+//! [`crate::persist::retry::await_with_retry`] loop charges timeout +
+//! backoff to the requester clock *inside one client's wave slice*, so
+//! two clients backing off concurrently advance their clocks
+//! independently and can observe interleavings no single timeline
+//! produces. [`run_reactor_faulted`] fixes this: a lost train parks its
+//! task with a timer event at `now + timeout + backoff(attempt)`; the
+//! heap keeps dispatching *other* tasks' earlier events before the timer
+//! fires, and the re-post happens in true global time order
+//! (`rust/tests/reactor_retry.rs` is the regression test, and
+//! [`ReactorRetryStats::timer_log`] the evidence).
+
+use crate::fabric::faults::NetworkModel;
+use crate::fabric::sharded::ShardedFabric;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::persist::config::ServerConfig;
+use crate::persist::exec::{
+    exec_compound, post_compound, post_compound_batch, post_singleton_batch,
+    Update, WaitPoint,
+};
+use crate::persist::failover::post_decision_replicated;
+use crate::persist::groupcommit::{
+    post_decision_group, post_decision_group_replicated, GroupScheduler,
+    PlannedGroup,
+};
+use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use crate::persist::planner::{plan_compound, plan_singleton};
+use crate::persist::retry::RetryPolicy;
+use crate::persist::txn::{
+    plan_txn_method, post_commit, post_decision, post_prepare, sync_clock,
+    CommitFlip, IntentRecord,
+};
+use crate::remotelog::client::{AppendMode, AppendRecord, MethodChoice};
+use crate::remotelog::log::{make_record, LogLayout, RECORD_BYTES};
+use crate::remotelog::pipeline::{
+    compound_pipelinable, pipeline_payload, txn_fabric_and_clients,
+    txn_payload, GroupRunOpts, GroupRunResult, MultiClientResult,
+    ShardedClient, ShardedRun, ShardedRunOpts, TxnClient, TxnOracle, TxnRun,
+    TxnRunOpts, TxnRunResult,
+};
+use crate::server::memory::Layout;
+use crate::util::stats::Histogram;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Index of a task registered with a [`Reactor`] (== client index in
+/// every runner here).
+pub type TaskId = usize;
+
+/// Outcome of one task dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Re-arm the task at this event key (a logical step number for
+    /// lockstep adapters, virtual nanoseconds for free-running ones).
+    Runnable(Nanos),
+    /// The task finished; it leaves the event queue for good.
+    Done,
+}
+
+/// The event loop: a min-heap of `(key, task)` events, dispatched in
+/// key order with ties broken by task id (lowest first — the legacy
+/// runners' client order).
+#[derive(Debug, Default)]
+pub struct Reactor {
+    heap: BinaryHeap<Reverse<(Nanos, TaskId)>>,
+    dispatched: u64,
+}
+
+impl Reactor {
+    /// An empty reactor.
+    pub fn new() -> Self {
+        Reactor::default()
+    }
+
+    /// Arm `task` to dispatch at event key `at`.
+    pub fn schedule(&mut self, at: Nanos, task: TaskId) {
+        self.heap.push(Reverse((at, task)));
+    }
+
+    /// Events dispatched so far.
+    pub fn events_dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Run the loop to quiescence: pop the earliest event, dispatch it
+    /// to `step`, re-arm per the returned [`Step`]. Deterministic by
+    /// construction — the heap orders on `(key, task)` and every
+    /// rescheduling decision is the task's own.
+    pub fn drive(&mut self, mut step: impl FnMut(TaskId, Nanos) -> Step) {
+        while let Some(Reverse((key, task))) = self.heap.pop() {
+            self.dispatched += 1;
+            match step(task, key) {
+                Step::Runnable(next) => self.heap.push(Reverse((next, task))),
+                Step::Done => {}
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared setup for the put-pipeline runners (the exact layout/fabric
+// construction of `run_multi_client`, factored so every scheduling
+// policy sizes PM identically).
+// ---------------------------------------------------------------------
+
+struct PutSetup {
+    sm: SingletonMethod,
+    cm: CompoundMethod,
+    pipelinable: bool,
+    window: usize,
+    batch: usize,
+    fabric: ShardedFabric,
+    clients: Vec<ShardedClient>,
+}
+
+fn put_setup(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    mode: AppendMode,
+    choice: MethodChoice,
+    opts: &ShardedRunOpts,
+) -> PutSetup {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.window >= 1 && opts.batch >= 1);
+    let (sm, cm) = match choice {
+        MethodChoice::Planned(p) => {
+            (plan_singleton(&cfg, p), plan_compound(&cfg, p, 8))
+        }
+        MethodChoice::ForcedSingleton(m) => {
+            (m, plan_compound(&cfg, Primary::Write, 8))
+        }
+        MethodChoice::ForcedCompound(m) => {
+            (plan_singleton(&cfg, Primary::Write), m)
+        }
+    };
+    let pipelinable = match mode {
+        AppendMode::Singleton => true,
+        AppendMode::Compound => compound_pipelinable(cm),
+    };
+    let (window, batch) =
+        if pipelinable { (opts.window, opts.batch) } else { (1, 1) };
+    assert!(
+        !opts.record || opts.appends_per_client <= opts.capacity,
+        "log wraparound would invalidate the crash oracle"
+    );
+
+    let clients_per_qp = opts.clients.div_ceil(opts.shards);
+    let region = LogLayout::region_stride(opts.capacity);
+    let rq_count = 64usize;
+    let rq_slot = 8192u64;
+    let pm_size = (region * clients_per_qp as u64
+        + rq_count as u64 * rq_slot
+        + 4096)
+        .next_power_of_two();
+    let layout = Layout::new(pm_size, pm_size / 2, rq_count, rq_slot, cfg.rqwrb);
+    let fabric = ShardedFabric::new(
+        cfg,
+        timing,
+        layout,
+        opts.seed,
+        opts.record,
+        opts.shards,
+    );
+    let clients: Vec<ShardedClient> = (0..opts.clients)
+        .map(|c| {
+            let qp = c % opts.shards;
+            let k = (c / opts.shards) as u64;
+            let log = LogLayout::in_region(k * region, opts.capacity);
+            assert!(
+                log.end() <= fabric.qp(qp).mem.layout.pm_app_limit(),
+                "client region overlaps the RQWRB ring"
+            );
+            ShardedClient {
+                qp,
+                log,
+                appends: Vec::new(),
+                latencies: Histogram::new(),
+            }
+        })
+        .collect();
+    PutSetup { sm, cm, pipelinable, window, batch, fabric, clients }
+}
+
+/// One in-flight doorbell train of a reactor-driven put task.
+struct Train {
+    first_seq: u64,
+    start: Nanos,
+    wp: WaitPoint,
+    records: Vec<[u8; RECORD_BYTES]>,
+}
+
+// ---------------------------------------------------------------------
+// Lockstep put adapter: bit-for-bit `run_multi_client`.
+// ---------------------------------------------------------------------
+
+/// Event key space for the lockstep drain phase: far above any pass
+/// index, so all posting passes dispatch before any drain event, and
+/// client `c` drains completely (key `DRAIN_BASE + c`) before client
+/// `c + 1` starts — the legacy client-major final drain.
+const DRAIN_BASE: Nanos = 1 << 40;
+
+struct PutTaskState {
+    next_seq: u64,
+    inflight: VecDeque<Train>,
+    draining: bool,
+}
+
+struct PutLockstep {
+    fabric: ShardedFabric,
+    clients: Vec<ShardedClient>,
+    tasks: Vec<PutTaskState>,
+    summary: Histogram,
+    sm: SingletonMethod,
+    cm: CompoundMethod,
+    mode: AppendMode,
+    pipelinable: bool,
+    window: usize,
+    batch: usize,
+    total: u64,
+    record: bool,
+}
+
+impl PutLockstep {
+    /// Mirror of `retire_client`: pop the oldest train, wait its point,
+    /// ack every record in it.
+    fn retire(&mut self, c: usize) {
+        let train = self.tasks[c].inflight.pop_front().expect("non-empty");
+        let acked = train.wp.wait(self.fabric.qp_mut(self.clients[c].qp));
+        for (j, rec) in train.records.iter().enumerate() {
+            let lat = acked - train.start;
+            self.clients[c].latencies.record(lat);
+            self.summary.record(lat);
+            if self.record {
+                self.clients[c].appends.push(AppendRecord {
+                    seq: train.first_seq + j as u64,
+                    record: *rec,
+                    acked_at: acked,
+                });
+            }
+        }
+    }
+
+    /// The legacy per-pass loop body for client `c`: retire if the
+    /// window is full, then post the next train (or run the synchronous
+    /// compound append for non-pipelinable methods).
+    fn post_next(&mut self, c: usize) {
+        if self.tasks[c].inflight.len() == self.window {
+            self.retire(c);
+        }
+        let first = self.tasks[c].next_seq;
+        let len = (self.batch as u64).min(self.total - first) as usize;
+        let (qp, log) = (self.clients[c].qp, self.clients[c].log.clone());
+
+        if self.mode == AppendMode::Compound && !self.pipelinable {
+            let record = make_record(first, &pipeline_payload(first));
+            let a = Update::new(log.slot_addr(first), record.to_vec());
+            let b =
+                Update::new(log.tail_addr, (first + 1).to_le_bytes().to_vec());
+            let fab = self.fabric.qp_mut(qp);
+            let out = exec_compound(fab, self.cm, &a, &b, first as u32);
+            let lat = out.acked - out.start;
+            self.clients[c].latencies.record(lat);
+            self.summary.record(lat);
+            if self.record {
+                self.clients[c].appends.push(AppendRecord {
+                    seq: first,
+                    record,
+                    acked_at: out.acked,
+                });
+            }
+            self.tasks[c].next_seq += 1;
+            return;
+        }
+
+        let fab = self.fabric.qp_mut(qp);
+        let start = fab.now();
+        let mut records = Vec::with_capacity(len);
+        let wp = match self.mode {
+            AppendMode::Singleton => {
+                let mut updates = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = first + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    updates.push(Update::new(log.slot_addr(s), record.to_vec()));
+                    records.push(record);
+                }
+                post_singleton_batch(fab, self.sm, &updates, first as u32)
+            }
+            AppendMode::Compound => {
+                let mut pairs = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = first + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    pairs.push((
+                        Update::new(log.slot_addr(s), record.to_vec()),
+                        Update::new(
+                            log.tail_addr,
+                            (s + 1).to_le_bytes().to_vec(),
+                        ),
+                    ));
+                    records.push(record);
+                }
+                post_compound_batch(fab, self.cm, &pairs, first as u32)
+                    .expect("checked pipelinable above")
+            }
+        };
+        self.tasks[c].inflight.push_back(Train {
+            first_seq: first,
+            start,
+            wp,
+            records,
+        });
+        self.tasks[c].next_seq += len as u64;
+    }
+
+    fn step(&mut self, c: usize, key: Nanos) -> Step {
+        if !self.tasks[c].draining {
+            if self.tasks[c].next_seq >= self.total {
+                // Posting finished at this pass; switch to the
+                // client-major drain key space.
+                self.tasks[c].draining = true;
+                return if self.tasks[c].inflight.is_empty() {
+                    Step::Done
+                } else {
+                    Step::Runnable(DRAIN_BASE + c as Nanos)
+                };
+            }
+            self.post_next(c);
+            return Step::Runnable(key + 1);
+        }
+        self.retire(c);
+        if self.tasks[c].inflight.is_empty() {
+            Step::Done
+        } else {
+            Step::Runnable(DRAIN_BASE + c as Nanos)
+        }
+    }
+}
+
+/// Reactor adapter for [`crate::remotelog::pipeline::run_multi_client`]:
+/// the same clients × shards put pipeline, driven as one task per client
+/// through the event loop with *logical pass numbers* as event keys —
+/// the heap then replays the legacy round-robin order exactly, so run
+/// and result are bit-for-bit identical to the legacy runner.
+pub fn run_multi_client_reactor(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    mode: AppendMode,
+    choice: MethodChoice,
+    opts: &ShardedRunOpts,
+) -> (ShardedRun, MultiClientResult) {
+    let setup = put_setup(cfg, timing, mode, choice, opts);
+    let mut st = PutLockstep {
+        fabric: setup.fabric,
+        clients: setup.clients,
+        tasks: (0..opts.clients)
+            .map(|_| PutTaskState {
+                next_seq: 0,
+                inflight: VecDeque::new(),
+                draining: false,
+            })
+            .collect(),
+        summary: Histogram::new(),
+        sm: setup.sm,
+        cm: setup.cm,
+        mode,
+        pipelinable: setup.pipelinable,
+        window: setup.window,
+        batch: setup.batch,
+        total: opts.appends_per_client,
+        record: opts.record,
+    };
+    let mut reactor = Reactor::new();
+    for c in 0..opts.clients {
+        reactor.schedule(0, c);
+    }
+    reactor.drive(|task, key| st.step(task, key));
+
+    let span_ns = st.fabric.makespan();
+    let result = MultiClientResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        window: setup.window,
+        batch: setup.batch,
+        appends: opts.appends_per_client * opts.clients as u64,
+        span_ns,
+        mean_latency_ns: st.summary.summary().mean(),
+        p99_latency_ns: st.summary.quantile(0.99),
+    };
+    let run =
+        ShardedRun::assemble(mode, st.fabric, st.clients, setup.sm, setup.cm);
+    (run, result)
+}
+
+// ---------------------------------------------------------------------
+// Free-running put runner: completion-driven virtual-time schedule —
+// the 1k–10k-client scaling policy.
+// ---------------------------------------------------------------------
+
+enum FreeState {
+    /// Next dispatch posts a train (or transitions to await/drain).
+    Run,
+    /// Next dispatch retires the oldest train (its completion milestone
+    /// is the event time).
+    AwaitFront,
+}
+
+struct PutFree {
+    fabric: ShardedFabric,
+    clients: Vec<ShardedClient>,
+    tasks: Vec<PutTaskState>,
+    states: Vec<FreeState>,
+    summary: Histogram,
+    sm: SingletonMethod,
+    cm: CompoundMethod,
+    mode: AppendMode,
+    pipelinable: bool,
+    window: usize,
+    batch: usize,
+    total: u64,
+    record: bool,
+}
+
+impl PutFree {
+    fn retire(&mut self, c: usize) {
+        let train = self.tasks[c].inflight.pop_front().expect("non-empty");
+        let acked = train.wp.wait(self.fabric.qp_mut(self.clients[c].qp));
+        for (j, rec) in train.records.iter().enumerate() {
+            let lat = acked - train.start;
+            self.clients[c].latencies.record(lat);
+            self.summary.record(lat);
+            if self.record {
+                self.clients[c].appends.push(AppendRecord {
+                    seq: train.first_seq + j as u64,
+                    record: *rec,
+                    acked_at: acked,
+                });
+            }
+        }
+    }
+
+    fn qp_now(&self, c: usize) -> Nanos {
+        self.fabric.qp(self.clients[c].qp).now()
+    }
+
+    /// Park the task until its oldest train's completion milestone.
+    fn await_front(&mut self, c: usize) -> Step {
+        let rt = self.tasks[c].inflight.front().expect("non-empty").wp.ready_at(
+            self.fabric.qp(self.clients[c].qp),
+        );
+        self.states[c] = FreeState::AwaitFront;
+        Step::Runnable(rt.max(self.qp_now(c)))
+    }
+
+    fn post_next(&mut self, c: usize) -> Step {
+        let first = self.tasks[c].next_seq;
+        let len = (self.batch as u64).min(self.total - first) as usize;
+        let (qp, log) = (self.clients[c].qp, self.clients[c].log.clone());
+
+        if self.mode == AppendMode::Compound && !self.pipelinable {
+            let record = make_record(first, &pipeline_payload(first));
+            let a = Update::new(log.slot_addr(first), record.to_vec());
+            let b =
+                Update::new(log.tail_addr, (first + 1).to_le_bytes().to_vec());
+            let fab = self.fabric.qp_mut(qp);
+            let out = exec_compound(fab, self.cm, &a, &b, first as u32);
+            let lat = out.acked - out.start;
+            self.clients[c].latencies.record(lat);
+            self.summary.record(lat);
+            if self.record {
+                self.clients[c].appends.push(AppendRecord {
+                    seq: first,
+                    record,
+                    acked_at: out.acked,
+                });
+            }
+            self.tasks[c].next_seq += 1;
+            return Step::Runnable(self.qp_now(c));
+        }
+
+        let fab = self.fabric.qp_mut(qp);
+        let start = fab.now();
+        let mut records = Vec::with_capacity(len);
+        let wp = match self.mode {
+            AppendMode::Singleton => {
+                let mut updates = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = first + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    updates.push(Update::new(log.slot_addr(s), record.to_vec()));
+                    records.push(record);
+                }
+                post_singleton_batch(fab, self.sm, &updates, first as u32)
+            }
+            AppendMode::Compound => {
+                let mut pairs = Vec::with_capacity(len);
+                for j in 0..len as u64 {
+                    let s = first + j;
+                    let record = make_record(s, &pipeline_payload(s));
+                    pairs.push((
+                        Update::new(log.slot_addr(s), record.to_vec()),
+                        Update::new(
+                            log.tail_addr,
+                            (s + 1).to_le_bytes().to_vec(),
+                        ),
+                    ));
+                    records.push(record);
+                }
+                post_compound_batch(fab, self.cm, &pairs, first as u32)
+                    .expect("checked pipelinable above")
+            }
+        };
+        self.tasks[c].inflight.push_back(Train {
+            first_seq: first,
+            start,
+            wp,
+            records,
+        });
+        self.tasks[c].next_seq += len as u64;
+        Step::Runnable(self.qp_now(c))
+    }
+
+    fn step(&mut self, c: usize) -> Step {
+        match self.states[c] {
+            FreeState::AwaitFront => {
+                self.retire(c);
+                self.states[c] = FreeState::Run;
+                if self.tasks[c].next_seq >= self.total
+                    && self.tasks[c].inflight.is_empty()
+                {
+                    Step::Done
+                } else {
+                    Step::Runnable(self.qp_now(c))
+                }
+            }
+            FreeState::Run => {
+                if self.tasks[c].next_seq >= self.total {
+                    if self.tasks[c].inflight.is_empty() {
+                        return Step::Done;
+                    }
+                    return self.await_front(c);
+                }
+                if self.tasks[c].inflight.len() == self.window {
+                    return self.await_front(c);
+                }
+                self.post_next(c)
+            }
+        }
+    }
+}
+
+/// Completion-driven put runner: same fabric, layout, and workload as
+/// [`run_multi_client_reactor`], but event keys are **virtual fabric
+/// time** — a task with a full window parks until its oldest train's
+/// completion milestone, and every other task's earlier events dispatch
+/// in the gap. This is the schedule the 1k–10k-client reactor grid
+/// measures. Returns the run, the aggregate result, and the number of
+/// reactor events dispatched.
+pub fn run_reactor_free(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    mode: AppendMode,
+    choice: MethodChoice,
+    opts: &ShardedRunOpts,
+) -> (ShardedRun, MultiClientResult, u64) {
+    let setup = put_setup(cfg, timing, mode, choice, opts);
+    let mut st = PutFree {
+        fabric: setup.fabric,
+        clients: setup.clients,
+        tasks: (0..opts.clients)
+            .map(|_| PutTaskState {
+                next_seq: 0,
+                inflight: VecDeque::new(),
+                draining: false,
+            })
+            .collect(),
+        states: (0..opts.clients).map(|_| FreeState::Run).collect(),
+        summary: Histogram::new(),
+        sm: setup.sm,
+        cm: setup.cm,
+        mode,
+        pipelinable: setup.pipelinable,
+        window: setup.window,
+        batch: setup.batch,
+        total: opts.appends_per_client,
+        record: opts.record,
+    };
+    let mut reactor = Reactor::new();
+    for c in 0..opts.clients {
+        reactor.schedule(0, c);
+    }
+    reactor.drive(|task, _| st.step(task));
+
+    let span_ns = st.fabric.makespan();
+    let result = MultiClientResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        window: setup.window,
+        batch: setup.batch,
+        appends: opts.appends_per_client * opts.clients as u64,
+        span_ns,
+        mean_latency_ns: st.summary.summary().mean(),
+        p99_latency_ns: st.summary.quantile(0.99),
+    };
+    let run =
+        ShardedRun::assemble(mode, st.fabric, st.clients, setup.sm, setup.cm);
+    (run, result, reactor.events_dispatched())
+}
+
+// ---------------------------------------------------------------------
+// Faulted free-running runner: retries as reactor timer events.
+// ---------------------------------------------------------------------
+
+/// Tallies of the reactor's timer-event retry engine
+/// ([`run_reactor_faulted`]).
+#[derive(Debug, Clone, Default)]
+pub struct ReactorRetryStats {
+    /// Retry timers that fired (one per detected train loss).
+    pub timers_fired: u64,
+    /// Identical trains re-posted after a timer.
+    pub reposts: u64,
+    /// Trains abandoned after `max_attempts` re-posts.
+    pub aborted_trains: u64,
+    /// Appends those aborted trains carried (never acked).
+    pub aborted_appends: u64,
+    /// Every timer firing as `(task, virtual fire time)` in dispatch
+    /// order — globally non-decreasing in time by construction, the
+    /// property the legacy in-slice backoff loop cannot provide.
+    pub timer_log: Vec<(TaskId, Nanos)>,
+    /// Reactor events dispatched over the whole run.
+    pub events: u64,
+}
+
+struct FTrain {
+    first_seq: u64,
+    start: Nanos,
+    wp: WaitPoint,
+    records: Vec<[u8; RECORD_BYTES]>,
+    updates: Vec<Update>,
+    attempt: u32,
+}
+
+enum FaultState {
+    Run,
+    AwaitComp,
+    Timer,
+}
+
+struct PutFaulted {
+    fabric: ShardedFabric,
+    clients: Vec<ShardedClient>,
+    next_seq: Vec<u64>,
+    inflight: Vec<VecDeque<FTrain>>,
+    states: Vec<FaultState>,
+    summary: Histogram,
+    sm: SingletonMethod,
+    window: usize,
+    batch: usize,
+    total: u64,
+    record: bool,
+    policy: RetryPolicy,
+    stats: ReactorRetryStats,
+    acked_appends: u64,
+}
+
+impl PutFaulted {
+    fn qp_now(&self, c: usize) -> Nanos {
+        self.fabric.qp(self.clients[c].qp).now()
+    }
+
+    fn retire(&mut self, c: usize) {
+        let train = self.inflight[c].pop_front().expect("non-empty");
+        let acked = train.wp.wait(self.fabric.qp_mut(self.clients[c].qp));
+        for (j, rec) in train.records.iter().enumerate() {
+            let lat = acked - train.start;
+            self.clients[c].latencies.record(lat);
+            self.summary.record(lat);
+            self.acked_appends += 1;
+            if self.record {
+                self.clients[c].appends.push(AppendRecord {
+                    seq: train.first_seq + j as u64,
+                    record: *rec,
+                    acked_at: acked,
+                });
+            }
+        }
+    }
+
+    /// Probe the oldest train: park on its completion if the milestone
+    /// exists, on a retry timer if the train was lost, or abort it after
+    /// policy exhaustion (mirroring `await_with_retry`'s accounting —
+    /// `attempt` counts re-posts already issued).
+    fn probe_front(&mut self, c: usize) -> Step {
+        let qp = self.clients[c].qp;
+        let (ready, attempt) = {
+            let front = self.inflight[c].front().expect("non-empty");
+            (front.wp.try_ready_at(self.fabric.qp(qp)), front.attempt)
+        };
+        match ready {
+            Some(rt) => {
+                self.states[c] = FaultState::AwaitComp;
+                Step::Runnable(rt.max(self.qp_now(c)))
+            }
+            None if attempt >= self.policy.max_attempts => {
+                let dead = self.inflight[c].pop_front().expect("non-empty");
+                self.stats.aborted_trains += 1;
+                self.stats.aborted_appends += dead.records.len() as u64;
+                self.states[c] = FaultState::Run;
+                Step::Runnable(self.qp_now(c))
+            }
+            None => {
+                let backoff = self.policy.backoff_ns(attempt);
+                self.states[c] = FaultState::Timer;
+                Step::Runnable(
+                    self.qp_now(c) + self.policy.timeout_ns + backoff,
+                )
+            }
+        }
+    }
+
+    fn post_next(&mut self, c: usize) -> Step {
+        let first = self.next_seq[c];
+        let len = (self.batch as u64).min(self.total - first) as usize;
+        let (qp, log) = (self.clients[c].qp, self.clients[c].log.clone());
+        let fab = self.fabric.qp_mut(qp);
+        let start = fab.now();
+        let mut records = Vec::with_capacity(len);
+        let mut updates = Vec::with_capacity(len);
+        for j in 0..len as u64 {
+            let s = first + j;
+            let record = make_record(s, &pipeline_payload(s));
+            updates.push(Update::new(log.slot_addr(s), record.to_vec()));
+            records.push(record);
+        }
+        let wp = post_singleton_batch(fab, self.sm, &updates, first as u32);
+        self.inflight[c].push_back(FTrain {
+            first_seq: first,
+            start,
+            wp,
+            records,
+            updates,
+            attempt: 0,
+        });
+        self.next_seq[c] += len as u64;
+        Step::Runnable(self.qp_now(c))
+    }
+
+    fn step(&mut self, c: usize, t: Nanos) -> Step {
+        match self.states[c] {
+            FaultState::Run => {
+                if self.next_seq[c] >= self.total {
+                    if self.inflight[c].is_empty() {
+                        return Step::Done;
+                    }
+                    return self.probe_front(c);
+                }
+                if self.inflight[c].len() == self.window {
+                    return self.probe_front(c);
+                }
+                self.post_next(c)
+            }
+            FaultState::AwaitComp => {
+                self.retire(c);
+                self.states[c] = FaultState::Run;
+                if self.next_seq[c] >= self.total
+                    && self.inflight[c].is_empty()
+                {
+                    Step::Done
+                } else {
+                    Step::Runnable(self.qp_now(c))
+                }
+            }
+            FaultState::Timer => {
+                // The timeout elapsed in GLOBAL virtual time: every
+                // other task's earlier events already dispatched. Charge
+                // the wait to this requester's clock and re-post the
+                // identical idempotent train.
+                self.stats.timers_fired += 1;
+                self.stats.timer_log.push((c, t));
+                let qp = self.clients[c].qp;
+                sync_clock(self.fabric.qp_mut(qp), t);
+                let sm = self.sm;
+                let train = self.inflight[c].front_mut().expect("non-empty");
+                train.wp = post_singleton_batch(
+                    self.fabric.qp_mut(qp),
+                    sm,
+                    &train.updates,
+                    train.first_seq as u32,
+                );
+                train.attempt += 1;
+                self.stats.reposts += 1;
+                self.probe_front(c)
+            }
+        }
+    }
+}
+
+/// Hostile-wire put runner with **timer-event retries**: the
+/// free-running schedule of [`run_reactor_free`] with `faults` attached
+/// to every QP and each lost train re-posted after a
+/// timeout-plus-backoff *timer event* instead of the legacy in-slice
+/// [`crate::persist::retry::await_with_retry`] busy loop — so
+/// concurrent clients' backoffs elapse on one global timeline
+/// (satellite bugfix; `rust/tests/reactor_retry.rs` is the regression
+/// test). Singleton mode only (the re-post cache stores one update
+/// train per in-flight doorbell).
+///
+/// On a benign `faults` model this is bit-for-bit
+/// [`run_reactor_free`]: the probe sees every milestone immediately, no
+/// timer ever fires.
+pub fn run_reactor_faulted(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    choice: MethodChoice,
+    opts: &ShardedRunOpts,
+    faults: &NetworkModel,
+    policy: &RetryPolicy,
+) -> (ShardedRun, MultiClientResult, ReactorRetryStats) {
+    let setup = put_setup(cfg, timing, AppendMode::Singleton, choice, opts);
+    let mut fabric = setup.fabric;
+    if !faults.is_benign() {
+        fabric.attach_faults(faults);
+    }
+    let mut st = PutFaulted {
+        fabric,
+        clients: setup.clients,
+        next_seq: vec![0; opts.clients],
+        inflight: (0..opts.clients).map(|_| VecDeque::new()).collect(),
+        states: (0..opts.clients).map(|_| FaultState::Run).collect(),
+        summary: Histogram::new(),
+        sm: setup.sm,
+        window: setup.window,
+        batch: setup.batch,
+        total: opts.appends_per_client,
+        record: opts.record,
+        policy: *policy,
+        stats: ReactorRetryStats::default(),
+        acked_appends: 0,
+    };
+    let mut reactor = Reactor::new();
+    for c in 0..opts.clients {
+        reactor.schedule(0, c);
+    }
+    reactor.drive(|task, t| st.step(task, t));
+
+    let span_ns = st.fabric.makespan();
+    let result = MultiClientResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        window: setup.window,
+        batch: setup.batch,
+        appends: st.acked_appends,
+        span_ns,
+        mean_latency_ns: st.summary.summary().mean(),
+        p99_latency_ns: st.summary.quantile(0.99),
+    };
+    let mut stats = st.stats;
+    stats.events = reactor.events_dispatched();
+    let run = ShardedRun::assemble(
+        AppendMode::Singleton,
+        st.fabric,
+        st.clients,
+        setup.sm,
+        setup.cm,
+    );
+    (run, result, stats)
+}
+
+// ---------------------------------------------------------------------
+// Lockstep transactional adapter: bit-for-bit `run_txn_multi_shard`.
+// ---------------------------------------------------------------------
+
+/// Event keys per transaction round in the lockstep txn adapter: six
+/// phases, keyed `round * TXN_PHASES + phase` so every client finishes
+/// phase `p` (in client order — the heap tie-break) before any client
+/// starts phase `p + 1`, exactly the legacy phase-interleaved loops.
+const TXN_PHASES: Nanos = 8;
+
+struct TxnLockstep {
+    fabric: ShardedFabric,
+    clients: Vec<TxnClient>,
+    n: usize,
+    shards: usize,
+    total: u64,
+    record: bool,
+    atomic: bool,
+    replicate: bool,
+    method: SingletonMethod,
+    compound_method: CompoundMethod,
+    msg_seq: u32,
+    decision_ns_total: u64,
+    starts: Vec<Nanos>,
+    prepared: Vec<Nanos>,
+    acked: Vec<Nanos>,
+    recs: Vec<Vec<[u8; RECORD_BYTES]>>,
+    wpss: Vec<Vec<Option<WaitPoint>>>,
+    dwps: Vec<(WaitPoint, Option<WaitPoint>)>,
+}
+
+impl TxnLockstep {
+    /// P0: post this client's PREPARE (or independent-mode compound)
+    /// train on every shard.
+    fn prepare_post(&mut self, c: usize, txn: u64) {
+        let client = &self.clients[c];
+        self.starts[c] = (0..self.shards)
+            .map(|s| self.fabric.qp(s).now())
+            .max()
+            .unwrap_or(0);
+        let mut records = Vec::with_capacity(self.shards);
+        let mut wps = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let record = make_record(txn, &txn_payload(c as u64, s as u64, txn));
+            let a =
+                Update::new(client.logs[s].slot_addr(txn), record.to_vec());
+            records.push(record);
+            self.msg_seq = self.msg_seq.wrapping_add(4);
+            if self.atomic {
+                let intent = IntentRecord {
+                    txn_id: txn,
+                    shard: s as u32,
+                    flips: vec![CommitFlip {
+                        addr: client.logs[s].tail_addr,
+                        value: txn + 1,
+                    }],
+                };
+                wps.push(Some(post_prepare(
+                    self.fabric.qp_mut(s),
+                    self.method,
+                    std::slice::from_ref(&a),
+                    &intent,
+                    client.intents[s].addr(txn),
+                    self.msg_seq,
+                )));
+            } else {
+                let b = Update::new(
+                    client.logs[s].tail_addr,
+                    (txn + 1).to_le_bytes().to_vec(),
+                );
+                match post_compound(
+                    self.fabric.qp_mut(s),
+                    self.compound_method,
+                    &a,
+                    &b,
+                    self.msg_seq,
+                ) {
+                    Some(wp) => wps.push(Some(wp)),
+                    None => {
+                        exec_compound(
+                            self.fabric.qp_mut(s),
+                            self.compound_method,
+                            &a,
+                            &b,
+                            self.msg_seq,
+                        );
+                        wps.push(None);
+                    }
+                }
+            }
+        }
+        self.recs[c] = records;
+        self.wpss[c] = wps;
+    }
+
+    /// P1: observe this client's PREPARE persistence points.
+    fn prepare_wait(&mut self, c: usize) {
+        let mut p = 0u64;
+        let wps = std::mem::take(&mut self.wpss[c]);
+        for (s, wp) in wps.iter().enumerate() {
+            let t = match wp {
+                Some(wp) => wp.wait(self.fabric.qp_mut(s)),
+                None => self.fabric.qp(s).now(),
+            };
+            p = p.max(t);
+        }
+        self.prepared[c] = p;
+        self.acked[c] = p;
+    }
+
+    /// P2: post this client's decision (replicated or plain).
+    fn decide_post(&mut self, c: usize, txn: u64) {
+        let qp = self.clients[c].coord_qp;
+        if self.replicate {
+            let wq = self.clients[c].witness_qp;
+            let (cseq, wseq) =
+                (self.msg_seq.wrapping_add(1), self.msg_seq.wrapping_add(2));
+            self.msg_seq = self.msg_seq.wrapping_add(2);
+            let (coord, wit) = self.fabric.qp_pair_mut(qp, wq);
+            let pair = post_decision_replicated(
+                coord,
+                wit,
+                self.method,
+                txn,
+                self.clients[c].decisions.addr(txn),
+                self.clients[c].replicas.addr(txn),
+                self.prepared[c],
+                cseq,
+                wseq,
+            );
+            self.dwps[c] = (pair.primary, Some(pair.witness));
+        } else {
+            sync_clock(self.fabric.qp_mut(qp), self.prepared[c]);
+            self.msg_seq = self.msg_seq.wrapping_add(1);
+            self.dwps[c] = (
+                post_decision(
+                    self.fabric.qp_mut(qp),
+                    self.method,
+                    txn,
+                    self.clients[c].decisions.addr(txn),
+                    self.msg_seq,
+                ),
+                None,
+            );
+        }
+    }
+
+    /// P3: observe this client's decision point(s).
+    fn decide_wait(&mut self, c: usize) {
+        let (wp, rep) = self.dwps[c];
+        self.acked[c] = wp.wait(self.fabric.qp_mut(self.clients[c].coord_qp));
+        if let Some(rep) = rep {
+            self.acked[c] = self.acked[c]
+                .max(rep.wait(self.fabric.qp_mut(self.clients[c].witness_qp)));
+        }
+        self.decision_ns_total += self.acked[c] - self.prepared[c];
+    }
+
+    /// P4: release this client's commit markers (lazy, never awaited).
+    fn commit_post(&mut self, c: usize, txn: u64) {
+        for s in 0..self.shards {
+            sync_clock(self.fabric.qp_mut(s), self.acked[c]);
+            self.msg_seq = self.msg_seq.wrapping_add(1);
+            let flip = CommitFlip {
+                addr: self.clients[c].logs[s].tail_addr,
+                value: txn + 1,
+            };
+            let _ = post_commit(
+                self.fabric.qp_mut(s),
+                self.method,
+                std::slice::from_ref(&flip),
+                self.msg_seq,
+            );
+        }
+    }
+
+    /// P5: record latency + oracle, then advance to the next round.
+    fn record_txn(&mut self, c: usize, txn: u64) {
+        let records = std::mem::take(&mut self.recs[c]);
+        self.clients[c].latencies.record(self.acked[c] - self.starts[c]);
+        if self.record {
+            self.clients[c].txns.push(TxnOracle {
+                txn_id: txn,
+                records,
+                prepared_at: self.prepared[c],
+                acked_at: self.acked[c],
+            });
+        }
+    }
+
+    fn step(&mut self, c: usize, key: Nanos) -> Step {
+        let round = key / TXN_PHASES;
+        let phase = key % TXN_PHASES;
+        let base = round * TXN_PHASES;
+        match phase {
+            0 => {
+                self.prepare_post(c, round);
+                Step::Runnable(base + 1)
+            }
+            1 => {
+                self.prepare_wait(c);
+                if self.atomic {
+                    Step::Runnable(base + 2)
+                } else {
+                    Step::Runnable(base + 5)
+                }
+            }
+            2 => {
+                self.decide_post(c, round);
+                Step::Runnable(base + 3)
+            }
+            3 => {
+                self.decide_wait(c);
+                Step::Runnable(base + 4)
+            }
+            4 => {
+                self.commit_post(c, round);
+                Step::Runnable(base + 5)
+            }
+            _ => {
+                self.record_txn(c, round);
+                if round + 1 < self.total {
+                    Step::Runnable((round + 1) * TXN_PHASES)
+                } else {
+                    Step::Done
+                }
+            }
+        }
+    }
+}
+
+/// Reactor adapter for
+/// [`crate::remotelog::pipeline::run_txn_multi_shard`]: one task per
+/// coordinator, keyed `round * 8 + phase` so the heap replays the legacy
+/// phase-interleaved order (every client posts PREPAREs before any
+/// waits, etc.) exactly — run and result are bit-for-bit identical to
+/// the legacy runner, including the shared wire `msg_seq` stream.
+pub fn run_txn_multi_shard_reactor(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &TxnRunOpts,
+) -> (TxnRun, TxnRunResult) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(
+        !opts.record || opts.txns_per_client <= opts.capacity,
+        "ring wraparound would invalidate the crash oracle"
+    );
+    assert!(
+        !opts.replicate || (opts.atomic && opts.shards >= 2),
+        "decision replication needs 2PC and a second shard"
+    );
+    let method = plan_txn_method(&cfg, primary);
+    let compound_method = plan_compound(&cfg, primary, 8);
+    let (fabric, clients) = txn_fabric_and_clients(
+        cfg,
+        timing,
+        opts.clients,
+        opts.shards,
+        opts.capacity,
+        opts.seed,
+        opts.record,
+    );
+    let mut st = TxnLockstep {
+        fabric,
+        clients,
+        n: opts.clients,
+        shards: opts.shards,
+        total: opts.txns_per_client,
+        record: opts.record,
+        atomic: opts.atomic,
+        replicate: opts.replicate,
+        method,
+        compound_method,
+        msg_seq: 0,
+        decision_ns_total: 0,
+        starts: vec![0; opts.clients],
+        prepared: vec![0; opts.clients],
+        acked: vec![0; opts.clients],
+        recs: vec![Vec::new(); opts.clients],
+        wpss: vec![Vec::new(); opts.clients],
+        // Placeholder points, overwritten at P2 before P3 reads them.
+        dwps: vec![
+            (WaitPoint::Comp(crate::fabric::ops::OpId(0)), None);
+            opts.clients
+        ],
+    };
+    let mut reactor = Reactor::new();
+    if opts.txns_per_client > 0 {
+        for c in 0..st.n {
+            reactor.schedule(0, c);
+        }
+    }
+    reactor.drive(|task, key| st.step(task, key));
+
+    let span_ns = st.fabric.makespan();
+    let mut summary = Histogram::new();
+    for c in &st.clients {
+        summary.merge(&c.latencies);
+    }
+    let result = TxnRunResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        txns: opts.txns_per_client * opts.clients as u64,
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+        decision_ns_total: st.decision_ns_total,
+    };
+    let run = TxnRun {
+        fabric: st.fabric,
+        clients: st.clients,
+        atomic: opts.atomic,
+        replicate: opts.replicate,
+        method,
+        compound_method,
+    };
+    (run, result)
+}
+
+// ---------------------------------------------------------------------
+// Lockstep grouped adapter: bit-for-bit `run_txn_grouped`.
+// ---------------------------------------------------------------------
+
+enum GroupPhase {
+    /// Per-(wave-slot, client) PREPARE posts, w-major.
+    PreparePost,
+    /// Per-(wave-slot, client) PREPARE waits, w-major.
+    PrepareWait,
+    /// Per-client group scheduling (fresh scheduler per wave).
+    Schedule,
+    /// Per-client group decision trains.
+    DecidePost,
+    /// Per-client group point observation.
+    DecideWait,
+    /// Per-client lazy group commit trains.
+    Commit,
+    /// Per-client acks/latencies/oracles, then the next wave.
+    Bookkeep,
+}
+
+struct GroupTaskState {
+    phase: GroupPhase,
+    /// Wave-slot cursor for the per-(w, c) phases.
+    w: usize,
+}
+
+struct GroupLockstep {
+    fabric: ShardedFabric,
+    clients: Vec<TxnClient>,
+    n: usize,
+    shards: usize,
+    total: u64,
+    record: bool,
+    replicate: bool,
+    opts: GroupRunOpts,
+    method: SingletonMethod,
+    msg_seq: u32,
+    decision_ns_total: u64,
+    group_sizes: Vec<Vec<(u64, u32)>>,
+    tasks: Vec<GroupTaskState>,
+    /// Current wave: first txn id and size.
+    wave_first: u64,
+    wave: usize,
+    starts: Vec<Vec<Nanos>>,
+    prepared: Vec<Vec<Nanos>>,
+    recs: Vec<Vec<Vec<[u8; RECORD_BYTES]>>>,
+    wpss: Vec<Vec<Vec<WaitPoint>>>,
+    groups: Vec<Vec<PlannedGroup>>,
+    dwps: Vec<Vec<(WaitPoint, Option<WaitPoint>)>>,
+    gacks: Vec<Vec<Nanos>>,
+}
+
+impl GroupLockstep {
+    /// Block of event keys one wave occupies: `max_group` PREPARE-post
+    /// slots + `max_group` PREPARE-wait slots + 5 per-client phases.
+    fn block(&self) -> Nanos {
+        2 * self.opts.group.max_group as Nanos + 5
+    }
+
+    /// Reset the per-wave shared buffers. Runs at the first dispatch of
+    /// each wave — `(base + 0, task 0)`, guaranteed first by the heap
+    /// order — sized to the wave that is about to run.
+    fn reset_wave(&mut self) {
+        self.wave =
+            (self.opts.group.max_group as u64).min(self.total - self.wave_first)
+                as usize;
+        for c in 0..self.n {
+            self.starts[c] = vec![0; self.wave];
+            self.prepared[c] = vec![0; self.wave];
+            self.recs[c].clear();
+            self.wpss[c].clear();
+            self.groups[c].clear();
+            self.dwps[c].clear();
+            self.gacks[c].clear();
+        }
+    }
+
+    /// G0 (one `(w, c)` cell): post transaction `wave_first + w`'s
+    /// PREPARE train on every shard.
+    fn prepare_post(&mut self, c: usize, w: usize) {
+        let txn = self.wave_first + w as u64;
+        let client = &self.clients[c];
+        self.starts[c][w] = (0..self.shards)
+            .map(|s| self.fabric.qp(s).now())
+            .max()
+            .unwrap_or(0);
+        let mut records = Vec::with_capacity(self.shards);
+        let mut wps = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let record = make_record(txn, &txn_payload(c as u64, s as u64, txn));
+            let a =
+                Update::new(client.logs[s].slot_addr(txn), record.to_vec());
+            records.push(record);
+            self.msg_seq = self.msg_seq.wrapping_add(4);
+            let intent = IntentRecord {
+                txn_id: txn,
+                shard: s as u32,
+                flips: vec![CommitFlip {
+                    addr: client.logs[s].tail_addr,
+                    value: txn + 1,
+                }],
+            };
+            wps.push(post_prepare(
+                self.fabric.qp_mut(s),
+                self.method,
+                std::slice::from_ref(&a),
+                &intent,
+                client.intents[s].addr(txn),
+                self.msg_seq,
+            ));
+        }
+        self.recs[c].push(records);
+        self.wpss[c].push(wps);
+    }
+
+    /// G1 (one `(w, c)` cell): observe that transaction's PREPARE
+    /// points.
+    fn prepare_wait(&mut self, c: usize, w: usize) {
+        for s in 0..self.shards {
+            let wp = self.wpss[c][w][s];
+            self.prepared[c][w] =
+                self.prepared[c][w].max(wp.wait(self.fabric.qp_mut(s)));
+        }
+    }
+
+    /// G2: run this client's wave through a fresh group scheduler.
+    fn schedule(&mut self, c: usize) {
+        let mut sched = GroupScheduler::new(self.opts.group);
+        let mut gs = Vec::new();
+        for w in 0..self.wave {
+            let txn = self.wave_first + w as u64;
+            if let Some(g) = sched.offer(txn, self.prepared[c][w]) {
+                gs.push(g);
+            }
+        }
+        if let Some(g) = sched.drain() {
+            gs.push(g);
+        }
+        self.groups[c] = gs;
+    }
+
+    /// G3: post this client's group decision trains.
+    fn decide_post(&mut self, c: usize) {
+        let qp = self.clients[c].coord_qp;
+        let mut v = Vec::with_capacity(self.groups[c].len());
+        for g in &self.groups[c] {
+            if self.replicate {
+                let wq = self.clients[c].witness_qp;
+                let (cseq, wseq) = (
+                    self.msg_seq.wrapping_add(1),
+                    self.msg_seq.wrapping_add(2),
+                );
+                self.msg_seq = self.msg_seq.wrapping_add(2);
+                let (coord, wit) = self.fabric.qp_pair_mut(qp, wq);
+                let pair = post_decision_group_replicated(
+                    coord,
+                    wit,
+                    self.method,
+                    g.first,
+                    g.len,
+                    &self.clients[c].decisions,
+                    &self.clients[c].replicas,
+                    g.release_at,
+                    cseq,
+                    wseq,
+                );
+                v.push((pair.primary, Some(pair.witness)));
+            } else {
+                self.msg_seq = self.msg_seq.wrapping_add(1);
+                v.push((
+                    post_decision_group(
+                        self.fabric.qp_mut(qp),
+                        self.method,
+                        g.first,
+                        g.len,
+                        &self.clients[c].decisions,
+                        g.release_at,
+                        self.msg_seq,
+                    ),
+                    None,
+                ));
+            }
+        }
+        self.dwps[c] = v;
+    }
+
+    /// G4: observe this client's shared group points.
+    fn decide_wait(&mut self, c: usize) {
+        for (gi, g) in self.groups[c].iter().enumerate() {
+            let (wp, rep) = self.dwps[c][gi];
+            let mut t = wp.wait(self.fabric.qp_mut(self.clients[c].coord_qp));
+            if let Some(rep) = rep {
+                t = t.max(rep.wait(self.fabric.qp_mut(self.clients[c].witness_qp)));
+            }
+            self.decision_ns_total += t - g.release_at;
+            self.gacks[c].push(t);
+        }
+    }
+
+    /// G5: release this client's group commit trains (lazy).
+    fn commit(&mut self, c: usize) {
+        for (gi, g) in self.groups[c].iter().enumerate() {
+            for s in 0..self.shards {
+                sync_clock(self.fabric.qp_mut(s), self.gacks[c][gi]);
+                self.msg_seq = self.msg_seq.wrapping_add(g.len as u32);
+                let flips: Vec<CommitFlip> = (0..g.len as u64)
+                    .map(|k| CommitFlip {
+                        addr: self.clients[c].logs[s].tail_addr,
+                        value: g.first + k + 1,
+                    })
+                    .collect();
+                let _ = post_commit(
+                    self.fabric.qp_mut(s),
+                    self.method,
+                    &flips,
+                    self.msg_seq,
+                );
+            }
+        }
+    }
+
+    /// G6: every member acks at its group's shared point.
+    fn bookkeep(&mut self, c: usize) {
+        let mut acked = Vec::with_capacity(self.wave);
+        for (gi, g) in self.groups[c].iter().enumerate() {
+            self.group_sizes[c].push((g.first, g.len as u32));
+            for _ in 0..g.len {
+                acked.push(self.gacks[c][gi]);
+            }
+        }
+        debug_assert_eq!(acked.len(), self.wave);
+        let recs: Vec<_> = self.recs[c].drain(..).collect();
+        for (w, rec) in recs.into_iter().enumerate() {
+            self.clients[c].latencies.record(acked[w] - self.starts[c][w]);
+            if self.record {
+                self.clients[c].txns.push(TxnOracle {
+                    txn_id: self.wave_first + w as u64,
+                    records: rec,
+                    prepared_at: self.prepared[c][w],
+                    acked_at: acked[w],
+                });
+            }
+        }
+    }
+
+    fn step(&mut self, c: usize, key: Nanos) -> Step {
+        let mg = self.opts.group.max_group as Nanos;
+        let block = self.block();
+        let base = (key / block) * block;
+        match self.tasks[c].phase {
+            GroupPhase::PreparePost => {
+                if self.tasks[c].w == 0 && c == 0 {
+                    self.reset_wave();
+                }
+                let w = self.tasks[c].w;
+                self.prepare_post(c, w);
+                if w + 1 < self.wave {
+                    self.tasks[c].w = w + 1;
+                    Step::Runnable(base + w as Nanos + 1)
+                } else {
+                    self.tasks[c].phase = GroupPhase::PrepareWait;
+                    self.tasks[c].w = 0;
+                    Step::Runnable(base + mg)
+                }
+            }
+            GroupPhase::PrepareWait => {
+                let w = self.tasks[c].w;
+                self.prepare_wait(c, w);
+                if w + 1 < self.wave {
+                    self.tasks[c].w = w + 1;
+                    Step::Runnable(base + mg + w as Nanos + 1)
+                } else {
+                    self.tasks[c].phase = GroupPhase::Schedule;
+                    self.tasks[c].w = 0;
+                    Step::Runnable(base + 2 * mg)
+                }
+            }
+            GroupPhase::Schedule => {
+                self.schedule(c);
+                self.tasks[c].phase = GroupPhase::DecidePost;
+                Step::Runnable(base + 2 * mg + 1)
+            }
+            GroupPhase::DecidePost => {
+                self.decide_post(c);
+                self.tasks[c].phase = GroupPhase::DecideWait;
+                Step::Runnable(base + 2 * mg + 2)
+            }
+            GroupPhase::DecideWait => {
+                self.decide_wait(c);
+                self.tasks[c].phase = GroupPhase::Commit;
+                Step::Runnable(base + 2 * mg + 3)
+            }
+            GroupPhase::Commit => {
+                self.commit(c);
+                self.tasks[c].phase = GroupPhase::Bookkeep;
+                Step::Runnable(base + 2 * mg + 4)
+            }
+            GroupPhase::Bookkeep => {
+                self.bookkeep(c);
+                if c == self.n - 1 {
+                    // Last client of the wave advances the shared wave
+                    // cursor (all tasks read it next wave).
+                    self.wave_first += self.wave as u64;
+                }
+                self.tasks[c].phase = GroupPhase::PreparePost;
+                // Schedule into the next wave's block — or retire if
+                // this client's last wave just completed. `wave_first`
+                // may not be advanced yet for c < n-1, so compute from
+                // the wave this dispatch belongs to.
+                let next_first =
+                    (base / block) * self.opts.group.max_group as u64
+                        + self.wave as u64;
+                if next_first < self.total {
+                    Step::Runnable(base + block)
+                } else {
+                    Step::Done
+                }
+            }
+        }
+    }
+}
+
+/// Reactor adapter for [`crate::remotelog::pipeline::run_txn_grouped`]:
+/// one task per coordinator, each wave of `max_group` transactions laid
+/// out on a block of event keys (`2*max_group` PREPARE post/wait slots,
+/// w-major like the legacy nested loops, then five per-client phases) —
+/// bit-for-bit identical to the legacy group-commit runner, including
+/// the shared wire `msg_seq` stream and group boundaries.
+pub fn run_txn_grouped_reactor(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    primary: Primary,
+    opts: &GroupRunOpts,
+) -> (TxnRun, GroupRunResult) {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.group.max_group >= 1);
+    assert!(
+        !opts.record || opts.txns_per_client <= opts.capacity,
+        "ring wraparound would invalidate the crash oracle"
+    );
+    assert!(
+        opts.group.max_group as u64 <= opts.capacity,
+        "a group must fit the decision ring"
+    );
+    assert!(
+        !opts.replicate || opts.shards >= 2,
+        "decision replication needs a second shard"
+    );
+    let method = plan_txn_method(&cfg, primary);
+    let compound_method = plan_compound(&cfg, primary, 8);
+    let (fabric, clients) = txn_fabric_and_clients(
+        cfg,
+        timing,
+        opts.clients,
+        opts.shards,
+        opts.capacity,
+        opts.seed,
+        opts.record,
+    );
+    let n = opts.clients;
+    let mut st = GroupLockstep {
+        fabric,
+        clients,
+        n,
+        shards: opts.shards,
+        total: opts.txns_per_client,
+        record: opts.record,
+        replicate: opts.replicate,
+        opts: opts.clone(),
+        method,
+        msg_seq: 0,
+        decision_ns_total: 0,
+        group_sizes: vec![Vec::new(); n],
+        tasks: (0..n)
+            .map(|_| GroupTaskState { phase: GroupPhase::PreparePost, w: 0 })
+            .collect(),
+        wave_first: 0,
+        wave: 0,
+        starts: vec![Vec::new(); n],
+        prepared: vec![Vec::new(); n],
+        recs: vec![Vec::new(); n],
+        wpss: vec![Vec::new(); n],
+        groups: vec![Vec::new(); n],
+        dwps: vec![Vec::new(); n],
+        gacks: vec![Vec::new(); n],
+    };
+    let mut reactor = Reactor::new();
+    if opts.txns_per_client > 0 {
+        for c in 0..n {
+            reactor.schedule(0, c);
+        }
+    }
+    reactor.drive(|task, key| st.step(task, key));
+
+    let span_ns = st.fabric.makespan();
+    let mut summary = Histogram::new();
+    for c in &st.clients {
+        summary.merge(&c.latencies);
+    }
+    let result = GroupRunResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        txns: opts.txns_per_client * opts.clients as u64,
+        groups: st.group_sizes.iter().map(|g| g.len() as u64).sum(),
+        span_ns,
+        mean_latency_ns: summary.summary().mean(),
+        p99_latency_ns: summary.quantile(0.99),
+        decision_ns_total: st.decision_ns_total,
+        group_sizes: st.group_sizes,
+    };
+    let run = TxnRun {
+        fabric: st.fabric,
+        clients: st.clients,
+        atomic: true,
+        replicate: opts.replicate,
+        method,
+        compound_method,
+    };
+    (run, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+    use crate::persist::groupcommit::GroupCommitOpts;
+    use crate::remotelog::pipeline::{
+        run_multi_client, run_txn_grouped, run_txn_multi_shard,
+    };
+
+    fn cfg() -> ServerConfig {
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    #[test]
+    fn heap_orders_by_key_then_task() {
+        let mut r = Reactor::new();
+        // Arm out of order; ties on key 5 must dispatch task 0 first.
+        r.schedule(9, 1);
+        r.schedule(5, 2);
+        r.schedule(5, 0);
+        r.schedule(2, 3);
+        let mut order = Vec::new();
+        r.drive(|task, key| {
+            order.push((key, task));
+            // Task 3 re-arms once at key 7 to prove rescheduling works.
+            if task == 3 && key == 2 {
+                Step::Runnable(7)
+            } else {
+                Step::Done
+            }
+        });
+        assert_eq!(order, vec![(2, 3), (5, 0), (5, 2), (7, 3), (9, 1)]);
+        assert_eq!(r.events_dispatched(), 5);
+    }
+
+    fn assert_put_equal(
+        a: &(ShardedRun, MultiClientResult),
+        b: &(ShardedRun, MultiClientResult),
+    ) {
+        assert_eq!(a.1.span_ns, b.1.span_ns);
+        assert_eq!(a.1.appends, b.1.appends);
+        assert_eq!(a.1.window, b.1.window);
+        assert_eq!(a.1.batch, b.1.batch);
+        assert_eq!(
+            a.1.mean_latency_ns.to_bits(),
+            b.1.mean_latency_ns.to_bits()
+        );
+        assert_eq!(a.1.p99_latency_ns, b.1.p99_latency_ns);
+        assert_eq!(a.0.fabric.shards(), b.0.fabric.shards());
+        for s in 0..a.0.fabric.shards() {
+            assert_eq!(a.0.fabric.qp(s).now(), b.0.fabric.qp(s).now());
+            assert_eq!(
+                a.0.fabric.qp(s).ops_posted(),
+                b.0.fabric.qp(s).ops_posted()
+            );
+        }
+        for (ca, cb) in a.0.clients.iter().zip(&b.0.clients) {
+            assert_eq!(ca.appends.len(), cb.appends.len());
+            for (ra, rb) in ca.appends.iter().zip(&cb.appends) {
+                assert_eq!(ra.seq, rb.seq);
+                assert_eq!(ra.record, rb.record);
+                assert_eq!(ra.acked_at, rb.acked_at);
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_put_matches_legacy() {
+        for (mode, choice) in [
+            (AppendMode::Singleton, MethodChoice::Planned(Primary::Write)),
+            (AppendMode::Compound, MethodChoice::Planned(Primary::Write)),
+        ] {
+            let opts = ShardedRunOpts {
+                clients: 5,
+                shards: 2,
+                window: 3,
+                batch: 2,
+                appends_per_client: 23,
+                capacity: 64,
+                seed: 9,
+                record: true,
+            };
+            let legacy = run_multi_client(
+                cfg(),
+                TimingModel::default(),
+                mode,
+                choice,
+                &opts,
+            );
+            let reactor = run_multi_client_reactor(
+                cfg(),
+                TimingModel::default(),
+                mode,
+                choice,
+                &opts,
+            );
+            assert_put_equal(&legacy, &reactor);
+        }
+    }
+
+    #[test]
+    fn lockstep_txn_matches_legacy() {
+        for (atomic, replicate) in [(true, false), (true, true), (false, false)]
+        {
+            let opts = TxnRunOpts {
+                clients: 3,
+                shards: 2,
+                txns_per_client: 11,
+                capacity: 32,
+                seed: 5,
+                record: true,
+                atomic,
+                replicate,
+            };
+            let (lr, lres) = run_txn_multi_shard(
+                cfg(),
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            let (rr, rres) = run_txn_multi_shard_reactor(
+                cfg(),
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            assert_eq!(lres.span_ns, rres.span_ns);
+            assert_eq!(lres.decision_ns_total, rres.decision_ns_total);
+            assert_eq!(
+                lres.mean_latency_ns.to_bits(),
+                rres.mean_latency_ns.to_bits()
+            );
+            assert_eq!(lres.p99_latency_ns, rres.p99_latency_ns);
+            for s in 0..lr.fabric.shards() {
+                assert_eq!(lr.fabric.qp(s).now(), rr.fabric.qp(s).now());
+                assert_eq!(
+                    lr.fabric.qp(s).ops_posted(),
+                    rr.fabric.qp(s).ops_posted()
+                );
+            }
+            for (ca, cb) in lr.clients.iter().zip(&rr.clients) {
+                assert_eq!(ca.txns.len(), cb.txns.len());
+                for (ta, tb) in ca.txns.iter().zip(&cb.txns) {
+                    assert_eq!(ta.txn_id, tb.txn_id);
+                    assert_eq!(ta.records, tb.records);
+                    assert_eq!(ta.prepared_at, tb.prepared_at);
+                    assert_eq!(ta.acked_at, tb.acked_at);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_grouped_matches_legacy() {
+        for (group, replicate) in [(1usize, false), (4, false), (4, true)] {
+            let opts = GroupRunOpts {
+                clients: 3,
+                shards: 2,
+                txns_per_client: 10,
+                capacity: 32,
+                seed: 5,
+                record: true,
+                replicate,
+                group: GroupCommitOpts { max_group: group, ..Default::default() },
+            };
+            let (lr, lres) = run_txn_grouped(
+                cfg(),
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            let (rr, rres) = run_txn_grouped_reactor(
+                cfg(),
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            assert_eq!(lres.span_ns, rres.span_ns);
+            assert_eq!(lres.groups, rres.groups);
+            assert_eq!(lres.group_sizes, rres.group_sizes);
+            assert_eq!(lres.decision_ns_total, rres.decision_ns_total);
+            assert_eq!(
+                lres.mean_latency_ns.to_bits(),
+                rres.mean_latency_ns.to_bits()
+            );
+            assert_eq!(lres.p99_latency_ns, rres.p99_latency_ns);
+            for s in 0..lr.fabric.shards() {
+                assert_eq!(lr.fabric.qp(s).now(), rr.fabric.qp(s).now());
+                assert_eq!(
+                    lr.fabric.qp(s).ops_posted(),
+                    rr.fabric.qp(s).ops_posted()
+                );
+            }
+            for (ca, cb) in lr.clients.iter().zip(&rr.clients) {
+                assert_eq!(ca.txns.len(), cb.txns.len());
+                for (ta, tb) in ca.txns.iter().zip(&cb.txns) {
+                    assert_eq!(ta.txn_id, tb.txn_id);
+                    assert_eq!(ta.acked_at, tb.acked_at);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn free_running_completes_and_is_deterministic() {
+        let opts = ShardedRunOpts {
+            clients: 8,
+            shards: 8,
+            window: 4,
+            batch: 2,
+            appends_per_client: 20,
+            capacity: 32,
+            seed: 3,
+            record: true,
+        };
+        let mk = || {
+            run_reactor_free(
+                cfg(),
+                TimingModel::default(),
+                AppendMode::Singleton,
+                MethodChoice::Planned(Primary::Write),
+                &opts,
+            )
+        };
+        let (run, res, events) = mk();
+        assert_eq!(res.appends, 8 * 20);
+        assert!(events > 0);
+        for c in &run.clients {
+            assert_eq!(c.appends.len(), 20);
+        }
+        let (_, res2, events2) = mk();
+        assert_eq!(res.span_ns, res2.span_ns);
+        assert_eq!(
+            res.mean_latency_ns.to_bits(),
+            res2.mean_latency_ns.to_bits()
+        );
+        assert_eq!(events, events2);
+    }
+
+    /// One client, one QP: the free-running schedule has nothing to
+    /// interleave, so it must agree with the legacy runner exactly.
+    #[test]
+    fn free_running_single_client_matches_legacy() {
+        let opts = ShardedRunOpts {
+            clients: 1,
+            shards: 1,
+            window: 3,
+            batch: 2,
+            appends_per_client: 17,
+            capacity: 32,
+            seed: 4,
+            record: true,
+        };
+        let legacy = run_multi_client(
+            cfg(),
+            TimingModel::default(),
+            AppendMode::Singleton,
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+        );
+        let (frun, fres, _) = run_reactor_free(
+            cfg(),
+            TimingModel::default(),
+            AppendMode::Singleton,
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+        );
+        assert_put_equal(&legacy, &(frun, fres));
+    }
+
+    #[test]
+    fn faulted_on_benign_wire_is_free_running() {
+        let opts = ShardedRunOpts {
+            clients: 4,
+            shards: 2,
+            window: 3,
+            batch: 2,
+            appends_per_client: 15,
+            capacity: 32,
+            seed: 6,
+            record: true,
+        };
+        let (frun, fres, _) = run_reactor_free(
+            cfg(),
+            TimingModel::default(),
+            AppendMode::Singleton,
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+        );
+        let (xrun, xres, stats) = run_reactor_faulted(
+            cfg(),
+            TimingModel::default(),
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+            &NetworkModel::new(1),
+            &RetryPolicy::default(),
+        );
+        assert_eq!(stats.timers_fired, 0);
+        assert_eq!(stats.reposts, 0);
+        assert_eq!(stats.aborted_trains, 0);
+        assert_put_equal(&(frun, fres), &(xrun, xres));
+    }
+
+    #[test]
+    fn faulted_partition_heals_via_timer_events() {
+        let opts = ShardedRunOpts {
+            clients: 2,
+            shards: 1,
+            window: 2,
+            batch: 2,
+            appends_per_client: 10,
+            capacity: 32,
+            seed: 6,
+            record: true,
+        };
+        let mut m = NetworkModel::new(11);
+        m.add_partition(0, 30_000);
+        let (_, res, stats) = run_reactor_faulted(
+            cfg(),
+            TimingModel::default(),
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+            &m,
+            &RetryPolicy {
+                timeout_ns: 15_000,
+                backoff_base_ns: 5_000,
+                backoff_cap_ns: 40_000,
+                max_attempts: 6,
+            },
+        );
+        assert_eq!(stats.aborted_trains, 0, "bounded partition must heal");
+        assert!(stats.timers_fired >= 1);
+        assert_eq!(stats.reposts, stats.timers_fired);
+        assert_eq!(res.appends, 2 * 10);
+        // Timer events dispatch in global time order.
+        for w in stats.timer_log.windows(2) {
+            assert!(w[0].1 <= w[1].1, "timer log must be time-ordered");
+        }
+    }
+}

@@ -26,6 +26,7 @@ fn bare_invocation_and_help_list_every_command() {
             "taxonomy",
             "sweep",
             "scale",
+            "reactor",
             "txn",
             "failover",
             "group",
@@ -46,8 +47,9 @@ fn bare_invocation_and_help_list_every_command() {
 #[test]
 fn per_command_help_lists_the_knobs() {
     // (command, flags its usage text must name)
-    let cases: [(&str, &[&str]); 7] = [
+    let cases: [(&str, &[&str]); 8] = [
         ("scale", &["--clients", "--shards", "--window", "--batch"]),
+        ("reactor", &["--clients", "--window", "--batch", "--appends"]),
         ("txn", &["--clients", "--shards", "--txns", "--primary"]),
         ("failover", &["--clients", "--shards", "--txns", "--json"]),
         ("group", &["--groups", "--clients", "--shards", "--txns"]),
@@ -127,6 +129,7 @@ fn unknown_flag_prints_usage_and_fails_on_every_command() {
         "taxonomy",
         "sweep",
         "scale",
+        "reactor",
         "txn",
         "failover",
         "group",

@@ -1,0 +1,416 @@
+//! Reactor-vs-legacy equivalence campaign (acceptance criteria for the
+//! `runtime::reactor` event loop).
+//!
+//! The lockstep adapters replay the legacy wave-pipelined runners'
+//! schedules as heap-ordered events, so every observable of a run must
+//! be **bit-for-bit identical** across all 12 taxonomy configurations:
+//! result aggregates (spans, f64 latencies via `to_bits`), per-QP
+//! virtual clocks and op counts, and the full per-client oracle
+//! histories (record images and ack instants). On top of identity, the
+//! reactor-driven runs must themselves survive the crash-consistency,
+//! failover, and group-boundary sweeps — the event loop inherits the
+//! persistence obligations, not just the timings.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::ServerConfig;
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::persist::method::Primary;
+use rpmem::remotelog::client::{AppendMode, MethodChoice};
+use rpmem::remotelog::pipeline::{
+    assert_group_boundaries, run_failover_sweep, run_multi_client,
+    run_txn_grouped, run_txn_multi_shard, sharded_crash_sweep,
+    txn_crash_sweep, GroupRunOpts, GroupRunResult, MultiClientResult,
+    ShardedRun, ShardedRunOpts, TxnRun, TxnRunOpts, TxnRunResult,
+};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::runtime::reactor::{
+    run_multi_client_reactor, run_txn_grouped_reactor,
+    run_txn_multi_shard_reactor,
+};
+
+/// Per-QP clocks and op counts must match: the adapters replay the
+/// legacy post/wait order op for op, not just end-to-end aggregates.
+fn assert_fabrics_identical(
+    l: &rpmem::fabric::sharded::ShardedFabric,
+    r: &rpmem::fabric::sharded::ShardedFabric,
+    ctx: &str,
+) {
+    assert_eq!(l.shards(), r.shards(), "{ctx}: shard count");
+    for s in 0..l.shards() {
+        assert_eq!(l.qp(s).now(), r.qp(s).now(), "{ctx}: QP {s} clock");
+        assert_eq!(
+            l.qp(s).ops_posted(),
+            r.qp(s).ops_posted(),
+            "{ctx}: QP {s} op count"
+        );
+    }
+}
+
+fn assert_put_identical(
+    (lrun, lres): &(ShardedRun, MultiClientResult),
+    (rrun, rres): &(ShardedRun, MultiClientResult),
+    ctx: &str,
+) {
+    assert_eq!(lres.clients, rres.clients, "{ctx}: clients");
+    assert_eq!(lres.shards, rres.shards, "{ctx}: shards");
+    assert_eq!(lres.window, rres.window, "{ctx}: window");
+    assert_eq!(lres.batch, rres.batch, "{ctx}: batch");
+    assert_eq!(lres.appends, rres.appends, "{ctx}: appends");
+    assert_eq!(lres.span_ns, rres.span_ns, "{ctx}: span");
+    assert_eq!(
+        lres.mean_latency_ns.to_bits(),
+        rres.mean_latency_ns.to_bits(),
+        "{ctx}: mean latency"
+    );
+    assert_eq!(lres.p99_latency_ns, rres.p99_latency_ns, "{ctx}: p99");
+    assert_fabrics_identical(&lrun.fabric, &rrun.fabric, ctx);
+    for (c, (lc, rc)) in lrun.clients.iter().zip(&rrun.clients).enumerate() {
+        assert_eq!(lc.qp, rc.qp, "{ctx}: client {c} QP");
+        assert_eq!(
+            lc.appends.len(),
+            rc.appends.len(),
+            "{ctx}: client {c} oracle count"
+        );
+        for (i, (la, ra)) in lc.appends.iter().zip(&rc.appends).enumerate() {
+            assert_eq!(la.seq, ra.seq, "{ctx}: client {c} append {i} seq");
+            assert_eq!(
+                la.record, ra.record,
+                "{ctx}: client {c} append {i} record bytes"
+            );
+            assert_eq!(
+                la.acked_at, ra.acked_at,
+                "{ctx}: client {c} append {i} ack instant"
+            );
+        }
+    }
+}
+
+fn assert_txn_identical(
+    (lrun, lres): &(TxnRun, TxnRunResult),
+    (rrun, rres): &(TxnRun, TxnRunResult),
+    ctx: &str,
+) {
+    assert_eq!(lres.clients, rres.clients, "{ctx}: clients");
+    assert_eq!(lres.shards, rres.shards, "{ctx}: shards");
+    assert_eq!(lres.txns, rres.txns, "{ctx}: txns");
+    assert_eq!(lres.span_ns, rres.span_ns, "{ctx}: span");
+    assert_eq!(
+        lres.mean_latency_ns.to_bits(),
+        rres.mean_latency_ns.to_bits(),
+        "{ctx}: mean latency"
+    );
+    assert_eq!(lres.p99_latency_ns, rres.p99_latency_ns, "{ctx}: p99");
+    assert_eq!(
+        lres.decision_ns_total, rres.decision_ns_total,
+        "{ctx}: decision cost"
+    );
+    assert_eq!(lrun.atomic, rrun.atomic, "{ctx}: atomic flag");
+    assert_eq!(lrun.replicate, rrun.replicate, "{ctx}: replicate flag");
+    assert_fabrics_identical(&lrun.fabric, &rrun.fabric, ctx);
+    for (c, (lc, rc)) in lrun.clients.iter().zip(&rrun.clients).enumerate() {
+        assert_eq!(lc.coord_qp, rc.coord_qp, "{ctx}: client {c} coord QP");
+        assert_eq!(
+            lc.witness_qp, rc.witness_qp,
+            "{ctx}: client {c} witness QP"
+        );
+        assert_eq!(
+            lc.txns.len(),
+            rc.txns.len(),
+            "{ctx}: client {c} oracle count"
+        );
+        for (i, (lx, rx)) in lc.txns.iter().zip(&rc.txns).enumerate() {
+            assert_eq!(lx.txn_id, rx.txn_id, "{ctx}: client {c} txn {i} id");
+            assert_eq!(
+                lx.records, rx.records,
+                "{ctx}: client {c} txn {i} record bytes"
+            );
+            assert_eq!(
+                lx.prepared_at, rx.prepared_at,
+                "{ctx}: client {c} txn {i} prepare instant"
+            );
+            assert_eq!(
+                lx.acked_at, rx.acked_at,
+                "{ctx}: client {c} txn {i} ack instant"
+            );
+        }
+    }
+}
+
+fn assert_grouped_identical(
+    (lrun, lres): &(TxnRun, GroupRunResult),
+    (rrun, rres): &(TxnRun, GroupRunResult),
+    ctx: &str,
+) {
+    assert_eq!(lres.txns, rres.txns, "{ctx}: txns");
+    assert_eq!(lres.groups, rres.groups, "{ctx}: groups");
+    assert_eq!(lres.span_ns, rres.span_ns, "{ctx}: span");
+    assert_eq!(
+        lres.mean_latency_ns.to_bits(),
+        rres.mean_latency_ns.to_bits(),
+        "{ctx}: mean latency"
+    );
+    assert_eq!(lres.p99_latency_ns, rres.p99_latency_ns, "{ctx}: p99");
+    assert_eq!(
+        lres.decision_ns_total, rres.decision_ns_total,
+        "{ctx}: decision cost"
+    );
+    assert_eq!(lres.group_sizes, rres.group_sizes, "{ctx}: group boundaries");
+    assert_fabrics_identical(&lrun.fabric, &rrun.fabric, ctx);
+    for (c, (lc, rc)) in lrun.clients.iter().zip(&rrun.clients).enumerate() {
+        assert_eq!(
+            lc.txns.len(),
+            rc.txns.len(),
+            "{ctx}: client {c} oracle count"
+        );
+        for (i, (lx, rx)) in lc.txns.iter().zip(&rc.txns).enumerate() {
+            assert_eq!(
+                lx.records, rx.records,
+                "{ctx}: client {c} txn {i} record bytes"
+            );
+            assert_eq!(
+                lx.acked_at, rx.acked_at,
+                "{ctx}: client {c} txn {i} ack instant"
+            );
+        }
+    }
+}
+
+/// Put runner: both append modes across all 12 taxonomy configurations,
+/// including the non-pipelinable compound configs (where the adapter
+/// must reproduce the synchronous window=batch=1 fallback).
+#[test]
+fn put_adapter_is_bit_identical_on_all_taxonomy_configs() {
+    let opts = ShardedRunOpts {
+        clients: 4,
+        shards: 2,
+        window: 4,
+        batch: 3,
+        appends_per_client: 20,
+        capacity: 32,
+        seed: 9,
+        record: true,
+    };
+    for cfg in ServerConfig::table1() {
+        for mode in [AppendMode::Singleton, AppendMode::Compound] {
+            let ctx = format!("{} {}", cfg.label(), mode.name());
+            let choice = MethodChoice::Planned(Primary::Write);
+            let legacy = run_multi_client(
+                cfg,
+                TimingModel::default(),
+                mode,
+                choice,
+                &opts,
+            );
+            let adapted = run_multi_client_reactor(
+                cfg,
+                TimingModel::default(),
+                mode,
+                choice,
+                &opts,
+            );
+            assert_put_identical(&legacy, &adapted, &ctx);
+        }
+    }
+}
+
+/// 2PC runner: atomic/replicated/independent shapes across all 12
+/// configurations — the 8-phase lockstep task must replay PREPARE,
+/// DECIDE, and COMMIT at the legacy instants everywhere.
+#[test]
+fn txn_adapter_is_bit_identical_on_all_taxonomy_configs() {
+    for cfg in ServerConfig::table1() {
+        for (atomic, replicate) in
+            [(true, false), (true, true), (false, false)]
+        {
+            let opts = TxnRunOpts {
+                clients: 3,
+                shards: 2,
+                txns_per_client: 8,
+                capacity: 16,
+                seed: 11,
+                record: true,
+                atomic,
+                replicate,
+            };
+            let ctx = format!(
+                "{} atomic={atomic} replicate={replicate}",
+                cfg.label()
+            );
+            let legacy = run_txn_multi_shard(
+                cfg,
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            let adapted = run_txn_multi_shard_reactor(
+                cfg,
+                TimingModel::default(),
+                Primary::Write,
+                &opts,
+            );
+            assert_txn_identical(&legacy, &adapted, &ctx);
+        }
+    }
+}
+
+/// Group-commit runner: degenerate (group 1) and batched schedules,
+/// replicated and not, across all 12 configurations — including the
+/// scheduler's release decisions (`group_sizes` boundaries).
+#[test]
+fn grouped_adapter_is_bit_identical_on_all_taxonomy_configs() {
+    for cfg in ServerConfig::table1() {
+        for max_group in [1usize, 3] {
+            for replicate in [false, true] {
+                let opts = GroupRunOpts {
+                    clients: 3,
+                    shards: 2,
+                    txns_per_client: 9,
+                    capacity: 16,
+                    seed: 13,
+                    record: true,
+                    replicate,
+                    group: GroupCommitOpts {
+                        max_group,
+                        max_hold_ns: 1_000_000,
+                        idle_close: true,
+                    },
+                };
+                let ctx = format!(
+                    "{} group={max_group} replicate={replicate}",
+                    cfg.label()
+                );
+                let legacy = run_txn_grouped(
+                    cfg,
+                    TimingModel::default(),
+                    Primary::Write,
+                    &opts,
+                );
+                let adapted = run_txn_grouped_reactor(
+                    cfg,
+                    TimingModel::default(),
+                    Primary::Write,
+                    &opts,
+                );
+                assert_grouped_identical(&legacy, &adapted, &ctx);
+            }
+        }
+    }
+}
+
+/// Reactor-driven put runs carry the same persistence obligations as
+/// legacy ones: clean under the full crash sweep (uniform + adversarial
+/// instants) on representative configurations.
+#[test]
+fn reactor_put_runs_survive_crash_sweep() {
+    let opts = ShardedRunOpts {
+        clients: 3,
+        shards: 2,
+        window: 4,
+        batch: 3,
+        appends_per_client: 25,
+        capacity: 32,
+        seed: 21,
+        record: true,
+    };
+    for (cfg, mode) in [
+        (ServerConfig::table1()[0], AppendMode::Singleton),
+        (ServerConfig::table1()[5], AppendMode::Singleton),
+        (ServerConfig::table1()[5], AppendMode::Compound),
+        (ServerConfig::table1()[11], AppendMode::Compound),
+    ] {
+        let (run, _) = run_multi_client_reactor(
+            cfg,
+            TimingModel::default(),
+            mode,
+            MethodChoice::Planned(Primary::Write),
+            &opts,
+        );
+        let rep = sharded_crash_sweep(&run, 50, 31, &RustScanner);
+        assert!(
+            rep.clean(),
+            "{} {}: reactor run not crash-clean: {rep:?}",
+            cfg.label(),
+            mode.name()
+        );
+    }
+}
+
+/// Reactor-driven 2PC runs: atomicity under the crash sweep, and (for
+/// replicated runs) durability under the crash × shard-loss failover
+/// sweep.
+#[test]
+fn reactor_txn_runs_survive_crash_and_failover_sweeps() {
+    for cfg in [ServerConfig::table1()[0], ServerConfig::table1()[7]] {
+        let opts = TxnRunOpts {
+            clients: 3,
+            shards: 3,
+            txns_per_client: 8,
+            capacity: 16,
+            seed: 33,
+            record: true,
+            atomic: true,
+            replicate: true,
+        };
+        let (run, _) = run_txn_multi_shard_reactor(
+            cfg,
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let crash = txn_crash_sweep(&run, 40, 41, &RustScanner);
+        assert!(
+            crash.clean(),
+            "{}: reactor txn run not crash-clean: {crash:?}",
+            cfg.label()
+        );
+        let failover = run_failover_sweep(&run, 40, 43, &RustScanner);
+        assert!(
+            failover.clean(),
+            "{}: reactor txn run not failover-clean: {failover:?}",
+            cfg.label()
+        );
+    }
+}
+
+/// Reactor-driven group-commit runs: every recoverable prefix (primary
+/// and witness rings, dense + adversarial instants) lands on a group
+/// boundary.
+#[test]
+fn reactor_grouped_runs_land_on_group_boundaries() {
+    for replicate in [false, true] {
+        let opts = GroupRunOpts {
+            clients: 3,
+            shards: 2,
+            txns_per_client: 9,
+            capacity: 16,
+            seed: 51,
+            record: true,
+            replicate,
+            group: GroupCommitOpts {
+                max_group: 3,
+                max_hold_ns: 1_000_000,
+                idle_close: true,
+            },
+        };
+        let (run, res) = run_txn_grouped_reactor(
+            ServerConfig::table1()[0],
+            TimingModel::default(),
+            Primary::Write,
+            &opts,
+        );
+        let end = run.fabric.makespan();
+        let mut instants: Vec<u64> =
+            (0..=80).map(|i| end * i / 80).collect();
+        for client in &run.clients {
+            for x in &client.txns {
+                instants.extend([
+                    x.prepared_at,
+                    x.acked_at.saturating_sub(1),
+                    x.acked_at,
+                    x.acked_at + 1,
+                ]);
+            }
+        }
+        assert_group_boundaries(&run, &res, &instants);
+    }
+}

@@ -1,0 +1,260 @@
+//! Timer-event retry regression suite (satellite bugfix for the
+//! `persist::retry` wave-slice backoff).
+//!
+//! The legacy `await_with_retry` loop runs a client's whole
+//! timeout/backoff/re-post cycle synchronously inside that client's
+//! wave slice: while coordinator A waits out its backoff, every other
+//! client's already-completed trains just sit there. The reactor
+//! routes each detected loss through a **timer event** on the global
+//! virtual-time heap instead, so concurrent clients' backoffs elapse on
+//! one timeline. These tests pin the three observable properties of the
+//! fix:
+//!
+//! * on a benign wire the faulted runner is bit-for-bit the plain
+//!   free-running reactor (no timer fires, no clock perturbation);
+//! * a bounded partition heals through timer re-posts — every append
+//!   acks, nothing aborts, and the healed run still passes the full
+//!   crash-consistency sweep;
+//! * the timer log is globally time-ordered **and interleaved across
+//!   clients** — the schedule the in-slice loop cannot produce (it
+//!   would drain one client's retries before touching the next).
+
+use rpmem::fabric::faults::NetworkModel;
+use rpmem::fabric::timing::{Nanos, TimingModel};
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::Primary;
+use rpmem::persist::retry::RetryPolicy;
+use rpmem::remotelog::client::{AppendMode, MethodChoice};
+use rpmem::remotelog::pipeline::{sharded_crash_sweep, ShardedRunOpts};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::runtime::reactor::{run_reactor_faulted, run_reactor_free};
+
+fn cfg() -> ServerConfig {
+    ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+}
+
+fn opts(clients: usize, appends: u64, record: bool) -> ShardedRunOpts {
+    ShardedRunOpts {
+        clients,
+        shards: clients, // one QP per client: retries are truly concurrent
+        window: 2,
+        batch: 2,
+        appends_per_client: appends,
+        capacity: 32,
+        seed: 7,
+        record,
+    }
+}
+
+/// Bounded partition: every early train is swallowed, the policy heals
+/// all of them well before exhaustion.
+fn partition(until: Nanos) -> NetworkModel {
+    let mut m = NetworkModel::new(5);
+    m.add_partition(0, until);
+    m
+}
+
+fn policy() -> RetryPolicy {
+    RetryPolicy {
+        timeout_ns: 15_000,
+        backoff_base_ns: 5_000,
+        backoff_cap_ns: 40_000,
+        max_attempts: 6,
+    }
+}
+
+/// On a pristine wire the faulted runner IS the free runner: the probe
+/// sees every milestone, no timer fires, and the whole run — spans,
+/// latencies, per-QP clocks and op counts — is bit-identical.
+#[test]
+fn benign_wire_is_bit_identical_to_free_running() {
+    let o = opts(4, 12, true);
+    let (frun, fres, _) = run_reactor_free(
+        cfg(),
+        TimingModel::default(),
+        AppendMode::Singleton,
+        MethodChoice::Planned(Primary::Write),
+        &o,
+    );
+    let (hrun, hres, stats) = run_reactor_faulted(
+        cfg(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &NetworkModel::new(5),
+        &policy(),
+    );
+    assert_eq!(stats.timers_fired, 0, "benign wire must never time out");
+    assert_eq!(stats.reposts, 0);
+    assert_eq!(stats.aborted_trains, 0);
+    assert!(stats.timer_log.is_empty());
+    assert_eq!(fres.appends, hres.appends);
+    assert_eq!(fres.span_ns, hres.span_ns, "benign faulted span drifted");
+    assert_eq!(
+        fres.mean_latency_ns.to_bits(),
+        hres.mean_latency_ns.to_bits()
+    );
+    assert_eq!(fres.p99_latency_ns, hres.p99_latency_ns);
+    for s in 0..frun.fabric.shards() {
+        assert_eq!(frun.fabric.qp(s).now(), hrun.fabric.qp(s).now());
+        assert_eq!(
+            frun.fabric.qp(s).ops_posted(),
+            hrun.fabric.qp(s).ops_posted()
+        );
+    }
+    for (fc, hc) in frun.clients.iter().zip(&hrun.clients) {
+        assert_eq!(fc.appends.len(), hc.appends.len());
+        for (fa, ha) in fc.appends.iter().zip(&hc.appends) {
+            assert_eq!(fa.seq, ha.seq);
+            assert_eq!(fa.record, ha.record);
+            assert_eq!(fa.acked_at, ha.acked_at);
+        }
+    }
+}
+
+/// A partition window swallows the early trains; timer events re-post
+/// them and every append eventually acks. The healed run upholds the
+/// crash-consistency contract at every instant.
+#[test]
+fn bounded_partition_heals_and_stays_crash_clean() {
+    let o = opts(3, 8, true);
+    let (run, res, stats) = run_reactor_faulted(
+        cfg(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &partition(60_000),
+        &policy(),
+    );
+    assert_eq!(stats.aborted_trains, 0, "bounded partition must heal");
+    assert_eq!(stats.aborted_appends, 0);
+    assert!(
+        stats.timers_fired >= o.clients as u64,
+        "every client's first train is inside the partition window: \
+         {} timers for {} clients",
+        stats.timers_fired,
+        o.clients
+    );
+    assert_eq!(
+        stats.reposts, stats.timers_fired,
+        "each timer re-posts exactly one identical train"
+    );
+    assert_eq!(
+        res.appends,
+        o.appends_per_client * o.clients as u64,
+        "every append must ack after healing"
+    );
+    // The timer log is globally non-decreasing in virtual time: losses
+    // are handled in the order their timeouts elapse, regardless of
+    // which client owns them.
+    for w in stats.timer_log.windows(2) {
+        assert!(
+            w[0].1 <= w[1].1,
+            "timer log out of order: {:?} then {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    // Acked-appends recovery holds at every crash instant even though
+    // some acks rode re-posted trains.
+    let rep = sharded_crash_sweep(&run, 50, 17, &RustScanner);
+    assert!(rep.clean(), "healed run not crash-clean: {rep:?}");
+    // Determinism: the virtual-time schedule is a pure function of the
+    // seeds, faults included.
+    let (_, res2, stats2) = run_reactor_faulted(
+        cfg(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &partition(60_000),
+        &policy(),
+    );
+    assert_eq!(res.span_ns, res2.span_ns);
+    assert_eq!(stats.timer_log, stats2.timer_log);
+}
+
+/// THE regression for the wave-slice bug: with several clients losing
+/// trains to the same partition, retry timers interleave across clients
+/// in the log. The legacy in-slice loop would run client 0's entire
+/// timeout/backoff ladder to completion before client 1's first probe,
+/// so its (impossible) timer log would be grouped by client.
+#[test]
+fn retry_timers_interleave_across_clients() {
+    let o = opts(3, 4, false);
+    // Partition outlives the first re-post ladder rung: every client
+    // fires at least two timers (first at ~timeout+backoff(0), second
+    // at ~that+timeout+backoff(1), both inside the window).
+    let (_, res, stats) = run_reactor_faulted(
+        cfg(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &partition(60_000),
+        &policy(),
+    );
+    assert_eq!(res.appends, o.appends_per_client * o.clients as u64);
+    for c in 0..o.clients {
+        let fired =
+            stats.timer_log.iter().filter(|(t, _)| *t == c).count();
+        assert!(
+            fired >= 2,
+            "client {c} fired {fired} timers; the window must force at \
+             least two rungs of the ladder"
+        );
+    }
+    // Between client 0's first and second timer, every other client's
+    // first timer fires: the backoffs elapse concurrently on the global
+    // timeline instead of serializing per wave slice.
+    let first0 = stats
+        .timer_log
+        .iter()
+        .position(|(t, _)| *t == 0)
+        .expect("client 0 fired");
+    let second0 = first0
+        + 1
+        + stats.timer_log[first0 + 1..]
+            .iter()
+            .position(|(t, _)| *t == 0)
+            .expect("client 0 fired twice");
+    for c in 1..o.clients {
+        assert!(
+            stats.timer_log[first0..second0].iter().any(|(t, _)| *t == c),
+            "client {c}'s first timer did not interleave into client 0's \
+             backoff window: {:?}",
+            stats.timer_log
+        );
+    }
+}
+
+/// A permanent partition exhausts the policy: every train aborts after
+/// `max_attempts` re-posts, nothing is ever acked, and the accounting
+/// adds up — no half-acked appends.
+#[test]
+fn permanent_partition_aborts_with_exact_accounting() {
+    let o = opts(2, 4, false);
+    let pol = RetryPolicy { max_attempts: 2, ..policy() };
+    let (_, res, stats) = run_reactor_faulted(
+        cfg(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &partition(Nanos::MAX - 1),
+        &pol,
+    );
+    let trains_per_client = o.appends_per_client.div_ceil(2); // batch = 2
+    assert_eq!(
+        stats.aborted_trains,
+        trains_per_client * o.clients as u64,
+        "every train must abort on a dead wire"
+    );
+    assert_eq!(
+        stats.aborted_appends,
+        o.appends_per_client * o.clients as u64
+    );
+    assert_eq!(res.appends, 0, "a dead wire must never ack");
+    assert_eq!(
+        stats.timers_fired,
+        stats.aborted_trains * pol.max_attempts as u64,
+        "each train rides the full ladder before aborting"
+    );
+}
