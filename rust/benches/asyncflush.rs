@@ -1,0 +1,168 @@
+//! Async-flush (VPM) amortization: the flush-command round trip is the
+//! persistence point for every virtio-pmem-style config, and its fixed
+//! host-fsync cost (`vpmem_flush_base_ns`) dominates the write-back
+//! cost — so coalescing one flush command per doorbell train (and one
+//! per commit group) is the whole performance story of the device
+//! class.
+//!
+//! Two axes, both guarded by strict monotonicity asserts:
+//!
+//! * **singleton train coalescing** — `post_singleton_batch` posts N
+//!   writes plus ONE trailing flush command; virtual ns/append must be
+//!   strictly decreasing in the train length for every VPM config and
+//!   every flush-command recipe;
+//! * **group commit** — `run_group_grid_over` on the VPM rows: the
+//!   amortized per-transaction decision cost must strictly improve
+//!   from group size 1 → 4 → max (the group shares one host fsync
+//!   round trip), and grouping never loses throughput.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_ASYNCFLUSH_OUT`,
+//! default `asyncflush_results.json`). Fast mode: `RPMEM_BENCH_FAST=1`
+//! (CI bench-smoke job; the artifact stays byte-deterministic because
+//! every reported number is virtual-time).
+
+use rpmem::bench::scaled;
+use rpmem::coordinator::scaling::{
+    group_grid_to_json, render_group_grid, run_group_grid_over, ScalingOpts,
+};
+use rpmem::fabric::engine::Fabric;
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::ServerConfig;
+use rpmem::persist::exec::{exec_singleton_batch, Update};
+use rpmem::persist::method::Primary;
+use rpmem::persist::planner::plan_singleton;
+use rpmem::server::memory::Layout;
+use rpmem::util::json::Json;
+use std::time::Instant;
+
+/// Virtual ns/append for one coalesced train of `batch` updates.
+fn train_ns_per_append(
+    cfg: ServerConfig,
+    primary: Primary,
+    batch: usize,
+    trains: u64,
+) -> f64 {
+    let layout = Layout::new(1 << 20, 1 << 18, 64, 8192, cfg.rqwrb);
+    let mut fab = Fabric::new(cfg, TimingModel::default(), layout, 7, false);
+    let method = plan_singleton(&cfg, primary);
+    let mut total = 0u64;
+    for t in 0..trains {
+        let updates: Vec<Update> = (0..batch)
+            .map(|i| {
+                Update::new(0x10000 + (i as u64 % 512) * 64, vec![1u8; 64])
+            })
+            .collect();
+        let out = exec_singleton_batch(&mut fab, method, &updates, t as u32);
+        total += out.latency();
+    }
+    total as f64 / (trains * batch as u64) as f64
+}
+
+fn main() {
+    let trains = scaled(200);
+    let txns = scaled(2000);
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let vpm = ServerConfig::async_flush_rows();
+    println!(
+        "async-flush amortization, {trains} trains x batches {batches:?}, \
+         {txns} txns/client group grid, {} VPM configs\n",
+        vpm.len()
+    );
+
+    // Axis 1: one flush command per doorbell train.
+    let mut coalescing = Vec::new();
+    println!(
+        "{:<22} {:<26} {:>6} {:>14}",
+        "config", "method", "batch", "ns/append"
+    );
+    println!("{}", "-".repeat(72));
+    for &cfg in &vpm {
+        for primary in Primary::ALL {
+            let method = plan_singleton(&cfg, primary);
+            let mut prev = f64::INFINITY;
+            for &b in &batches {
+                let ns = train_ns_per_append(cfg, primary, b, trains);
+                println!(
+                    "{:<22} {:<26} {:>6} {:>14.1}",
+                    cfg.label(),
+                    method.name(),
+                    b,
+                    ns
+                );
+                assert!(
+                    ns < prev,
+                    "{} {}: flush coalescing must strictly amortize \
+                     batch {b}: {ns:.1} !< {prev:.1}",
+                    cfg.label(),
+                    method.name()
+                );
+                prev = ns;
+                let mut j = Json::obj();
+                j.set("config", cfg.label().into())
+                    .set("method", method.name().into())
+                    .set("batch", (b as u64).into())
+                    .set("ns_per_append", ns.into());
+                coalescing.push(j);
+            }
+        }
+    }
+
+    // Axis 2: one flush command per commit group.
+    let groups = [1usize, 4, 16];
+    let clients = [1usize, 2];
+    let shards = 4usize;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let t0 = Instant::now();
+    let points = run_group_grid_over(
+        &vpm,
+        Primary::Write,
+        &groups,
+        &clients,
+        shards,
+        txns,
+        &opts,
+    );
+    let wall = t0.elapsed();
+    let title = "group commit on the async-flush rows — one host fsync \
+                 round trip per group";
+    println!("\n{}", render_group_grid(title, &points));
+    println!("  [harness: {:.2?} wall-clock]\n", wall);
+
+    for scenario in points.chunks(groups.len()) {
+        let label = format!(
+            "{} x {} clients",
+            scenario[0].config.label(),
+            scenario[0].clients
+        );
+        for pair in scenario.windows(2) {
+            assert!(
+                pair[1].decision_ns_per_txn < pair[0].decision_ns_per_txn,
+                "{label}: flush amortization must strictly improve \
+                 {} -> {}: {:.1} !< {:.1}",
+                pair[0].group,
+                pair[1].group,
+                pair[1].decision_ns_per_txn,
+                pair[0].decision_ns_per_txn
+            );
+        }
+        for p in scenario {
+            assert!(
+                p.grouped_mtps >= p.ungrouped_mtps * 0.999,
+                "{label}: group {} lost throughput: {:.3} vs {:.3}",
+                p.group,
+                p.grouped_mtps,
+                p.ungrouped_mtps
+            );
+        }
+    }
+
+    let mut artifact = Json::obj();
+    artifact
+        .set("singleton_coalescing", Json::Arr(coalescing))
+        .set("group_commit", group_grid_to_json(&points));
+    let out = std::env::var("RPMEM_ASYNCFLUSH_OUT")
+        .unwrap_or_else(|_| "asyncflush_results.json".to_string());
+    std::fs::write(&out, artifact.to_string_pretty())
+        .expect("write asyncflush JSON artifact");
+    println!("wrote {out} ({} grid points)", points.len());
+}

@@ -757,8 +757,33 @@ pub fn run_group_grid(
     txns_per_client: u64,
     opts: &ScalingOpts,
 ) -> Vec<GroupPoint> {
-    let scenarios: Vec<(ServerConfig, usize)> = ServerConfig::table1()
-        .into_iter()
+    run_group_grid_over(
+        &ServerConfig::table1(),
+        primary,
+        groups_list,
+        clients_list,
+        shards,
+        txns_per_client,
+        opts,
+    )
+}
+
+/// [`run_group_grid`] over an explicit config set — pass
+/// [`ServerConfig::grid`] to include the async-flush VPM rows, where
+/// flush-command coalescing makes group commit share one host fsync
+/// round-trip per group.
+pub fn run_group_grid_over(
+    configs: &[ServerConfig],
+    primary: Primary,
+    groups_list: &[usize],
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<GroupPoint> {
+    let scenarios: Vec<(ServerConfig, usize)> = configs
+        .iter()
+        .copied()
         .flat_map(|cfg| clients_list.iter().map(move |&c| (cfg, c)))
         .collect();
     thread::scope(|scope| {
@@ -961,8 +986,29 @@ pub fn run_soak_grid(
     uniform_points: u64,
     timing: &TimingModel,
 ) -> Vec<SoakPoint> {
-    let scenarios: Vec<(ServerConfig, u64)> = ServerConfig::table1()
-        .into_iter()
+    run_soak_grid_over(
+        &ServerConfig::table1(),
+        primary,
+        seeds,
+        base,
+        uniform_points,
+        timing,
+    )
+}
+
+/// [`run_soak_grid`] over an explicit config set — pass
+/// [`ServerConfig::grid`] to soak the async-flush VPM rows too.
+pub fn run_soak_grid_over(
+    configs: &[ServerConfig],
+    primary: Primary,
+    seeds: &[u64],
+    base: &SoakOpts,
+    uniform_points: u64,
+    timing: &TimingModel,
+) -> Vec<SoakPoint> {
+    let scenarios: Vec<(ServerConfig, u64)> = configs
+        .iter()
+        .copied()
         .flat_map(|cfg| seeds.iter().map(move |&s| (cfg, s)))
         .collect();
     thread::scope(|scope| {

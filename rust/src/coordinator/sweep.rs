@@ -117,14 +117,16 @@ pub fn run_scenario(
     }
 }
 
-/// All 12 bars of one Figure 2 panel: {DDIO on/off} × {DRAM/PM RQWRB} ×
+/// All bars of one Figure 2 panel: {DDIO on/off} × {DRAM/PM RQWRB} ×
 /// {WRITE, WRITEIMM, SEND} for one persistence domain + update kind.
+/// (12 bars for the Table-1 domains; the async-flush VPM panel has the
+/// same shape since its 4 config rows × 3 primaries also yield 12.)
 pub fn run_figure_panel(
     domain: PDomain,
     mode: AppendMode,
     opts: &SweepOpts,
 ) -> Vec<ScenarioResult> {
-    let scenarios: Vec<(ServerConfig, Primary)> = ServerConfig::table1()
+    let scenarios: Vec<(ServerConfig, Primary)> = ServerConfig::grid()
         .into_iter()
         .filter(|c| c.pdomain == domain)
         .flat_map(|c| Primary::ALL.map(|p| (c, p)))
@@ -132,13 +134,24 @@ pub fn run_figure_panel(
     run_parallel(scenarios, mode, opts)
 }
 
-/// The full 72-scenario sweep (6 panels).
+/// The full 72-scenario sweep (6 panels) — the paper's Figure 2 grid.
 pub fn run_all(opts: &SweepOpts) -> Vec<ScenarioResult> {
     let mut out = Vec::new();
     for mode in [AppendMode::Singleton, AppendMode::Compound] {
         for domain in PDomain::ALL {
             out.extend(run_figure_panel(domain, mode, opts));
         }
+    }
+    out
+}
+
+/// The enlarged 96-scenario sweep: the Figure-2 grid plus the two
+/// async-flush VPM panels (singleton + compound). The first 72 results
+/// are exactly [`run_all`]'s, in the same order.
+pub fn run_all_ext(opts: &SweepOpts) -> Vec<ScenarioResult> {
+    let mut out = run_all(opts);
+    for mode in [AppendMode::Singleton, AppendMode::Compound] {
+        out.extend(run_figure_panel(PDomain::Vpm, mode, opts));
     }
     out
 }
@@ -213,6 +226,22 @@ mod tests {
         let opts = SweepOpts { appends: 50, ..Default::default() };
         let res = run_all(&opts);
         assert_eq!(res.len(), 72);
+    }
+
+    #[test]
+    fn ext_sweep_appends_vpm_panels_after_figure2() {
+        let opts = SweepOpts { appends: 50, ..Default::default() };
+        let base = run_all(&opts);
+        let ext = run_all_ext(&opts);
+        assert_eq!(ext.len(), 96);
+        for (a, b) in base.iter().zip(&ext[..72]) {
+            assert_eq!(a.config.label(), b.config.label());
+            assert_eq!(a.mean_ns, b.mean_ns);
+        }
+        for r in &ext[72..] {
+            assert_eq!(r.config.pdomain, PDomain::Vpm);
+            assert!(r.mean_ns > 500.0, "{}: {}", r.bar_label(), r.mean_ns);
+        }
     }
 
     #[test]

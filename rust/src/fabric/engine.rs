@@ -115,6 +115,10 @@ pub struct Fabric {
     rq_next_slot: usize,
     // ---- pending copy specs for the next SEND (builder-style) ----
     pending_copies: Vec<CopySpec>,
+    /// Async-flush (virtio-pmem) dirty page-cache bytes since the last
+    /// host flush command. Maintained unconditionally (not just when
+    /// recording) so latency-only and crash-test runs stay bit-identical.
+    vpm_dirty_bytes: u64,
     // ---- doorbell-batched post train (see `doorbell_begin`) ----
     train_active: bool,
     train_posted: bool,
@@ -156,6 +160,7 @@ impl Fabric {
             rq_free_at: VecDeque::from(vec![0; rq_count]),
             rq_next_slot: 0,
             pending_copies: Vec::new(),
+            vpm_dirty_bytes: 0,
             train_active: false,
             train_posted: false,
             faults: None,
@@ -201,6 +206,10 @@ impl Fabric {
                 t_arrive: at,
                 t_place: at,
                 t_dmp: at,
+                // Recovery/anti-entropy writes are applied with their own
+                // local durability discipline (fsync'd segment shipping),
+                // so they are durable at `at` in every domain.
+                t_async: at,
             });
         }
     }
@@ -450,6 +459,10 @@ impl Fabric {
         let seq = self.next_seq;
         self.next_seq += 1;
         st.write_seq = Some(seq);
+        // Every delivered update dirties the host page cache under the
+        // async-flush device class; the next host flush command pays the
+        // writeback for these bytes.
+        self.vpm_dirty_bytes += len;
         if self.mem.recording() {
             // Payload bytes are only materialized for crash-testing
             // runs; pure-latency sweeps skip the clone (hot path).
@@ -461,6 +474,7 @@ impl Fabric {
                 t_arrive: st.t_arrive,
                 t_place,
                 t_dmp,
+                t_async: NEVER,
             });
         }
 
@@ -478,6 +492,7 @@ impl Fabric {
             const REDELIVERY_NS: Nanos = 120;
             let dup_seq = self.next_seq;
             self.next_seq += 1;
+            self.vpm_dirty_bytes += len;
             if self.mem.recording() {
                 self.mem.record(WriteEvent {
                     seq: dup_seq,
@@ -487,6 +502,9 @@ impl Fabric {
                     t_arrive: st.t_arrive + REDELIVERY_NS,
                     t_place: t_place + REDELIVERY_NS,
                     t_dmp: if ddio { NEVER } else { t_place + REDELIVERY_NS },
+                    // The redelivered payload is page-cache dirty again
+                    // and persists only via a later flush command.
+                    t_async: NEVER,
                 });
             }
             if let Some(m) = self.faults.as_mut() {
@@ -548,10 +566,12 @@ impl Fabric {
                 clock += t.cpu_flush_ns(wr.recv_flush_len);
                 self.force_dmp_range(wr.recv_target, wr.recv_flush_len, clock);
             }
+            OnRecv::HostFlushAck => {}
             OnRecv::CopyFlushAck
             | OnRecv::CopyAck
             | OnRecv::CopyFlushLazy
-            | OnRecv::CopyLazy => {
+            | OnRecv::CopyLazy
+            | OnRecv::CopyHostFlushAck => {
                 let flush = wr.on_recv.flushes_copies();
                 let copies = self.take_copies(wr);
                 for c in copies {
@@ -567,6 +587,7 @@ impl Fabric {
                     };
                     let seq = self.next_seq;
                     self.next_seq += 1;
+                    self.vpm_dirty_bytes += c.len as u64;
                     if self.mem.recording() {
                         let data = wr.payload
                             [c.payload_off..c.payload_off + c.len]
@@ -579,10 +600,26 @@ impl Fabric {
                             t_arrive: store_time,
                             t_place: store_time,
                             t_dmp,
+                            // Even a clwb'd CPU store sits in the host
+                            // page cache: only a flush command persists
+                            // it under the async-flush class.
+                            t_async: NEVER,
                         });
                     }
                 }
             }
+        }
+
+        if wr.on_recv.host_flushes() {
+            // Host flush command: vmexit + fsync of the backing file.
+            // Every page-cache write placed before the fsync started —
+            // RDMA payloads and CPU copies alike — is durable when it
+            // completes. This whole-file semantics (not range-based) is
+            // what makes one coalesced flush cover an entire group.
+            let fsync_start = clock;
+            clock += t.vpmem_flush_base_ns + t.vpmem_wb_ns(self.vpm_dirty_bytes);
+            self.vpm_dirty_bytes = 0;
+            self.force_async_all(fsync_start, clock);
         }
 
         if wr.on_recv.sends_ack() {
@@ -648,6 +685,20 @@ impl Fabric {
             let end = ev.addr + ev.data.len() as u64;
             if ev.addr < addr + len && end > addr && ev.t_place <= when {
                 ev.t_dmp = ev.t_dmp.min(when);
+            }
+        }
+    }
+
+    /// Async-flush host flush command effect: every write whose payload
+    /// was in the page cache (placed) when the fsync started at `start`
+    /// becomes durable at `done`. File-wide — no address range.
+    fn force_async_all(&mut self, start: Nanos, done: Nanos) {
+        if !self.mem.recording() {
+            return;
+        }
+        for ev in self.mem.writes_mut().iter_mut() {
+            if ev.t_place <= start {
+                ev.t_async = ev.t_async.min(done);
             }
         }
     }
@@ -1008,6 +1059,53 @@ mod tests {
         // One ns earlier it was still on the wire.
         let img = f.mem.crash_image(arrive - 1, PDomain::Wsp);
         assert_eq!(img.read(0x1000, 1)[0], 0);
+    }
+
+    #[test]
+    fn host_flush_ack_persists_prior_page_cache_writes() {
+        let mut f = fabric(PDomain::Vpm, false, RqwrbLoc::Dram);
+        let w = f.post(WorkRequest::write(0x1000, vec![6u8; 64]));
+        f.wait_comp(w);
+        // Completion (and even DMP-style placement) is not persistence
+        // under the async-flush class: no flush command has run.
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Vpm);
+        assert_eq!(img.read(0x1000, 1)[0], 0, "unflushed page cache is lost");
+        let s = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+        let end = f.wait_ack(s);
+        let img = f.mem.crash_image(end, PDomain::Vpm);
+        assert_eq!(img.read(0x1000, 1)[0], 6, "flush-cmd ack is the persistence point");
+    }
+
+    #[test]
+    fn copy_host_flush_ack_copies_then_persists() {
+        let mut f = fabric(PDomain::Vpm, true, RqwrbLoc::Dram);
+        let s = f.post(WorkRequest::send(
+            vec![7u8; 64],
+            OnRecv::CopyHostFlushAck,
+            0x4000,
+        ));
+        let end = f.wait_ack(s);
+        // Before the handler ran, the copy target was untouched.
+        let img = f.mem.crash_image(f.op(s).t_place, PDomain::Vpm);
+        assert_eq!(img.read(0x4000, 1)[0], 0);
+        // After the ack, the copied payload survived the fsync.
+        let img = f.mem.crash_image(end, PDomain::Vpm);
+        assert_eq!(img.read(0x4000, 1)[0], 7);
+    }
+
+    #[test]
+    fn host_flush_covers_only_writes_placed_before_fsync() {
+        let mut f = fabric(PDomain::Vpm, false, RqwrbLoc::Dram);
+        let _a = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+        let s = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+        let end = f.wait_ack(s);
+        // A write placed after the fsync started stays page-cache dirty.
+        let b = f.post(WorkRequest::write(0x2000, vec![2u8; 64]));
+        f.wait_comp(b);
+        let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Vpm);
+        assert_eq!(img.read(0x1000, 1)[0], 1);
+        assert_eq!(img.read(0x2000, 1)[0], 0, "later write needs its own flush");
+        let _ = end;
     }
 
     // ---- hostile-network fault injection ----

@@ -82,6 +82,15 @@ pub enum OnRecv {
     CopyFlushLazy,
     /// Lazy application without flushes (MHP/WSP responders).
     CopyLazy,
+    /// Async-flush (virtio-pmem) flush command: issue the host flush
+    /// (fsync of the backing file) persisting every page-cache write
+    /// placed so far, then ack. The ack is the persistence point for all
+    /// covered writes — this is the envelope group commit coalesces.
+    HostFlushAck,
+    /// Copy the message payload to its target, then run the host flush
+    /// command and ack. (Async-flush SEND message-passing recipe: one
+    /// message carries both the payload and the flush request.)
+    CopyHostFlushAck,
 }
 
 impl OnRecv {
@@ -89,7 +98,11 @@ impl OnRecv {
     pub fn sends_ack(&self) -> bool {
         matches!(
             self,
-            OnRecv::FlushTargetAck | OnRecv::CopyFlushAck | OnRecv::CopyAck
+            OnRecv::FlushTargetAck
+                | OnRecv::CopyFlushAck
+                | OnRecv::CopyAck
+                | OnRecv::HostFlushAck
+                | OnRecv::CopyHostFlushAck
         )
     }
 
@@ -101,12 +114,19 @@ impl OnRecv {
                 | OnRecv::CopyAck
                 | OnRecv::CopyFlushLazy
                 | OnRecv::CopyLazy
+                | OnRecv::CopyHostFlushAck
         )
     }
 
     /// Does the handler flush its copies into the DMP domain?
     pub fn flushes_copies(&self) -> bool {
         matches!(self, OnRecv::CopyFlushAck | OnRecv::CopyFlushLazy)
+    }
+
+    /// Does the handler issue the async-flush host flush command (fsync
+    /// the page cache) before acking?
+    pub fn host_flushes(&self) -> bool {
+        matches!(self, OnRecv::HostFlushAck | OnRecv::CopyHostFlushAck)
     }
 }
 

@@ -80,6 +80,14 @@ pub struct TimingModel {
     /// ATOMIC WRITE extra responder-side ordering cost (it must wait for
     /// priors and issue a fenced placement).
     pub atomic_overhead_ns: Nanos,
+    /// Async-flush (virtio-pmem) flush-command base cost: guest->host
+    /// vmexit, virtqueue kick, and the host fsync syscall floor. This is
+    /// the round-trip group commit amortizes — it is paid once per flush
+    /// command regardless of how many writes it covers.
+    pub vpmem_flush_base_ns: Nanos,
+    /// Host page-cache writeback bandwidth (bytes/ns) charged by a flush
+    /// command for the dirty bytes it persists.
+    pub vpmem_wb_bytes_per_ns: f64,
 }
 
 impl Default for TimingModel {
@@ -112,6 +120,12 @@ impl Default for TimingModel {
             cpu_post_ack_ns: 60,
             cacheline_bytes: 64,
             atomic_overhead_ns: 100,
+            // Flush command ≈ vmexit + virtqueue round-trip + fsync floor:
+            // dominated by host-side syscall cost, which is exactly why
+            // coalescing flush commands across a group pays off hardest
+            // on this device class.
+            vpmem_flush_base_ns: 8_000,
+            vpmem_wb_bytes_per_ns: 4.0,
         }
     }
 }
@@ -131,6 +145,12 @@ impl TimingModel {
     pub fn cpu_flush_ns(&self, bytes: u64) -> Nanos {
         let lines = bytes.div_ceil(self.cacheline_bytes).max(1);
         lines * self.cpu_flush_line_ns + self.cpu_fence_ns
+    }
+
+    /// Host writeback time a flush command pays for `bytes` of dirty
+    /// page cache, on top of [`TimingModel::vpmem_flush_base_ns`].
+    pub fn vpmem_wb_ns(&self, bytes: u64) -> Nanos {
+        (bytes as f64 / self.vpmem_wb_bytes_per_ns).ceil() as Nanos
     }
 
     /// A timing model with zero jitter — used by tests that need exact
@@ -193,5 +213,15 @@ mod tests {
     fn batched_post_cheaper_than_doorbell() {
         let t = TimingModel::default();
         assert!(t.batched_post_ns < t.post_ns);
+    }
+
+    #[test]
+    fn vpmem_flush_dominated_by_base_cost() {
+        // The fixed vmexit+fsync floor must dwarf the per-record
+        // writeback so flush-command amortization has something to win.
+        let t = TimingModel::default();
+        assert!(t.vpmem_flush_base_ns > 10 * t.vpmem_wb_ns(64));
+        assert!(t.vpmem_wb_ns(64) < t.vpmem_wb_ns(4096));
+        assert_eq!(t.vpmem_wb_ns(0), 0);
     }
 }

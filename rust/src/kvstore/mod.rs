@@ -1040,7 +1040,7 @@ mod tests {
     /// posted one — never older, never garbage, never a torn mix.
     #[test]
     fn crash_contract_across_configs() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             let mut kv =
                 RemoteKv::new(cfg, TimingModel::default(), 128, 11, true);
             let mut r = SplitMix64::new(99);

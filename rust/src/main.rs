@@ -4,7 +4,7 @@
 //! this offline build environment):
 //!
 //! ```text
-//! rpmem taxonomy [--table 1|2|3]         regenerate the paper's tables
+//! rpmem taxonomy [--table 1|2|3|grid]    regenerate the paper's tables
 //! rpmem sweep [...]                      Figure 2 panels (latency sweeps)
 //! rpmem scale [...]                      clients × shards throughput scaling
 //! rpmem reactor [...]                    event-loop scale sweep (1k-10k clients)
@@ -134,7 +134,7 @@ COMMANDS
                 retry, crash-swept for the 2PC invariants; failures are
                 shrunk to a replayable minimal repro line.
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
-  crash-test    Crash-consistency campaign over the 72 scenarios.
+  crash-test    Crash-consistency campaign over the 96 grid scenarios.
   recover-demo  Crash + recovery walk-through (XLA kernels by default).
   help          Show this list, or `rpmem help <command>` for one
                 command's full flag/knob list.
@@ -144,12 +144,14 @@ like --clients/--shards/--window/--batch and their defaults).
 ";
 
 const USAGE_TAXONOMY: &str = "\
-USAGE: rpmem taxonomy [--table 1|2|3]
+USAGE: rpmem taxonomy [--table 1|2|3|grid]
 
-Regenerate the paper's Tables 1-3 from the planner.
+Regenerate the paper's Tables 1-3 from the planner. `grid` prints the
+enlarged taxonomy: Table 1 plus the async-flush (VPM) rows, whose
+persistence point is the completion of an explicit host flush command.
 
 FLAGS
-  --table 1|2|3          which table to print   (default: all)
+  --table 1|2|3|grid     which table to print   (default: all)
 ";
 
 const USAGE_SWEEP: &str = "\
@@ -158,7 +160,8 @@ USAGE: rpmem sweep [flags]
 REMOTELOG latency sweep — Figure 2 panels.
 
 FLAGS
-  --domain dmp|mhp|wsp|all       persistence domain      (default: all)
+  --domain dmp|mhp|wsp|vpm|all|ext  persistence domain   (default: all;
+                                 ext = all + the async-flush VPM panels)
   --kind singleton|compound|both update kind             (default: both)
   --appends N                    appends per scenario    (default: 20000)
   --seed N                       jitter seed             (default: 42)
@@ -196,7 +199,7 @@ KNOBS
   --batch B              appends per doorbell train       (default: 4)
   --appends N            appends per client               (default: 100)
   --capacity N           log slots per client             (default: 128)
-  --domain dmp|mhp|wsp   persistence domain               (default: mhp)
+  --domain dmp|mhp|wsp|vpm  persistence domain            (default: mhp)
   --primary write|writeimm|send  primary op               (default: write)
   --json FILE            dump results as JSON
 ";
@@ -211,7 +214,7 @@ KNOBS
   --clients LIST         coordinator counts       (default: 1,2,4)
   --shards LIST          QP counts                (default: 1,2,4,8)
   --txns N               transactions per client  (default: 500)
-  --domain dmp|mhp|wsp   persistence domain       (default: mhp)
+  --domain dmp|mhp|wsp|vpm  persistence domain    (default: mhp)
   --primary write|writeimm|send  primary op       (default: write)
   --json FILE            dump results as JSON
 ";
@@ -228,7 +231,7 @@ KNOBS
   --clients LIST         coordinator counts       (default: 1,2,4)
   --shards LIST          QP counts, each >= 2     (default: 2,4,8)
   --txns N               transactions per client  (default: 500)
-  --domain dmp|mhp|wsp   persistence domain       (default: mhp)
+  --domain dmp|mhp|wsp|vpm  persistence domain    (default: mhp)
   --primary write|writeimm|send  primary op       (default: write)
   --json FILE            dump results as JSON
 
@@ -251,6 +254,7 @@ KNOBS
   --shards N             QPs per transaction      (default: 4)
   --txns N               transactions per client  (default: 500)
   --primary write|writeimm|send  primary op       (default: write)
+  --ext                  include the async-flush VPM rows (16 configs)
   --json FILE            dump results as JSON
 
 Group size 1 is the unchanged per-transaction protocol (the grid's
@@ -269,7 +273,8 @@ is shrunk to a minimal fault schedule and printed as a replayable
 `rpmem soak ...` repro line on stderr.
 
 KNOBS
-  --configs LIST         taxonomy row indices, 0-11  (default: all 12)
+  --configs LIST         grid row indices, 0-15      (default: all 16;
+                         12-15 are the async-flush VPM rows)
   --seeds LIST           fault/jitter seeds          (default: 1,2,3,4)
   --clients N            coordinators                (default: 2)
   --shards N             QPs per transaction         (default: 3)
@@ -309,7 +314,8 @@ FLAGS
 const USAGE_CRASH_TEST: &str = "\
 USAGE: rpmem crash-test [flags]
 
-Crash-consistency campaign over the 72 scenarios.
+Crash-consistency campaign over the 96 enlarged-grid scenarios
+(Table 1 plus the async-flush VPM rows).
 
 FLAGS
   --appends N            appends per scenario     (default: 25)
@@ -348,7 +354,9 @@ fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "failover" => {
             &["clients", "shards", "txns", "domain", "primary", "json"]
         }
-        "group" => &["groups", "clients", "shards", "txns", "primary", "json"],
+        "group" => {
+            &["groups", "clients", "shards", "txns", "primary", "ext", "json"]
+        }
         "soak" => &[
             "configs", "seeds", "clients", "shards", "txns", "group",
             "replicate", "drop", "jitter", "duplicate", "partition-round",
@@ -432,6 +440,7 @@ fn parse_domain(flags: &HashMap<String, String>) -> Result<PDomain, String> {
         None | Some("mhp") => Ok(PDomain::Mhp),
         Some("dmp") => Ok(PDomain::Dmp),
         Some("wsp") => Ok(PDomain::Wsp),
+        Some("vpm") => Ok(PDomain::Vpm),
         Some(other) => Err(format!("bad --domain {other}")),
     }
 }
@@ -449,9 +458,11 @@ fn parse_primary(flags: &HashMap<String, String>) -> Result<Primary, String> {
 fn domains(flags: &HashMap<String, String>) -> Result<Vec<PDomain>, String> {
     match flags.get("domain").map(String::as_str) {
         None | Some("all") => Ok(PDomain::ALL.to_vec()),
+        Some("ext") => Ok(PDomain::ALL_EXT.to_vec()),
         Some("dmp") => Ok(vec![PDomain::Dmp]),
         Some("mhp") => Ok(vec![PDomain::Mhp]),
         Some("wsp") => Ok(vec![PDomain::Wsp]),
+        Some("vpm") => Ok(vec![PDomain::Vpm]),
         Some(other) => Err(format!("bad --domain {other}")),
     }
 }
@@ -472,6 +483,7 @@ fn cmd_taxonomy(flags: &HashMap<String, String>) -> Result<(), String> {
         Some("1") => print!("{}", taxonomy::render_table1()),
         Some("2") => print!("{}", taxonomy::render_table2()),
         Some("3") => print!("{}", taxonomy::render_table3()),
+        Some("grid") => print!("{}", taxonomy::render_grid()),
         None => print!(
             "{}\n{}\n{}",
             taxonomy::render_table1(),
@@ -491,13 +503,15 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
         capacity: 4096,
     };
     let mut all = Vec::new();
-    let panel_ids: [(&str, PDomain, AppendMode); 6] = [
+    let panel_ids: [(&str, PDomain, AppendMode); 8] = [
         ("Fig 2(a) — singleton, DMP", PDomain::Dmp, AppendMode::Singleton),
         ("Fig 2(b) — singleton, MHP", PDomain::Mhp, AppendMode::Singleton),
         ("Fig 2(c) — singleton, WSP", PDomain::Wsp, AppendMode::Singleton),
         ("Fig 2(d) — compound, DMP", PDomain::Dmp, AppendMode::Compound),
         ("Fig 2(e) — compound, MHP", PDomain::Mhp, AppendMode::Compound),
         ("Fig 2(f) — compound, WSP", PDomain::Wsp, AppendMode::Compound),
+        ("Async-flush — singleton, VPM", PDomain::Vpm, AppendMode::Singleton),
+        ("Async-flush — compound, VPM", PDomain::Vpm, AppendMode::Compound),
     ];
     let want_domains = domains(flags)?;
     let want_modes = modes(flags)?;
@@ -712,7 +726,8 @@ fn cmd_failover(flags: &HashMap<String, String>) -> Result<(), String> {
 
 fn cmd_group(flags: &HashMap<String, String>) -> Result<(), String> {
     use rpmem::coordinator::scaling::{
-        group_grid_to_json, render_group_grid, run_group_grid, ScalingOpts,
+        group_grid_to_json, render_group_grid, run_group_grid,
+        run_group_grid_over, ScalingOpts,
     };
     let groups = parse_usize_list(flags, "groups", &[1, 4, 16])?;
     let clients = parse_usize_list(flags, "clients", &[1, 2])?;
@@ -726,8 +741,19 @@ fn cmd_group(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     let primary = parse_primary(flags)?;
     let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
-    let points =
-        run_group_grid(primary, &groups, &clients, shards, txns, &opts);
+    let points = if flags.contains_key("ext") {
+        run_group_grid_over(
+            &ServerConfig::grid(),
+            primary,
+            &groups,
+            &clients,
+            shards,
+            txns,
+            &opts,
+        )
+    } else {
+        run_group_grid(primary, &groups, &clients, shards, txns, &opts)
+    };
     let title = format!(
         "group commit across the taxonomy [{}] — shared vs per-txn \
          decision trains",
@@ -772,7 +798,7 @@ fn cmd_soak(flags: &HashMap<String, String>) -> Result<(), String> {
         replay_line, shrink_soak_failure, FaultPlan, SoakOpts,
     };
 
-    let table = ServerConfig::table1();
+    let table = ServerConfig::grid();
     let every: Vec<u64> = (0..table.len() as u64).collect();
     let configs = parse_u64_list(flags, "configs", &every)?;
     if configs.iter().any(|&i| i >= table.len() as u64) {
@@ -947,7 +973,7 @@ fn cmd_crash_test(flags: &HashMap<String, String>) -> Result<(), String> {
     let scanner = load_scanner(flags, false)?;
     let mut failures = 0;
     let mut total = 0;
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for primary in Primary::ALL {
             for mode in [AppendMode::Singleton, AppendMode::Compound] {
                 let mut merged =

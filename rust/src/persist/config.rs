@@ -22,11 +22,27 @@ pub enum PDomain {
     /// Whole System Persistence: everything including RNIC buffers
     /// (battery-backed). Receipt at the responder RNIC implies persistence.
     Wsp,
+    /// Virtualized PM (virtio-pmem-style async flush): the "PM" the
+    /// responder exposes is host-page-cache-backed. *Nothing* — not even
+    /// a CPU store followed by clwb+sfence — is persistent until an
+    /// explicit asynchronous flush command round-trips to the host (an
+    /// fsync of the backing file). The flush-command completion is the
+    /// persistence point; unflushed page-cache writes are lost on crash,
+    /// a strictly larger loss class than any directly-attached config.
+    Vpm,
 }
 
 impl PDomain {
-    /// All three domains, in Table-1 row-group order.
+    /// The paper's three domains, in Table-1 row-group order. The
+    /// post-paper async-flush class ([`PDomain::Vpm`]) is deliberately
+    /// excluded so Table-1 renderings stay bit-for-bit stable; use
+    /// [`PDomain::ALL_EXT`] for the enlarged device-class set.
     pub const ALL: [PDomain; 3] = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp];
+
+    /// All device classes including the async-flush extension, in grid
+    /// order (Table-1 domains first, then the virtio-pmem class).
+    pub const ALL_EXT: [PDomain; 4] =
+        [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp, PDomain::Vpm];
 
     /// Short label used in tables and test output.
     pub fn name(&self) -> &'static str {
@@ -34,7 +50,14 @@ impl PDomain {
             PDomain::Dmp => "DMP",
             PDomain::Mhp => "MHP",
             PDomain::Wsp => "WSP",
+            PDomain::Vpm => "VPM",
         }
+    }
+
+    /// Is this the async-flush (virtio-pmem) device class, where the
+    /// persistence point is the explicit flush-command completion?
+    pub fn is_async_flush(&self) -> bool {
+        matches!(self, PDomain::Vpm)
     }
 }
 
@@ -164,6 +187,29 @@ impl ServerConfig {
         out
     }
 
+    /// The async-flush (virtio-pmem) rows that extend Table 1: VPM ×
+    /// DDIO on/off × RQWRB placement. DDIO and RQWRB keep their
+    /// visibility-side meaning but neither changes the persistence
+    /// point — only the flush-command completion does.
+    pub fn async_flush_rows() -> Vec<ServerConfig> {
+        let mut out = Vec::with_capacity(4);
+        for ddio in [true, false] {
+            for rq in RqwrbLoc::ALL {
+                out.push(ServerConfig::new(PDomain::Vpm, ddio, rq));
+            }
+        }
+        out
+    }
+
+    /// The full device-class grid: the 12 Table-1 configurations first
+    /// (in paper row order, so positional indexing into the original 12
+    /// stays valid), then the async-flush rows — 16 configurations.
+    pub fn grid() -> Vec<ServerConfig> {
+        let mut out = ServerConfig::table1();
+        out.extend(ServerConfig::async_flush_rows());
+        out
+    }
+
     /// Short label, e.g. `DMP+DDIO+PM-RQWRB` / `MHP+¬DDIO+DRAM-RQWRB`.
     pub fn label(&self) -> String {
         format!(
@@ -207,6 +253,20 @@ mod tests {
         assert_eq!(configs[1].label(), "DMP+DDIO+PM-RQWRB");
         assert_eq!(configs[2].label(), "DMP+¬DDIO+DRAM-RQWRB");
         assert_eq!(configs[11].label(), "WSP+¬DDIO+PM-RQWRB");
+    }
+
+    #[test]
+    fn grid_appends_async_flush_rows_after_table1() {
+        let grid = ServerConfig::grid();
+        assert_eq!(grid.len(), 16);
+        assert_eq!(&grid[..12], &ServerConfig::table1()[..]);
+        assert_eq!(grid[12].label(), "VPM+DDIO+DRAM-RQWRB");
+        assert_eq!(grid[15].label(), "VPM+¬DDIO+PM-RQWRB");
+        let labels: std::collections::HashSet<_> =
+            grid.iter().map(|c| c.label()).collect();
+        assert_eq!(labels.len(), 16);
+        assert!(grid[12..].iter().all(|c| c.pdomain.is_async_flush()));
+        assert!(grid[..12].iter().all(|c| !c.pdomain.is_async_flush()));
     }
 
     #[test]

@@ -106,7 +106,7 @@ impl WaitPoint {
 
 /// Post one singleton update's work requests without waiting; returns
 /// the persistence point to await. Every singleton method is a pure
-/// post-train followed by a single wait, so all ten are pipelinable.
+/// post-train followed by a single wait, so all thirteen are pipelinable.
 pub fn post_singleton(
     fab: &mut Fabric,
     method: SingletonMethod,
@@ -177,6 +177,36 @@ pub fn post_singleton(
             WaitPoint::Comp(fab.post(WorkRequest::send(
                 payload,
                 lazy_apply(fab),
+                u.addr,
+            )))
+        }
+        WriteFlushCmdAck => {
+            // Rq Write(a); Rq Send(flush-cmd); host fsyncs the page
+            // cache; flush-ack is the persistence point.
+            fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                vec![0u8; 16],
+                OnRecv::HostFlushAck,
+                u.addr,
+            )))
+        }
+        WriteImmFlushCmdAck => {
+            // The WRITEIMM's receive completion doubles as the flush
+            // command: the handler fsyncs (covering the imm's own
+            // payload, already placed) and acks.
+            WaitPoint::Ack(fab.post(WorkRequest::write_imm(
+                u.addr,
+                u.data.clone(),
+                OnRecv::HostFlushAck,
+            )))
+        }
+        SendCopyFlushCmdAck => {
+            let ups = [WireUpdate { target: u.addr, data: u.data.clone() }];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                payload,
+                OnRecv::CopyHostFlushAck,
                 u.addr,
             )))
         }
@@ -311,6 +341,53 @@ pub fn post_singleton_batch(
                 )));
             }
             WaitPoint::Ack(id.expect("non-empty train"))
+        }
+        WriteFlushCmdAck => {
+            // Flush-command coalescing: N writes, ONE trailing flush
+            // command. The host fsync is file-wide and the FIFO
+            // placement chain guarantees every prior write is placed
+            // before the flush command's receive fires, so a single
+            // flush round-trip persists the whole train.
+            for u in updates {
+                fab.post(WorkRequest::write(u.addr, u.data.clone()));
+            }
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                vec![0u8; 16],
+                OnRecv::HostFlushAck,
+                last.addr,
+            )))
+        }
+        WriteImmFlushCmdAck => {
+            // Only the train-final imm carries the flush command; its
+            // handler fsync covers every earlier imm (placed before it
+            // under FIFO placement).
+            for u in &updates[..updates.len() - 1] {
+                fab.post(WorkRequest::write_imm(
+                    u.addr,
+                    u.data.clone(),
+                    OnRecv::Recycle,
+                ));
+            }
+            WaitPoint::Ack(fab.post(WorkRequest::write_imm(
+                last.addr,
+                last.data.clone(),
+                OnRecv::HostFlushAck,
+            )))
+        }
+        SendCopyFlushCmdAck => {
+            // Whole train in one wire envelope; one fsync after the
+            // copies, one ack.
+            let ups: Vec<WireUpdate> = updates
+                .iter()
+                .map(|u| WireUpdate { target: u.addr, data: u.data.clone() })
+                .collect();
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                payload,
+                OnRecv::CopyHostFlushAck,
+                last.addr,
+            )))
         }
     };
     fab.doorbell_end();
@@ -457,6 +534,42 @@ pub fn post_compound(
                 a.addr,
             )))
         }
+        WriteWriteFlushCmdAck => {
+            // a-then-b ordering holds because the file-wide fsync
+            // triggered by the flush command persists both at once.
+            fab.post(WorkRequest::write(a.addr, a.data.clone()));
+            fab.post(WorkRequest::write(b.addr, b.data.clone()));
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                vec![0u8; 16],
+                OnRecv::HostFlushAck,
+                b.addr,
+            )))
+        }
+        WriteImmWriteImmFlushCmdAck => {
+            fab.post(WorkRequest::write_imm(
+                a.addr,
+                a.data.clone(),
+                OnRecv::Recycle,
+            ));
+            WaitPoint::Ack(fab.post(WorkRequest::write_imm(
+                b.addr,
+                b.data.clone(),
+                OnRecv::HostFlushAck,
+            )))
+        }
+        SendCopyFlushCmdAck => {
+            let ups = [
+                WireUpdate { target: a.addr, data: a.data.clone() },
+                WireUpdate { target: b.addr, data: b.data.clone() },
+            ];
+            let payload = wire::encode(msg_seq, &ups);
+            fab.set_recv_copies(wire::copy_specs(&ups));
+            WaitPoint::Ack(fab.post(WorkRequest::send(
+                payload,
+                OnRecv::CopyHostFlushAck,
+                a.addr,
+            )))
+        }
     })
 }
 
@@ -582,7 +695,7 @@ mod tests {
     /// leaves the data persistent at the ack time.
     #[test]
     fn planned_singleton_methods_persist_by_ack() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             for p in Primary::ALL {
                 let m = plan_singleton(&cfg, p);
                 let mut f = fab(cfg);
@@ -609,7 +722,7 @@ mod tests {
     /// persistent at ack time.
     #[test]
     fn planned_compound_methods_persist_by_ack() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             for p in Primary::ALL {
                 let m = plan_compound(&cfg, p, 8);
                 let mut f = fab(cfg);
@@ -838,7 +951,7 @@ mod tests {
     /// updates in the train are persistent at the single wait-point.
     #[test]
     fn batched_singleton_trains_persist_by_ack() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             for p in Primary::ALL {
                 let m = plan_singleton(&cfg, p);
                 if m.requires_replay() {
@@ -952,7 +1065,7 @@ mod tests {
     /// methods with internal waits are refused.
     #[test]
     fn batched_compound_trains_persist_by_ack() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             for p in Primary::ALL {
                 let m = plan_compound(&cfg, p, 8);
                 if m.requires_replay() {

@@ -391,7 +391,7 @@ mod tests {
     /// never commits a partial group.
     #[test]
     fn crash_mid_train_commits_whole_groups_only() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             let method = crate::persist::txn::plan_txn_method(
                 &cfg,
                 crate::persist::method::Primary::Write,

@@ -45,6 +45,11 @@ pub enum PersistencePoint {
     /// Receipt of the completion notification of the update op itself
     /// (WSP one-sided cases).
     UpdateCompletion,
+    /// Receipt of the ack of the async flush command (virtio-pmem fsync
+    /// envelope): the host has written the covered page-cache bytes back
+    /// to durable media. The only persistence point on the VPM device
+    /// class — neither completions nor clwb-style flushes persist there.
+    FlushCmdAck,
 }
 
 /// Methods for persisting a singleton remote update (Table 2).
@@ -78,11 +83,22 @@ pub enum SingletonMethod {
     /// SEND; wait for its completion (PM RQWRB; recovery replays).
     /// (WSP, IB/RoCE.)
     SendComp,
+    /// Async-flush class: WRITE + flush-command SEND; the host fsyncs
+    /// the page cache and acks — the flush-command ack is the
+    /// persistence point. (VPM, WRITE primary.)
+    WriteFlushCmdAck,
+    /// Async-flush class: WRITEIMM whose receive completion doubles as
+    /// the flush command; host fsyncs, acks. (VPM, WRITEIMM primary.)
+    WriteImmFlushCmdAck,
+    /// Async-flush class: SEND; responder copies the payload, issues the
+    /// host flush command, acks. (VPM, SEND primary.)
+    SendCopyFlushCmdAck,
 }
 
 impl SingletonMethod {
-    /// All ten distinct singleton methods (paper §3.2).
-    pub const ALL: [SingletonMethod; 10] = [
+    /// The paper's ten singleton methods (§3.2) plus the three
+    /// async-flush (virtio-pmem) recipes.
+    pub const ALL: [SingletonMethod; 13] = [
         SingletonMethod::WriteMsgFlushAck,
         SingletonMethod::WriteImmFlushAck,
         SingletonMethod::SendCopyFlushAck,
@@ -93,6 +109,9 @@ impl SingletonMethod {
         SingletonMethod::WriteComp,
         SingletonMethod::WriteImmComp,
         SingletonMethod::SendComp,
+        SingletonMethod::WriteFlushCmdAck,
+        SingletonMethod::WriteImmFlushCmdAck,
+        SingletonMethod::SendCopyFlushCmdAck,
     ];
 
     /// Paper-notation method name (Table 2 cell).
@@ -108,6 +127,9 @@ impl SingletonMethod {
             SingletonMethod::WriteComp => "Write;Comp",
             SingletonMethod::WriteImmComp => "WriteImm;Comp",
             SingletonMethod::SendComp => "Send;Comp (one-sided)",
+            SingletonMethod::WriteFlushCmdAck => "Write+FlushCmd/Fsync/Ack",
+            SingletonMethod::WriteImmFlushCmdAck => "WriteImm/Fsync/Ack",
+            SingletonMethod::SendCopyFlushCmdAck => "Send/Copy+Fsync/Ack",
         }
     }
 
@@ -152,6 +174,29 @@ impl SingletonMethod {
             WriteComp => vec!["Rq Write(a)", "Rq Comp_Write(a)"],
             WriteImmComp => vec!["Rq WriteImm(a)", "Rq Comp_WriteImm(a)"],
             SendComp => vec!["Rq Send(a)", "Rq Comp_Send(a)"],
+            WriteFlushCmdAck => vec![
+                "Rq Write(a)",
+                "Rq Send(flush-cmd)",
+                "Rsp Receive(flush-cmd)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
+            WriteImmFlushCmdAck => vec![
+                "Rq WriteImm(a)",
+                "Rsp Receive(&a)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
+            SendCopyFlushCmdAck => vec![
+                "Rq Send(a)",
+                "Rsp Receive(a)",
+                "Rsp copy(a)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
         }
     }
 
@@ -167,12 +212,20 @@ impl SingletonMethod {
             WriteComp | WriteImmComp | SendComp => {
                 PersistencePoint::UpdateCompletion
             }
+            WriteFlushCmdAck | WriteImmFlushCmdAck | SendCopyFlushCmdAck => {
+                PersistencePoint::FlushCmdAck
+            }
         }
     }
 
     /// One-sided methods need no responder CPU on the persistence path.
+    /// (Flush-command recipes need the host's fsync, so they are
+    /// two-sided like responder-ack recipes.)
     pub fn is_one_sided(&self) -> bool {
-        self.persistence_point() != PersistencePoint::ResponderAck
+        matches!(
+            self.persistence_point(),
+            PersistencePoint::FlushCompletion | PersistencePoint::UpdateCompletion
+        )
     }
 
     /// Methods that persist the *message* (in a PM RQWRB) rather than the
@@ -225,11 +278,22 @@ pub enum CompoundMethod {
     /// Single SEND with both updates; wait for its completion (WSP + PM
     /// RQWRB; recovery replays).
     SendComp,
+    /// Async-flush class: WRITE(a); WRITE(b); one flush-command SEND
+    /// covering both (FIFO placement orders a before b, the fsync covers
+    /// everything placed); host acks. (VPM, WRITE primary.)
+    WriteWriteFlushCmdAck,
+    /// Async-flush class: WRITEIMM(a); WRITEIMM(b) whose receive
+    /// completion doubles as the flush command for both. (VPM, WRITEIMM.)
+    WriteImmWriteImmFlushCmdAck,
+    /// Async-flush class: single SEND carrying both updates; responder
+    /// copies in order, issues the host flush command, acks. (VPM, SEND.)
+    SendCopyFlushCmdAck,
 }
 
 impl CompoundMethod {
-    /// The thirteen distinct compound recipes (Table 3).
-    pub const ALL: [CompoundMethod; 13] = [
+    /// The thirteen distinct compound recipes of Table 3 plus the three
+    /// async-flush (virtio-pmem) recipes.
+    pub const ALL: [CompoundMethod; 16] = [
         CompoundMethod::WriteMsgFlushAckTwice,
         CompoundMethod::WriteImmFlushAckTwice,
         CompoundMethod::SendCopyFlushAck,
@@ -243,6 +307,9 @@ impl CompoundMethod {
         CompoundMethod::WriteWriteComp,
         CompoundMethod::WriteImmWriteImmComp,
         CompoundMethod::SendComp,
+        CompoundMethod::WriteWriteFlushCmdAck,
+        CompoundMethod::WriteImmWriteImmFlushCmdAck,
+        CompoundMethod::SendCopyFlushCmdAck,
     ];
 
     /// Paper-notation method name (Table 3 cell).
@@ -262,6 +329,9 @@ impl CompoundMethod {
             WriteWriteComp => "Write;Write;Comp",
             WriteImmWriteImmComp => "WriteImm;WriteImm;Comp",
             SendComp => "Send(a,b);Comp (one-sided)",
+            WriteWriteFlushCmdAck => "Write;Write;FlushCmd/Fsync/Ack",
+            WriteImmWriteImmFlushCmdAck => "WriteImm;WriteImm/Fsync/Ack",
+            SendCopyFlushCmdAck => "Send(a,b)/Copy+Fsync/Ack",
         }
     }
 
@@ -316,6 +386,31 @@ impl CompoundMethod {
                 "Rq WriteImm(a)", "Rq WriteImm(b)", "Rq Comp_WriteImm(b)",
             ],
             SendComp => vec!["Rq Send(a,b)", "Rq Comp_Send(a,b)"],
+            WriteWriteFlushCmdAck => vec![
+                "Rq Write(a)",
+                "Rq Write(b)",
+                "Rq Send(flush-cmd)",
+                "Rsp Receive(flush-cmd)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
+            WriteImmWriteImmFlushCmdAck => vec![
+                "Rq WriteImm(a)",
+                "Rq WriteImm(b)",
+                "Rsp Receive(&b)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
+            SendCopyFlushCmdAck => vec![
+                "Rq Send(a,b)",
+                "Rsp Receive(a,b)",
+                "Rsp copy(a,b)",
+                "Rsp fsync(page cache)",
+                "Rsp Send(flush-ack)",
+                "Rq Receive(flush-ack)",
+            ],
         }
     }
 
@@ -332,12 +427,19 @@ impl CompoundMethod {
             WriteWriteComp | WriteImmWriteImmComp | SendComp => {
                 PersistencePoint::UpdateCompletion
             }
+            WriteWriteFlushCmdAck | WriteImmWriteImmFlushCmdAck
+            | SendCopyFlushCmdAck => PersistencePoint::FlushCmdAck,
         }
     }
 
     /// One-sided methods need no responder CPU on the persistence path.
+    /// (Flush-command recipes need the host's fsync, so they are
+    /// two-sided like responder-ack recipes.)
     pub fn is_one_sided(&self) -> bool {
-        self.persistence_point() != PersistencePoint::ResponderAck
+        matches!(
+            self.persistence_point(),
+            PersistencePoint::FlushCompletion | PersistencePoint::UpdateCompletion
+        )
     }
 
     /// Methods that persist the *message* (PM RQWRB) rather than the
@@ -368,16 +470,37 @@ mod tests {
     use super::*;
 
     #[test]
-    fn ten_singleton_methods() {
-        assert_eq!(SingletonMethod::ALL.len(), 10);
+    fn thirteen_singleton_methods() {
+        // The paper's 10 plus the 3 async-flush recipes.
+        assert_eq!(SingletonMethod::ALL.len(), 13);
         let names: std::collections::HashSet<_> =
             SingletonMethod::ALL.iter().map(|m| m.name()).collect();
-        assert_eq!(names.len(), 10);
+        assert_eq!(names.len(), 13);
     }
 
     #[test]
-    fn thirteen_compound_recipes() {
-        assert_eq!(CompoundMethod::ALL.len(), 13);
+    fn sixteen_compound_recipes() {
+        // Table 3's 13 plus the 3 async-flush recipes.
+        assert_eq!(CompoundMethod::ALL.len(), 16);
+    }
+
+    #[test]
+    fn flush_cmd_recipes_end_at_flush_ack_and_are_two_sided() {
+        use PersistencePoint::FlushCmdAck;
+        for m in SingletonMethod::ALL {
+            if m.persistence_point() == FlushCmdAck {
+                assert!(!m.is_one_sided(), "{}", m.name());
+                assert!(!m.requires_replay(), "{}", m.name());
+                assert_eq!(*m.steps().last().unwrap(), "Rq Receive(flush-ack)");
+            }
+        }
+        for m in CompoundMethod::ALL {
+            if m.persistence_point() == FlushCmdAck {
+                assert!(!m.is_one_sided(), "{}", m.name());
+                assert_eq!(m.round_trips(), 1, "{}", m.name());
+                assert_eq!(*m.steps().last().unwrap(), "Rq Receive(flush-ack)");
+            }
+        }
     }
 
     #[test]

@@ -79,6 +79,12 @@ pub fn plan_singleton(cfg: &ServerConfig, primary: Primary) -> SingletonMethod {
         (PDomain::Wsp, _, _, WriteImm) => WriteImmComp,
         (PDomain::Wsp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
         (PDomain::Wsp, _, RqwrbLoc::Pm, Send) => SendComp,
+        // ---- VPM (async flush: only the flush-command ack persists;
+        // DDIO and RQWRB placement change nothing about the persistence
+        // point — the page cache is volatile either way) ----
+        (PDomain::Vpm, _, _, Write) => WriteFlushCmdAck,
+        (PDomain::Vpm, _, _, WriteImm) => WriteImmFlushCmdAck,
+        (PDomain::Vpm, _, _, Send) => SendCopyFlushCmdAck,
     }
 }
 
@@ -122,10 +128,17 @@ pub fn plan_compound(
         (PDomain::Wsp, _, _, WriteImm) => WriteImmWriteImmComp,
         (PDomain::Wsp, _, RqwrbLoc::Dram, Send) => SendCopyAck,
         (PDomain::Wsp, _, RqwrbLoc::Pm, Send) => SendComp,
+        // ---- VPM (one coalesced flush command covers both updates:
+        // FIFO placement orders a before b, and the fsync is file-wide) ----
+        (PDomain::Vpm, _, _, Write) => WriteWriteFlushCmdAck,
+        (PDomain::Vpm, _, _, WriteImm) => WriteImmWriteImmFlushCmdAck,
+        (PDomain::Vpm, _, _, Send) => SendCopyFlushCmdAck,
     }
 }
 
-/// WSP on iWARP must be treated as MHP (§3.2).
+/// WSP on iWARP must be treated as MHP (§3.2). VPM is unaffected by the
+/// transport: its recipes wait for the flush-command ack, which is sound
+/// under both completion-generation semantics.
 fn effective_domain(cfg: &ServerConfig) -> PDomain {
     if cfg.pdomain == PDomain::Wsp && cfg.transport == Transport::Iwarp {
         PDomain::Mhp
@@ -250,6 +263,27 @@ mod tests {
     }
 
     #[test]
+    fn vpm_rows_always_end_at_flush_cmd_ack() {
+        use crate::persist::method::PersistencePoint;
+        for c in ServerConfig::async_flush_rows() {
+            for p in Primary::ALL {
+                let s = plan_singleton(&c, p);
+                assert_eq!(
+                    s.persistence_point(),
+                    PersistencePoint::FlushCmdAck,
+                    "{c} {p:?}"
+                );
+                let m = plan_compound(&c, p, 8);
+                assert_eq!(m.persistence_point(), PersistencePoint::FlushCmdAck);
+                // iWARP changes nothing: the recipes are ack-based.
+                let iw = c.with_transport(Transport::Iwarp);
+                assert_eq!(plan_singleton(&iw, p), s);
+                assert_eq!(plan_compound(&iw, p, 8), m);
+            }
+        }
+    }
+
+    #[test]
     fn all_72_scenarios_have_a_plan() {
         // 12 configs x 3 primaries x 2 update kinds = 72 (paper §1).
         let mut n = 0;
@@ -264,8 +298,22 @@ mod tests {
     }
 
     #[test]
+    fn enlarged_grid_has_96_planned_scenarios() {
+        // 16 configs x 3 primaries x 2 update kinds.
+        let mut n = 0;
+        for c in ServerConfig::grid() {
+            for p in Primary::ALL {
+                let _ = plan_singleton(&c, p);
+                let _ = plan_compound(&c, p, 8);
+                n += 2;
+            }
+        }
+        assert_eq!(n, 96);
+    }
+
+    #[test]
     fn ddio_never_matters_outside_dmp() {
-        for pd in [PDomain::Mhp, PDomain::Wsp] {
+        for pd in [PDomain::Mhp, PDomain::Wsp, PDomain::Vpm] {
             for rq in RqwrbLoc::ALL {
                 for p in Primary::ALL {
                     let on = cfg(pd, true, rq);
@@ -285,7 +333,7 @@ mod tests {
 
     #[test]
     fn rqwrb_only_matters_for_send() {
-        for c in ServerConfig::table1() {
+        for c in ServerConfig::grid() {
             let mut other = c;
             other.rqwrb = match c.rqwrb {
                 RqwrbLoc::Dram => RqwrbLoc::Pm,

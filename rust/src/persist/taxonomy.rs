@@ -51,6 +51,60 @@ fn render_method_table(title: &str, compound: bool) -> String {
     out
 }
 
+/// The enlarged grid: Table 1's twelve rows plus the async-flush
+/// (virtio-pmem-style) VPM rows, each VPM row annotated with the
+/// planner's flush-command recipes. The persistence point for every
+/// VPM row is the completion of an explicit host flush command —
+/// nothing, not even CPU-flushed stores, is durable before the host
+/// fsyncs its page cache.
+pub fn render_grid() -> String {
+    let mut out = String::new();
+    out.push_str("Enlarged grid: Table 1 + async-flush (VPM) rows\n");
+    out.push_str(&format!("{:<24} Explanation\n", "Config"));
+    out.push_str(&"-".repeat(78));
+    out.push('\n');
+    for cfg in ServerConfig::grid() {
+        let expl = if cfg.pdomain.is_async_flush() {
+            format!(
+                "{}, host-page-cache backed; durable only at flush-command \
+                 ack (DDIO {}, RQWRB in {}).",
+                cfg.pdomain.name(),
+                if cfg.ddio { "on" } else { "off" },
+                match cfg.rqwrb {
+                    RqwrbLoc::Dram => "DRAM",
+                    RqwrbLoc::Pm => "PM",
+                }
+            )
+        } else {
+            format!(
+                "{}, with DDIO turned {}, and RQWRB placed in {}.",
+                cfg.pdomain.name(),
+                if cfg.ddio { "on" } else { "off" },
+                match cfg.rqwrb {
+                    RqwrbLoc::Dram => "DRAM",
+                    RqwrbLoc::Pm => "PM",
+                }
+            )
+        };
+        out.push_str(&format!("{:<24} {}\n", cfg.label(), expl));
+    }
+    out.push_str("\nVPM planner recipes (all primaries):\n");
+    for cfg in ServerConfig::async_flush_rows() {
+        out.push_str(&format!("\n[{}]\n", cfg.label()));
+        for p in Primary::ALL {
+            let s = plan_singleton(&cfg, p);
+            let c = plan_compound(&cfg, p, 8);
+            out.push_str(&format!(
+                "  {:<9} -> {} / {}\n",
+                p.name(),
+                s.name(),
+                c.name()
+            ));
+        }
+    }
+    out
+}
+
 /// Table 2: taxonomy for singleton updates.
 pub fn render_table2() -> String {
     render_method_table(
@@ -77,6 +131,24 @@ mod tests {
         assert_eq!(t.matches("RQWRB placed in").count(), 12);
         assert!(t.contains("DMP+DDIO+DRAM-RQWRB"));
         assert!(t.contains("WSP+¬DDIO+PM-RQWRB"));
+    }
+
+    #[test]
+    fn grid_renders_sixteen_rows_and_vpm_recipes() {
+        let t = render_grid();
+        assert_eq!(
+            t.matches("RQWRB placed in").count()
+                + t.matches("RQWRB in").count(),
+            16
+        );
+        assert!(t.contains("VPM+DDIO+DRAM-RQWRB"));
+        assert!(t.contains("VPM+¬DDIO+PM-RQWRB"));
+        assert!(t.contains("flush-command ack"));
+        assert!(t.contains("Write+FlushCmd/Fsync/Ack"));
+        // The Table-1 prefix renders exactly as the original table.
+        for line in render_table1().lines().skip(1) {
+            assert!(t.contains(line), "missing Table-1 line: {line}");
+        }
     }
 
     #[test]

@@ -531,7 +531,7 @@ mod tests {
 
     #[test]
     fn prepare_persists_payload_and_intent_atomically_by_ack() {
-        for cfg in ServerConfig::table1() {
+        for cfg in ServerConfig::grid() {
             for p in Primary::ALL {
                 let m = plan_txn_method(&cfg, p);
                 let layout = Layout::new(1 << 16, 1 << 16, 8, 4096, cfg.rqwrb);

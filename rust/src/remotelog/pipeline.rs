@@ -93,7 +93,7 @@ pub fn compound_pipelinable(m: CompoundMethod) -> bool {
 /// Is the client's configured method a pure post-train (pipelinable)?
 pub fn pipelinable(rl: &RemoteLog) -> bool {
     match rl.mode {
-        AppendMode::Singleton => true, // all ten singleton methods are
+        AppendMode::Singleton => true, // all thirteen singleton methods are
         AppendMode::Compound => compound_pipelinable(rl.compound_method()),
     }
 }

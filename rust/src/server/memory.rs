@@ -11,11 +11,18 @@
 //!   `t_dmp`     — payload entered the DMP persistence domain (IMC/DIMM);
 //!                 `NEVER` for DDIO-delivered or un-flushed CPU data that
 //!                 stays in cache
+//!   `t_async`   — the host flush command (virtio-pmem fsync) covering
+//!                 this write completed; `NEVER` until a flush command
+//!                 runs. The async-flush device class persists *only* at
+//!                 this milestone — a strictly larger loss class than the
+//!                 volatile-buffer losses above, since even CPU-copied
+//!                 and clwb-flushed data sits in the host page cache.
 //!
 //! A write is persistent at time `t` under a persistence domain `D` iff
 //! its `D`-specific milestone is `<= t` (paper §3.1.1):
-//! WSP -> `t_arrive`, MHP -> `t_place`, DMP -> `t_dmp` — and the target
-//! address lies in PM (DRAM contents never survive).
+//! WSP -> `t_arrive`, MHP -> `t_place`, DMP -> `t_dmp`,
+//! VPM -> `t_async` — and the target address lies in PM (DRAM contents
+//! never survive).
 
 use crate::fabric::timing::Nanos;
 use crate::persist::config::{PDomain, RqwrbLoc, ServerConfig};
@@ -125,6 +132,10 @@ pub struct WriteEvent {
     pub t_place: Nanos,
     /// Entry into the DMP domain ([`NEVER`] for data stuck in cache).
     pub t_dmp: Nanos,
+    /// Completion of the host flush command covering this write
+    /// (async-flush / virtio-pmem persistence milestone; [`NEVER`]
+    /// until such a flush command runs).
+    pub t_async: Nanos,
 }
 
 impl WriteEvent {
@@ -135,6 +146,7 @@ impl WriteEvent {
             PDomain::Wsp => self.t_arrive,
             PDomain::Mhp => self.t_place,
             PDomain::Dmp => self.t_dmp,
+            PDomain::Vpm => self.t_async,
         }
     }
 }
@@ -344,6 +356,7 @@ mod tests {
             t_arrive: arrive,
             t_place: place,
             t_dmp: dmp,
+            t_async: NEVER,
         }
     }
 
@@ -431,6 +444,22 @@ mod tests {
     }
 
     #[test]
+    fn async_flush_milestone_gates_vpm_persistence() {
+        let mut m = MemoryModel::new(layout(), true);
+        // Unflushed page-cache write: survives under every directly-
+        // attached domain but is lost under VPM — the larger loss class.
+        m.record(ev(0, 0x100, 0xAA, 10, 20, 30));
+        // Flushed write: the flush-command completion is the milestone.
+        let mut flushed = ev(1, 0x200, 0xBB, 10, 20, 30);
+        flushed.t_async = 90;
+        m.record(flushed);
+        assert_eq!(m.crash_image(1000, PDomain::Dmp).read(0x100, 1)[0], 0xAA);
+        assert_eq!(m.crash_image(1000, PDomain::Vpm).read(0x100, 1)[0], 0);
+        assert_eq!(m.crash_image(89, PDomain::Vpm).read(0x200, 1)[0], 0);
+        assert_eq!(m.crash_image(90, PDomain::Vpm).read(0x200, 1)[0], 0xBB);
+    }
+
+    #[test]
     fn image_readers() {
         let mut m = MemoryModel::new(layout(), true);
         let mut data = vec![0u8; 8];
@@ -443,6 +472,7 @@ mod tests {
             t_arrive: 0,
             t_place: 0,
             t_dmp: 0,
+            t_async: 0,
         });
         let img = m.crash_image(10, PDomain::Dmp);
         assert_eq!(img.read_u64(0x300), 0xDEADBEEF_CAFEF00D);

@@ -1,0 +1,404 @@
+//! Async-flush (VPM) device-class semantics: the executable proof that
+//! the flush-command completion — and nothing earlier — is the
+//! persistence point for the virtio-pmem-style rows of the enlarged
+//! grid.
+//!
+//! Three layers, mirroring the structure of `crash_consistency.rs` and
+//! `reactor_retry.rs`:
+//!
+//! * **dense crash sweeps** on every VPM config × primary × append
+//!   mode: the planner's flush-command recipes never lose acked data
+//!   and never accept garbage, at hundreds of crash instants;
+//! * **the negative control**: methods that are provably correct on
+//!   directly-attached domains (RDMA FLUSH, CPU clwb, bare
+//!   completions) MUST lose acked data under VPM, because unflushed
+//!   page-cache writes are a strictly larger loss class — if these
+//!   tests ever pass cleanly, the harness has stopped modeling the
+//!   device class;
+//! * **flush commands under a hostile wire**: dropped flush trains
+//!   re-post with fresh op ids, duplicated flush commands and
+//!   duplicated payloads are idempotent, and partition windows during
+//!   the flush phase heal through timer re-posts or abort cleanly —
+//!   never a half-acked append.
+
+use rpmem::fabric::engine::Fabric;
+use rpmem::fabric::faults::NetworkModel;
+use rpmem::fabric::ops::{OnRecv, WorkRequest};
+use rpmem::fabric::timing::{Nanos, TimingModel};
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::method::{CompoundMethod, Primary, SingletonMethod};
+use rpmem::persist::retry::RetryPolicy;
+use rpmem::remotelog::client::{AppendMode, MethodChoice, RemoteLog};
+use rpmem::remotelog::crashtest::{crash_sweep, CrashReport};
+use rpmem::remotelog::pipeline::{sharded_crash_sweep, ShardedRunOpts};
+use rpmem::remotelog::recovery::RustScanner;
+use rpmem::runtime::reactor::run_reactor_faulted;
+use rpmem::server::memory::Layout;
+
+fn vpm() -> ServerConfig {
+    ServerConfig::new(PDomain::Vpm, false, RqwrbLoc::Dram)
+}
+
+fn run_and_sweep(
+    cfg: ServerConfig,
+    mode: AppendMode,
+    choice: MethodChoice,
+    seed: u64,
+    appends: u64,
+) -> CrashReport {
+    let mut rl = RemoteLog::new(
+        cfg,
+        TimingModel::default(),
+        mode,
+        choice,
+        appends + 8,
+        seed,
+        true,
+    );
+    rl.run(appends);
+    crash_sweep(&rl, 120, seed ^ 0xF5F5, &RustScanner)
+}
+
+/// Every VPM row × every primary × both append modes, planner-selected
+/// flush-command recipes, dense crash sweep (uniform + adversarial
+/// points around every ack): clean. This is the VPM slice of the
+/// enlarged-grid campaign, swept deeper than the full-grid gate.
+#[test]
+fn vpm_planned_scenarios_survive_dense_crash_sweeps() {
+    for cfg in ServerConfig::async_flush_rows() {
+        for primary in Primary::ALL {
+            for mode in [AppendMode::Singleton, AppendMode::Compound] {
+                for seed in [2u64, 77, 4096] {
+                    let rep = run_and_sweep(
+                        cfg,
+                        mode,
+                        MethodChoice::Planned(primary),
+                        seed,
+                        25,
+                    );
+                    assert!(
+                        rep.clean(),
+                        "{} {} {} seed={seed}: {rep:?}",
+                        cfg.label(),
+                        mode.name(),
+                        primary.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// THE negative control for the device class: skip the flush command —
+/// by forcing any method whose persistence point is an RDMA FLUSH
+/// completion, a responder-CPU clwb, or a bare op completion — and
+/// acked page-cache writes MUST be observed lost at some crash instant.
+/// Every method below is correct on SOME directly-attached config
+/// (that's what `crash_consistency.rs` proves); under VPM each one acks
+/// data the host page cache still owns.
+#[test]
+fn skipping_the_flush_command_loses_page_cache_writes() {
+    let cases: Vec<(SingletonMethod, &str)> = vec![
+        (
+            SingletonMethod::WriteFlush,
+            "RDMA FLUSH drains NIC/cache, not the host page cache",
+        ),
+        (
+            SingletonMethod::WriteMsgFlushAck,
+            "responder clwb reaches the virtual DIMM, not the backing file",
+        ),
+        (
+            SingletonMethod::SendCopyFlushAck,
+            "copy + clwb without the host flush command",
+        ),
+        (
+            SingletonMethod::WriteComp,
+            "bare completion (WSP method) says nothing under VPM",
+        ),
+    ];
+    for (method, why) in cases {
+        let mut worst = CrashReport::default();
+        for seed in 0..12u64 {
+            worst.merge(&run_and_sweep(
+                vpm(),
+                AppendMode::Singleton,
+                MethodChoice::ForcedSingleton(method),
+                seed,
+                25,
+            ));
+            if !worst.clean() {
+                break;
+            }
+        }
+        assert!(
+            worst.durability_violations > 0 || worst.integrity_violations > 0,
+            "{} on {} must lose acked data: {why}",
+            method.name(),
+            vpm().label()
+        );
+    }
+}
+
+/// The compound twins of the negative control: ordered pipelines whose
+/// terminal milestone is an RDMA FLUSH or a completion also ack
+/// page-cache-resident data under VPM.
+#[test]
+fn skipping_the_flush_command_loses_compound_updates_too() {
+    let cases: Vec<(CompoundMethod, &str)> = vec![
+        (
+            CompoundMethod::WritePipelinedFlush,
+            "MHP pipelined flush without the host flush command",
+        ),
+        (
+            CompoundMethod::WriteWriteComp,
+            "WSP completion-only pipeline under VPM",
+        ),
+        (
+            CompoundMethod::SendCopyFlushAck,
+            "copy + clwb compound without the host flush command",
+        ),
+    ];
+    for (method, why) in cases {
+        let mut worst = CrashReport::default();
+        for seed in 0..12u64 {
+            worst.merge(&run_and_sweep(
+                vpm(),
+                AppendMode::Compound,
+                MethodChoice::ForcedCompound(method),
+                seed,
+                25,
+            ));
+            if !worst.clean() {
+                break;
+            }
+        }
+        assert!(
+            !worst.clean(),
+            "{} on {} must lose acked data: {why}",
+            method.name(),
+            vpm().label()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flush commands × fabric::faults × persist::retry
+// ---------------------------------------------------------------------
+
+fn ropts(clients: usize, appends: u64) -> ShardedRunOpts {
+    ShardedRunOpts {
+        clients,
+        shards: clients, // one QP per client: retries are truly concurrent
+        window: 2,
+        batch: 2,
+        appends_per_client: appends,
+        capacity: 64,
+        seed: 7,
+        record: true,
+    }
+}
+
+fn policy() -> RetryPolicy {
+    RetryPolicy {
+        timeout_ns: 15_000,
+        backoff_base_ns: 5_000,
+        backoff_cap_ns: 40_000,
+        max_attempts: 6,
+    }
+}
+
+/// Heavy random train drops on the VPM write path: every dropped train
+/// takes its trailing flush command down with it (a lost doorbell loses
+/// every WQE it rang for), and the retry engine re-posts the identical
+/// train. The drop decision is a pure function of the op id — an engine
+/// that reused ids would see the same train dropped on every attempt
+/// and could never heal — so `reposts > 0` together with full
+/// accounting is direct evidence the re-posts ride fresh op ids.
+#[test]
+fn dropped_flush_trains_repost_with_fresh_op_ids() {
+    let o = ropts(3, 16);
+    let faults = NetworkModel::new(11).with_drop(400);
+    let (run, res, stats) = run_reactor_faulted(
+        vpm(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &faults,
+        &policy(),
+    );
+    assert!(
+        stats.reposts > 0,
+        "40% train drops must exercise the retry engine"
+    );
+    assert_eq!(
+        res.appends + stats.aborted_appends,
+        o.appends_per_client * o.clients as u64,
+        "every append either acks through a re-post or aborts cleanly"
+    );
+    assert!(
+        res.appends > 0,
+        "fresh op ids draw fresh drop decisions — some trains must heal"
+    );
+    // Acked appends rode genuinely persisted flush commands: the sweep
+    // holds at every crash instant even though acks crossed re-posts.
+    let rep = sharded_crash_sweep(&run, 60, 23, &RustScanner);
+    assert!(rep.clean(), "healed VPM run not crash-clean: {rep:?}");
+    // Determinism: the whole faulted schedule replays from its seeds.
+    let (_, res2, stats2) = run_reactor_faulted(
+        vpm(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &faults,
+        &policy(),
+    );
+    assert_eq!(res.appends, res2.appends);
+    assert_eq!(stats.timer_log, stats2.timer_log);
+}
+
+/// A bounded partition window swallowing the early flush trains heals
+/// deterministically: timer events re-post every lost train after the
+/// window lifts, every append acks, nothing aborts, and the healed run
+/// passes the full crash sweep.
+#[test]
+fn partition_during_flush_phase_heals_through_timer_reposts() {
+    let o = ropts(3, 8);
+    let mut faults = NetworkModel::new(5);
+    faults.add_partition(0, 60_000);
+    let (run, res, stats) = run_reactor_faulted(
+        vpm(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &faults,
+        &policy(),
+    );
+    assert_eq!(stats.aborted_trains, 0, "bounded window must heal");
+    assert_eq!(
+        res.appends,
+        o.appends_per_client * o.clients as u64,
+        "every flush train must ack after the window lifts"
+    );
+    assert!(
+        stats.timers_fired >= o.clients as u64,
+        "every client's first flush train is inside the window"
+    );
+    let rep = sharded_crash_sweep(&run, 60, 31, &RustScanner);
+    assert!(rep.clean(), "healed run not crash-clean: {rep:?}");
+}
+
+/// A partition outliving the whole retry ladder aborts cleanly: every
+/// train exhausts its attempts, nothing ever acks (no flush command
+/// completed, so acking anything would be the completion fallacy), and
+/// the accounting is exact — no half-acked append at any instant.
+#[test]
+fn permanent_partition_aborts_flush_trains_cleanly() {
+    let o = ropts(2, 4);
+    let pol = RetryPolicy { max_attempts: 2, ..policy() };
+    let mut faults = NetworkModel::new(5);
+    faults.add_partition(0, Nanos::MAX - 1);
+    let (run, res, stats) = run_reactor_faulted(
+        vpm(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &faults,
+        &pol,
+    );
+    assert_eq!(res.appends, 0, "a dead wire must never ack a flush");
+    let trains_per_client = o.appends_per_client.div_ceil(o.batch as u64);
+    assert_eq!(
+        stats.aborted_trains,
+        trains_per_client * o.clients as u64,
+        "every flush train rides the full ladder then aborts"
+    );
+    assert_eq!(
+        stats.aborted_appends,
+        o.appends_per_client * o.clients as u64
+    );
+    let rep = sharded_crash_sweep(&run, 40, 13, &RustScanner);
+    assert!(rep.clean(), "aborted run must still be crash-clean: {rep:?}");
+}
+
+/// NIC-level payload redelivery under VPM: the duplicated payload
+/// re-dirties the page cache but lands the same bytes at the same
+/// address, so a later flush command covers it and the crash oracle
+/// never sees divergence. The stats prove the knob actually fired.
+#[test]
+fn duplicated_payloads_under_vpm_stay_clean() {
+    let o = ropts(2, 12);
+    let faults = NetworkModel::new(9).with_duplicates(300).with_jitter(200);
+    let (run, res, stats) = run_reactor_faulted(
+        vpm(),
+        TimingModel::default(),
+        MethodChoice::Planned(Primary::Write),
+        &o,
+        &faults,
+        &policy(),
+    );
+    assert_eq!(res.appends, o.appends_per_client * o.clients as u64);
+    assert_eq!(stats.aborted_trains, 0, "duplicates never cost an append");
+    let duplicated: u64 = (0..run.fabric.shards())
+        .map(|s| {
+            run.fabric.qp(s).faults().map_or(0, |m| m.stats.duplicated)
+        })
+        .sum();
+    assert!(duplicated > 0, "the duplicate knob must actually fire");
+    let rep = sharded_crash_sweep(&run, 60, 41, &RustScanner);
+    assert!(rep.clean(), "redelivered payloads broke the sweep: {rep:?}");
+}
+
+/// Engine-level idempotence of the flush command itself: a duplicated
+/// (back-to-back) host flush command fsyncs an already-clean page cache
+/// — it must neither lose the data the first flush persisted nor move
+/// any persistence point backward.
+#[test]
+fn duplicated_flush_commands_are_idempotent() {
+    let cfg = vpm();
+    let layout = Layout::new(1 << 16, 1 << 16, 8, 256, cfg.rqwrb);
+    let mut f = Fabric::new(cfg, TimingModel::default(), layout, 3, true);
+    let w = f.post(WorkRequest::write(0x1000, vec![6u8; 64]));
+    f.wait_comp(w);
+    let s1 = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+    let first_ack = f.wait_ack(s1);
+    // The original flush command is the persistence point.
+    let img = f.mem.crash_image(first_ack, PDomain::Vpm);
+    assert_eq!(img.read(0x1000, 1)[0], 6);
+    // The duplicate arrives and fsyncs a clean cache.
+    let s2 = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+    let second_ack = f.wait_ack(s2);
+    assert!(second_ack > first_ack);
+    // Crashing between the two flush commands — i.e. as if only the
+    // original had run — still recovers the data: the duplicate did not
+    // move the persistence point backward.
+    let img = f.mem.crash_image(first_ack, PDomain::Vpm);
+    assert_eq!(img.read(0x1000, 1)[0], 6, "duplicate moved persistence");
+    let img = f.mem.crash_image(Nanos::MAX - 1, PDomain::Vpm);
+    assert_eq!(img.read(0x1000, 1)[0], 6);
+}
+
+/// A flush command only covers writes placed before its fsync started:
+/// a write racing past the flush stays page-cache dirty until the NEXT
+/// flush command — the window the negative control exploits, here shown
+/// healing once a second (non-duplicate) flush train arrives.
+#[test]
+fn late_write_needs_its_own_flush_command() {
+    let cfg = vpm();
+    let layout = Layout::new(1 << 16, 1 << 16, 8, 256, cfg.rqwrb);
+    let mut f = Fabric::new(cfg, TimingModel::default(), layout, 3, true);
+    let w = f.post(WorkRequest::write(0x1000, vec![1u8; 64]));
+    f.wait_comp(w);
+    let s1 = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+    let ack1 = f.wait_ack(s1);
+    // This write places after the first fsync started.
+    let late = f.post(WorkRequest::write(0x2000, vec![2u8; 64]));
+    f.wait_comp(late);
+    let img = f.mem.crash_image(ack1, PDomain::Vpm);
+    assert_eq!(img.read(0x1000, 1)[0], 1);
+    assert_eq!(img.read(0x2000, 1)[0], 0, "late write not covered");
+    // Its own flush train persists it.
+    let s2 = f.post(WorkRequest::send(vec![0u8; 16], OnRecv::HostFlushAck, 0));
+    let ack2 = f.wait_ack(s2);
+    let img = f.mem.crash_image(ack2, PDomain::Vpm);
+    assert_eq!(img.read(0x2000, 1)[0], 2);
+}

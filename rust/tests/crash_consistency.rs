@@ -1,6 +1,7 @@
 //! Crash-consistency campaign: the executable proof of Tables 2 and 3.
 //!
-//! For every one of the 72 (config × primary × update-kind) scenarios,
+//! For every one of the 96 (config × primary × update-kind) scenarios
+//! of the enlarged grid (Table 1 plus the async-flush VPM rows),
 //! with jittered timing and multiple seeds, run REMOTELOG, inject power
 //! failures at hundreds of points (uniform + adversarial around every
 //! ack), and assert the planner-selected method never loses acked data
@@ -38,10 +39,12 @@ fn run_and_sweep(
     crash_sweep(&rl, 80, seed ^ 0xC0FFEE, &RustScanner)
 }
 
-/// All 72 scenarios, planner-selected methods, multiple seeds: clean.
+/// All 96 scenarios of the enlarged grid (Table 1's 12 configs plus the
+/// async-flush VPM rows), planner-selected methods, multiple seeds:
+/// clean.
 #[test]
-fn all_72_planned_scenarios_survive_crashes() {
-    for cfg in ServerConfig::table1() {
+fn all_planned_scenarios_survive_crashes() {
+    for cfg in ServerConfig::grid() {
         for primary in Primary::ALL {
             for mode in [AppendMode::Singleton, AppendMode::Compound] {
                 for seed in [1u64, 99, 1234] {
@@ -70,7 +73,7 @@ fn all_72_planned_scenarios_survive_crashes() {
 /// MHP methods — must stay clean).
 #[test]
 fn iwarp_planned_scenarios_survive_crashes() {
-    for pd in PDomain::ALL {
+    for pd in PDomain::ALL_EXT {
         for rq in RqwrbLoc::ALL {
             let cfg = ServerConfig::new(pd, true, rq)
                 .with_transport(Transport::Iwarp);
@@ -98,7 +101,7 @@ fn iwarp_planned_scenarios_survive_crashes() {
 /// planner's fallbacks must stay correct.
 #[test]
 fn emulated_extensions_scenarios_survive_crashes() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         let cfg = cfg.with_extensions(Extensions::Emulated);
         for mode in [AppendMode::Singleton, AppendMode::Compound] {
             let rep = run_and_sweep(

@@ -11,9 +11,9 @@
 
 use rpmem::coordinator::scaling::{
     failover_grid_to_json, group_grid_to_json, run_failover_grid,
-    run_group_grid, run_saturation_axis, run_scaling_axis, run_soak_grid,
-    run_txn_grid, scaling_to_json, soak_grid_to_json, txn_grid_to_json,
-    ScalingOpts,
+    run_group_grid, run_group_grid_over, run_saturation_axis,
+    run_scaling_axis, run_soak_grid, run_txn_grid, scaling_to_json,
+    soak_grid_to_json, txn_grid_to_json, ScalingOpts,
 };
 use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
@@ -124,6 +124,23 @@ fn group_artifact() -> String {
     group_grid_to_json(&points).to_string_pretty()
 }
 
+/// The `benches/asyncflush.rs` group-commit axis at fast-mode size:
+/// the VPM rows' flush-amortization grid.
+fn asyncflush_artifact() -> String {
+    let txns = 20;
+    let opts = ScalingOpts { capacity: txns.max(16), ..Default::default() };
+    let points = run_group_grid_over(
+        &ServerConfig::async_flush_rows(),
+        Primary::Write,
+        &[1, 4, 16],
+        &[1, 2],
+        4,
+        txns,
+        &opts,
+    );
+    group_grid_to_json(&points).to_string_pretty()
+}
+
 /// The `benches/soak.rs` path at fast-mode size: the hostile-network
 /// campaign is seeded end to end (fault draws included), so its
 /// artifact must replay byte for byte like every other bench — the
@@ -185,6 +202,14 @@ fn group_bench_path_is_byte_deterministic() {
     let b = group_artifact();
     assert!(!a.is_empty() && a.contains("amortization_factor"));
     assert_eq!(a, b, "group artifact must be byte-identical");
+}
+
+#[test]
+fn asyncflush_bench_path_is_byte_deterministic() {
+    let a = asyncflush_artifact();
+    let b = asyncflush_artifact();
+    assert!(!a.is_empty() && a.contains("VPM"));
+    assert_eq!(a, b, "asyncflush artifact must be byte-identical");
 }
 
 #[test]

@@ -42,13 +42,14 @@ fn replicated_opts(seed: u64) -> TxnRunOpts {
     }
 }
 
-/// Every Table-1 configuration: the replicated transactional runner's
-/// crash × shard-loss sweep must be clean — all-or-nothing recovery with
-/// every acked transaction intact under the loss of ANY single shard at
-/// ANY crash instant.
+/// Every configuration of the enlarged grid (Table 1 plus the
+/// async-flush VPM rows): the replicated transactional runner's crash ×
+/// shard-loss sweep must be clean — all-or-nothing recovery with every
+/// acked transaction intact under the loss of ANY single shard at ANY
+/// crash instant.
 #[test]
 fn failover_campaign_all_configs() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         let opts = replicated_opts(47);
         let (run, res) = run_txn_multi_shard(
             cfg,

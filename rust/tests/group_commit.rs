@@ -64,12 +64,13 @@ fn assert_whole_group_prefixes(run: &TxnRun, res: &GroupRunResult) {
     assert_group_boundaries(run, res, &instants);
 }
 
-/// The full campaign: all 12 taxonomy configurations × group sizes
-/// {1, 4, max} × replication on/off. Every sweep must be clean and
-/// every recoverable prefix must land on a group boundary.
+/// The full campaign: all 16 enlarged-grid configurations (Table 1 plus
+/// the async-flush VPM rows) × group sizes {1, 4, max} × replication
+/// on/off. Every sweep must be clean and every recoverable prefix must
+/// land on a group boundary.
 #[test]
 fn group_campaign_all_configs_sizes_and_replication() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for max_group in [1usize, 4, 8] {
             for replicate in [false, true] {
                 let opts = grouped_opts(max_group, replicate);

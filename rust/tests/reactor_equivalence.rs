@@ -175,9 +175,10 @@ fn assert_grouped_identical(
     }
 }
 
-/// Put runner: both append modes across all 12 taxonomy configurations,
-/// including the non-pipelinable compound configs (where the adapter
-/// must reproduce the synchronous window=batch=1 fallback).
+/// Put runner: both append modes across all 16 enlarged-grid
+/// configurations (Table 1 plus the async-flush VPM rows), including
+/// the non-pipelinable compound configs (where the adapter must
+/// reproduce the synchronous window=batch=1 fallback).
 #[test]
 fn put_adapter_is_bit_identical_on_all_taxonomy_configs() {
     let opts = ShardedRunOpts {
@@ -190,7 +191,7 @@ fn put_adapter_is_bit_identical_on_all_taxonomy_configs() {
         seed: 9,
         record: true,
     };
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for mode in [AppendMode::Singleton, AppendMode::Compound] {
             let ctx = format!("{} {}", cfg.label(), mode.name());
             let choice = MethodChoice::Planned(Primary::Write);
@@ -213,12 +214,12 @@ fn put_adapter_is_bit_identical_on_all_taxonomy_configs() {
     }
 }
 
-/// 2PC runner: atomic/replicated/independent shapes across all 12
-/// configurations — the 8-phase lockstep task must replay PREPARE,
+/// 2PC runner: atomic/replicated/independent shapes across all 16
+/// enlarged-grid configurations — the 8-phase lockstep task must replay PREPARE,
 /// DECIDE, and COMMIT at the legacy instants everywhere.
 #[test]
 fn txn_adapter_is_bit_identical_on_all_taxonomy_configs() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for (atomic, replicate) in
             [(true, false), (true, true), (false, false)]
         {
@@ -254,11 +255,11 @@ fn txn_adapter_is_bit_identical_on_all_taxonomy_configs() {
 }
 
 /// Group-commit runner: degenerate (group 1) and batched schedules,
-/// replicated and not, across all 12 configurations — including the
+/// replicated and not, across all 16 enlarged-grid configurations — including the
 /// scheduler's release decisions (`group_sizes` boundaries).
 #[test]
 fn grouped_adapter_is_bit_identical_on_all_taxonomy_configs() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for max_group in [1usize, 3] {
             for replicate in [false, true] {
                 let opts = GroupRunOpts {

@@ -20,7 +20,7 @@
 //! all 12 taxonomy configurations × 4 seeds × (drop ≥ 1% + jitter +
 //! one partition window + one churn event), every run clean.
 
-use rpmem::coordinator::scaling::run_soak_grid;
+use rpmem::coordinator::scaling::run_soak_grid_over;
 use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
 use rpmem::persist::groupcommit::GroupCommitOpts;
@@ -214,12 +214,13 @@ fn repro_broken_retry_must_fail_the_campaign() {
     assert!(line.contains("--broken-retry"));
 }
 
-/// The acceptance gate: ALL 12 taxonomy configurations × 4 seeds under
-/// the full fault mix — drops ≥ 1%, wire jitter, payload duplicates,
-/// one partition window, one churn event — and every run holds every
-/// invariant at every crash instant.
+/// The acceptance gate: ALL 16 enlarged-grid configurations (Table 1
+/// plus the async-flush VPM rows) × 4 seeds under the full fault mix —
+/// drops ≥ 1%, wire jitter, payload duplicates, one partition window,
+/// one churn event — and every run holds every invariant at every crash
+/// instant.
 #[test]
-fn full_campaign_12_configs_4_seeds_full_fault_mix_is_clean() {
+fn full_campaign_all_configs_4_seeds_full_fault_mix_is_clean() {
     let base = SoakOpts {
         clients: 2,
         shards: 3,
@@ -236,14 +237,15 @@ fn full_campaign_12_configs_4_seeds_full_fault_mix_is_clean() {
         },
         ..Default::default()
     };
-    let points = run_soak_grid(
+    let points = run_soak_grid_over(
+        &ServerConfig::grid(),
         Primary::Write,
         &[1, 2, 3, 4],
         &base,
         20,
         &TimingModel::default(),
     );
-    assert_eq!(points.len(), 48, "12 configs x 4 seeds");
+    assert_eq!(points.len(), 64, "16 configs x 4 seeds");
     for p in &points {
         assert!(
             p.clean,

@@ -8,13 +8,15 @@ use rpmem::fabric::engine::Fabric;
 use rpmem::fabric::ops::{OnRecv, OpId, OpKind, WorkRequest};
 use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig, Transport};
+use rpmem::persist::method::{PersistencePoint, Primary};
+use rpmem::persist::planner::{plan_compound, plan_singleton};
 use rpmem::persist::wire::{self, WireUpdate};
 use rpmem::server::memory::Layout;
 use rpmem::util::rng::SplitMix64;
 
 fn random_config(r: &mut SplitMix64) -> ServerConfig {
-    let pd = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp]
-        [r.next_below(3) as usize];
+    let pd = [PDomain::Dmp, PDomain::Mhp, PDomain::Wsp, PDomain::Vpm]
+        [r.next_below(4) as usize];
     let rq = [RqwrbLoc::Dram, RqwrbLoc::Pm][r.next_below(2) as usize];
     let mut cfg = ServerConfig::new(pd, r.next_below(2) == 0, rq);
     if r.next_below(4) == 0 {
@@ -233,6 +235,128 @@ fn prop_wire_roundtrip_and_corruption() {
                 m.updates, updates,
                 "case {case}: corruption at {pos} silently accepted"
             ),
+        }
+    }
+}
+
+/// The enlarged grid is exactly Table 1 plus the four async-flush VPM
+/// rows: 16 distinct configurations, the original 12 first.
+#[test]
+fn enlarged_grid_has_sixteen_distinct_configs() {
+    let grid = ServerConfig::grid();
+    assert_eq!(grid.len(), 16);
+    let labels: std::collections::HashSet<String> =
+        grid.iter().map(|c| c.label()).collect();
+    assert_eq!(labels.len(), 16, "grid labels must be distinct");
+    assert_eq!(
+        &grid[..12],
+        &ServerConfig::table1()[..],
+        "the original 12 must come first, unchanged"
+    );
+    for c in &grid[12..] {
+        assert!(c.pdomain.is_async_flush(), "{c}: tail rows must be VPM");
+    }
+}
+
+/// Every new config's planner recipe — singleton and compound, every
+/// primary, both transports — terminates at the flush-command ack: the
+/// host fsync completion is the ONLY persistence point for async-flush
+/// devices.
+#[test]
+fn vpm_recipes_end_at_flush_command_completion() {
+    for c in ServerConfig::async_flush_rows() {
+        for c in [c, c.with_transport(Transport::Iwarp)] {
+            for p in Primary::ALL {
+                let s = plan_singleton(&c, p);
+                assert_eq!(
+                    s.persistence_point(),
+                    PersistencePoint::FlushCmdAck,
+                    "{c} {p:?}"
+                );
+                assert_eq!(
+                    *s.steps().last().unwrap(),
+                    "Rq Receive(flush-ack)",
+                    "{c} {p:?}: singleton recipe must end at the flush ack"
+                );
+                let m = plan_compound(&c, p, 8);
+                assert_eq!(
+                    m.persistence_point(),
+                    PersistencePoint::FlushCmdAck,
+                    "{c} {p:?}"
+                );
+                assert_eq!(
+                    *m.steps().last().unwrap(),
+                    "Rq Receive(flush-ack)",
+                    "{c} {p:?}: compound recipe must end at the flush ack"
+                );
+            }
+        }
+    }
+}
+
+/// Bit-for-bit plan equality on the original 12: the pinned Table-2/3
+/// expectation table. Extending the taxonomy must not move a single
+/// pre-existing cell.
+#[test]
+fn original_twelve_plans_are_unchanged() {
+    use rpmem::persist::method::{CompoundMethod as C, SingletonMethod as S};
+    // (singleton Write/WriteImm/Send, compound Write/WriteImm/Send) per
+    // Table-1 row, in table1() order.
+    #[rustfmt::skip]
+    let expected: [([S; 3], [C; 3]); 12] = [
+        // DMP+DDIO+DRAM
+        ([S::WriteMsgFlushAck, S::WriteImmFlushAck, S::SendCopyFlushAck],
+         [C::WriteMsgFlushAckTwice, C::WriteImmFlushAckTwice, C::SendCopyFlushAck]),
+        // DMP+DDIO+PM
+        ([S::WriteMsgFlushAck, S::WriteImmFlushAck, S::SendCopyFlushAck],
+         [C::WriteMsgFlushAckTwice, C::WriteImmFlushAckTwice, C::SendCopyFlushAck]),
+        // DMP+¬DDIO+DRAM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendCopyFlushAck],
+         [C::WriteFlushAtomicFlush, C::WriteImmFlushWaitImmFlush, C::SendCopyFlushAck]),
+        // DMP+¬DDIO+PM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendFlush],
+         [C::WriteFlushAtomicFlush, C::WriteImmFlushWaitImmFlush, C::SendFlush]),
+        // MHP+DDIO+DRAM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendCopyAck],
+         [C::WritePipelinedFlush, C::WriteImmPipelinedFlush, C::SendCopyAck]),
+        // MHP+DDIO+PM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendFlush],
+         [C::WritePipelinedFlush, C::WriteImmPipelinedFlush, C::SendFlush]),
+        // MHP+¬DDIO+DRAM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendCopyAck],
+         [C::WritePipelinedFlush, C::WriteImmPipelinedFlush, C::SendCopyAck]),
+        // MHP+¬DDIO+PM
+        ([S::WriteFlush, S::WriteImmFlush, S::SendFlush],
+         [C::WritePipelinedFlush, C::WriteImmPipelinedFlush, C::SendFlush]),
+        // WSP+DDIO+DRAM
+        ([S::WriteComp, S::WriteImmComp, S::SendCopyAck],
+         [C::WriteWriteComp, C::WriteImmWriteImmComp, C::SendCopyAck]),
+        // WSP+DDIO+PM
+        ([S::WriteComp, S::WriteImmComp, S::SendComp],
+         [C::WriteWriteComp, C::WriteImmWriteImmComp, C::SendComp]),
+        // WSP+¬DDIO+DRAM
+        ([S::WriteComp, S::WriteImmComp, S::SendCopyAck],
+         [C::WriteWriteComp, C::WriteImmWriteImmComp, C::SendCopyAck]),
+        // WSP+¬DDIO+PM
+        ([S::WriteComp, S::WriteImmComp, S::SendComp],
+         [C::WriteWriteComp, C::WriteImmWriteImmComp, C::SendComp]),
+    ];
+    let table = ServerConfig::table1();
+    assert_eq!(table.len(), expected.len());
+    for (cfg, (singles, compounds)) in table.iter().zip(&expected) {
+        for (p, (s, c)) in
+            Primary::ALL.iter().zip(singles.iter().zip(compounds.iter()))
+        {
+            assert_eq!(
+                plan_singleton(cfg, *p),
+                *s,
+                "{cfg} {p:?}: singleton plan moved"
+            );
+            assert_eq!(
+                plan_compound(cfg, *p, 8),
+                *c,
+                "{cfg} {p:?}: compound plan moved"
+            );
         }
     }
 }

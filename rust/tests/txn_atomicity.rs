@@ -20,11 +20,12 @@ use rpmem::remotelog::pipeline::{
 use rpmem::remotelog::recovery::RustScanner;
 use rpmem::util::rng::SplitMix64;
 
-/// Every Table-1 configuration × primary: the transactional runner's
-/// crash sweep must be clean — all-or-nothing at every instant.
+/// Every configuration of the enlarged grid (Table 1 plus the
+/// async-flush VPM rows) × primary: the transactional runner's crash
+/// sweep must be clean — all-or-nothing at every instant.
 #[test]
 fn txn_campaign_all_configs_all_primaries() {
-    for cfg in ServerConfig::table1() {
+    for cfg in ServerConfig::grid() {
         for primary in Primary::ALL {
             let opts = TxnRunOpts {
                 clients: 2,
