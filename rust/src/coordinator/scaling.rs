@@ -34,6 +34,14 @@
 //!   client tasks on completion events. This is the axis that actually
 //!   reaches 1k–10k clients (`benches/reactor.rs` persists the table
 //!   and asserts throughput monotonicity along the client axis).
+//! * **contention axis** ([`run_contention_grid`]) — zipfian hot-key
+//!   races ([`crate::persist::contention`]) over θ × clients × ALL 16
+//!   grid configurations: concurrent read-modify-write transactions
+//!   claim per-key locks, losers abort and back off as reactor timer
+//!   events, winners flush through group commit — abort rate and
+//!   goodput against the θ=0 uniform baseline
+//!   (`benches/contention.rs` persists the table and asserts goodput
+//!   degrades monotonically, never to zero, as θ rises).
 //! * **soak axis** ([`run_soak_grid`]) — the hostile-network campaign:
 //!   ALL 12 taxonomy configurations × seeds, every run under a
 //!   drop/jitter/partition/churn fault schedule
@@ -45,6 +53,7 @@
 
 use crate::fabric::timing::TimingModel;
 use crate::persist::config::ServerConfig;
+use crate::persist::contention::{run_contention, ContentionOpts};
 use crate::persist::groupcommit::GroupCommitOpts;
 use crate::persist::method::Primary;
 use crate::remotelog::client::{AppendMode, MethodChoice};
@@ -1239,6 +1248,246 @@ pub fn reactor_grid_to_json(points: &[ReactorPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
+// ---------------------------------------------------------------------
+// Contention axis: zipfian hot-key races through the lock table — abort
+// rate and goodput vs the θ=0 uniform baseline.
+// ---------------------------------------------------------------------
+
+/// One (config, θ, clients) contention measurement
+/// ([`crate::persist::contention`]) against the θ=0 uniform baseline
+/// for the same (config, clients) scenario.
+#[derive(Debug, Clone)]
+pub struct ContentionPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Zipfian skew θ of the key draw (0 = uniform).
+    pub theta: f64,
+    /// Contending clients.
+    pub clients: usize,
+    /// KV shards.
+    pub shards: usize,
+    /// Committed transactions (every client finishes its quota).
+    pub committed: u64,
+    /// Conflict aborts — each later retried to commit.
+    pub aborts: u64,
+    /// Aborts per admission attempt: `aborts / (aborts + committed)`.
+    pub abort_rate: f64,
+    /// Group flushes issued (decision trains posted).
+    pub flushes: u64,
+    /// Virtual makespan (ns).
+    pub span_ns: u64,
+    /// Committed-transaction throughput (million txns per simulated
+    /// second) — aborted work earns nothing.
+    pub goodput_mtps: f64,
+    /// Goodput of the θ=0 uniform run for the same (config, clients).
+    pub uniform_mtps: f64,
+    /// Mean admission-to-ack commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 admission-to-ack commit latency (ns).
+    pub p99_commit_ns: u64,
+}
+
+impl ContentionPoint {
+    /// Goodput retained under skew: `goodput / uniform` (1.0 at θ=0,
+    /// degrading — gracefully, never to zero — as θ rises).
+    pub fn retention(&self) -> f64 {
+        self.goodput_mtps / self.uniform_mtps.max(f64::MIN_POSITIVE)
+    }
+
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("theta", self.theta.into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("committed", self.committed.into())
+            .set("aborts", self.aborts.into())
+            .set("abort_rate", self.abort_rate.into())
+            .set("flushes", self.flushes.into())
+            .set("span_ns", self.span_ns.into())
+            .set("goodput_mtps", self.goodput_mtps.into())
+            .set("uniform_mtps", self.uniform_mtps.into())
+            .set("retention", self.retention().into())
+            .set("mean_commit_ns", self.mean_commit_ns.into())
+            .set("p99_commit_ns", self.p99_commit_ns.into());
+        j
+    }
+}
+
+/// Map the sweep-wide knobs onto one contention run. Grid points run
+/// non-recording (the crash-sweep campaign in `tests/contention.rs`
+/// exercises the oracles); workload knobs beyond the swept axes keep
+/// the [`ContentionOpts`] defaults.
+fn contention_run_opts(
+    theta: f64,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> ContentionOpts {
+    ContentionOpts {
+        clients,
+        txns_per_client,
+        theta,
+        shards,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        record: false,
+        ..Default::default()
+    }
+}
+
+/// One contention measurement against a precomputed uniform baseline.
+fn contention_point(
+    cfg: ServerConfig,
+    theta: f64,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+    uniform_mtps: f64,
+) -> ContentionPoint {
+    let copts =
+        contention_run_opts(theta, clients, shards, txns_per_client, opts);
+    let run = run_contention(cfg, opts.timing.clone(), &copts);
+    let r = &run.result;
+    ContentionPoint {
+        config: cfg,
+        theta,
+        clients,
+        shards,
+        committed: r.committed,
+        aborts: r.aborts,
+        abort_rate: r.abort_rate(),
+        flushes: r.flushes,
+        span_ns: r.span_ns,
+        goodput_mtps: r.goodput_mtps(),
+        uniform_mtps,
+        mean_commit_ns: r.mean_commit_ns,
+        p99_commit_ns: r.p99_commit_ns,
+    }
+}
+
+/// The contention grid: **all 16 grid configurations** (12 taxonomy +
+/// 4 async-flush VPM rows) × every (θ, clients) combination at a fixed
+/// shard count, measured in parallel threads. The θ=0 uniform control
+/// is simulated once per (config, clients) scenario and shared across
+/// the θ axis — every point reports goodput retained against it.
+pub fn run_contention_grid(
+    thetas: &[f64],
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<ContentionPoint> {
+    run_contention_grid_over(
+        &ServerConfig::grid(),
+        thetas,
+        clients_list,
+        shards,
+        txns_per_client,
+        opts,
+    )
+}
+
+/// [`run_contention_grid`] over an explicit config set.
+pub fn run_contention_grid_over(
+    configs: &[ServerConfig],
+    thetas: &[f64],
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    opts: &ScalingOpts,
+) -> Vec<ContentionPoint> {
+    let scenarios: Vec<(ServerConfig, usize)> = configs
+        .iter()
+        .copied()
+        .flat_map(|cfg| clients_list.iter().map(move |&c| (cfg, c)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(cfg, clients)| {
+                scope.spawn(move || {
+                    let uopts = contention_run_opts(
+                        0.0,
+                        clients,
+                        shards,
+                        txns_per_client,
+                        opts,
+                    );
+                    let uniform =
+                        run_contention(cfg, opts.timing.clone(), &uopts)
+                            .result
+                            .goodput_mtps();
+                    thetas
+                        .iter()
+                        .map(|&theta| {
+                            contention_point(
+                                cfg,
+                                theta,
+                                clients,
+                                shards,
+                                txns_per_client,
+                                opts,
+                                uniform,
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("contention scenario panicked"))
+            .collect()
+    })
+}
+
+/// Render a contention grid (abort rate and goodput vs uniform).
+pub fn render_contention_grid(
+    title: &str,
+    points: &[ContentionPoint],
+) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<14} {:<6} {:<8} {:>9} {:>7} {:>7} {:>12} {:>12} {:>7}\n",
+        "config",
+        "theta",
+        "clients",
+        "committed",
+        "aborts",
+        "abort%",
+        "goodput",
+        "uniform",
+        "retain"
+    ));
+    out.push_str(&"-".repeat(90));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<14} {:<6} {:<8} {:>9} {:>7} {:>6.1}% {:>7.3} Mtps {:>7.3} \
+             Mtps {:>6.2}x\n",
+            p.config.label(),
+            p.theta,
+            p.clients,
+            p.committed,
+            p.aborts,
+            p.abort_rate * 100.0,
+            p.goodput_mtps,
+            p.uniform_mtps,
+            p.retention(),
+        ));
+    }
+    out
+}
+
+/// Serialize a contention grid for the JSON artifact.
+pub fn contention_grid_to_json(points: &[ContentionPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1526,6 +1775,59 @@ mod tests {
         assert_eq!(j.as_arr().unwrap().len(), 3);
         assert!(j.as_arr().unwrap()[0].get("events").is_some());
         assert!(render_reactor_grid("t", &pts).contains("events"));
+    }
+
+    #[test]
+    fn contention_grid_covers_points_and_shares_uniform_baseline() {
+        let configs = [
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Pmem),
+        ];
+        let opts = ScalingOpts { capacity: 64, ..Default::default() };
+        let pts = run_contention_grid_over(
+            &configs,
+            &[0.0, 0.9],
+            &[2, 4],
+            2,
+            6,
+            &opts,
+        );
+        assert_eq!(pts.len(), 2 * 2 * 2);
+        for p in &pts {
+            assert_eq!(p.committed, p.clients as u64 * 6);
+            assert!(p.goodput_mtps > 0.0);
+            assert!(p.uniform_mtps > 0.0);
+            assert!(p.retention().is_finite());
+            if p.theta == 0.0 {
+                // The θ=0 point reruns the baseline's exact parameters,
+                // so determinism makes the two bit-identical.
+                assert_eq!(
+                    p.goodput_mtps.to_bits(),
+                    p.uniform_mtps.to_bits(),
+                    "θ=0 point must match the shared uniform baseline"
+                );
+                assert!((p.retention() - 1.0).abs() < 1e-12);
+            }
+        }
+        let again = run_contention_grid_over(
+            &configs,
+            &[0.0, 0.9],
+            &[2, 4],
+            2,
+            6,
+            &opts,
+        );
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.span_ns, b.span_ns);
+            assert_eq!(a.committed, b.committed);
+            assert_eq!(a.aborts, b.aborts);
+            assert_eq!(a.goodput_mtps.to_bits(), b.goodput_mtps.to_bits());
+        }
+        let j = contention_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), pts.len());
+        assert!(j.as_arr().unwrap()[0].get("abort_rate").is_some());
+        assert!(j.as_arr().unwrap()[0].get("retention").is_some());
+        assert!(render_contention_grid("t", &pts).contains("abort%"));
     }
 
     #[test]

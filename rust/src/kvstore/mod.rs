@@ -23,10 +23,13 @@
 //! flips become the transaction's commit markers, and
 //! [`ShardedKv::recover_all_at`] resolves in-doubt transactions
 //! (presumed abort) before reading the buckets.
-//! [`ShardedKv::put_txn_grouped`] commits a *batch* of independent
-//! transactions with group commit ([`crate::persist::groupcommit`]):
-//! their decision records coalesce into shared doorbell trains, one
-//! persistence point per group.
+//! [`ShardedKv::put_txn_grouped`] commits a *batch* of transactions
+//! with group commit ([`crate::persist::groupcommit`]): their decision
+//! records coalesce into shared doorbell trains, one persistence point
+//! per group. Members racing on the same key serialize into successive
+//! conflict waves (input order preserved) instead of rejecting the
+//! batch — the contention engine ([`crate::persist::contention`])
+//! drives hot-key workloads through exactly this path.
 
 use crate::fabric::engine::Fabric;
 use crate::fabric::faults::NetworkModel;
@@ -660,19 +663,32 @@ impl ShardedKv {
     /// and a crash can only expose whole groups (the committed prefix
     /// always lands on a group boundary).
     ///
-    /// Member transactions must be **write-disjoint**: a key may appear
-    /// in only one transaction of the batch (duplicates *within* a
-    /// transaction still keep the last write). The whole batch stages
-    /// before any decision, and a key with two in-flight versions would
-    /// occupy both of its bucket's A/B slots at once — clobbering the
-    /// committed fallback slot the crash contract depends on. `put_txn`
-    /// never has this problem (one in-flight version per key at a
-    /// time), so racing writers to one key belong in separate batches.
+    /// Member transactions need **not** be write-disjoint: a batch whose
+    /// members race on the same key is split into successive
+    /// **conflict waves** — contiguous, order-preserving runs of members
+    /// that ARE pairwise write-disjoint — and each wave runs the whole
+    /// stage → PREPARE → group-decide → commit path before the next
+    /// wave stages. The constraint being serialized around is physical:
+    /// each bucket has two staged A/B slots, so a key may carry only
+    /// ONE in-flight (staged but undecided) version at a time — a
+    /// second concurrent version would clobber the committed fallback
+    /// slot the crash contract depends on. Wave `w + 1` stages only
+    /// after wave `w`'s decisions are durable and its commit flips are
+    /// posted, so the later writer's staged entry always lands in the
+    /// now-free slot and every crash instant still recovers a
+    /// committed-prefix state.
+    ///
+    /// The split is strictly order-preserving (a new wave starts at the
+    /// first member that conflicts with the *current* wave), so
+    /// conflicting members commit in input order. A fully disjoint
+    /// batch is a single wave and takes **exactly** the historical
+    /// code path — bit-identical timing, wire traffic, and acks.
     ///
     /// Returns each transaction's ack time in input order — members of
-    /// one group share it. Panics on an empty member transaction or a
-    /// key spanning transactions. `gopts.max_group == 1` is
-    /// per-transaction commit, unchanged.
+    /// one group share it, and a member in a later wave never acks
+    /// before one in an earlier wave. Panics on an empty member
+    /// transaction. `gopts.max_group == 1` is per-transaction commit,
+    /// unchanged.
     pub fn put_txn_grouped(
         &mut self,
         txns: &[Vec<(u64, Vec<u8>)>],
@@ -685,18 +701,52 @@ impl ShardedKv {
             txns.iter().all(|t| !t.is_empty()),
             "empty transaction in a commit group"
         );
-        let mut seen: std::collections::HashSet<u64> =
+        // Order-preserving conflict-wave cuts: scan in input order,
+        // start a new wave at the first member whose key set intersects
+        // the current wave's. Waves are contiguous input ranges by
+        // construction.
+        let mut wave_keys: std::collections::HashSet<u64> =
             std::collections::HashSet::new();
-        for t in txns {
-            let keys: std::collections::HashSet<u64> =
-                t.iter().map(|(k, _)| *k).collect();
-            for k in keys {
-                assert!(
-                    seen.insert(k),
-                    "key {k:#x} spans transactions in one commit-group \
-                     batch; staged A/B slots allow one in-flight version \
-                     per key"
-                );
+        let mut acks = Vec::with_capacity(txns.len());
+        let mut lo = 0usize;
+        for (i, t) in txns.iter().enumerate() {
+            if t.iter().any(|(k, _)| wave_keys.contains(k)) {
+                acks.extend(self.put_txn_grouped_disjoint(&txns[lo..i], gopts));
+                lo = i;
+                wave_keys.clear();
+            }
+            wave_keys.extend(t.iter().map(|(k, _)| *k));
+        }
+        acks.extend(self.put_txn_grouped_disjoint(&txns[lo..], gopts));
+        acks
+    }
+
+    /// One conflict wave of [`ShardedKv::put_txn_grouped`]: the
+    /// historical whole-batch group-commit path, valid only for
+    /// write-disjoint members (the wave splitter guarantees this; a
+    /// debug assert re-checks).
+    fn put_txn_grouped_disjoint(
+        &mut self,
+        txns: &[Vec<(u64, Vec<u8>)>],
+        gopts: &GroupCommitOpts,
+    ) -> Vec<Nanos> {
+        if txns.is_empty() {
+            return Vec::new();
+        }
+        #[cfg(debug_assertions)]
+        {
+            let mut seen: std::collections::HashSet<u64> =
+                std::collections::HashSet::new();
+            for t in txns {
+                let keys: std::collections::HashSet<u64> =
+                    t.iter().map(|(k, _)| *k).collect();
+                for k in keys {
+                    debug_assert!(
+                        seen.insert(k),
+                        "wave splitter produced a non-disjoint wave \
+                         (key {k:#x})"
+                    );
+                }
             }
         }
         let staged: Vec<StagedTxn> =
@@ -1537,18 +1587,97 @@ mod tests {
         assert_eq!(grouped.txns.len(), plain.txns.len());
     }
 
-    /// One key in two member transactions would stage two in-flight
-    /// versions onto the same bucket's A/B slot pair — refused.
+    /// One key in two member transactions no longer rejects the batch:
+    /// the conflicting members serialize into successive conflict
+    /// waves, committing in input order, converging to the sequential
+    /// state, and keeping every crash instant all-or-nothing with no
+    /// lost update (a recovered version always pairs with the value the
+    /// matching writer staged).
     #[test]
-    #[should_panic(expected = "spans transactions")]
-    fn grouped_batch_requires_write_disjoint_txns() {
+    fn grouped_batch_serializes_conflicting_members() {
         let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
-        let mut kv =
-            ShardedKv::new(cfg, TimingModel::default(), 64, 2, 1, false);
-        let _ = kv.put_txn_grouped(
-            &[vec![(1, b"a".to_vec())], vec![(1, b"b".to_vec())]],
-            &GroupCommitOpts::default(),
-        );
+        for replicate in [false, true] {
+            let mut kv =
+                ShardedKv::new(cfg, TimingModel::default(), 64, 3, 7, true)
+                    .with_decision_replication(replicate);
+            // Wave cuts at members 1 (key 5 repeats) and 3 (key 9
+            // repeats): waves [0..1), [1..3), [3..5).
+            let batch: Vec<Vec<(u64, Vec<u8>)>> = vec![
+                vec![(5, b"a0".to_vec()), (10, b"x".to_vec())],
+                vec![(5, b"a1".to_vec()), (11, b"y".to_vec())],
+                vec![(9, b"b0".to_vec())],
+                vec![(9, b"b1".to_vec()), (5, b"a2".to_vec())],
+                vec![(12, b"z".to_vec())],
+            ];
+            let gopts = GroupCommitOpts {
+                max_group: 4,
+                max_hold_ns: 1_000_000,
+                idle_close: true,
+            };
+            let acks = kv.put_txn_grouped(&batch, &gopts);
+            assert_eq!(acks.len(), 5);
+            // A later wave never acks before an earlier one, and the
+            // conflicting writers installed versions in input order.
+            assert!(acks[0] <= acks[1], "wave order");
+            assert!(acks[1] <= acks[3], "wave order");
+            assert!(acks[2] <= acks[3], "wave order");
+            let state = kv.recover_all_at(kv.makespan());
+            assert_eq!(state[&5], (3, b"a2".to_vec()));
+            assert_eq!(state[&9], (2, b"b1".to_vec()));
+            // Sequential per-transaction control converges to the same
+            // state.
+            let mut seq =
+                ShardedKv::new(cfg, TimingModel::default(), 64, 3, 7, true)
+                    .with_decision_replication(replicate);
+            for t in &batch {
+                seq.put_txn(t);
+            }
+            assert_eq!(
+                state,
+                seq.recover_all_at(seq.makespan()),
+                "replicate={replicate}"
+            );
+            // Crash sweep: every member stays all-or-nothing, acked
+            // members stay durable, and the racing key's recovered
+            // version always carries its own writer's value.
+            let end = kv.makespan();
+            for i in 0..=200u64 {
+                let t = end * i / 200;
+                let st = kv.recover_all_at(t);
+                for txn in &kv.txns {
+                    let vis: Vec<bool> = txn
+                        .puts
+                        .iter()
+                        .map(|&(key, version)| {
+                            st.get(&key)
+                                .map(|(v, _)| *v >= version)
+                                .unwrap_or(false)
+                        })
+                        .collect();
+                    assert!(
+                        vis.iter().all(|&v| v) || vis.iter().all(|&v| !v),
+                        "torn member txn {} at t={t}: {vis:?}",
+                        txn.txn_id
+                    );
+                    if txn.acked_at <= t {
+                        assert!(
+                            vis.iter().all(|&v| v),
+                            "acked txn {} lost at t={t}",
+                            txn.txn_id
+                        );
+                    }
+                }
+                if let Some((v, val)) = st.get(&5) {
+                    let want: &[u8] = match v {
+                        1 => b"a0",
+                        2 => b"a1",
+                        3 => b"a2",
+                        other => panic!("impossible version {other} at {t}"),
+                    };
+                    assert_eq!(val, want, "lost update on key 5 at t={t}");
+                }
+            }
+        }
     }
 
     /// The KV fault hook: every shard carries its own independently

@@ -12,6 +12,7 @@
 //! rpmem failover [...]                   replicated-decision 2PC vs plain 2PC
 //! rpmem group [...]                      group-commit vs per-txn decision grid
 //! rpmem soak [...]                       hostile-network soak campaign
+//! rpmem contend [...]                    zipfian hot-key contention grid
 //! rpmem claims [--appends N]             check §4.3/§4.4 claims
 //! rpmem crash-test [...]                 crash-consistency campaign
 //! rpmem recover-demo [--scanner xla]     crash + recovery walk-through
@@ -73,6 +74,7 @@ fn main() -> ExitCode {
         Some("failover") => cmd_failover(&flags),
         Some("group") => cmd_group(&flags),
         Some("soak") => cmd_soak(&flags),
+        Some("contend") => cmd_contend(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -133,6 +135,10 @@ COMMANDS
                 drop/jitter/partition/churn schedules with op-level
                 retry, crash-swept for the 2PC invariants; failures are
                 shrunk to a replayable minimal repro line.
+  contend       Zipfian hot-key contention grid: concurrent RMW
+                transactions race on skewed keys through the per-key
+                lock table, losers abort and retry with backoff —
+                abort rate and goodput vs the θ=0 uniform baseline.
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
   crash-test    Crash-consistency campaign over the 96 grid scenarios.
   recover-demo  Crash + recovery walk-through (XLA kernels by default).
@@ -301,6 +307,34 @@ off — so shrunk repro lines replay exactly)
                          the campaign MUST fail)
 ";
 
+const USAGE_CONTEND: &str = "\
+USAGE: rpmem contend [flags]
+
+Zipfian hot-key contention grid (persist::contention): concurrent
+read-modify-write transactions draw keys from a zipfian(theta)
+distribution and race through the per-key lock table — conflict losers
+abort (presumed-abort, nothing staged) and retry as reactor timer
+events with exponential backoff; winners flush through group commit.
+Each (config, clients) scenario is also run at theta=0 as the uniform
+control, and every point reports goodput retained against it.
+
+KNOBS
+  --thetas LIST          zipfian skews, 0 <= theta < 1
+                                                  (default: 0,0.6,0.9,0.99)
+  --clients LIST         contending client counts (default: 2,4)
+  --shards N             KV shards                (default: 2)
+  --txns N               commits per client       (default: 8)
+  --seed N               workload seed            (default: 42)
+  --configs LIST         grid row indices, 0-15   (default: all 16;
+                         12-15 are the async-flush VPM rows)
+  --json FILE            dump the grid as JSON
+
+Goodput counts committed transactions only — aborted attempts earn
+nothing, which is how skew taxes throughput. The crash-sweep campaign
+(no lost updates, no torn snapshots at any instant) lives in
+rust/tests/contention.rs; this command is the measurement surface.
+";
+
 const USAGE_CLAIMS: &str = "\
 USAGE: rpmem claims [flags]
 
@@ -363,6 +397,9 @@ fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "partition-ns", "churn-round", "churn-ns", "broken-retry",
             "points", "json",
         ],
+        "contend" => &[
+            "thetas", "clients", "shards", "txns", "seed", "configs", "json",
+        ],
         "claims" => &["appends", "json"],
         "crash-test" => &["appends", "seeds", "points", "scanner"],
         "recover-demo" => &["scanner", "appends"],
@@ -401,6 +438,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
         "failover" => Some(USAGE_FAILOVER),
         "group" => Some(USAGE_GROUP),
         "soak" => Some(USAGE_SOAK),
+        "contend" => Some(USAGE_CONTEND),
         "claims" => Some(USAGE_CLAIMS),
         "crash-test" => Some(USAGE_CRASH_TEST),
         "recover-demo" => Some(USAGE_RECOVER_DEMO),
@@ -927,6 +965,68 @@ fn cmd_soak(flags: &HashMap<String, String>) -> Result<(), String> {
         "all {} runs clean (acked => recovered, whole groups only)",
         points.len()
     );
+    Ok(())
+}
+
+/// Comma-separated f64 list flag (the zipfian θ axis).
+fn parse_f64_list(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: &[f64],
+) -> Result<Vec<f64>, String> {
+    let list: Vec<f64> = match flags.get(key) {
+        None => default.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("bad --{key}: {e}"))?,
+    };
+    if list.is_empty() {
+        return Err(format!("--{key} needs at least one entry"));
+    }
+    Ok(list)
+}
+
+fn cmd_contend(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        contention_grid_to_json, render_contention_grid,
+        run_contention_grid_over, ScalingOpts,
+    };
+    let table = ServerConfig::grid();
+    let every: Vec<u64> = (0..table.len() as u64).collect();
+    let config_ids = parse_u64_list(flags, "configs", &every)?;
+    if config_ids.iter().any(|&i| i >= table.len() as u64) {
+        return Err(format!("--configs entries must be < {}", table.len()));
+    }
+    let configs: Vec<ServerConfig> =
+        config_ids.iter().map(|&i| table[i as usize]).collect();
+    let thetas = parse_f64_list(flags, "thetas", &[0.0, 0.6, 0.9, 0.99])?;
+    if thetas.iter().any(|&t| !(0.0..1.0).contains(&t) || !t.is_finite()) {
+        return Err("--thetas entries must satisfy 0 <= theta < 1".into());
+    }
+    let clients = parse_usize_list(flags, "clients", &[2, 4])?;
+    let shards = flag_u64(flags, "shards", 2) as usize;
+    if shards == 0 {
+        return Err("--shards must be positive".into());
+    }
+    let txns = flag_u64(flags, "txns", 8);
+    if txns == 0 {
+        return Err("--txns must be positive".into());
+    }
+    let seed = flag_u64(flags, "seed", 42);
+    let opts = ScalingOpts { seed, ..Default::default() };
+    let points = run_contention_grid_over(
+        &configs, &thetas, &clients, shards, txns, &opts,
+    );
+    let title = "zipfian contention across the grid — goodput retained vs \
+                 the uniform baseline";
+    println!("{}", render_contention_grid(title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = contention_grid_to_json(&points).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,643 @@
+//! Layer 8 — the contention engine: zipfian hot-key read-modify-write
+//! workloads racing concurrent transactions on the **same** buckets,
+//! with a deterministic per-key lock table, presumed-abort losers
+//! retried through [`RetryPolicy`] backoff as reactor timer events,
+//! group-commit flushes, and committed-prefix-consistent snapshot
+//! reads.
+//!
+//! Every workload below this layer is write-disjoint by construction,
+//! so the paper's persistence methods had never been measured under the
+//! conflicts production traffic actually produces. This module closes
+//! that gap while keeping the crash story checkable at every instant:
+//!
+//! * **Workload** — each transaction is a counter increment over
+//!   `keys_per_txn` distinct keys drawn from a zipfian(θ) sampler
+//!   ([`crate::util::rng::Zipf`] through
+//!   [`crate::remotelog::pipeline::zipf_txn_keys`]). The value written
+//!   is the key's commit count, so the store carries a built-in
+//!   lost-update tripwire: at every crash instant, every recovered
+//!   version must equal its recovered counter. A stale read-modify-
+//!   write slipping past the lock table breaks that equality forever
+//!   after, and the sweep catches it
+//!   (`broken_lock_table_fails_the_sweep`).
+//!
+//! * **Lock table** — admission claims are per-key intent slots on the
+//!   requester side: a transaction may stage its PREPARE only while
+//!   holding every key it writes, which is exactly the one-in-flight-
+//!   version-per-key invariant the staged A/B bucket slots impose
+//!   physically ([`crate::kvstore::ShardedKv::put_txn_grouped`]). The
+//!   *durable* claim is the checksummed intent record the PREPARE train
+//!   persists; a loser aborts **before** staging, so there is nothing
+//!   durable to clean — the presumed-abort path
+//!   ([`crate::persist::txn`]) covers exactly the in-doubt window
+//!   between a winner's PREPARE and its decision point, and the crash
+//!   sweep drives through every instant of it.
+//!
+//! * **Abort / retry** — a loser reschedules itself as a reactor timer
+//!   event at `now + timeout_ns + backoff_ns(attempt)` (the
+//!   [`RetryPolicy`] accounting of
+//!   [`crate::persist::retry::await_with_retry`], elapsing on the one
+//!   global timeline the event heap provides, ties broken by task id).
+//!   Retries re-draw the identical key set, so they genuinely re-contend.
+//!
+//! ```text
+//!   propose ──► claim all keys? ──no──► abort, re-arm timer at
+//!      ▲              │                 now + timeout + backoff(n) ──┐
+//!      │             yes                                            │
+//!      │              ▼                                             │
+//!      │     pending group ──flush──► PREPARE → group DECIDE        │
+//!      │              (locks release at ack; commit flips lazy)     │
+//!      └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * **Flush policy** — admitted transactions batch until the group
+//!   fills (`max_group`) or the next heap event lies strictly past the
+//!   hold window (`open_ready + max_hold_ns` — the same **inclusive**
+//!   boundary [`crate::persist::groupcommit::GroupScheduler::offer`]
+//!   pins), then commit through `put_txn_grouped`. Losers never
+//!   allocate a transaction id, so the decision ring's committed prefix
+//!   never waits on an id that will never decide.
+//!
+//! * **Snapshot reads** — [`ContentionRun::snapshot_at`] recovers the
+//!   multi-key state at any instant from the crash image: the decision
+//!   ring's committed prefix is the high-water mark, so a reader
+//!   observes whole commit groups only — never a torn group, never an
+//!   aborted transaction ([`check_contention_crash_at`] proves the view
+//!   equals exactly one commit-prefix replay).
+
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::kvstore::{ShardedKv, KV_TXN_SLOTS};
+use crate::persist::config::ServerConfig;
+use crate::persist::groupcommit::GroupCommitOpts;
+use crate::persist::retry::RetryPolicy;
+use crate::remotelog::pipeline::zipf_txn_keys;
+use crate::runtime::reactor::Reactor;
+use crate::util::rng::Zipf;
+use crate::util::stats::{mean, percentile};
+use std::collections::{HashMap, HashSet};
+
+/// Knobs for one contention run.
+#[derive(Debug, Clone)]
+pub struct ContentionOpts {
+    /// Concurrent coordinators (reactor tasks).
+    pub clients: usize,
+    /// Committed transactions each client must reach.
+    pub txns_per_client: u64,
+    /// Key space size; zipfian rank 0 is the hottest key.
+    pub keys: u64,
+    /// Distinct keys per transaction.
+    pub keys_per_txn: usize,
+    /// Zipfian skew θ in `[0, 1)`; `0` is exactly uniform.
+    pub theta: f64,
+    /// KV shards (QPs).
+    pub shards: usize,
+    /// Buckets per shard.
+    pub capacity: u64,
+    /// Workload seed (key draws and fabric jitter).
+    pub seed: u64,
+    /// Keep crash oracles (required by the sweep and snapshots).
+    pub record: bool,
+    /// Mirror decision records to the witness shard.
+    pub replicate: bool,
+    /// Group-commit flush policy.
+    pub group: GroupCommitOpts,
+    /// Abort-retry backoff policy.
+    pub retry: RetryPolicy,
+    /// Negative control: skip the lock table entirely, letting stale
+    /// read-modify-writes race — the crash sweep MUST flag the lost
+    /// updates this produces.
+    pub broken_locks: bool,
+}
+
+impl Default for ContentionOpts {
+    fn default() -> Self {
+        ContentionOpts {
+            clients: 4,
+            txns_per_client: 8,
+            keys: 32,
+            keys_per_txn: 2,
+            theta: 0.9,
+            shards: 2,
+            capacity: 64,
+            seed: 7,
+            record: true,
+            replicate: false,
+            group: GroupCommitOpts::default(),
+            retry: RetryPolicy::default(),
+            broken_locks: false,
+        }
+    }
+}
+
+/// One committed transaction, in global ack order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommittedTxn {
+    /// Committing client.
+    pub client: usize,
+    /// `(key, counter value written)` — the counter is also the version
+    /// the commit installed.
+    pub keys: Vec<(u64, u64)>,
+    /// Admission instant (every key's lock claimed).
+    pub proposed_at: Nanos,
+    /// The commit group's shared decision persistence point.
+    pub acked_at: Nanos,
+    /// Aborts this transaction suffered before winning its locks.
+    pub attempts: u32,
+}
+
+/// Aggregate outcome of one contention run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContentionResult {
+    /// Clients driven.
+    pub clients: usize,
+    /// KV shards.
+    pub shards: usize,
+    /// Zipfian skew θ.
+    pub theta: f64,
+    /// Committed transactions.
+    pub committed: u64,
+    /// Conflict aborts (each later retried).
+    pub aborts: u64,
+    /// Group flushes issued.
+    pub flushes: u64,
+    /// Reactor events dispatched.
+    pub events: u64,
+    /// Virtual makespan (ns).
+    pub span_ns: Nanos,
+    /// Mean admission-to-ack commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 admission-to-ack commit latency (ns).
+    pub p99_commit_ns: u64,
+}
+
+impl ContentionResult {
+    /// Aborts per attempt: `aborts / (aborts + committed)`.
+    pub fn abort_rate(&self) -> f64 {
+        if self.aborts + self.committed == 0 {
+            return 0.0;
+        }
+        self.aborts as f64 / (self.aborts + self.committed) as f64
+    }
+
+    /// Committed-transaction throughput in million txns per simulated
+    /// second — aborted work earns nothing here, which is the point.
+    pub fn goodput_mtps(&self) -> f64 {
+        self.committed as f64 / self.span_ns.max(1) as f64 * 1e3
+    }
+}
+
+/// A finished contention run: the store (with crash oracles when
+/// recording), the commit ledger in ack order, and the exact flush
+/// batches for bit-identity replays.
+pub struct ContentionRun {
+    /// The sharded store the run committed into.
+    pub kv: ShardedKv,
+    /// Every committed transaction, global ack order.
+    pub commits: Vec<CommittedTxn>,
+    /// The exact member batches handed to `put_txn_grouped`, in flush
+    /// order (recording runs only) — replaying them on a fresh store
+    /// reproduces the run bit-for-bit.
+    pub flush_batches: Vec<Vec<Vec<(u64, Vec<u8>)>>>,
+    /// The knobs that produced this run.
+    pub opts: ContentionOpts,
+    /// Aggregate outcome.
+    pub result: ContentionResult,
+}
+
+impl ContentionRun {
+    /// Committed-prefix-consistent multi-key snapshot at virtual
+    /// instant `t`: full recovery against the crash image, so the
+    /// decision ring's committed prefix is the read's high-water mark —
+    /// the view contains whole commit groups only, never a torn group
+    /// or an aborted transaction. Recording runs only.
+    pub fn snapshot_at(&self, t: Nanos) -> HashMap<u64, (u32, Vec<u8>)> {
+        self.kv.recover_all_at(t)
+    }
+}
+
+/// A lock-holding proposal waiting in the pending flush group.
+struct Proposal {
+    client: usize,
+    keys: Vec<u64>,
+    /// Counter value read per key at proposal time (the RMW base).
+    bases: Vec<u64>,
+    ready_at: Nanos,
+    attempts: u32,
+}
+
+/// Drive one contention run to completion: every client commits
+/// `txns_per_client` transactions, racing on zipfian hot keys through
+/// the lock table, with losers backing off as reactor timer events and
+/// winners flushing through group commit. Fully deterministic from
+/// `opts` (same knobs → same commits, acks, and wire traffic).
+pub fn run_contention(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    opts: &ContentionOpts,
+) -> ContentionRun {
+    assert!(opts.clients >= 1 && opts.shards >= 1);
+    assert!(opts.txns_per_client >= 1 && opts.keys_per_txn >= 1);
+    assert!(
+        opts.keys_per_txn as u64 <= opts.keys,
+        "transactions need {} distinct keys from a space of {}",
+        opts.keys_per_txn,
+        opts.keys
+    );
+    assert!(
+        opts.keys <= opts.capacity,
+        "worst-case key routing must fit one shard's bucket array"
+    );
+    assert!(opts.group.max_group >= 1);
+    let total = opts.txns_per_client * opts.clients as u64;
+    assert!(
+        !opts.record || total <= KV_TXN_SLOTS,
+        "recording runs must fit the txn oracle rings ({total} > \
+         {KV_TXN_SLOTS})"
+    );
+
+    let zipf = Zipf::new(opts.keys, opts.theta);
+    let mut kv = ShardedKv::new(
+        cfg,
+        timing,
+        opts.capacity,
+        opts.shards,
+        opts.seed,
+        opts.record,
+    )
+    .with_decision_replication(opts.replicate);
+
+    let mut reactor = Reactor::new();
+    for c in 0..opts.clients {
+        reactor.schedule(0, c);
+    }
+    let mut next_txn = vec![0u64; opts.clients];
+    let mut attempts = vec![0u32; opts.clients];
+    let mut ledger: HashMap<u64, u64> = HashMap::new();
+    let mut locked: HashSet<u64> = HashSet::new();
+    let mut pending: Vec<Proposal> = Vec::new();
+    let mut open_ready: Nanos = 0;
+    let mut commits: Vec<CommittedTxn> = Vec::new();
+    let mut flush_batches: Vec<Vec<Vec<(u64, Vec<u8>)>>> = Vec::new();
+    let mut commit_lat: Vec<u64> = Vec::new();
+    let (mut aborts, mut flushes) = (0u64, 0u64);
+
+    loop {
+        // Flush before dispatching: the pending group releases when it
+        // fills, or when the next heap event lies strictly past the
+        // hold window (inclusive boundary, matching
+        // `GroupScheduler::offer`), or when no event remains to feed
+        // it. Lock holders always flush, so every claim releases and
+        // every aborter eventually wins: progress is unconditional.
+        let flush_now = !pending.is_empty()
+            && (pending.len() >= opts.group.max_group
+                || match reactor.peek() {
+                    None => true,
+                    Some((t, _)) => t > open_ready + opts.group.max_hold_ns,
+                });
+        if flush_now {
+            flushes += 1;
+            let batch: Vec<Vec<(u64, Vec<u8>)>> = pending
+                .iter()
+                .map(|p| {
+                    p.keys
+                        .iter()
+                        .zip(&p.bases)
+                        .map(|(&k, &b)| (k, (b + 1).to_le_bytes().to_vec()))
+                        .collect()
+                })
+                .collect();
+            let acks = kv.put_txn_grouped(&batch, &opts.group);
+            if opts.record {
+                flush_batches.push(batch);
+            }
+            for (p, &acked) in pending.iter().zip(&acks) {
+                for (&k, &b) in p.keys.iter().zip(&p.bases) {
+                    ledger.insert(k, b + 1);
+                    locked.remove(&k);
+                }
+                commits.push(CommittedTxn {
+                    client: p.client,
+                    keys: p
+                        .keys
+                        .iter()
+                        .zip(&p.bases)
+                        .map(|(&k, &b)| (k, b + 1))
+                        .collect(),
+                    proposed_at: p.ready_at,
+                    acked_at: acked,
+                    attempts: p.attempts,
+                });
+                // Two time axes meet here: `ready_at` lives on the
+                // reactor's event axis (retry backoff elapses there,
+                // consuming client patience, not wire time) while
+                // `acked` is fabric time — a post-backoff admission can
+                // therefore sit past its own ack; clamp to zero.
+                commit_lat.push(acked.saturating_sub(p.ready_at));
+                next_txn[p.client] += 1;
+                if next_txn[p.client] < opts.txns_per_client {
+                    reactor.schedule(acked, p.client);
+                }
+            }
+            pending.clear();
+            continue;
+        }
+        let Some((t, c)) = reactor.pop() else { break };
+        // Propose client c's next read-modify-write: draw its key set
+        // (identical on every retry of this txn index), then try to
+        // claim every key.
+        let keys = zipf_txn_keys(
+            &zipf,
+            opts.seed,
+            c,
+            next_txn[c],
+            opts.keys_per_txn,
+        );
+        if !opts.broken_locks && keys.iter().any(|k| locked.contains(k)) {
+            // Conflict: abort (nothing was staged, so nothing durable
+            // exists to clean — presumed abort for free) and re-arm as
+            // a timer event on the global timeline.
+            aborts += 1;
+            let a = attempts[c];
+            attempts[c] = attempts[c].saturating_add(1);
+            reactor
+                .schedule(t + opts.retry.timeout_ns + opts.retry.backoff_ns(a), c);
+            continue;
+        }
+        if !opts.broken_locks {
+            for &k in &keys {
+                locked.insert(k);
+            }
+        }
+        if pending.is_empty() {
+            open_ready = t;
+        }
+        let bases: Vec<u64> =
+            keys.iter().map(|k| ledger.get(k).copied().unwrap_or(0)).collect();
+        pending.push(Proposal {
+            client: c,
+            keys,
+            bases,
+            ready_at: t,
+            attempts: attempts[c],
+        });
+        attempts[c] = 0;
+    }
+    debug_assert!(pending.is_empty() && locked.is_empty());
+    debug_assert_eq!(commits.len() as u64, total);
+
+    let result = ContentionResult {
+        clients: opts.clients,
+        shards: opts.shards,
+        theta: opts.theta,
+        committed: commits.len() as u64,
+        aborts,
+        flushes,
+        events: reactor.events_dispatched(),
+        span_ns: kv.makespan(),
+        mean_commit_ns: mean(&commit_lat),
+        p99_commit_ns: percentile(&commit_lat, 0.99),
+    };
+    ContentionRun { kv, commits, flush_batches, opts: opts.clone(), result }
+}
+
+/// Audit one crash instant of a recording run. Three independent
+/// guarantees, violated ⇒ `Err` describing the failure:
+///
+/// 1. **No lost update** — the workload writes commit counters, so
+///    every recovered key's version must equal its counter; a stale
+///    read-modify-write that slipped past the lock table breaks this
+///    equality permanently.
+/// 2. **Exactly one commit-prefix** — the recovered state must equal
+///    the replay of exactly ONE prefix of the global commit order
+///    (prefix states are pairwise distinct, so at most one can match;
+///    zero matches means a torn group, a half-applied transaction, or
+///    an aborted transaction made visible).
+/// 3. **Durability** — the matched prefix must contain every commit
+///    acked at or before `t`.
+pub fn check_contention_crash_at(
+    run: &ContentionRun,
+    t: Nanos,
+) -> Result<(), String> {
+    let state = run.snapshot_at(t);
+    for (k, (v, val)) in &state {
+        let bytes: [u8; 8] = val.as_slice().try_into().map_err(|_| {
+            format!("key {k}: {}-byte value is not a counter at t={t}", val.len())
+        })?;
+        let counter = u64::from_le_bytes(bytes);
+        if counter != *v as u64 {
+            return Err(format!(
+                "lost update on key {k}: version {v} carries counter \
+                 {counter} at t={t}"
+            ));
+        }
+    }
+    let mut replay: HashMap<u64, (u32, Vec<u8>)> = HashMap::new();
+    let mut matched: Option<usize> = None;
+    let mut matches = 0u32;
+    if state == replay {
+        matches += 1;
+        matched = Some(0);
+    }
+    for (j, ctx) in run.commits.iter().enumerate() {
+        for &(k, counter) in &ctx.keys {
+            let e = replay.entry(k).or_insert((0, Vec::new()));
+            e.0 += 1;
+            e.1 = counter.to_le_bytes().to_vec();
+        }
+        if state == replay {
+            matches += 1;
+            matched = Some(j + 1);
+        }
+    }
+    if matches != 1 {
+        return Err(format!(
+            "state at t={t} matches {matches} commit prefixes (want \
+             exactly 1): torn group, partial txn, or visible abort"
+        ));
+    }
+    let acked = run.commits.iter().filter(|c| c.acked_at <= t).count();
+    if matched.unwrap_or(0) < acked {
+        return Err(format!(
+            "durability hole at t={t}: {acked} commits acked but only \
+             prefix {} recovered",
+            matched.unwrap_or(0)
+        ));
+    }
+    Ok(())
+}
+
+/// Sweep `points + 1` uniformly spaced crash instants over the run's
+/// makespan, plus adversarial instants at every commit's ack ± 1 ns,
+/// returning every violation [`check_contention_crash_at`] finds (empty
+/// = the run survives every crash).
+pub fn contention_sweep(run: &ContentionRun, points: u64) -> Vec<String> {
+    let end = run.kv.makespan();
+    let mut ts: Vec<Nanos> =
+        (0..=points).map(|i| end * i / points.max(1)).collect();
+    for c in &run.commits {
+        ts.push(c.acked_at.saturating_sub(1));
+        ts.push(c.acked_at);
+        ts.push(c.acked_at + 1);
+    }
+    ts.sort_unstable();
+    ts.dedup();
+    ts.into_iter()
+        .filter_map(|t| check_contention_crash_at(run, t).err())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+
+    fn cfg() -> ServerConfig {
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    #[test]
+    fn commits_everything_and_is_deterministic() {
+        let opts = ContentionOpts::default();
+        let a = run_contention(cfg(), TimingModel::default(), &opts);
+        let b = run_contention(cfg(), TimingModel::default(), &opts);
+        assert_eq!(
+            a.result.committed,
+            opts.clients as u64 * opts.txns_per_client
+        );
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.commits, b.commits);
+        assert_eq!(a.flush_batches, b.flush_batches);
+        // Acks are globally non-decreasing.
+        for w in a.commits.windows(2) {
+            assert!(w[0].acked_at <= w[1].acked_at);
+        }
+    }
+
+    #[test]
+    fn hot_keys_abort_and_sweep_stays_clean() {
+        let opts = ContentionOpts {
+            clients: 6,
+            txns_per_client: 6,
+            keys: 4,
+            keys_per_txn: 2,
+            theta: 0.95,
+            ..Default::default()
+        };
+        let run = run_contention(cfg(), TimingModel::default(), &opts);
+        assert!(run.result.aborts > 0, "hot keys must produce conflicts");
+        assert!(run.result.abort_rate() > 0.0);
+        let violations = contention_sweep(&run, 120);
+        assert!(violations.is_empty(), "{violations:?}");
+        // Every commit carries the lost-update tripwire: final counters
+        // equal final versions and total commits per key.
+        let end = run.snapshot_at(run.kv.makespan());
+        let mut per_key: HashMap<u64, u64> = HashMap::new();
+        for c in &run.commits {
+            for &(k, _) in &c.keys {
+                *per_key.entry(k).or_insert(0) += 1;
+            }
+        }
+        for (k, n) in per_key {
+            let (v, val) = &end[&k];
+            assert_eq!(*v as u64, n, "key {k}");
+            assert_eq!(val, &n.to_le_bytes().to_vec(), "key {k}");
+        }
+    }
+
+    #[test]
+    fn broken_lock_table_fails_the_sweep() {
+        let opts = ContentionOpts {
+            clients: 4,
+            txns_per_client: 2,
+            keys: 1,
+            keys_per_txn: 1,
+            theta: 0.0,
+            broken_locks: true,
+            ..Default::default()
+        };
+        let run = run_contention(cfg(), TimingModel::default(), &opts);
+        let violations = contention_sweep(&run, 60);
+        assert!(
+            !violations.is_empty(),
+            "a lock table that admits everyone must lose updates"
+        );
+        assert!(
+            violations.iter().any(|v| v.contains("lost update")),
+            "{violations:?}"
+        );
+    }
+
+    #[test]
+    fn snapshots_are_prefix_consistent_everywhere() {
+        let opts = ContentionOpts { clients: 3, ..Default::default() };
+        let run = run_contention(cfg(), TimingModel::default(), &opts);
+        // The final snapshot equals the full-commit replay.
+        let end = run.snapshot_at(run.kv.makespan());
+        let mut replay: HashMap<u64, (u32, Vec<u8>)> = HashMap::new();
+        for c in &run.commits {
+            for &(k, counter) in &c.keys {
+                let e = replay.entry(k).or_insert((0, Vec::new()));
+                e.0 += 1;
+                e.1 = counter.to_le_bytes().to_vec();
+            }
+        }
+        assert_eq!(end, replay);
+        // Mid-run snapshots each match exactly one prefix (the checker
+        // errors otherwise).
+        let span = run.kv.makespan();
+        for i in 0..=40u64 {
+            check_contention_crash_at(&run, span * i / 40).unwrap();
+        }
+    }
+
+    #[test]
+    fn unit_group_uniform_replays_bit_identical() {
+        // θ=0 with max_group=1 and disjoint-by-luck key draws: the run
+        // is a pure sequence of `put_txn_grouped` calls, so replaying
+        // the recorded flush batches on a fresh store must reproduce
+        // every ack and the makespan bit-for-bit.
+        let opts = ContentionOpts {
+            clients: 3,
+            txns_per_client: 5,
+            theta: 0.0,
+            group: GroupCommitOpts { max_group: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let run = run_contention(cfg(), TimingModel::default(), &opts);
+        let mut fresh = ShardedKv::new(
+            cfg(),
+            TimingModel::default(),
+            opts.capacity,
+            opts.shards,
+            opts.seed,
+            opts.record,
+        )
+        .with_decision_replication(opts.replicate);
+        let mut acks = Vec::new();
+        for batch in &run.flush_batches {
+            acks.extend(fresh.put_txn_grouped(batch, &opts.group));
+        }
+        let want: Vec<Nanos> =
+            run.commits.iter().map(|c| c.acked_at).collect();
+        assert_eq!(acks, want, "replay must reproduce every ack");
+        assert_eq!(fresh.makespan(), run.kv.makespan());
+        assert_eq!(
+            fresh.recover_all_at(fresh.makespan()),
+            run.snapshot_at(run.kv.makespan())
+        );
+    }
+
+    #[test]
+    fn replicated_contention_survives_the_sweep() {
+        let opts = ContentionOpts {
+            replicate: true,
+            shards: 3,
+            theta: 0.9,
+            ..Default::default()
+        };
+        let run = run_contention(cfg(), TimingModel::default(), &opts);
+        assert!(run.kv.replicated());
+        let violations = contention_sweep(&run, 80);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

@@ -139,6 +139,14 @@ impl GroupScheduler {
     /// * the offer's readiness breached the hold window — the pending
     ///   group closes *without* it at timer expiry
     ///   (`open + max_hold_ns`), and the offer opens the next group.
+    ///
+    /// The hold window is **inclusive**: an offer whose readiness lands
+    /// *exactly* on `open_ready + max_hold_ns` still joins the open
+    /// group; the first readiness strictly past expiry breaches. The
+    /// boundary is part of the scheduler's contract (pinned by the
+    /// `hold_boundary_is_inclusive` regression test) — were it
+    /// comparison-dependent, one-nanosecond timing shifts would flip
+    /// group composition and break byte-determinism replays.
     pub fn offer(
         &mut self,
         txn_id: u64,
@@ -166,6 +174,9 @@ impl GroupScheduler {
         if ready_at > self.open_ready + self.opts.max_hold_ns {
             // The hold timer expired before this request was ready: the
             // open group releases at expiry; the offer starts the next.
+            // Strictly-greater on purpose — readiness exactly AT expiry
+            // joins the open group (inclusive window; see the `offer`
+            // docs and the boundary regression test).
             let closed = PlannedGroup {
                 first,
                 len: self.len,
@@ -346,6 +357,51 @@ mod tests {
         assert_eq!(s.pending(), 1);
         let g = s.drain().expect("partial group drains");
         assert_eq!(g, PlannedGroup { first: 2, len: 1, release_at: 200 });
+    }
+
+    /// Regression pin for the hold-timer boundary: an offer whose
+    /// readiness lands EXACTLY on `open_ready + max_hold_ns` must land
+    /// deterministically in the open group (the window is inclusive);
+    /// one nanosecond later must breach and close the pending group at
+    /// expiry. Group composition at the boundary is contract, not a
+    /// comparison accident.
+    #[test]
+    fn hold_boundary_is_inclusive() {
+        let opts = GroupCommitOpts {
+            max_group: 8,
+            max_hold_ns: 50,
+            idle_close: true,
+        };
+        // Exactly at expiry (100 + 50): joins.
+        let mut s = GroupScheduler::new(opts);
+        assert_eq!(s.offer(0, 100), None);
+        assert_eq!(s.offer(1, 150), None, "boundary offer must join");
+        assert_eq!(s.pending(), 2);
+        assert_eq!(
+            s.drain(),
+            Some(PlannedGroup { first: 0, len: 2, release_at: 150 })
+        );
+        // One past expiry: breaches — the pending group closes at
+        // expiry WITHOUT the offer, which opens the next group.
+        let mut s = GroupScheduler::new(opts);
+        assert_eq!(s.offer(0, 100), None);
+        let g = s.offer(1, 151).expect("boundary+1 must breach");
+        assert_eq!(g, PlannedGroup { first: 0, len: 1, release_at: 150 });
+        assert_eq!(s.pending(), 1);
+        assert_eq!(
+            s.drain(),
+            Some(PlannedGroup { first: 1, len: 1, release_at: 151 })
+        );
+        // The boundary member's readiness also sets the release time
+        // when it is the latest member (idle close).
+        let mut s = GroupScheduler::new(opts);
+        assert_eq!(s.offer(0, 100), None);
+        assert_eq!(s.offer(1, 120), None);
+        assert_eq!(s.offer(2, 150), None, "boundary joins a longer group");
+        assert_eq!(
+            s.drain(),
+            Some(PlannedGroup { first: 0, len: 3, release_at: 150 })
+        );
     }
 
     #[test]

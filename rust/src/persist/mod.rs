@@ -10,9 +10,14 @@
 //! persistence across concurrent transactions — one doorbell train and
 //! one shared persistence point per group — and the retry engine
 //! ([`retry`]) that re-posts idempotent trains lost to a hostile
-//! network until 2PC either completes or aborts cleanly.
+//! network until 2PC either completes or aborts cleanly. The contention
+//! engine ([`contention`]) races concurrent transactions on zipfian hot
+//! keys through a per-key lock table, aborted losers backing off as
+//! reactor timer events, with crash sweeps proving no lost update and
+//! committed-prefix-consistent snapshot reads.
 
 pub mod config;
+pub mod contention;
 pub mod exec;
 pub mod failover;
 pub mod groupcommit;
@@ -24,6 +29,10 @@ pub mod txn;
 pub mod wire;
 
 pub use config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
+pub use contention::{
+    check_contention_crash_at, contention_sweep, run_contention,
+    CommittedTxn, ContentionOpts, ContentionResult, ContentionRun,
+};
 pub use exec::{exec_compound, exec_singleton, PersistOutcome, Update};
 pub use failover::{recover_decisions_merged, witness_for, DecisionPair};
 pub use groupcommit::{

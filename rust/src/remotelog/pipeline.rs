@@ -52,7 +52,7 @@ use crate::remotelog::log::{
 };
 use crate::remotelog::recovery::{recover, Scanner};
 use crate::server::memory::Layout;
-use crate::util::rng::{mix, SplitMix64};
+use crate::util::rng::{mix, SplitMix64, Zipf};
 use crate::util::stats::Histogram;
 use std::collections::VecDeque;
 
@@ -889,6 +889,52 @@ pub(crate) fn txn_payload(client: u64, shard: u64, txn: u64) -> [u32; APP_WORDS]
         *w = (salt as u32).wrapping_add(k as u32 * 0x85EB_CA6B);
     }
     app
+}
+
+/// Deterministic per-`(seed, client, txn_index)` zipfian key set: the
+/// hot-key workload trace feeding the contention engine
+/// ([`crate::persist::contention`]). The draw is a pure function of its
+/// arguments — a transaction that aborts and retries re-draws the
+/// **identical** key set (the retry contends for the same locks, as a
+/// real re-execution would), and different clients' streams decorrelate
+/// through the salt. Keys within one set are distinct: a duplicate
+/// draw retries from the stream up to a bound, then falls back to a
+/// deterministic linear probe over the rank space, so any
+/// `keys_per_txn <= zipf.n()` yields a full set.
+pub fn zipf_txn_keys(
+    zipf: &Zipf,
+    seed: u64,
+    client: usize,
+    txn_index: u64,
+    keys_per_txn: usize,
+) -> Vec<u64> {
+    assert!(
+        keys_per_txn as u64 <= zipf.n(),
+        "transaction wants {keys_per_txn} distinct keys from a space of {}",
+        zipf.n()
+    );
+    let mut rng = SplitMix64::new(mix(
+        seed ^ (client as u64).wrapping_mul(0xC0AB_17E5)
+            ^ txn_index.wrapping_mul(0x9E37_79B9),
+    ));
+    let mut keys: Vec<u64> = Vec::with_capacity(keys_per_txn);
+    let mut redraws = 0usize;
+    while keys.len() < keys_per_txn {
+        let mut k = zipf.sample(&mut rng);
+        if keys.contains(&k) {
+            redraws += 1;
+            if redraws <= 16 * keys_per_txn {
+                continue;
+            }
+            // Bounded redraws exhausted (pathological skew): probe to
+            // the next free rank deterministically.
+            while keys.contains(&k) {
+                k = (k + 1) % zipf.n();
+            }
+        }
+        keys.push(k);
+    }
+    keys
 }
 
 /// Build the N-QP fabric and per-coordinator region maps shared by the

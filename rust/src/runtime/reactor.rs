@@ -139,15 +139,37 @@ impl Reactor {
         self.dispatched
     }
 
+    /// The earliest pending event as `(key, task)`, without removing it.
+    /// Ties on `key` resolve to the **lowest task id** — the same total
+    /// order [`Reactor::pop`] dispatches in — so a caller deciding
+    /// whether to act now or wait for the next event (e.g. the
+    /// contention engine's group-flush policy) sees exactly the event
+    /// that would dispatch next.
+    pub fn peek(&self) -> Option<(Nanos, TaskId)> {
+        self.heap.peek().map(|&Reverse((key, task))| (key, task))
+    }
+
+    /// Remove and return the earliest pending event as `(key, task)`,
+    /// counting it as dispatched. Same-key events pop in **task-id
+    /// order** (lowest first): the heap orders on the full `(key, task)`
+    /// tuple, never on `key` alone, so two tasks completing at the same
+    /// virtual instant dispatch in one deterministic order on every run
+    /// — the property the byte-determinism double-runs at 10k clients
+    /// rely on (pinned by `pop_breaks_same_key_ties_by_task_id`).
+    pub fn pop(&mut self) -> Option<(Nanos, TaskId)> {
+        let Reverse((key, task)) = self.heap.pop()?;
+        self.dispatched += 1;
+        Some((key, task))
+    }
+
     /// Run the loop to quiescence: pop the earliest event, dispatch it
     /// to `step`, re-arm per the returned [`Step`]. Deterministic by
-    /// construction — the heap orders on `(key, task)` and every
+    /// construction — [`Reactor::pop`] orders on `(key, task)` and every
     /// rescheduling decision is the task's own.
     pub fn drive(&mut self, mut step: impl FnMut(TaskId, Nanos) -> Step) {
-        while let Some(Reverse((key, task))) = self.heap.pop() {
-            self.dispatched += 1;
+        while let Some((key, task)) = self.pop() {
             match step(task, key) {
-                Step::Runnable(next) => self.heap.push(Reverse((next, task))),
+                Step::Runnable(next) => self.schedule(next, task),
                 Step::Done => {}
             }
         }
@@ -1698,6 +1720,93 @@ mod tests {
         });
         assert_eq!(order, vec![(2, 3), (5, 0), (5, 2), (7, 3), (9, 1)]);
         assert_eq!(r.events_dispatched(), 5);
+    }
+
+    /// Tie audit for the completion-keyed schedule: many tasks armed at
+    /// the SAME key, inserted in adversarial (descending, interleaved)
+    /// orders, must pop in task-id order — and `peek` must always agree
+    /// with the following `pop`. Without the `(key, task)` tuple order
+    /// the binary heap's same-key order would depend on insertion
+    /// history and sift paths, and the 10k-client byte-determinism
+    /// double-run could flake.
+    #[test]
+    fn pop_breaks_same_key_ties_by_task_id() {
+        // Descending insertion.
+        let mut r = Reactor::new();
+        for task in (0..64).rev() {
+            r.schedule(100, task);
+        }
+        for want in 0..64 {
+            assert_eq!(r.peek(), Some((100, want)), "peek==next pop");
+            assert_eq!(r.pop(), Some((100, want)));
+        }
+        assert_eq!(r.pop(), None);
+        assert_eq!(r.peek(), None);
+        assert_eq!(r.events_dispatched(), 64);
+
+        // Interleaved insertion across two tied keys, plus re-arms INTO
+        // the tied key while it is draining.
+        let mut r = Reactor::new();
+        for i in 0..32 {
+            let t = (i * 17) % 32; // coprime stride: a scrambled permutation
+            r.schedule(7, t);
+            r.schedule(5, 31 - t);
+        }
+        let mut order = Vec::new();
+        r.drive(|task, key| {
+            order.push((key, task));
+            // Every key-5 dispatch of an even task re-arms at key 7,
+            // landing in the middle of key 7's already-armed tie set.
+            if key == 5 && task % 2 == 0 {
+                Step::Runnable(7)
+            } else {
+                Step::Done
+            }
+        });
+        // All key-5 events first (task order), then all key-7 events
+        // (task order, with the re-armed evens interleaved by id).
+        let fives: Vec<_> = order.iter().filter(|e| e.0 == 5).collect();
+        let sevens: Vec<_> = order.iter().filter(|e| e.0 == 7).collect();
+        assert_eq!(fives.len(), 32);
+        assert_eq!(sevens.len(), 32 + 16);
+        assert!(fives.windows(2).all(|w| w[0].1 < w[1].1));
+        assert!(sevens.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert!(
+            order.iter().position(|e| e.0 == 7).unwrap() == 32,
+            "no key-7 event may dispatch before key 5 drains"
+        );
+    }
+
+    /// Tie-heavy free-running double run: zero-jitter timing plus
+    /// clients ≫ shards makes same-instant completion milestones the
+    /// common case (every client sharing a QP sees identical virtual
+    /// clocks), so this exercises the heap's tie path on nearly every
+    /// dispatch. Two runs must agree byte-for-byte.
+    #[test]
+    fn free_running_tie_heavy_double_run_is_identical() {
+        let opts = ShardedRunOpts {
+            clients: 24,
+            shards: 2,
+            window: 2,
+            batch: 1,
+            appends_per_client: 12,
+            capacity: 16,
+            seed: 0, // zero payload jitter path
+            record: true,
+        };
+        let mk = || {
+            run_reactor_free(
+                cfg(),
+                TimingModel::deterministic(),
+                AppendMode::Singleton,
+                MethodChoice::Planned(Primary::Write),
+                &opts,
+            )
+        };
+        let (run_a, res_a, events_a) = mk();
+        let (run_b, res_b, events_b) = mk();
+        assert_eq!(events_a, events_b);
+        assert_put_equal(&(run_a, res_a), &(run_b, res_b));
     }
 
     fn assert_put_equal(

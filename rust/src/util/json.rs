@@ -93,7 +93,13 @@ impl Json {
                 let _ = write!(out, "{b}");
             }
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                if !n.is_finite() {
+                    // NaN/±Inf have no JSON spelling — `write!("{n}")`
+                    // would emit literal `NaN`/`inf` and corrupt the
+                    // artifact. Render `null` so the document stays
+                    // parseable and the bad sample is visible.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -397,6 +403,21 @@ mod tests {
         let j = Json::Str("a\"b\\c\nd".into());
         let back = parse(&j.to_string_pretty()).unwrap();
         assert_eq!(back, j);
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        // A NaN ratio (0/0 from an empty sample) must never produce an
+        // unparseable artifact: the writer emits `null` instead.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string_pretty(), "null");
+        }
+        let mut j = Json::obj();
+        j.set("ok", 1.5.into()).set("bad", Json::Num(f64::NAN));
+        let text = j.to_string_pretty();
+        let back = parse(&text).expect("artifact must stay parseable");
+        assert_eq!(back.get("bad"), Some(&Json::Null));
+        assert_eq!(back.get("ok").and_then(Json::as_f64), Some(1.5));
     }
 
     #[test]

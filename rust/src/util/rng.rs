@@ -47,6 +47,81 @@ impl SplitMix64 {
     }
 }
 
+/// Zipfian(θ) rank sampler over `[0, n)` — the hot-key workload
+/// generator (Gray et al., "Quickly generating billion-record synthetic
+/// databases", SIGMOD'94; the same construction YCSB uses). Rank 0 is
+/// the hottest key and popularity falls off as `1/rank^θ`.
+///
+/// Two pinned endpoints:
+///
+/// * `theta == 0.0` is **exactly** the uniform sampler — it delegates to
+///   [`SplitMix64::next_below`], so a θ=0 workload replays an existing
+///   uniform workload bit-for-bit (the contention grid's baseline
+///   column depends on this).
+/// * `theta → 1` concentrates mass on the head; `0.99` is the classic
+///   YCSB hot-key default.
+///
+/// Sampling is a pure function of the generator stream: same seed, same
+/// (n, θ) → same rank sequence. Construction is O(n) (the harmonic
+/// normalizer is summed in a fixed order, so it is bit-deterministic).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    half_pow_theta: f64,
+}
+
+impl Zipf {
+    /// Sampler over ranks `[0, n)` with skew `theta ∈ [0, 1)`.
+    /// (θ = 1 makes the inverse-CDF exponent diverge — the classic
+    /// generator is defined for θ strictly below 1.)
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n >= 1, "zipf needs a non-empty rank space");
+        assert!(
+            theta.is_finite() && (0.0..1.0).contains(&theta),
+            "zipf skew must satisfy 0 <= theta < 1, got {theta}"
+        );
+        let zetan: f64 = (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+        let zeta2 = 1.0 + 0.5f64.powf(theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta))
+            / (1.0 - zeta2 / zetan);
+        Zipf { n, theta, alpha, zetan, eta, half_pow_theta: 0.5f64.powf(theta) }
+    }
+
+    /// Rank space size.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Skew parameter θ.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Draw the next rank in `[0, n)` from `rng`'s stream.
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        if self.theta == 0.0 {
+            return rng.next_below(self.n);
+        }
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + self.half_pow_theta {
+            return 1;
+        }
+        let rank = (self.n as f64
+            * (self.eta * u - self.eta + 1.0).powf(self.alpha))
+            as u64;
+        rank.min(self.n - 1)
+    }
+}
+
 /// SplitMix64 finalizer as a stateless hash: good avalanche, used for
 /// per-op jitter so each op's jitter is a pure function of (seed, op id) —
 /// replayable regardless of evaluation order.
@@ -124,5 +199,78 @@ mod tests {
         // Not all-equal across keys (avalanche sanity).
         let vals: Vec<u64> = (0..32).map(|k| jitter(11, k, 1000)).collect();
         assert!(vals.iter().any(|&v| v != vals[0]));
+    }
+
+    #[test]
+    fn zipf_deterministic_and_in_range() {
+        for theta in [0.0, 0.5, 0.99] {
+            let z = Zipf::new(64, theta);
+            let mut a = SplitMix64::new(42);
+            let mut b = SplitMix64::new(42);
+            for _ in 0..500 {
+                let ra = z.sample(&mut a);
+                assert_eq!(ra, z.sample(&mut b), "theta={theta}");
+                assert!(ra < 64);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_theta_zero_is_exactly_uniform() {
+        // Not statistically uniform — bit-for-bit the `next_below`
+        // stream, so a θ=0 workload replays a uniform one identically.
+        let z = Zipf::new(1000, 0.0);
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert_eq!(z.sample(&mut a), b.next_below(1000));
+        }
+    }
+
+    #[test]
+    fn zipf_high_theta_concentrates_on_head() {
+        let n = 100u64;
+        let draws = 20_000usize;
+        let mut counts = vec![0u64; n as usize];
+        let z = Zipf::new(n, 0.99);
+        let mut r = SplitMix64::new(3);
+        for _ in 0..draws {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Rank 0 far above the uniform expectation (200 per rank).
+        assert!(counts[0] > 1000, "head count {}", counts[0]);
+        // The hottest 10% of ranks carry the majority of the draws.
+        let head: u64 = counts[..10].iter().sum();
+        assert!(
+            head * 2 > draws as u64,
+            "top-10 ranks got {head}/{draws}"
+        );
+        // A uniform control does neither.
+        let mut ucounts = vec![0u64; n as usize];
+        let u = Zipf::new(n, 0.0);
+        let mut r = SplitMix64::new(3);
+        for _ in 0..draws {
+            ucounts[u.sample(&mut r) as usize] += 1;
+        }
+        let uhead: u64 = ucounts[..10].iter().sum();
+        assert!(uhead * 2 < draws as u64, "uniform head {uhead}");
+        // Every rank of the uniform control lands near expectation.
+        for (i, &c) in ucounts.iter().enumerate() {
+            assert!(
+                (100..=320).contains(&c),
+                "uniform rank {i} count {c} far from 200"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_singleton_space_always_zero() {
+        for theta in [0.0, 0.9] {
+            let z = Zipf::new(1, theta);
+            let mut r = SplitMix64::new(5);
+            for _ in 0..50 {
+                assert_eq!(z.sample(&mut r), 0);
+            }
+        }
     }
 }

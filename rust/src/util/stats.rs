@@ -1,4 +1,34 @@
-//! Latency statistics: streaming summary + fixed-resolution histogram.
+//! Latency statistics: streaming summary + fixed-resolution histogram,
+//! plus total-function `mean`/`percentile` helpers for ad-hoc sample
+//! slices (bench table columns) — defined on empty and single-element
+//! input, so no `NaN` can ever reach a JSON artifact.
+
+/// Arithmetic mean of a sample slice as a **total function**: an empty
+/// slice is `0.0` (never `NaN` — `0/0` through naive `sum/len` would
+/// serialize as invalid JSON), a single element is itself.
+pub fn mean(samples: &[u64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let sum: u128 = samples.iter().map(|&v| v as u128).sum();
+    sum as f64 / samples.len() as f64
+}
+
+/// Nearest-rank percentile of a sample slice (`q` in `[0, 1]`; out of
+/// range — including non-finite — is clamped). Total function: an empty
+/// slice is `0`, a single element is itself, `q = 0` is the minimum and
+/// `q = 1` the maximum. Sorts a copy; fine for bench-table sizes.
+pub fn percentile(samples: &[u64], q: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 0.0 };
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let rank = ((q * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1]
+}
 
 /// Streaming summary statistics over `u64` samples (latencies in ns).
 #[derive(Debug, Clone, Default)]
@@ -218,6 +248,34 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.summary().count(), 2);
         assert_eq!(a.summary().max(), 200);
+    }
+
+    #[test]
+    fn free_mean_edge_cases() {
+        assert_eq!(mean(&[]), 0.0, "empty sample must not be NaN");
+        assert!(mean(&[]).is_finite());
+        assert_eq!(mean(&[7]), 7.0);
+        assert_eq!(mean(&[1, 2, 3, 4]), 2.5);
+        // Large values: u128 accumulator, no overflow.
+        assert_eq!(mean(&[u64::MAX, u64::MAX]), u64::MAX as f64);
+    }
+
+    #[test]
+    fn free_percentile_edge_cases() {
+        assert_eq!(percentile(&[], 0.99), 0, "empty sample is 0");
+        assert_eq!(percentile(&[42], 0.0), 42);
+        assert_eq!(percentile(&[42], 0.5), 42);
+        assert_eq!(percentile(&[42], 1.0), 42);
+        let s = [10u64, 20, 30, 40, 50];
+        assert_eq!(percentile(&s, 0.0), 10);
+        assert_eq!(percentile(&s, 0.5), 30);
+        assert_eq!(percentile(&s, 1.0), 50);
+        // Unsorted input sorts internally.
+        assert_eq!(percentile(&[50, 10, 30], 1.0), 50);
+        // Out-of-range and non-finite q clamp instead of panicking.
+        assert_eq!(percentile(&s, 2.0), 50);
+        assert_eq!(percentile(&s, -1.0), 10);
+        assert_eq!(percentile(&s, f64::NAN), 10);
     }
 
     #[test]

@@ -31,6 +31,7 @@ fn bare_invocation_and_help_list_every_command() {
             "failover",
             "group",
             "soak",
+            "contend",
             "claims",
             "crash-test",
             "recover-demo",
@@ -47,7 +48,7 @@ fn bare_invocation_and_help_list_every_command() {
 #[test]
 fn per_command_help_lists_the_knobs() {
     // (command, flags its usage text must name)
-    let cases: [(&str, &[&str]); 8] = [
+    let cases: [(&str, &[&str]); 9] = [
         ("scale", &["--clients", "--shards", "--window", "--batch"]),
         ("reactor", &["--clients", "--window", "--batch", "--appends"]),
         ("txn", &["--clients", "--shards", "--txns", "--primary"]),
@@ -67,6 +68,10 @@ fn per_command_help_lists_the_knobs() {
                 "--churn-round",
                 "--broken-retry",
             ],
+        ),
+        (
+            "contend",
+            &["--thetas", "--clients", "--shards", "--txns", "--configs"],
         ),
     ];
     for (cmd, knobs) in cases {
@@ -134,6 +139,7 @@ fn unknown_flag_prints_usage_and_fails_on_every_command() {
         "failover",
         "group",
         "soak",
+        "contend",
         "claims",
         "crash-test",
         "recover-demo",

@@ -1,0 +1,195 @@
+//! Contention campaign (acceptance criteria for the
+//! `persist::contention` layer).
+//!
+//! Four obligations, each across the relevant slice of the 16-config
+//! grid:
+//!
+//! * **no lost update, no torn snapshot, anywhere** — a recording
+//!   zipfian run on EVERY grid configuration is crash-swept at uniform
+//!   instants plus every ack ± 1 ns: recovered counters always equal
+//!   their versions, the recovered state always matches exactly one
+//!   commit prefix, and every acked commit is durable;
+//! * **aborted transactions leave no visible state** — conflict losers
+//!   abort before staging anything, so the sweep's exactly-one-prefix
+//!   check never sees them; the campaign must also really contend
+//!   (aborts land somewhere on every config);
+//! * **the harness can still fail** — a lock table sabotaged to admit
+//!   every proposal MUST trip the lost-update check on every config it
+//!   runs on;
+//! * **θ=0 with unit groups is the old path** — the recorded flush
+//!   batches replay bit-identically (acks, makespan, recovered state)
+//!   through the plain grouped runner on a fresh store.
+//!
+//! The workload key draw itself is pinned: `zipf_txn_keys` is a pure
+//! function of (seed, client, txn index), so a retry re-draws its
+//! exact key set, and distinct key sets stay distinct.
+
+use rpmem::fabric::timing::TimingModel;
+use rpmem::kvstore::ShardedKv;
+use rpmem::persist::config::ServerConfig;
+use rpmem::persist::contention::{
+    check_contention_crash_at, contention_sweep, run_contention,
+    ContentionOpts,
+};
+use rpmem::persist::groupcommit::GroupCommitOpts;
+use rpmem::remotelog::pipeline::zipf_txn_keys;
+use rpmem::util::rng::Zipf;
+
+/// The hot campaign workload: few keys, multi-key transactions, heavy
+/// skew — every config must conflict and still survive every crash
+/// instant.
+fn hot_opts() -> ContentionOpts {
+    ContentionOpts {
+        clients: 5,
+        txns_per_client: 6,
+        keys: 6,
+        keys_per_txn: 2,
+        theta: 0.9,
+        shards: 2,
+        capacity: 64,
+        seed: 11,
+        record: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn campaign_no_lost_update_or_torn_snapshot_on_any_grid_config() {
+    let opts = hot_opts();
+    let mut contended = 0usize;
+    for (i, &cfg) in ServerConfig::grid().iter().enumerate() {
+        let run = run_contention(cfg, TimingModel::default(), &opts);
+        assert_eq!(
+            run.result.committed,
+            opts.clients as u64 * opts.txns_per_client,
+            "config {i} ({}): every client must commit its quota",
+            cfg.label()
+        );
+        if run.result.aborts > 0 {
+            contended += 1;
+        }
+        let violations = contention_sweep(&run, 120);
+        assert!(
+            violations.is_empty(),
+            "config {i} ({}): {violations:?}",
+            cfg.label()
+        );
+    }
+    // The key draw is config-independent, so if the workload conflicts
+    // anywhere it conflicts everywhere — but assert the weaker grid
+    // fact directly: the campaign exercised the abort path.
+    assert_eq!(contended, 16, "the hot workload must contend on every config");
+}
+
+#[test]
+fn replicated_campaign_stays_clean_on_every_config() {
+    let opts = ContentionOpts { replicate: true, shards: 3, ..hot_opts() };
+    for &cfg in &ServerConfig::grid() {
+        let run = run_contention(cfg, TimingModel::default(), &opts);
+        assert!(run.kv.replicated());
+        let violations = contention_sweep(&run, 80);
+        assert!(violations.is_empty(), "{}: {violations:?}", cfg.label());
+    }
+}
+
+#[test]
+fn broken_lock_table_fails_on_every_config_it_runs_on() {
+    let opts = ContentionOpts {
+        clients: 4,
+        txns_per_client: 3,
+        keys: 1,
+        keys_per_txn: 1,
+        theta: 0.0,
+        capacity: 64,
+        record: true,
+        broken_locks: true,
+        ..Default::default()
+    };
+    // The negative control is about the checker, not the fabric — a
+    // representative config per persistence domain suffices.
+    for &cfg in &ServerConfig::grid()[..4] {
+        let run = run_contention(cfg, TimingModel::default(), &opts);
+        let violations = contention_sweep(&run, 60);
+        assert!(
+            violations.iter().any(|v| v.contains("lost update")),
+            "{}: a broken lock table must lose updates: {violations:?}",
+            cfg.label()
+        );
+    }
+}
+
+#[test]
+fn aborted_transactions_never_surface_at_any_instant() {
+    let opts = hot_opts();
+    let cfg = ServerConfig::grid()[0];
+    let run = run_contention(cfg, TimingModel::default(), &opts);
+    assert!(run.result.aborts > 0);
+    // Beyond the sweep's uniform+ack schedule, probe a dense lattice:
+    // the exactly-one-prefix check rejects any state containing an
+    // aborted (never-committed) transaction's writes.
+    let span = run.kv.makespan();
+    for i in 0..=500u64 {
+        check_contention_crash_at(&run, span * i / 500).unwrap();
+    }
+}
+
+#[test]
+fn theta_zero_unit_groups_replay_the_existing_grouped_runner() {
+    let opts = ContentionOpts {
+        clients: 3,
+        txns_per_client: 6,
+        theta: 0.0,
+        capacity: 64,
+        record: true,
+        group: GroupCommitOpts { max_group: 1, ..Default::default() },
+        ..Default::default()
+    };
+    for &cfg in &ServerConfig::grid()[..4] {
+        let run = run_contention(cfg, TimingModel::default(), &opts);
+        let mut fresh = ShardedKv::new(
+            cfg,
+            TimingModel::default(),
+            opts.capacity,
+            opts.shards,
+            opts.seed,
+            opts.record,
+        )
+        .with_decision_replication(opts.replicate);
+        let mut acks = Vec::new();
+        for batch in &run.flush_batches {
+            acks.extend(fresh.put_txn_grouped(batch, &opts.group));
+        }
+        let want: Vec<u64> = run.commits.iter().map(|c| c.acked_at).collect();
+        assert_eq!(acks, want, "{}: replay diverged", cfg.label());
+        assert_eq!(fresh.makespan(), run.kv.makespan(), "{}", cfg.label());
+        assert_eq!(
+            fresh.recover_all_at(fresh.makespan()),
+            run.snapshot_at(run.kv.makespan()),
+            "{}",
+            cfg.label()
+        );
+    }
+}
+
+#[test]
+fn zipf_key_draws_are_deterministic_distinct_and_retry_stable() {
+    let zipf = Zipf::new(16, 0.9);
+    for client in 0..4 {
+        for txn in 0..8u64 {
+            let a = zipf_txn_keys(&zipf, 7, client, txn, 3);
+            let b = zipf_txn_keys(&zipf, 7, client, txn, 3);
+            assert_eq!(a, b, "a retry must re-draw its exact key set");
+            assert_eq!(a.len(), 3);
+            let mut sorted = a.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "keys within a txn must be distinct");
+            assert!(a.iter().all(|&k| k < 16));
+        }
+    }
+    // Different (seed, client, txn) coordinates decorrelate the draw.
+    let x = zipf_txn_keys(&zipf, 7, 0, 0, 3);
+    let y = zipf_txn_keys(&zipf, 8, 0, 0, 3);
+    let z = zipf_txn_keys(&zipf, 7, 1, 0, 3);
+    assert!(x != y || x != z, "draws must depend on their coordinates");
+}

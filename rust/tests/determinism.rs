@@ -10,10 +10,11 @@
 //! bench binaries twice and `cmp`s their artifact files.
 
 use rpmem::coordinator::scaling::{
-    failover_grid_to_json, group_grid_to_json, run_failover_grid,
-    run_group_grid, run_group_grid_over, run_saturation_axis,
-    run_scaling_axis, run_soak_grid, run_txn_grid, scaling_to_json,
-    soak_grid_to_json, txn_grid_to_json, ScalingOpts,
+    contention_grid_to_json, failover_grid_to_json, group_grid_to_json,
+    run_contention_grid_over, run_failover_grid, run_group_grid,
+    run_group_grid_over, run_saturation_axis, run_scaling_axis,
+    run_soak_grid, run_txn_grid, scaling_to_json, soak_grid_to_json,
+    txn_grid_to_json, ScalingOpts,
 };
 use rpmem::fabric::timing::TimingModel;
 use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
@@ -170,6 +171,36 @@ fn soak_artifact() -> String {
         &TimingModel::default(),
     );
     soak_grid_to_json(&points).to_string_pretty()
+}
+
+/// The `benches/contention.rs` grid path at a shrunk size: parallel
+/// scenario threads, a shared uniform baseline, and float-bearing
+/// columns (theta, abort rate, retention) — all must serialize
+/// byte-identically across runs.
+fn contention_artifact() -> String {
+    let configs = [
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+        ServerConfig::new(PDomain::Vpm, false, RqwrbLoc::Dram),
+    ];
+    let opts = ScalingOpts { capacity: 64, ..Default::default() };
+    let points = run_contention_grid_over(
+        &configs,
+        &[0.0, 0.9, 0.99],
+        &[2, 4],
+        2,
+        6,
+        &opts,
+    );
+    contention_grid_to_json(&points).to_string_pretty()
+}
+
+#[test]
+fn contention_bench_path_is_byte_deterministic() {
+    let a = contention_artifact();
+    let b = contention_artifact();
+    assert!(!a.is_empty() && a.contains("abort_rate"));
+    assert!(a.contains("retention"));
+    assert_eq!(a, b, "contention artifact must be byte-identical");
 }
 
 #[test]
