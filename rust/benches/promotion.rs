@@ -1,0 +1,181 @@
+//! Live coordinator failover campaign: every (config, clients)
+//! scenario runs a no-death baseline, then kills the acting
+//! coordinator at the midpoint of the baseline makespan
+//! (`persist::promotion` via `coordinator::scaling::run_promotion_grid`),
+//! across ALL 16 grid configurations (12 taxonomy + 4 async-flush VPM
+//! rows). The witness shard detects the death by reactor-lease expiry,
+//! reads the durable decision/manifest/intent prefix over one-sided
+//! ops, and promotes itself to acting coordinator, finishing every
+//! in-flight group.
+//!
+//! Results are persisted as a JSON artifact (`RPMEM_PROMOTION_OUT`,
+//! default `promotion_results.json`); the artifact is a pure function
+//! of the knobs, so CI double-runs it and diffs the bytes. Four guards
+//! are asserted:
+//!
+//! * **takeover beats offline recovery** — on EVERY row the measured
+//!   death-to-resumption latency is strictly below the modeled offline
+//!   merged-ring recovery (same lease wait and takeover train, read
+//!   pass replaced by QP re-establishment + full-region bulk scan);
+//! * **detection is exactly one lease TTL** — the coordinator
+//!   heartbeats up to the instant it dies, so `detected_at - died_at`
+//!   equals the TTL on every row;
+//! * **the goodput dip is real but bounded** — every client still
+//!   commits its full quota, goodput never collapses to zero, and
+//!   retention against the no-death baseline is strictly below 1
+//!   (dead air costs throughput) on every row;
+//! * **the campaign is correct and can still fail** — a recording
+//!   death run crash-sweeps clean at every instant, and a
+//!   promotion-disabled control MUST trip the lock-leak / stranded-
+//!   timer tripwires.
+//!
+//! Fast mode: `RPMEM_BENCH_FAST=1` (CI bench-smoke job).
+
+use rpmem::coordinator::scaling::{
+    promotion_grid_to_json, render_promotion_grid, run_promotion_grid,
+    ScalingOpts,
+};
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::{PDomain, RqwrbLoc, ServerConfig};
+use rpmem::persist::contention::ContentionOpts;
+use rpmem::persist::promotion::{
+    promotion_sweep, run_promotion, PromotionOpts,
+};
+use std::time::Instant;
+
+fn main() {
+    let txns: u64 = if rpmem::bench::fast() { 4 } else { 12 };
+    let clients_list: &[usize] =
+        if rpmem::bench::fast() { &[3] } else { &[3, 6] };
+    let shards = 3usize;
+    let lease = 50_000u64;
+    let opts = ScalingOpts { capacity: 64, ..Default::default() };
+    println!(
+        "live coordinator failover, {txns} txns/client, clients \
+         {clients_list:?}, {shards} shards, lease {lease} ns, 16 configs\n"
+    );
+
+    let t0 = Instant::now();
+    let points = run_promotion_grid(clients_list, shards, txns, lease, &opts);
+    let wall = t0.elapsed();
+    let title = "live coordinator failover across the grid — witness \
+                 takeover vs offline recovery";
+    println!("{}", render_promotion_grid(title, &points));
+    println!("  [harness: {:.2?} wall-clock]\n", wall);
+    assert_eq!(points.len(), 16 * clients_list.len());
+
+    // Guard 1: the headline — live takeover strictly beats the offline
+    // recovery it replaces, on every row, and the win is structural
+    // (the read pass is a small fraction of even the takeover window).
+    for p in &points {
+        let label = format!("{} clients={}", p.config.label(), p.clients);
+        assert!(
+            p.takeover_ns < p.offline_ns,
+            "{label}: takeover {} ns must beat offline {} ns",
+            p.takeover_ns,
+            p.offline_ns
+        );
+        assert!(
+            p.speedup() > 1.0,
+            "{label}: speedup {:.2} must exceed 1",
+            p.speedup()
+        );
+        // Guard 2: detection is exactly one lease TTL after the death.
+        assert_eq!(
+            p.detected_at,
+            p.died_at + lease,
+            "{label}: the lease must expire one TTL after the last beat"
+        );
+        // Guard 3: the dip is real but bounded.
+        assert_eq!(
+            p.committed,
+            p.clients as u64 * txns,
+            "{label}: every client must commit its full quota"
+        );
+        assert!(p.goodput_mtps > 0.0, "{label}: goodput collapsed");
+        assert!(
+            p.retention() < 1.0,
+            "{label}: a death cannot be free: retention {:.4}",
+            p.retention()
+        );
+        assert!(
+            p.retention() > 0.0,
+            "{label}: retention collapsed: {:.4}",
+            p.retention()
+        );
+    }
+    let mean_speedup = points.iter().map(|p| p.speedup()).sum::<f64>()
+        / points.len() as f64;
+    let mean_retention = points.iter().map(|p| p.retention()).sum::<f64>()
+        / points.len() as f64;
+    println!(
+        "takeover wins everywhere: mean {mean_speedup:.1}x vs offline, \
+         mean goodput retention {mean_retention:.3}\n"
+    );
+
+    // Guard 4a: correctness — a recording death run survives the full
+    // crash sweep (uniform instants + every ack and every takeover
+    // boundary ± 1 ns).
+    let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+    let rec = PromotionOpts {
+        load: ContentionOpts {
+            clients: 3,
+            txns_per_client: 4,
+            keys: 16,
+            shards,
+            capacity: 64,
+            record: true,
+            replicate: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let probe = run_promotion(
+        cfg,
+        TimingModel::default(),
+        &PromotionOpts { die_at: None, ..rec.clone() },
+    );
+    let deadly = PromotionOpts {
+        die_at: Some(probe.result.span_ns / 2),
+        ..rec.clone()
+    };
+    let run = run_promotion(cfg, TimingModel::default(), &deadly);
+    assert_eq!(run.takeovers.len(), 1, "the death must promote the witness");
+    let violations = promotion_sweep(&run, 120);
+    assert!(
+        violations.is_empty(),
+        "promotion crash sweep found violations: {violations:?}"
+    );
+    println!(
+        "crash sweep clean: {} commits, takeover in {} ns, every instant \
+         prefix-consistent",
+        run.result.committed,
+        run.result.takeover_ns().unwrap()
+    );
+
+    // Guard 4b: the promotion-disabled control must leak — the
+    // tripwires exist to catch exactly this bug class.
+    let control = PromotionOpts { enabled: false, ..deadly };
+    let bad = run_promotion(cfg, TimingModel::default(), &control);
+    assert!(
+        !bad.leaked_locks.is_empty() || bad.stranded_timer_refs > 0,
+        "an undetected death must leak locks or strand timers"
+    );
+    let caught = promotion_sweep(&bad, 60);
+    assert!(
+        caught.iter().any(|v| v.contains("leaked lock")
+            || v.contains("dead coordinator")),
+        "disabled promotion must fail the sweep: {caught:?}"
+    );
+    println!(
+        "negative control: promotion disabled -> {} violations (detected, \
+         as required)\n",
+        caught.len()
+    );
+
+    let out = std::env::var("RPMEM_PROMOTION_OUT")
+        .unwrap_or_else(|_| "promotion_results.json".to_string());
+    std::fs::write(&out, promotion_grid_to_json(&points).to_string_pretty())
+        .expect("write promotion JSON artifact");
+    println!("wrote {out} ({} points)", points.len());
+}

@@ -50,12 +50,25 @@
 //!   recovered, whole-group atomicity) at every instant
 //!   (`benches/soak.rs` persists the table; any violation fails the
 //!   build).
+//! * **promotion axis** ([`run_promotion_grid`]) — live coordinator
+//!   failover ([`crate::persist::promotion`]) over clients × ALL 16
+//!   grid configurations: each scenario first runs a no-death baseline
+//!   (supplying the goodput reference and the midpoint death instant),
+//!   then kills the coordinator mid-workload and measures the witness
+//!   takeover — death-to-resumption latency against the modeled
+//!   offline merged-ring recovery it replaces, plus the goodput dip
+//!   (`benches/promotion.rs` persists the table and asserts takeover
+//!   latency is strictly below the offline estimate on every row).
 
 use crate::fabric::timing::TimingModel;
+use crate::kvstore::kv_mirror_ring;
 use crate::persist::config::ServerConfig;
 use crate::persist::contention::{run_contention, ContentionOpts};
 use crate::persist::groupcommit::GroupCommitOpts;
 use crate::persist::method::Primary;
+use crate::persist::promotion::{
+    offline_recovery_scan_ns, run_promotion, PromotionOpts,
+};
 use crate::remotelog::client::{AppendMode, MethodChoice};
 use crate::remotelog::pipeline::{
     run_multi_client, run_txn_grouped, run_txn_multi_shard, GroupRunOpts,
@@ -1488,6 +1501,283 @@ pub fn contention_grid_to_json(points: &[ContentionPoint]) -> Json {
     Json::Arr(points.iter().map(|p| p.to_json()).collect())
 }
 
+/// One (config, clients) live-failover measurement
+/// ([`crate::persist::promotion`]): the coordinator is killed at the
+/// midpoint of the no-death baseline's makespan and the witness
+/// takeover is measured against the offline recovery it replaces.
+#[derive(Debug, Clone)]
+pub struct PromotionPoint {
+    /// Responder configuration measured.
+    pub config: ServerConfig,
+    /// Contending clients.
+    pub clients: usize,
+    /// KV shards (shard 1 is the witness that promotes).
+    pub shards: usize,
+    /// Committed transactions (every client still finishes its quota).
+    pub committed: u64,
+    /// Members presumed-aborted or re-proposed because of the death.
+    pub death_aborts: u64,
+    /// Group flushes issued.
+    pub flushes: u64,
+    /// Virtual makespan (ns) of the death run.
+    pub span_ns: u64,
+    /// Committed-transaction goodput of the death run (Mtps).
+    pub goodput_mtps: f64,
+    /// Goodput of the no-death baseline for the same scenario.
+    pub baseline_mtps: f64,
+    /// Coordinator death instant (midpoint of the baseline makespan).
+    pub died_at: u64,
+    /// Lease-expiry instant: `died_at + lease_ns` (the coordinator
+    /// heartbeats up to the instant it dies).
+    pub detected_at: u64,
+    /// Death-to-resumption latency the clients experienced:
+    /// lease wait + one-sided read pass + takeover train.
+    pub takeover_ns: u64,
+    /// The one-sided read-pass share of the takeover window.
+    pub read_ns: u64,
+    /// Modeled latency of the **offline** alternative: the same lease
+    /// wait and takeover train, but the read pass replaced by
+    /// [`offline_recovery_scan_ns`] — a fresh process re-establishing
+    /// QPs and bulk-scanning every live shard's full region.
+    pub offline_ns: u64,
+}
+
+impl PromotionPoint {
+    /// Goodput retained through the failover: `goodput / baseline`
+    /// (< 1.0 — the takeover window is dead air, but bounded).
+    pub fn retention(&self) -> f64 {
+        self.goodput_mtps / self.baseline_mtps.max(f64::MIN_POSITIVE)
+    }
+
+    /// How many times faster live takeover is than the modeled offline
+    /// recovery for this scenario.
+    pub fn speedup(&self) -> f64 {
+        self.offline_ns as f64 / self.takeover_ns.max(1) as f64
+    }
+
+    /// Serialize for the JSON artifact.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("config", self.config.label().into())
+            .set("clients", self.clients.into())
+            .set("shards", self.shards.into())
+            .set("committed", self.committed.into())
+            .set("death_aborts", self.death_aborts.into())
+            .set("flushes", self.flushes.into())
+            .set("span_ns", self.span_ns.into())
+            .set("goodput_mtps", self.goodput_mtps.into())
+            .set("baseline_mtps", self.baseline_mtps.into())
+            .set("retention", self.retention().into())
+            .set("died_at", self.died_at.into())
+            .set("detected_at", self.detected_at.into())
+            .set("takeover_ns", self.takeover_ns.into())
+            .set("read_ns", self.read_ns.into())
+            .set("offline_ns", self.offline_ns.into())
+            .set("speedup", self.speedup().into());
+        j
+    }
+}
+
+/// Map the sweep-wide knobs onto one promotion run. Unlike the other
+/// axes, promotion points MUST record (the takeover reads crash
+/// images), so `clients * txns_per_client` is bounded by
+/// [`crate::kvstore::KV_TXN_SLOTS`]; workload knobs beyond the swept
+/// axes keep the [`ContentionOpts`] defaults, with decision and intent
+/// replication on (promotion requires both).
+fn promotion_run_opts(
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    lease_ns: u64,
+    die_at: Option<u64>,
+    opts: &ScalingOpts,
+) -> PromotionOpts {
+    PromotionOpts {
+        load: ContentionOpts {
+            clients,
+            txns_per_client,
+            shards,
+            capacity: opts.capacity,
+            seed: opts.seed,
+            record: true,
+            replicate: true,
+            ..Default::default()
+        },
+        lease_ns,
+        die_at,
+        ..Default::default()
+    }
+}
+
+/// One live-failover measurement against a precomputed no-death
+/// baseline: kill the coordinator at `die_at`, measure the takeover.
+fn promotion_point(
+    cfg: ServerConfig,
+    clients: usize,
+    shards: usize,
+    txns_per_client: u64,
+    lease_ns: u64,
+    die_at: u64,
+    opts: &ScalingOpts,
+    baseline_mtps: f64,
+) -> PromotionPoint {
+    let popts = promotion_run_opts(
+        clients,
+        shards,
+        txns_per_client,
+        lease_ns,
+        Some(die_at),
+        opts,
+    );
+    let run = run_promotion(cfg, opts.timing.clone(), &popts);
+    let r = &run.result;
+    let takeover_ns = r
+        .takeover_ns()
+        .expect("midpoint death must trigger a takeover");
+    let read_ns = run
+        .takeovers
+        .last()
+        .expect("takeover must have completed")
+        .read_ns;
+    let live = (shards - run.kv.failed_shards().len()) as u64;
+    let bytes_per_shard = kv_mirror_ring(popts.load.capacity).end();
+    let offline_ns = takeover_ns - read_ns
+        + offline_recovery_scan_ns(&opts.timing, live, bytes_per_shard);
+    PromotionPoint {
+        config: cfg,
+        clients,
+        shards,
+        committed: r.committed,
+        death_aborts: r.death_aborts,
+        flushes: r.flushes,
+        span_ns: r.span_ns,
+        goodput_mtps: r.goodput_mtps(),
+        baseline_mtps,
+        died_at: r.died_at.expect("death was scheduled"),
+        detected_at: r.detected_at.expect("death was detected"),
+        takeover_ns,
+        read_ns,
+        offline_ns,
+    }
+}
+
+/// The promotion grid: **all 16 grid configurations** × every client
+/// count at a fixed shard count, measured in parallel threads. Each
+/// scenario first runs the no-death baseline — supplying both the
+/// goodput reference and the death instant (the midpoint of the
+/// baseline makespan, so the kill always lands mid-workload) — then
+/// the death run.
+pub fn run_promotion_grid(
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    lease_ns: u64,
+    opts: &ScalingOpts,
+) -> Vec<PromotionPoint> {
+    run_promotion_grid_over(
+        &ServerConfig::grid(),
+        clients_list,
+        shards,
+        txns_per_client,
+        lease_ns,
+        opts,
+    )
+}
+
+/// [`run_promotion_grid`] over an explicit config set.
+pub fn run_promotion_grid_over(
+    configs: &[ServerConfig],
+    clients_list: &[usize],
+    shards: usize,
+    txns_per_client: u64,
+    lease_ns: u64,
+    opts: &ScalingOpts,
+) -> Vec<PromotionPoint> {
+    let scenarios: Vec<(ServerConfig, usize)> = configs
+        .iter()
+        .copied()
+        .flat_map(|cfg| clients_list.iter().map(move |&c| (cfg, c)))
+        .collect();
+    thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(cfg, clients)| {
+                scope.spawn(move || {
+                    let bopts = promotion_run_opts(
+                        clients,
+                        shards,
+                        txns_per_client,
+                        lease_ns,
+                        None,
+                        opts,
+                    );
+                    let baseline =
+                        run_promotion(cfg, opts.timing.clone(), &bopts)
+                            .result;
+                    promotion_point(
+                        cfg,
+                        clients,
+                        shards,
+                        txns_per_client,
+                        lease_ns,
+                        baseline.span_ns / 2,
+                        opts,
+                        baseline.goodput_mtps(),
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("promotion scenario panicked"))
+            .collect()
+    })
+}
+
+/// Render a promotion grid (takeover latency vs offline recovery and
+/// goodput retained through the failover).
+pub fn render_promotion_grid(
+    title: &str,
+    points: &[PromotionPoint],
+) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<14} {:<8} {:>9} {:>8} {:>12} {:>7} {:>12} {:>12} {:>8}\n",
+        "config",
+        "clients",
+        "committed",
+        "d.abort",
+        "takeover",
+        "read%",
+        "offline",
+        "goodput",
+        "retain"
+    ));
+    out.push_str(&"-".repeat(98));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:<14} {:<8} {:>9} {:>8} {:>9} ns {:>6.1}% {:>9} ns {:>7.3} \
+             Mtps {:>7.2}x\n",
+            p.config.label(),
+            p.clients,
+            p.committed,
+            p.death_aborts,
+            p.takeover_ns,
+            p.read_ns as f64 / p.takeover_ns.max(1) as f64 * 100.0,
+            p.offline_ns,
+            p.goodput_mtps,
+            p.retention(),
+        ));
+    }
+    out
+}
+
+/// Serialize a promotion grid for the JSON artifact.
+pub fn promotion_grid_to_json(points: &[PromotionPoint]) -> Json {
+    Json::Arr(points.iter().map(|p| p.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1828,6 +2118,54 @@ mod tests {
         assert!(j.as_arr().unwrap()[0].get("abort_rate").is_some());
         assert!(j.as_arr().unwrap()[0].get("retention").is_some());
         assert!(render_contention_grid("t", &pts).contains("abort%"));
+    }
+
+    #[test]
+    fn promotion_grid_takeover_beats_offline_and_is_deterministic() {
+        let configs = [
+            ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram),
+            ServerConfig::new(PDomain::Wsp, true, RqwrbLoc::Pmem),
+        ];
+        let opts = ScalingOpts { capacity: 64, ..Default::default() };
+        let pts =
+            run_promotion_grid_over(&configs, &[2, 3], 3, 4, 50_000, &opts);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            // The takeover finished every client's quota anyway.
+            assert_eq!(p.committed, p.clients as u64 * 4);
+            assert_eq!(p.shards, 3);
+            // Detection is exactly one lease TTL after the death (the
+            // coordinator heartbeats up to the instant it dies).
+            assert_eq!(p.detected_at, p.died_at + 50_000);
+            assert!(p.takeover_ns > 50_000, "{}", p.takeover_ns);
+            assert!(p.read_ns > 0 && p.read_ns < p.takeover_ns);
+            // The structural claim the bench pins at full scale.
+            assert!(
+                p.offline_ns > p.takeover_ns,
+                "{}: offline {} must exceed takeover {}",
+                p.config.label(),
+                p.offline_ns,
+                p.takeover_ns
+            );
+            assert!(p.speedup() > 1.0);
+            // Dead air costs goodput, but the run still finishes.
+            assert!(p.goodput_mtps > 0.0);
+            assert!(p.retention() > 0.0 && p.retention() < 1.0);
+        }
+        let again =
+            run_promotion_grid_over(&configs, &[2, 3], 3, 4, 50_000, &opts);
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.span_ns, b.span_ns);
+            assert_eq!(a.committed, b.committed);
+            assert_eq!(a.died_at, b.died_at);
+            assert_eq!(a.takeover_ns, b.takeover_ns);
+            assert_eq!(a.goodput_mtps.to_bits(), b.goodput_mtps.to_bits());
+        }
+        let j = promotion_grid_to_json(&pts);
+        assert_eq!(j.as_arr().unwrap().len(), 4);
+        assert!(j.as_arr().unwrap()[0].get("takeover_ns").is_some());
+        assert!(j.as_arr().unwrap()[0].get("speedup").is_some());
+        assert!(render_promotion_grid("t", &pts).contains("takeover"));
     }
 
     #[test]

@@ -123,9 +123,16 @@ impl Default for TimingModel {
             // Flush command ≈ vmexit + virtqueue round-trip + fsync floor:
             // dominated by host-side syscall cost, which is exactly why
             // coalescing flush commands across a group pays off hardest
-            // on this device class.
-            vpmem_flush_base_ns: 8_000,
-            vpmem_wb_bytes_per_ns: 4.0,
+            // on this device class. Calibrated against published
+            // virtio-pmem numbers (KVM Forum '18/'19 virtio-pmem device
+            // talks; guest fio fsync on a DAX-mapped host file): a
+            // small-dirty-set guest fsync lands in the tens of
+            // microseconds — vmexit + VIRTIO_PMEM_REQ kick + host
+            // fsync(2) on an already-clean journal — with host page-cache
+            // writeback to the backing file in the low GB/s. Pinned by
+            // `vpm_costs_are_calibrated`.
+            vpmem_flush_base_ns: 30_000,
+            vpmem_wb_bytes_per_ns: 2.0,
         }
     }
 }
@@ -213,6 +220,29 @@ mod tests {
     fn batched_post_cheaper_than_doorbell() {
         let t = TimingModel::default();
         assert!(t.batched_post_ns < t.post_ns);
+    }
+
+    #[test]
+    fn vpm_costs_are_calibrated() {
+        // Pin the async-flush cost model to the published virtio-pmem
+        // envelope so silent drift fails loudly (ROADMAP async-flush
+        // follow-through). Guest fsync on virtio-pmem = vmexit +
+        // virtqueue kick + host fsync floor: the KVM Forum virtio-pmem
+        // measurements put the small-dirty-set round trip in the tens
+        // of microseconds, and host page-cache writeback to the backing
+        // file in the low GB/s. Anyone retuning these constants must
+        // retune this test against a cited measurement, not taste.
+        let t = TimingModel::default();
+        assert_eq!(t.vpmem_flush_base_ns, 30_000, "30 us fsync floor");
+        assert_eq!(t.vpmem_wb_bytes_per_ns, 2.0, "2 GB/s host writeback");
+        // Sanity window: inside the published 10-100 us guest-fsync
+        // band, and writeback strictly slower than the RDMA DMA path
+        // (page cache + fs journal vs PCIe streaming).
+        assert!((10_000..=100_000).contains(&t.vpmem_flush_base_ns));
+        assert!(t.vpmem_wb_bytes_per_ns < t.dma_bytes_per_ns);
+        // A 4 KiB dirty page costs base + 2048 ns of writeback — still
+        // base-dominated, so flush coalescing keeps its headroom.
+        assert_eq!(t.vpmem_wb_ns(4096), 2048);
     }
 
     #[test]

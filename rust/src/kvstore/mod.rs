@@ -37,19 +37,27 @@ use crate::fabric::timing::{Nanos, TimingModel};
 use crate::integrity::fletcher_words;
 use crate::persist::config::ServerConfig;
 use crate::persist::exec::{
-    exec_compound, post_compound_batch, Update, WaitPoint,
+    exec_compound, post_compound_batch, post_singleton_batch, Update,
+    WaitPoint,
 };
-use crate::persist::failover::{recover_decisions_merged, witness_for};
+use crate::persist::failover::{
+    recover_decisions_merged, witness_for, witness_for_promoted,
+};
 use crate::persist::groupcommit::{
     post_decision_group, post_decision_group_replicated, GroupCommitOpts,
     GroupScheduler,
 };
 use crate::persist::method::{CompoundMethod, Primary, SingletonMethod};
 use crate::persist::planner::plan_compound;
+use crate::persist::promotion::{
+    encode_manifest, intent_durable, one_sided_read_ns, recover_manifests,
+    resolve_decisions, takeover_updates, TakeoverReport,
+};
 use crate::persist::txn::{
     plan_txn_method, post_commit, post_prepare, recover_decisions,
-    recover_intents, roll_forward, sync_clock, CommitFlip, IntentRecord,
-    SlotRing, DECISION_BYTES, INTENT_BYTES, MAX_TXN_FLIPS,
+    recover_intents_where, roll_forward, sync_clock, CommitFlip,
+    IntentRecord, SlotRing, DECISION_ABORT, DECISION_BYTES, DECISION_COMMIT,
+    INTENT_BYTES, MAX_TXN_FLIPS,
 };
 use crate::server::memory::{Image, Layout};
 use crate::util::rng::mix;
@@ -91,6 +99,23 @@ pub fn kv_decision_ring(capacity: u64) -> SlotRing {
 pub fn kv_witness_ring(capacity: u64) -> SlotRing {
     SlotRing {
         base: kv_decision_ring(capacity).end(),
+        slots: KV_TXN_SLOTS,
+        stride: DECISION_BYTES as u64,
+    }
+}
+
+/// Intent-mirror (manifest) ring: sits above the witness ring, used on
+/// the live witness shard when intent replication is on
+/// ([`ShardedKv::with_intent_replication`]). Each slot holds the
+/// transaction's **manifest** — the participant-shard set — mirrored at
+/// PREPARE time as the witness half of an
+/// [`crate::persist::failover::IntentPair`], which is what lets a
+/// promoted witness decide "prepared everywhere" vs "partially
+/// prepared" over one-sided reads alone
+/// ([`crate::persist::promotion`]).
+pub fn kv_mirror_ring(capacity: u64) -> SlotRing {
+    SlotRing {
+        base: kv_witness_ring(capacity).end(),
         slots: KV_TXN_SLOTS,
         stride: DECISION_BYTES as u64,
     }
@@ -213,7 +238,7 @@ impl RemoteKv {
         record: bool,
     ) -> Self {
         let (rq_count, rq_slot) = (64u64, 2048u64);
-        let pm_size = (kv_witness_ring(capacity).end()
+        let pm_size = (kv_mirror_ring(capacity).end()
             + 2 * rq_count * rq_slot
             + 4096)
             .next_power_of_two();
@@ -451,12 +476,66 @@ pub struct ShardedKv {
     intent_ring: SlotRing,
     decision_ring: SlotRing,
     witness_ring: SlotRing,
+    mirror_ring: SlotRing,
     /// Mirror decision records to the witness shard before acking
     /// ([`ShardedKv::with_decision_replication`]).
     replicate: bool,
+    /// Mirror PREPARE manifests to the live witness's mirror ring
+    /// ([`ShardedKv::with_intent_replication`]) — the durable state a
+    /// promoted witness needs to finish in-flight transactions.
+    mirror_intents: bool,
+    /// The acting coordinator's shard: its decision ring hosts new
+    /// DECIDE trains. 0 until a promotion ([`ShardedKv::promote`]).
+    coord_shard: usize,
+    /// Shards fenced by a promotion (dead coordinators, lost media).
+    /// New decision/witness/mirror hosting never lands on these; their
+    /// PM stays one-sided-readable unless the media itself failed.
+    failed: Vec<usize>,
+    /// Decision sources accumulated by takeovers, merged into every
+    /// recovery scan after the base (shard-0 + witness) pair.
+    extra_sources: Vec<(usize, SlotRing)>,
+    /// Current manifest-mirror holder (`None` once the surviving
+    /// topology can no longer afford a witness — e.g. two shards after
+    /// a coordinator loss).
+    mirror_shard: Option<usize>,
+    /// Every shard that has ever held the manifest mirror: a takeover
+    /// must read manifests from all of them (in-flight transactions may
+    /// have staged under an earlier mirror holder).
+    mirror_sources: Vec<usize>,
+    /// Staged transactions whose decision the requester has not yet
+    /// observed, keyed by id: the in-flight residue a promoted witness
+    /// must finish or presume aborted. Populated only when intent
+    /// mirroring is on; drained by [`ShardedKv::record_staged`] on ack
+    /// and by [`ShardedKv::promote`] on takeover.
+    pending_staged: HashMap<u64, PendingTxn>,
     next_txn: u64,
     /// Acked-transaction oracle (recording runs only).
     pub txns: Vec<KvTxnRecord>,
+}
+
+/// Requester-side residue of one staged-but-unresolved transaction:
+/// what a promoted coordinator needs to finish it (post the commit
+/// markers) or roll it back (undo the speculative version bumps).
+#[derive(Debug, Clone)]
+pub struct PendingTxn {
+    /// Per-shard commit markers (version-word flips).
+    pub flips: Vec<Vec<CommitFlip>>,
+    /// `(key, shard, version, value)` per deduplicated item.
+    pub meta: Vec<(u64, usize, u32, Vec<u8>)>,
+}
+
+/// Outcome of a coordinator-death-bounded flush
+/// ([`ShardedKv::put_txn_grouped_until`]).
+#[derive(Debug, Clone)]
+pub struct FlushOutcome {
+    /// Per input transaction, in order: `Some(ack)` when its decision
+    /// group's shared persistence point was observed strictly before
+    /// the death instant; `None` when the coordinator died first.
+    pub acks: Vec<Option<Nanos>>,
+    /// Per input transaction: the id it was staged under, or `None`
+    /// when the coordinator died before staging it (no id burned — the
+    /// member can be resubmitted verbatim under a new coordinator).
+    pub ids: Vec<Option<u64>>,
 }
 
 impl ShardedKv {
@@ -490,7 +569,15 @@ impl ShardedKv {
             intent_ring: kv_intent_ring(capacity_per_shard),
             decision_ring: kv_decision_ring(capacity_per_shard),
             witness_ring: kv_witness_ring(capacity_per_shard),
+            mirror_ring: kv_mirror_ring(capacity_per_shard),
             replicate: false,
+            mirror_intents: false,
+            coord_shard: 0,
+            failed: Vec::new(),
+            extra_sources: Vec::new(),
+            mirror_shard: None,
+            mirror_sources: Vec::new(),
+            pending_staged: HashMap::new(),
             next_txn: 0,
             txns: Vec::new(),
         }
@@ -530,6 +617,75 @@ impl ShardedKv {
     /// Is decision-ring replication enabled (and effective)?
     pub fn replicated(&self) -> bool {
         self.replicate && self.shards.len() >= 2
+    }
+
+    /// Enable (or disable) PREPARE-intent replication: every staged
+    /// transaction's **manifest** (its participant-shard set) is
+    /// mirrored to the live witness's mirror ring as part of the
+    /// PREPARE fan-out, posted before any prepare point is awaited and
+    /// folded into the prepared-at max. The manifest is what a promoted
+    /// witness reads to tell "prepared everywhere, safe to finish" from
+    /// "partially prepared, presume abort" — without it, coordinator
+    /// death strands every in-flight transaction until offline
+    /// recovery. A no-op on single-shard stores.
+    pub fn with_intent_replication(mut self, on: bool) -> Self {
+        assert!(
+            self.shards.len() <= 32,
+            "manifest participant mask is 32 bits wide"
+        );
+        self.mirror_intents = on;
+        self.mirror_shard = if on && self.shards.len() >= 2 {
+            Some(witness_for(0, self.shards.len()))
+        } else {
+            None
+        };
+        self.mirror_sources = self.mirror_shard.into_iter().collect();
+        self
+    }
+
+    /// Is intent mirroring enabled with a live mirror holder?
+    pub fn intent_mirrored(&self) -> bool {
+        self.mirror_intents && self.mirror_shard.is_some()
+    }
+
+    /// The acting coordinator's shard (0 until a promotion).
+    pub fn coord_shard(&self) -> usize {
+        self.coord_shard
+    }
+
+    /// Shards fenced by promotions so far, in death order.
+    pub fn failed_shards(&self) -> &[usize] {
+        &self.failed
+    }
+
+    /// Ids of staged transactions whose decision the requester has not
+    /// observed (in-flight residue a takeover must settle), ascending.
+    pub fn pending_txn_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.pending_staged.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// The decision-replication witness for the **acting** coordinator,
+    /// skipping fenced shards in ring order; `None` once no live
+    /// witness remains (two-shard topologies after a loss).
+    fn live_witness(&self) -> Option<usize> {
+        if self.shards.len() < 2 {
+            return None;
+        }
+        witness_for_promoted(self.coord_shard, self.shards.len(), &self.failed)
+    }
+
+    /// Disjoint mutable borrows of two distinct shards' fabrics.
+    fn two_fabs(&mut self, a: usize, b: usize) -> (&mut Fabric, &mut Fabric) {
+        assert_ne!(a, b, "two_fabs needs distinct shards");
+        if a < b {
+            let (lo, hi) = self.shards.split_at_mut(b);
+            (&mut lo[a].fab, &mut hi[0].fab)
+        } else {
+            let (lo, hi) = self.shards.split_at_mut(a);
+            (&mut hi[0].fab, &mut lo[b].fab)
+        }
     }
 
     /// Attach a hostile-network fault model to **every** shard's QP —
@@ -626,12 +782,15 @@ impl ShardedKv {
         let st = self.stage_txn(items);
 
         // PREPARE every participating shard (parallel virtual time).
-        let wps = self.post_prepares(&st);
+        let (wps, mirror) = self.post_prepares(&st);
         let mut prepared_at = 0;
         for (s, wp) in wps.iter().enumerate() {
             if let Some(wp) = wp {
                 prepared_at = prepared_at.max(wp.wait(&mut self.shards[s].fab));
             }
+        }
+        if let Some((w, wp)) = mirror {
+            prepared_at = prepared_at.max(wp.wait(&mut self.shards[w].fab));
         }
 
         // DECIDE on the coordinator shard: the transaction's atomic
@@ -754,15 +913,18 @@ impl ShardedKv {
 
         // PREPARE everything before observing any point: the whole
         // batch is in flight together, feeding the scheduler.
-        let wpss: Vec<Vec<Option<WaitPoint>>> =
-            staged.iter().map(|st| self.post_prepares(st)).collect();
+        let wpss: Vec<_> = staged.iter().map(|st| self.post_prepares(st)).collect();
         let mut prepared = vec![0u64; staged.len()];
-        for (i, wps) in wpss.iter().enumerate() {
+        for (i, (wps, mirror)) in wpss.iter().enumerate() {
             for (s, wp) in wps.iter().enumerate() {
                 if let Some(wp) = wp {
                     prepared[i] =
                         prepared[i].max(wp.wait(&mut self.shards[s].fab));
                 }
+            }
+            if let Some((w, wp)) = mirror {
+                prepared[i] =
+                    prepared[i].max(wp.wait(&mut self.shards[*w].fab));
             }
         }
 
@@ -799,6 +961,164 @@ impl ShardedKv {
         acks
     }
 
+    /// [`ShardedKv::put_txn_grouped`] under a coordinator that dies at
+    /// `die_at`: members the coordinator fully commits before the death
+    /// instant ack normally; everything else is left exactly as a real
+    /// crash would leave it — staged-and-prepared with no decision,
+    /// decision posted but never acknowledged, or not staged at all —
+    /// for a later [`ShardedKv::promote`] to settle. `die_at: None`
+    /// degenerates to the normal path (every member acks).
+    ///
+    /// Posted trains keep persisting on their own after the death
+    /// instant (one-sided ops need no requester), so the wait calls
+    /// below are simulator bookkeeping: the points exist whether or not
+    /// the dead coordinator lives to observe them; only observations at
+    /// or before `die_at` produce acks, commit markers, or oracle
+    /// records.
+    pub fn put_txn_grouped_until(
+        &mut self,
+        txns: &[Vec<(u64, Vec<u8>)>],
+        gopts: &GroupCommitOpts,
+        die_at: Option<Nanos>,
+    ) -> FlushOutcome {
+        let first_id = self.next_txn;
+        let die = match die_at {
+            Some(d) => d,
+            None => {
+                let acks = self.put_txn_grouped(txns, gopts);
+                // Waves stage contiguous input ranges in input order,
+                // so ids are sequential across the whole batch.
+                return FlushOutcome {
+                    acks: acks.into_iter().map(Some).collect(),
+                    ids: (0..txns.len())
+                        .map(|i| Some(first_id + i as u64))
+                        .collect(),
+                };
+            }
+        };
+        assert!(
+            txns.iter().all(|t| !t.is_empty()),
+            "empty transaction in a commit group"
+        );
+        let mut out = FlushOutcome {
+            acks: vec![None; txns.len()],
+            ids: vec![None; txns.len()],
+        };
+        // Same order-preserving conflict-wave cuts as the live path,
+        // stopping at the wave in which the coordinator dies.
+        let mut wave_keys: std::collections::HashSet<u64> =
+            std::collections::HashSet::new();
+        let mut lo = 0usize;
+        for (i, t) in txns.iter().enumerate() {
+            if t.iter().any(|(k, _)| wave_keys.contains(k)) {
+                if self.flush_wave_until(&txns[lo..i], gopts, die, lo, &mut out)
+                {
+                    return out;
+                }
+                lo = i;
+                wave_keys.clear();
+            }
+            wave_keys.extend(t.iter().map(|(k, _)| *k));
+        }
+        self.flush_wave_until(&txns[lo..], gopts, die, lo, &mut out);
+        out
+    }
+
+    /// One conflict wave of [`ShardedKv::put_txn_grouped_until`].
+    /// Returns `true` once the death instant has been reached (callers
+    /// must not stage further waves).
+    fn flush_wave_until(
+        &mut self,
+        txns: &[Vec<(u64, Vec<u8>)>],
+        gopts: &GroupCommitOpts,
+        die: Nanos,
+        base: usize,
+        out: &mut FlushOutcome,
+    ) -> bool {
+        if txns.is_empty() {
+            return false;
+        }
+        // Stage + post PREPAREs, checkpointing the coordinator's clock
+        // before each member: a member is either fully posted (payload,
+        // intent, manifest — one atomic posting step) or not staged at
+        // all. Interleaving stage/post per member is wire-identical to
+        // stage-all-then-post-all because staging never advances a
+        // fabric clock.
+        let mut dead = false;
+        let mut staged: Vec<StagedTxn> = Vec::new();
+        let mut wpss = Vec::new();
+        for t in txns {
+            if self.makespan() >= die {
+                dead = true;
+                break;
+            }
+            let st = self.stage_txn(t);
+            out.ids[base + staged.len()] = Some(st.txn_id);
+            wpss.push(self.post_prepares(&st));
+            staged.push(st);
+        }
+        if staged.is_empty() {
+            return dead;
+        }
+        let mut prepared = vec![0u64; staged.len()];
+        for (i, (wps, mirror)) in wpss.iter().enumerate() {
+            for (s, wp) in wps.iter().enumerate() {
+                if let Some(wp) = wp {
+                    prepared[i] =
+                        prepared[i].max(wp.wait(&mut self.shards[s].fab));
+                }
+            }
+            if let Some((w, wp)) = mirror {
+                prepared[i] =
+                    prepared[i].max(wp.wait(&mut self.shards[*w].fab));
+            }
+        }
+        let mut sched = GroupScheduler::new(*gopts);
+        let mut groups = Vec::new();
+        for (i, st) in staged.iter().enumerate() {
+            if let Some(g) = sched.offer(st.txn_id, prepared[i]) {
+                groups.push(g);
+            }
+        }
+        if let Some(g) = sched.drain() {
+            groups.push(g);
+        }
+        let first_id = staged[0].txn_id;
+        let nshards = self.shards.len();
+        for g in &groups {
+            if g.release_at >= die {
+                // The decision train was never posted: every member of
+                // this group (and of later groups) is stranded
+                // prepared-undecided.
+                dead = true;
+                continue;
+            }
+            let acked = self.decide_group(g.first, g.len, g.release_at);
+            if acked > die {
+                // Posted before death, persisted after it: the records
+                // will surface to whichever coordinator reads them, but
+                // nothing acks and no commit marker is posted.
+                dead = true;
+                continue;
+            }
+            let mut flips: Vec<Vec<CommitFlip>> = vec![Vec::new(); nshards];
+            for k in 0..g.len as u64 {
+                let i = (g.first + k - first_id) as usize;
+                out.acks[base + i] = Some(acked);
+                for s in 0..nshards {
+                    flips[s].extend_from_slice(&staged[i].flips[s]);
+                }
+            }
+            self.commit_flips(&flips, acked);
+        }
+        for (i, st) in staged.into_iter().enumerate() {
+            if let Some(acked) = out.acks[base + i] {
+                self.record_staged(st, prepared[i], acked);
+            }
+        }
+        dead
+    }
+
     /// Stage one multi-key transaction: dedupe (last write wins),
     /// allocate the transaction id, assign versions and buckets, and
     /// build each participating shard's payload updates plus commit
@@ -821,6 +1141,10 @@ impl ShardedKv {
             "txn ring wraparound would invalidate the crash oracle"
         );
         let nshards = self.shards.len();
+        // Intent-mirroring runs keep the oracle metadata even when not
+        // recording: it is the in-flight residue a promoted witness
+        // rolls back (version bumps) or finishes (commit markers).
+        let keep_meta = recording || self.mirror_intents;
         let mut payload: Vec<Vec<Update>> = vec![Vec::new(); nshards];
         let mut flips: Vec<Vec<CommitFlip>> = vec![Vec::new(); nshards];
         let mut meta: Vec<(u64, usize, u32, Vec<u8>)> = Vec::new();
@@ -840,7 +1164,7 @@ impl ShardedKv {
                 value: version as u64,
             });
             shard.versions.insert(key, version);
-            if recording {
+            if keep_meta {
                 meta.push((key, s, version, value.to_vec()));
             }
         }
@@ -851,13 +1175,29 @@ impl ShardedKv {
                 f.len()
             );
         }
+        if self.mirror_intents {
+            self.pending_staged.insert(
+                txn_id,
+                PendingTxn { flips: flips.clone(), meta: meta.clone() },
+            );
+        }
         StagedTxn { txn_id, payload, flips, meta }
     }
 
     /// PREPARE every participating shard of a staged transaction: post
     /// the payload + intent trains without waiting, so callers can
     /// overlap in-flight transactions before observing the points.
-    fn post_prepares(&mut self, st: &StagedTxn) -> Vec<Option<WaitPoint>> {
+    ///
+    /// With intent mirroring on, the transaction's **manifest** (its
+    /// participant mask) also posts to the live witness's mirror ring —
+    /// the witness half of an
+    /// [`crate::persist::failover::IntentPair`] — before any point is
+    /// awaited; the second element carries `(mirror shard, point)` and
+    /// callers fold it into the prepared-at max.
+    fn post_prepares(
+        &mut self,
+        st: &StagedTxn,
+    ) -> (Vec<Option<WaitPoint>>, Option<(usize, WaitPoint)>) {
         let method = self.txn_method;
         let intent_ring = self.intent_ring;
         let mut wps: Vec<Option<WaitPoint>> = vec![None; self.shards.len()];
@@ -882,15 +1222,43 @@ impl ShardedKv {
                 msg,
             ));
         }
-        wps
+        let mirror = match self.mirror_shard {
+            Some(w) if self.mirror_intents => {
+                let mask = st.payload.iter().enumerate().fold(
+                    0u32,
+                    |m, (s, p)| if p.is_empty() { m } else { m | 1 << s },
+                );
+                let upd = Update::new(
+                    self.mirror_ring.addr(st.txn_id),
+                    encode_manifest(st.txn_id, mask).to_vec(),
+                );
+                let shard = &mut self.shards[w];
+                let msg = shard.next_msg;
+                shard.next_msg += 1;
+                Some((
+                    w,
+                    post_singleton_batch(
+                        &mut shard.fab,
+                        method,
+                        std::slice::from_ref(&upd),
+                        msg,
+                    ),
+                ))
+            }
+            _ => None,
+        };
+        (wps, mirror)
     }
 
-    /// GROUP DECIDE on the coordinator shard for transactions
-    /// `first .. first + len`: one doorbell train, one shared
-    /// persistence point — the returned ack covers every member
+    /// GROUP DECIDE on the **acting** coordinator's shard for
+    /// transactions `first .. first + len`: one doorbell train, one
+    /// shared persistence point — the returned ack covers every member
     /// (`len == 1` is the plain per-transaction DECIDE). With
     /// replication on, the witness mirror train posts before either
-    /// point is awaited and the ack is the max of both group points.
+    /// point is awaited and the ack is the max of both group points;
+    /// the witness is the live one for the acting coordinator, so a
+    /// promoted store keeps replicating without ever trusting a fenced
+    /// shard.
     fn decide_group(
         &mut self,
         first: u64,
@@ -900,17 +1268,17 @@ impl ShardedKv {
         let method = self.txn_method;
         let (decision_ring, witness_ring) =
             (self.decision_ring, self.witness_ring);
-        let nshards = self.shards.len();
-        if self.replicate && nshards >= 2 {
-            let w = witness_for(0, nshards);
-            let cmsg = self.shards[0].next_msg;
-            self.shards[0].next_msg += 1;
+        let c = self.coord_shard;
+        let w = if self.replicate { self.live_witness() } else { None };
+        if let Some(w) = w {
+            let cmsg = self.shards[c].next_msg;
+            self.shards[c].next_msg += 1;
             let wmsg = self.shards[w].next_msg;
             self.shards[w].next_msg += 1;
-            let (coord, wit) = self.shards.split_at_mut(w);
+            let (cf, wf) = self.two_fabs(c, w);
             let pair = post_decision_group_replicated(
-                &mut coord[0].fab,
-                &mut wit[0].fab,
+                cf,
+                wf,
                 method,
                 first,
                 len,
@@ -920,14 +1288,13 @@ impl ShardedKv {
                 cmsg,
                 wmsg,
             );
-            pair.primary
-                .wait(&mut coord[0].fab)
-                .max(pair.witness.wait(&mut wit[0].fab))
+            let (cf, wf) = self.two_fabs(c, w);
+            pair.primary.wait(cf).max(pair.witness.wait(wf))
         } else {
-            let msg = self.shards[0].next_msg;
-            self.shards[0].next_msg += 1;
+            let msg = self.shards[c].next_msg;
+            self.shards[c].next_msg += 1;
             let wp = post_decision_group(
-                &mut self.shards[0].fab,
+                &mut self.shards[c].fab,
                 method,
                 first,
                 len,
@@ -935,7 +1302,7 @@ impl ShardedKv {
                 not_before,
                 msg,
             );
-            wp.wait(&mut self.shards[0].fab)
+            wp.wait(&mut self.shards[c].fab)
         }
     }
 
@@ -965,6 +1332,9 @@ impl ShardedKv {
         prepared_at: Nanos,
         acked: Nanos,
     ) {
+        // The requester observed the decision point: the transaction is
+        // no longer in-flight residue a takeover would need to settle.
+        self.pending_staged.remove(&st.txn_id);
         if !self.shards[0].fab.mem.recording() {
             return;
         }
@@ -1011,29 +1381,361 @@ impl ShardedKv {
     /// fault ([`ShardedKv::fail_shard`]) on either holder; a failed
     /// shard contributes a blank image (its keys are lost media, its
     /// rings recover nothing).
+    /// Every ring a decision record may live on, as `(shard, ring)`
+    /// pairs: the original coordinator's decision ring, its witness
+    /// replica (when replication is effective), plus every takeover's
+    /// `(successor decision ring, successor-witness replica)` pair —
+    /// recovery and promotion both resolve over the same merged set.
+    fn decision_sources(&self) -> Vec<(usize, SlotRing)> {
+        let mut src = vec![(0usize, self.decision_ring)];
+        if self.replicated() {
+            src.push((witness_for(0, self.shards.len()), self.witness_ring));
+        }
+        src.extend(self.extra_sources.iter().copied());
+        src
+    }
+
     pub fn recover_all_at(&self, t: Nanos) -> HashMap<u64, (u32, Vec<u8>)> {
         let mut images: Vec<Image> = self
             .shards
             .iter()
             .map(|sh| sh.fab.mem.crash_image(t, sh.fab.cfg.pdomain))
             .collect();
-        let committed = if self.replicated() {
-            let w = witness_for(0, self.shards.len());
-            recover_decisions_merged(
-                Some((&images[0], &self.decision_ring)),
-                Some((&images[w], &self.witness_ring)),
-            )
+        // Resolve the decision prefix. Pre-promotion stores take the
+        // historical paths unchanged; once a takeover has happened the
+        // scan merges every source ring with abort-tombstone priority
+        // (a tombstone fences any late-persisting commit from the dead
+        // coordinator).
+        let (resolved, aborted) = if self.extra_sources.is_empty() {
+            let committed = if self.replicated() {
+                let w = witness_for(0, self.shards.len());
+                recover_decisions_merged(
+                    Some((&images[0], &self.decision_ring)),
+                    Some((&images[w], &self.witness_ring)),
+                )
+            } else {
+                recover_decisions(&images[0], &self.decision_ring)
+            };
+            (committed, std::collections::HashSet::new())
         } else {
-            recover_decisions(&images[0], &self.decision_ring)
+            let meta = self.decision_sources();
+            let srcs: Vec<(&Image, &SlotRing)> =
+                meta.iter().map(|(s, r)| (&images[*s], r)).collect();
+            let res = resolve_decisions(&srcs);
+            (res.resolved, res.aborted)
         };
         let mut out = HashMap::new();
         for (s, img) in images.iter_mut().enumerate() {
-            let flips =
-                recover_intents(img, &self.intent_ring, s as u32, committed);
+            let flips = recover_intents_where(
+                img,
+                &self.intent_ring,
+                s as u32,
+                resolved,
+                |id| !aborted.contains(&id),
+            );
             roll_forward(img, &flips);
             out.extend(recover_kv(img, self.capacity_per_shard));
         }
         out
+    }
+
+    /// Promote the live witness to acting coordinator after the current
+    /// coordinator's death was detected at `detect_at` (lease expiry).
+    /// Equivalent to [`ShardedKv::promote_until`] with no successor
+    /// death; panics if that would not complete.
+    pub fn promote(&mut self, detect_at: Nanos) -> TakeoverReport {
+        self.promote_until(detect_at, None)
+            .expect("promotion without a successor death always completes")
+    }
+
+    /// Live takeover: the witness holding the manifest mirror fences
+    /// the dead coordinator, reads the durable decision prefix and the
+    /// in-flight intents over one-sided ops, and **finishes every
+    /// in-flight transaction**:
+    ///
+    /// - decided-but-unacked ids (decision durable before detection)
+    ///   are **adopted**: their commit markers post and they ack at the
+    ///   promotion point;
+    /// - prepared-everywhere ids (manifest durable + every named
+    ///   participant's intent durable) are **finished** with a COMMIT
+    ///   takeover record;
+    /// - everything else — never-prepared, partially prepared, or any
+    ///   id after the first non-commitable one — is **presumed aborted**
+    ///   with an abort tombstone ([`DECISION_ABORT`]) and its
+    ///   speculative version bumps rolled back. Aborting the whole tail
+    ///   past the first gap keeps the decision scan prefix-closed, so a
+    ///   partially-posted group train completes or dies at the group
+    ///   boundary, never in the middle.
+    ///
+    /// The takeover train posts COMMIT and ABORT records as ONE
+    /// reverse-posted (descending-id) doorbell train on the successor's
+    /// decision ring, replicated to the next live witness's witness
+    /// ring when the surviving topology affords one; a tombstone fences
+    /// any late-persisting commit from the dead coordinator (abort
+    /// priority in [`resolve_decisions`]).
+    ///
+    /// `die_at` kills the **successor** mid-promotion: if the takeover
+    /// train would not be fully persisted by then, requester-side
+    /// completion is suppressed (no acks, no commit markers, no
+    /// rollback — the partially-persisted train is surfaced to the next
+    /// promotion through the merged decision sources) and `None` is
+    /// returned. Topology bookkeeping (fencing, successor, new mirror
+    /// holder) is installed either way so a further promotion can run.
+    pub fn promote_until(
+        &mut self,
+        detect_at: Nanos,
+        die_at: Option<Nanos>,
+    ) -> Option<TakeoverReport> {
+        assert!(self.mirror_intents, "promotion requires intent mirroring");
+        let old = self.coord_shard;
+        assert!(
+            !self.failed.contains(&old),
+            "coordinator shard {old} already fenced"
+        );
+        let new_coord = self
+            .mirror_shard
+            .expect("no live witness to promote (two-shard topology spent)");
+        self.failed.push(old);
+        let n = self.shards.len();
+
+        // Durable state as of the detection instant. A media-failed
+        // shard contributes a blank image (its intents can never prove
+        // a transaction prepared); a process-dead coordinator's PM is
+        // still one-sided-readable — the paper's core premise — so its
+        // decision ring remains a first-class source.
+        let images: Vec<Image> = self
+            .shards
+            .iter()
+            .map(|sh| sh.fab.mem.crash_image(detect_at, sh.fab.cfg.pdomain))
+            .collect();
+        let meta_srcs = self.decision_sources();
+        let srcs: Vec<(&Image, &SlotRing)> =
+            meta_srcs.iter().map(|(s, r)| (&images[*s], r)).collect();
+        let res = resolve_decisions(&srcs);
+        // Manifests may have staged under ANY past mirror holder; a
+        // holder's own ring is a local read for the promoting witness,
+        // everything else is charged as one-sided reads below.
+        let mut manifests: HashMap<u64, u32> = HashMap::new();
+        for &m in &self.mirror_sources {
+            manifests.extend(recover_manifests(&images[m], &self.mirror_ring));
+        }
+        let mut read_ops = 0u64;
+        let mut read_bytes = 0u64;
+        for (s, r) in &meta_srcs {
+            if *s != new_coord {
+                read_ops += 1;
+                read_bytes += r.slots * r.stride;
+            }
+        }
+        for &m in &self.mirror_sources {
+            if m != new_coord {
+                read_ops += 1;
+                read_bytes += self.mirror_ring.slots * self.mirror_ring.stride;
+            }
+        }
+
+        // Classify every in-flight id in ascending order.
+        let mut adopted = Vec::new();
+        let mut finished = Vec::new();
+        let mut aborted = Vec::new();
+        let mut barrier = false;
+        for id in self.pending_txn_ids() {
+            if id < res.resolved {
+                if res.aborted.contains(&id) {
+                    aborted.push(id);
+                } else {
+                    adopted.push(id);
+                }
+                continue;
+            }
+            let mut ok = !barrier;
+            if ok {
+                match manifests.get(&id) {
+                    None => ok = false,
+                    Some(&mask) => {
+                        for s in 0..n {
+                            if mask & (1 << s) == 0 {
+                                continue;
+                            }
+                            if s != new_coord {
+                                read_ops += 1;
+                                read_bytes += INTENT_BYTES as u64;
+                            }
+                            if !intent_durable(
+                                &images[s],
+                                &self.intent_ring,
+                                id,
+                                s as u32,
+                            ) {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if ok {
+                finished.push(id);
+            } else {
+                barrier = true;
+                aborted.push(id);
+            }
+        }
+
+        // Takeover records cover exactly the undecided ids, keeping the
+        // merged scan prefix-closed from `resolved` onward.
+        let mut records: Vec<(u64, u32)> = finished
+            .iter()
+            .map(|&id| (id, DECISION_COMMIT))
+            .chain(
+                aborted
+                    .iter()
+                    .filter(|&&id| id >= res.resolved)
+                    .map(|&id| (id, DECISION_ABORT)),
+            )
+            .collect();
+        records.sort_unstable_by_key(|&(id, _)| id);
+
+        let read_ns = one_sided_read_ns(
+            &self.shards[new_coord].fab.timing,
+            read_ops,
+            read_bytes,
+        );
+        let post_at = detect_at + read_ns;
+        if die_at.is_some_and(|d2| post_at >= d2) {
+            // The successor died during the read pass: no train posted.
+            self.install_takeover_topology(new_coord);
+            return None;
+        }
+        let method = self.txn_method;
+        let next_w = self.replicate.then(|| {
+            witness_for_promoted(new_coord, n, &self.failed)
+        });
+        let mut promoted_at = post_at;
+        if !records.is_empty() {
+            let updates = takeover_updates(&records, &self.decision_ring);
+            sync_clock(&mut self.shards[new_coord].fab, post_at);
+            let msg = self.shards[new_coord].next_msg;
+            self.shards[new_coord].next_msg += updates.len() as u32;
+            let wp = post_singleton_batch(
+                &mut self.shards[new_coord].fab,
+                method,
+                &updates,
+                msg,
+            );
+            let mut wit_wp = None;
+            if let Some(Some(w)) = next_w {
+                let wupd = takeover_updates(&records, &self.witness_ring);
+                sync_clock(&mut self.shards[w].fab, post_at);
+                let wmsg = self.shards[w].next_msg;
+                self.shards[w].next_msg += wupd.len() as u32;
+                wit_wp = Some((
+                    w,
+                    post_singleton_batch(
+                        &mut self.shards[w].fab,
+                        method,
+                        &wupd,
+                        wmsg,
+                    ),
+                ));
+            }
+            promoted_at = wp.wait(&mut self.shards[new_coord].fab);
+            if let Some((w, wp)) = wit_wp {
+                promoted_at = promoted_at.max(wp.wait(&mut self.shards[w].fab));
+            }
+        }
+        if die_at.is_some_and(|d2| promoted_at > d2) {
+            // Mid-promotion death of the successor: the posted train
+            // keeps persisting on its own (reverse posting keeps any
+            // partial persistence prefix-safe), but nothing completes
+            // requester-side.
+            self.install_takeover_topology(new_coord);
+            return None;
+        }
+
+        // Finish requester-side: commit markers + oracle records for
+        // adopted/finished ids (ascending id order, one shared ack at
+        // the promotion point), version rollback for presumed aborts.
+        let recording = self.shards[0].fab.mem.recording();
+        let mut commit_ids: Vec<u64> =
+            adopted.iter().chain(finished.iter()).copied().collect();
+        commit_ids.sort_unstable();
+        let mut flips: Vec<Vec<CommitFlip>> = vec![Vec::new(); n];
+        for id in &commit_ids {
+            let p = &self.pending_staged[id];
+            for s in 0..n {
+                flips[s].extend_from_slice(&p.flips[s]);
+            }
+        }
+        self.commit_flips(&flips, promoted_at);
+        for id in &commit_ids {
+            let p = self.pending_staged.remove(id).expect("pending txn");
+            if recording {
+                let mut rec = KvTxnRecord {
+                    txn_id: *id,
+                    puts: Vec::new(),
+                    prepared_at: detect_at,
+                    acked_at: promoted_at,
+                };
+                for (key, s, version, value) in p.meta {
+                    rec.puts.push((key, version));
+                    self.shards[s].puts.push(PutRecord {
+                        key,
+                        version,
+                        value,
+                        acked_at: promoted_at,
+                    });
+                }
+                self.txns.push(rec);
+            }
+        }
+        for id in aborted.iter().rev() {
+            let p = self.pending_staged.remove(id).expect("pending txn");
+            for (key, s, version, _) in p.meta {
+                let shard = &mut self.shards[s];
+                if shard.versions.get(&key) == Some(&version) {
+                    if version <= 1 {
+                        shard.versions.remove(&key);
+                    } else {
+                        shard.versions.insert(key, version - 1);
+                    }
+                }
+            }
+        }
+        for s in 0..n {
+            if !self.failed.contains(&s) {
+                sync_clock(&mut self.shards[s].fab, promoted_at);
+            }
+        }
+        self.install_takeover_topology(new_coord);
+        Some(TakeoverReport {
+            detected_at: detect_at,
+            read_ns,
+            promoted_at,
+            resolved: res.resolved,
+            adopted,
+            finished,
+            aborted,
+        })
+    }
+
+    /// Post-takeover bookkeeping shared by every promotion exit path:
+    /// the successor becomes the acting coordinator, its decision ring
+    /// (and its witness's replica ring, when replicating) join the
+    /// merged decision sources, and the manifest mirror moves to the
+    /// next live witness (or retires on a spent topology).
+    fn install_takeover_topology(&mut self, new_coord: usize) {
+        self.coord_shard = new_coord;
+        self.extra_sources.push((new_coord, self.decision_ring));
+        self.mirror_shard = self.live_witness();
+        if let Some(w) = self.mirror_shard {
+            if !self.mirror_sources.contains(&w) {
+                self.mirror_sources.push(w);
+            }
+            if self.replicate {
+                self.extra_sources.push((w, self.witness_ring));
+            }
+        }
     }
 
     /// Latest acked version per key at global time `t`, across shards.
@@ -1725,6 +2427,226 @@ mod tests {
                 1 => assert_eq!(val, b"committed"),
                 2 => assert_eq!(val, b"in-flight"),
                 other => panic!("impossible version {other}"),
+            }
+        }
+    }
+
+    fn promo_store(shards: usize, seed: u64) -> ShardedKv {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        ShardedKv::new(cfg, TimingModel::default(), 64, shards, seed, true)
+            .with_decision_replication(true)
+            .with_intent_replication(true)
+    }
+
+    /// Intent mirroring changes the wire traffic (one manifest post per
+    /// txn) but not the outcome: same committed state, pending residue
+    /// drains to empty at every ack.
+    #[test]
+    fn intent_mirroring_preserves_outcomes_and_drains_pending() {
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let mut plain =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 5, true)
+                .with_decision_replication(true);
+        let mut mirrored =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 5, true)
+                .with_decision_replication(true)
+                .with_intent_replication(true);
+        for i in 0..8u64 {
+            let txn =
+                vec![(i, b"x".to_vec()), (100 + i, format!("y{i}").into_bytes())];
+            plain.put_txn(&txn);
+            mirrored.put_txn(&txn);
+            assert!(
+                mirrored.pending_txn_ids().is_empty(),
+                "acked txn left pending residue"
+            );
+        }
+        let a = plain.recover_all_at(plain.makespan());
+        let b = mirrored.recover_all_at(mirrored.makespan());
+        assert_eq!(a, b, "mirroring changed the committed state");
+        assert!(mirrored.intent_mirrored());
+    }
+
+    /// `put_txn_grouped_until` with an unreachable death instant is the
+    /// same machine as `put_txn_grouped`: identical acks, identical
+    /// virtual time, sequential ids.
+    #[test]
+    fn grouped_until_without_death_matches_grouped() {
+        // Include a same-key conflict so the wave path is exercised.
+        let batch: Vec<Vec<(u64, Vec<u8>)>> = vec![
+            vec![(1, b"a".to_vec()), (2, b"b".to_vec())],
+            vec![(3, b"c".to_vec())],
+            vec![(1, b"d".to_vec())], // conflicts with member 0
+            vec![(4, b"e".to_vec())],
+        ];
+        let gopts = GroupCommitOpts::default();
+        let mut a = promo_store(3, 9);
+        let acks = a.put_txn_grouped(&batch, &gopts);
+        let mut b = promo_store(3, 9);
+        let out = b.put_txn_grouped_until(&batch, &gopts, Some(u64::MAX));
+        assert_eq!(
+            acks,
+            out.acks.iter().map(|x| x.unwrap()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            out.ids,
+            (0..4).map(|i| Some(i as u64)).collect::<Vec<_>>()
+        );
+        assert_eq!(a.makespan(), b.makespan());
+        assert_eq!(
+            a.recover_all_at(a.makespan()),
+            b.recover_all_at(b.makespan())
+        );
+    }
+
+    /// Coordinator death one tick into a flush strands the in-flight
+    /// member; promotion finishes it from durable state alone, and the
+    /// unstaged members re-run cleanly under the new coordinator.
+    #[test]
+    fn promotion_finishes_in_flight_members_and_rerun_commits_the_rest() {
+        let mut kv = promo_store(3, 7);
+        let a0 = kv.put_txn(&[(1, b"base1".to_vec()), (2, b"base2".to_vec())]);
+        let batch: Vec<Vec<(u64, Vec<u8>)>> = (0..5)
+            .map(|i| vec![(10 + i as u64, format!("v{i}").into_bytes())])
+            .collect();
+        // Death lands right after the first member's posting step: that
+        // member is staged+prepared with no decision; the rest are
+        // never staged (no ids burned).
+        let die = a0 + 1;
+        let out =
+            kv.put_txn_grouped_until(&batch, &GroupCommitOpts::default(), Some(die));
+        assert!(out.acks.iter().all(|a| a.is_none()));
+        assert_eq!(out.ids[0], Some(1));
+        assert!(out.ids[1..].iter().all(|i| i.is_none()));
+        assert_eq!(kv.pending_txn_ids(), vec![1]);
+
+        let detect = die + 50_000;
+        let report = kv.promote(detect);
+        assert_eq!(kv.coord_shard(), witness_for(0, 3));
+        assert_eq!(kv.failed_shards(), &[0]);
+        assert!(kv.pending_txn_ids().is_empty(), "takeover left residue");
+        assert!(report.promoted_at > detect);
+        // The stranded member was prepared everywhere (payload +
+        // manifest durable long before detection) — it must FINISH, not
+        // presumed-abort.
+        assert_eq!(report.finished, vec![1]);
+        assert!(report.adopted.is_empty() && report.aborted.is_empty());
+
+        // Members the takeover did not settle re-run under the new
+        // coordinator; afterwards every batch key is committed.
+        for (i, id) in out.ids.iter().enumerate() {
+            let settled = out.acks[i].is_some()
+                || id.map(|id| {
+                    report.adopted.contains(&id)
+                        || report.finished.contains(&id)
+                })
+                .unwrap_or(false);
+            if !settled {
+                kv.put_txn(&batch[i]);
+            }
+        }
+        let st = kv.recover_all_at(kv.makespan());
+        for member in &batch {
+            let (k, v) = &member[0];
+            assert_eq!(&st[k].1, v, "key {k} lost across promotion");
+        }
+        assert_eq!(st[&1].1, b"base1");
+        assert_eq!(st[&2].1, b"base2");
+    }
+
+    /// A transaction whose PREPARE could not have persisted by the
+    /// detection instant is presumed aborted, its version bumps rolled
+    /// back, and the key re-commits at the rolled-back version.
+    #[test]
+    fn promotion_presumes_abort_and_rolls_back_unprepared_members() {
+        let mut kv = promo_store(3, 11);
+        let a0 = kv.put_txn(&[(1, b"base".to_vec())]);
+        let die = a0 + 1;
+        let out = kv.put_txn_grouped_until(
+            &[vec![(1, b"doomed".to_vec())]],
+            &GroupCommitOpts::default(),
+            Some(die),
+        );
+        assert_eq!(out.ids[0], Some(1));
+        // Detect immediately: the prepare posted at ~a0 cannot be
+        // durable yet, so the manifest/intent check must fail.
+        let report = kv.promote(die + 1);
+        assert_eq!(report.aborted, vec![1]);
+        assert!(report.finished.is_empty());
+        // Rollback: the next write of key 1 must install version 2
+        // again and commit cleanly.
+        kv.put_txn(&[(1, b"retry".to_vec())]);
+        let st = kv.recover_all_at(kv.makespan());
+        assert_eq!(st[&1], (2, b"retry".to_vec()));
+    }
+
+    /// Successor death during the takeover read pass: the first
+    /// promotion installs topology but settles nothing; the next
+    /// witness finishes the job, and the twice-promoted store still
+    /// recovers and serves.
+    #[test]
+    fn second_promotion_after_successor_death_mid_takeover() {
+        let mut kv = promo_store(4, 13);
+        let a0 = kv.put_txn(&[(1, b"base".to_vec()), (2, b"two".to_vec())]);
+        let die = a0 + 1;
+        let out = kv.put_txn_grouped_until(
+            &[vec![(20, b"inflight".to_vec())]],
+            &GroupCommitOpts::default(),
+            Some(die),
+        );
+        assert_eq!(out.ids[0], Some(1));
+        let detect1 = die + 50_000;
+        // Successor dies one tick after detection — mid read pass.
+        assert!(kv.promote_until(detect1, Some(detect1 + 1)).is_none());
+        assert_eq!(kv.coord_shard(), 1);
+        assert_eq!(kv.failed_shards(), &[0]);
+        assert_eq!(kv.pending_txn_ids(), vec![1], "nothing settles mid-death");
+        // Third coordinator takes over and finishes the stranded txn.
+        let detect2 = detect1 + 100_000;
+        let report = kv.promote(detect2);
+        assert_eq!(kv.coord_shard(), 2);
+        assert_eq!(kv.failed_shards(), &[0, 1]);
+        assert_eq!(report.finished, vec![1]);
+        assert!(kv.pending_txn_ids().is_empty());
+        // Post-promotion writes still commit and recover.
+        kv.put_txn(&[(30, b"after".to_vec())]);
+        let st = kv.recover_all_at(kv.makespan());
+        assert_eq!(st[&20].1, b"inflight");
+        assert_eq!(st[&30].1, b"after");
+        assert_eq!(st[&1].1, b"base");
+    }
+
+    #[test]
+    #[should_panic(expected = "promotion requires intent mirroring")]
+    fn promotion_without_intent_mirroring_panics() {
+        let cfg = ServerConfig::new(PDomain::Dmp, false, RqwrbLoc::Dram);
+        let mut kv =
+            ShardedKv::new(cfg, TimingModel::default(), 64, 3, 1, false)
+                .with_decision_replication(true);
+        kv.promote(1_000_000);
+    }
+
+    /// Media loss on the dead coordinator: decisions survive on the
+    /// witness replica, keys homed on the failed shard are lost media,
+    /// and everything else still recovers after promotion.
+    #[test]
+    fn promotion_survives_coordinator_media_loss() {
+        let mut kv = promo_store(3, 17);
+        for i in 0..6u64 {
+            kv.put_txn(&[(i, format!("v{i}").into_bytes())]);
+        }
+        let end = kv.makespan();
+        kv.fail_shard(0);
+        let report = kv.promote(end + 100_000);
+        assert!(report.adopted.is_empty() && report.finished.is_empty());
+        let st = kv.recover_all_at(kv.makespan());
+        for i in 0..6u64 {
+            if kv.shard_for(i) != 0 {
+                assert_eq!(
+                    st[&i].1,
+                    format!("v{i}").into_bytes(),
+                    "acked key {i} on a surviving shard lost"
+                );
             }
         }
     }

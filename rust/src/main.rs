@@ -75,6 +75,7 @@ fn main() -> ExitCode {
         Some("group") => cmd_group(&flags),
         Some("soak") => cmd_soak(&flags),
         Some("contend") => cmd_contend(&flags),
+        Some("promote") => cmd_promote(&flags),
         Some("claims") => cmd_claims(&flags),
         Some("crash-test") => cmd_crash_test(&flags),
         Some("recover-demo") => cmd_recover_demo(&flags),
@@ -139,6 +140,10 @@ COMMANDS
                 transactions race on skewed keys through the per-key
                 lock table, losers abort and retry with backoff —
                 abort rate and goodput vs the θ=0 uniform baseline.
+  promote       Live-failover grid: kill the acting coordinator
+                mid-workload; the witness shard promotes by lease
+                expiry and finishes every in-flight group — takeover
+                latency vs the offline recovery it replaces.
   claims        Run the sweeps and check every §4.3/§4.4 paper claim.
   crash-test    Crash-consistency campaign over the 96 grid scenarios.
   recover-demo  Crash + recovery walk-through (XLA kernels by default).
@@ -335,6 +340,38 @@ nothing, which is how skew taxes throughput. The crash-sweep campaign
 rust/tests/contention.rs; this command is the measurement surface.
 ";
 
+const USAGE_PROMOTE: &str = "\
+USAGE: rpmem promote [flags]
+
+Live coordinator failover grid (persist::promotion): each (config,
+clients) scenario first runs a no-death baseline, then kills the
+acting coordinator at the midpoint of the baseline makespan. The
+deterministic witness shard detects the death by reactor-lease
+expiry, reads the durable decision/manifest/intent prefix over
+one-sided ops, and promotes itself to acting coordinator, finishing
+every in-flight group — adopt, commit, or presumed-abort with a
+fencing tombstone — before the workload resumes. Every point reports
+death-to-resumption latency against the modeled offline merged-ring
+recovery it replaces, plus the goodput retained through the failover;
+a scenario whose takeover is not strictly faster than the offline
+estimate fails the command.
+
+KNOBS
+  --clients LIST         client counts            (default: 2,4)
+  --shards N             KV shards, >= 2          (default: 3)
+  --txns N               commits per client       (default: 6)
+  --lease NS             coordinator lease TTL    (default: 50000)
+  --seed N               workload seed            (default: 42)
+  --configs LIST         grid row indices, 0-15   (default: all 16;
+                         12-15 are the async-flush VPM rows)
+  --json FILE            dump the grid as JSON
+
+The crash-sweep campaign (coordinator death at every instant,
+mid-promotion death of the successor, zero leaked locks, zero
+stranded retry timers) lives in rust/tests/promotion.rs; this command
+is the measurement surface.
+";
+
 const USAGE_CLAIMS: &str = "\
 USAGE: rpmem claims [flags]
 
@@ -400,6 +437,9 @@ fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "contend" => &[
             "thetas", "clients", "shards", "txns", "seed", "configs", "json",
         ],
+        "promote" => &[
+            "clients", "shards", "txns", "lease", "seed", "configs", "json",
+        ],
         "claims" => &["appends", "json"],
         "crash-test" => &["appends", "seeds", "points", "scanner"],
         "recover-demo" => &["scanner", "appends"],
@@ -439,6 +479,7 @@ fn usage_for(cmd: &str) -> Option<&'static str> {
         "group" => Some(USAGE_GROUP),
         "soak" => Some(USAGE_SOAK),
         "contend" => Some(USAGE_CONTEND),
+        "promote" => Some(USAGE_PROMOTE),
         "claims" => Some(USAGE_CLAIMS),
         "crash-test" => Some(USAGE_CRASH_TEST),
         "recover-demo" => Some(USAGE_RECOVER_DEMO),
@@ -827,6 +868,30 @@ fn parse_u64_list(
     Ok(list)
 }
 
+/// Parse and validate `--configs` against the 16-row enlarged grid.
+/// An out-of-range index prints the command's usage to stderr and
+/// fails the run (non-zero exit) — a silently clamped or skipped row
+/// would corrupt a campaign.
+fn parse_config_ids(
+    cmd: &str,
+    flags: &HashMap<String, String>,
+) -> Result<Vec<u64>, String> {
+    let rows = ServerConfig::grid().len() as u64;
+    let every: Vec<u64> = (0..rows).collect();
+    let ids = parse_u64_list(flags, "configs", &every)?;
+    if let Some(bad) = ids.iter().find(|&&i| i >= rows) {
+        if let Some(usage) = usage_for(cmd) {
+            eprint!("{usage}");
+        }
+        return Err(format!(
+            "--configs entry {bad} is out of range for `{cmd}`: grid row \
+             indices are 0-{}",
+            rows - 1
+        ));
+    }
+    Ok(ids)
+}
+
 fn cmd_soak(flags: &HashMap<String, String>) -> Result<(), String> {
     use rpmem::coordinator::scaling::{
         render_soak_grid, run_soak_point, soak_grid_to_json,
@@ -837,11 +902,7 @@ fn cmd_soak(flags: &HashMap<String, String>) -> Result<(), String> {
     };
 
     let table = ServerConfig::grid();
-    let every: Vec<u64> = (0..table.len() as u64).collect();
-    let configs = parse_u64_list(flags, "configs", &every)?;
-    if configs.iter().any(|&i| i >= table.len() as u64) {
-        return Err(format!("--configs entries must be < {}", table.len()));
-    }
+    let configs = parse_config_ids("soak", flags)?;
     let seeds = parse_u64_list(flags, "seeds", &[1, 2, 3, 4])?;
     let clients = flag_u64(flags, "clients", 2) as usize;
     let shards = flag_u64(flags, "shards", 3) as usize;
@@ -994,11 +1055,7 @@ fn cmd_contend(flags: &HashMap<String, String>) -> Result<(), String> {
         run_contention_grid_over, ScalingOpts,
     };
     let table = ServerConfig::grid();
-    let every: Vec<u64> = (0..table.len() as u64).collect();
-    let config_ids = parse_u64_list(flags, "configs", &every)?;
-    if config_ids.iter().any(|&i| i >= table.len() as u64) {
-        return Err(format!("--configs entries must be < {}", table.len()));
-    }
+    let config_ids = parse_config_ids("contend", flags)?;
     let configs: Vec<ServerConfig> =
         config_ids.iter().map(|&i| table[i as usize]).collect();
     let thetas = parse_f64_list(flags, "thetas", &[0.0, 0.6, 0.9, 0.99])?;
@@ -1027,6 +1084,70 @@ fn cmd_contend(flags: &HashMap<String, String>) -> Result<(), String> {
         std::fs::write(path, j).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+fn cmd_promote(flags: &HashMap<String, String>) -> Result<(), String> {
+    use rpmem::coordinator::scaling::{
+        promotion_grid_to_json, render_promotion_grid,
+        run_promotion_grid_over, ScalingOpts,
+    };
+    use rpmem::kvstore::KV_TXN_SLOTS;
+    let table = ServerConfig::grid();
+    let config_ids = parse_config_ids("promote", flags)?;
+    let configs: Vec<ServerConfig> =
+        config_ids.iter().map(|&i| table[i as usize]).collect();
+    let clients = parse_usize_list(flags, "clients", &[2, 4])?;
+    let shards = flag_u64(flags, "shards", 3) as usize;
+    if shards < 2 {
+        return Err("--shards must be >= 2 (promotion needs a witness)".into());
+    }
+    let txns = flag_u64(flags, "txns", 6);
+    if txns == 0 {
+        return Err("--txns must be positive".into());
+    }
+    // Promotion runs keep crash oracles (the takeover reads crash
+    // images), so the recording txn ring bounds the workload.
+    let heaviest = clients.iter().copied().max().unwrap_or(1) as u64 * txns;
+    if heaviest > KV_TXN_SLOTS {
+        return Err(format!(
+            "--clients x --txns must not exceed {KV_TXN_SLOTS} (the \
+             recording transaction ring)"
+        ));
+    }
+    let lease = flag_u64(flags, "lease", 50_000);
+    if lease == 0 {
+        return Err("--lease must be positive".into());
+    }
+    let seed = flag_u64(flags, "seed", 42);
+    let opts = ScalingOpts { seed, capacity: 64, ..Default::default() };
+    let points = run_promotion_grid_over(
+        &configs, &clients, shards, txns, lease, &opts,
+    );
+    let title = "live coordinator failover across the grid — witness \
+                 takeover vs offline recovery";
+    println!("{}", render_promotion_grid(title, &points));
+    if let Some(path) = flags.get("json") {
+        let j = promotion_grid_to_json(&points).to_string_pretty();
+        std::fs::write(path, j).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    let slow = points
+        .iter()
+        .filter(|p| p.takeover_ns >= p.offline_ns)
+        .count();
+    if slow > 0 {
+        return Err(format!(
+            "{slow} of {} scenarios had a takeover no faster than offline \
+             recovery",
+            points.len()
+        ));
+    }
+    println!(
+        "all {} takeovers beat the offline estimate; every in-flight group \
+         finished or cleanly presumed-aborted",
+        points.len()
+    );
     Ok(())
 }
 

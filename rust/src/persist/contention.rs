@@ -198,6 +198,16 @@ pub struct ContentionRun {
     /// order (recording runs only) — replaying them on a fresh store
     /// reproduces the run bit-for-bit.
     pub flush_batches: Vec<Vec<Vec<(u64, Vec<u8>)>>>,
+    /// Lock-table entries still held when the run ended. Always empty
+    /// for a healthy run (every claim releases at its group's ack or
+    /// its abort); the crash checker trips on any residue
+    /// ([`lock_hygiene_error`]).
+    pub leaked_locks: Vec<u64>,
+    /// Retry timers that were left referencing a dead coordinator —
+    /// always zero here (no coordinator dies in a contention run); the
+    /// live-failover engine ([`crate::persist::promotion`]) populates
+    /// it and shares the same tripwire.
+    pub stranded_timer_refs: u64,
     /// The knobs that produced this run.
     pub opts: ContentionOpts,
     /// Aggregate outcome.
@@ -382,8 +392,13 @@ pub fn run_contention(
         });
         attempts[c] = 0;
     }
-    debug_assert!(pending.is_empty() && locked.is_empty());
+    debug_assert!(pending.is_empty());
     debug_assert_eq!(commits.len() as u64, total);
+    // Whatever the lock table still holds is a leak: every sweep
+    // instant audits this via `lock_hygiene_error`, not just debug
+    // builds. (Healthy runs always drain — lock holders always flush.)
+    let mut leaked_locks: Vec<u64> = locked.into_iter().collect();
+    leaked_locks.sort_unstable();
 
     let result = ContentionResult {
         clients: opts.clients,
@@ -397,7 +412,39 @@ pub fn run_contention(
         mean_commit_ns: mean(&commit_lat),
         p99_commit_ns: percentile(&commit_lat, 0.99),
     };
-    ContentionRun { kv, commits, flush_batches, opts: opts.clone(), result }
+    ContentionRun {
+        kv,
+        commits,
+        flush_batches,
+        leaked_locks,
+        stranded_timer_refs: 0,
+        opts: opts.clone(),
+        result,
+    }
+}
+
+/// The lock-hygiene tripwire shared by the contention and promotion
+/// crash checkers: after any sweep instant, every aborted or crashed
+/// transaction's lock-table entries must have been released, and no
+/// retry timer may still reference a dead coordinator. Returns the
+/// violation, or `None` when hygiene holds.
+pub fn lock_hygiene_error(
+    leaked_locks: &[u64],
+    stranded_timer_refs: u64,
+) -> Option<String> {
+    if !leaked_locks.is_empty() {
+        return Some(format!(
+            "leaked lock-table entries for keys {leaked_locks:?}: an \
+             aborted or crashed transaction never released its claims"
+        ));
+    }
+    if stranded_timer_refs != 0 {
+        return Some(format!(
+            "{stranded_timer_refs} retry timer(s) still reference a \
+             dead coordinator (never re-armed against a live one)"
+        ));
+    }
+    None
 }
 
 /// Audit one crash instant of a recording run. Three independent
@@ -414,10 +461,18 @@ pub fn run_contention(
 ///    an aborted transaction made visible).
 /// 3. **Durability** — the matched prefix must contain every commit
 ///    acked at or before `t`.
+/// 4. **Lock hygiene** ([`lock_hygiene_error`]) — no lock-table entry
+///    outlived the run and no retry timer references a dead
+///    coordinator.
 pub fn check_contention_crash_at(
     run: &ContentionRun,
     t: Nanos,
 ) -> Result<(), String> {
+    if let Some(e) =
+        lock_hygiene_error(&run.leaked_locks, run.stranded_timer_refs)
+    {
+        return Err(e);
+    }
     let state = run.snapshot_at(t);
     for (k, (v, val)) in &state {
         let bytes: [u8; 8] = val.as_slice().try_into().map_err(|_| {
@@ -565,6 +620,30 @@ mod tests {
             violations.iter().any(|v| v.contains("lost update")),
             "{violations:?}"
         );
+    }
+
+    #[test]
+    fn lock_leak_tripwire_fails_the_sweep() {
+        // A healthy run drains its lock table; inject residue and the
+        // checker must refuse every instant — the tripwire that makes
+        // "promotion released everything" a checked property, not a
+        // debug assert.
+        let mut run =
+            run_contention(cfg(), TimingModel::default(), &Default::default());
+        assert!(run.leaked_locks.is_empty());
+        assert_eq!(run.stranded_timer_refs, 0);
+        check_contention_crash_at(&run, 0).unwrap();
+        run.leaked_locks = vec![3, 9];
+        let violations = contention_sweep(&run, 10);
+        assert!(!violations.is_empty());
+        assert!(
+            violations.iter().all(|v| v.contains("leaked lock")),
+            "{violations:?}"
+        );
+        run.leaked_locks.clear();
+        run.stranded_timer_refs = 2;
+        let err = check_contention_crash_at(&run, 0).unwrap_err();
+        assert!(err.contains("dead coordinator"), "{err}");
     }
 
     #[test]

@@ -49,11 +49,11 @@
 
 use crate::fabric::engine::Fabric;
 use crate::fabric::timing::Nanos;
-use crate::persist::exec::WaitPoint;
+use crate::persist::exec::{post_singleton_batch, Update, WaitPoint};
 use crate::persist::method::SingletonMethod;
 use crate::persist::txn::{
-    decode_decision, post_decision, sync_clock, DecisionScan, SlotRing,
-    DECISION_BYTES,
+    decode_decision, post_decision, post_prepare, sync_clock, DecisionScan,
+    IntentRecord, SlotRing, DECISION_BYTES,
 };
 use crate::server::memory::Image;
 
@@ -64,6 +64,27 @@ pub fn witness_for(coord: usize, shards: usize) -> usize {
     assert!(shards >= 2, "decision replication needs a second shard");
     assert!(coord < shards, "coordinator {coord} out of range {shards}");
     (coord + 1) % shards
+}
+
+/// Deterministic witness choice for a **promoted** coordinator: the
+/// next shard in ring order after `coord`, skipping every shard in
+/// `failed` (their PM is gone — mirroring to a dead shard is a silent
+/// single-copy). Returns `None` when no live shard besides the
+/// coordinator remains (the two-shard minimum topology after one loss):
+/// the promoted coordinator then serves in degraded single-copy mode
+/// rather than aliasing the witness onto itself or a corpse. Never
+/// returns `coord` and never returns a failed shard (pinned by the
+/// promotion campaign's witness-determinism tests).
+pub fn witness_for_promoted(
+    coord: usize,
+    shards: usize,
+    failed: &[usize],
+) -> Option<usize> {
+    assert!(coord < shards, "coordinator {coord} out of range {shards}");
+    assert!(!failed.contains(&coord), "promoted coordinator must be live");
+    (1..shards)
+        .map(|step| (coord + step) % shards)
+        .find(|w| !failed.contains(w))
 }
 
 /// The two in-flight decision writes of a replicated DECIDE: wait both;
@@ -124,6 +145,81 @@ pub fn post_decision_replicated(
             method,
             txn_id,
             replica_addr,
+            witness_seq,
+        ),
+    }
+}
+
+/// The two in-flight PREPARE writes of an intent-replicated transaction
+/// — the PR 4 leftover that makes **live** failover sound. Mirrors
+/// [`DecisionPair`]: the primary is the participant shard's
+/// payload+intent train, the witness is the coordinator's mirror record
+/// (txn manifest) on the witness shard's mirror ring, and the
+/// transaction counts as *prepared* only at the **max** of both
+/// persistence points. Without the mirror, a promoted witness cannot
+/// distinguish "prepared everywhere" from "partially prepared" (a
+/// missing intent could mean either non-participation or an unfinished
+/// train); with it, the manifest names the participant set, so the
+/// durable prefix is decidable over one-sided reads alone.
+#[derive(Debug, Clone, Copy)]
+pub struct IntentPair {
+    /// Wait-point of the payload+intent train (participant QP).
+    pub primary: WaitPoint,
+    /// Wait-point of the mirror/manifest record (witness QP).
+    pub witness: WaitPoint,
+}
+
+impl IntentPair {
+    /// Observe both persistence points; returns the replicated
+    /// prepared-at point.
+    pub fn wait(self, primary: &mut Fabric, witness: &mut Fabric) -> Nanos {
+        self.primary.wait(primary).max(self.witness.wait(witness))
+    }
+
+    /// Peek both points without advancing either requester clock (both
+    /// trains are posted before either is awaited — same overlap
+    /// discipline as [`DecisionPair::points`]).
+    pub fn points(
+        &self,
+        primary: &Fabric,
+        witness: &Fabric,
+    ) -> (Nanos, Nanos) {
+        (self.primary.ready_at(primary), self.witness.ready_at(witness))
+    }
+}
+
+/// PREPARE with intent replication: post the payload+intent train on the
+/// participant QP and the pre-encoded `mirror` record (the transaction
+/// manifest) on the witness QP, **both before either persistence point
+/// is awaited** — the same overlap discipline as
+/// [`post_decision_replicated`], so intent mirroring costs roughly one
+/// overlapped persistence point, not a serialized second round trip
+/// (pinned by `replicated_prepare_overlaps_not_serializes`).
+#[allow(clippy::too_many_arguments)]
+pub fn post_prepare_replicated(
+    primary: &mut Fabric,
+    witness: &mut Fabric,
+    method: SingletonMethod,
+    payload: &[Update],
+    intent: &IntentRecord,
+    intent_addr: u64,
+    mirror: Update,
+    primary_seq: u32,
+    witness_seq: u32,
+) -> IntentPair {
+    IntentPair {
+        primary: post_prepare(
+            primary,
+            method,
+            payload,
+            intent,
+            intent_addr,
+            primary_seq,
+        ),
+        witness: post_singleton_batch(
+            witness,
+            method,
+            std::slice::from_ref(&mirror),
             witness_seq,
         ),
     }
@@ -224,6 +320,44 @@ mod tests {
     #[should_panic(expected = "second shard")]
     fn single_shard_cannot_replicate() {
         witness_for(0, 1);
+    }
+
+    #[test]
+    fn promoted_witness_skips_failed_shards() {
+        // Coordinator 0 died; shard 1 promoted: its witness is the next
+        // live shard, never the corpse.
+        assert_eq!(witness_for_promoted(1, 3, &[0]), Some(2));
+        assert_eq!(witness_for_promoted(1, 4, &[0]), Some(2));
+        // The failed shard sits between the new coordinator and its
+        // ring successor: skip over it.
+        assert_eq!(witness_for_promoted(2, 4, &[3]), Some(0));
+        assert_eq!(witness_for_promoted(2, 4, &[3, 0]), Some(1));
+        // No failures degenerates to the PR 4 rule.
+        for n in 2..8 {
+            for c in 0..n {
+                assert_eq!(witness_for_promoted(c, n, &[]), Some(witness_for(c, n)));
+            }
+        }
+        // Exhaustive: the choice is never the coordinator, never dead.
+        for n in 2..6 {
+            for dead in 0..n {
+                for c in (0..n).filter(|&c| c != dead) {
+                    if let Some(w) = witness_for_promoted(c, n, &[dead]) {
+                        assert_ne!(w, c);
+                        assert_ne!(w, dead);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_shard_minimum_topology_has_no_witness_after_loss() {
+        // n=2, coordinator 0 lost, shard 1 promoted: no live peer
+        // remains — degraded single-copy mode, not a witness alias.
+        assert_eq!(witness_for_promoted(1, 2, &[0]), None);
+        assert_eq!(witness_for_promoted(0, 2, &[1]), None);
+        assert_eq!(witness_for_promoted(2, 3, &[0, 1]), None);
     }
 
     #[test]
@@ -342,6 +476,66 @@ mod tests {
         assert!(
             acked < t2,
             "overlapped pair ({acked}) must beat serialized trains ({t2})"
+        );
+    }
+
+    /// The two PREPARE trains must overlap exactly like the DECIDE
+    /// pair: prepared-at is the max of the two points, and a control
+    /// that waits the primary before posting the mirror is strictly
+    /// slower.
+    #[test]
+    fn replicated_prepare_overlaps_not_serializes() {
+        use crate::persist::txn::{encode_intent, CommitFlip, INTENT_BYTES};
+        let cfg = ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram);
+        let intent = IntentRecord {
+            txn_id: 0,
+            shard: 1,
+            flips: vec![CommitFlip { addr: 0x6000, value: 1 }],
+        };
+        let ir = SlotRing { base: 0x4800, slots: 8, stride: INTENT_BYTES as u64 };
+        let payload = [Update::new(0x5000, vec![7u8; 40])];
+        let mirror =
+            || Update::new(ir.addr(0) + 0x800, encode_intent(&intent).to_vec());
+        let mut part = fab(cfg, 11);
+        let mut wit = fab(cfg, 12);
+        let pair = post_prepare_replicated(
+            &mut part,
+            &mut wit,
+            SingletonMethod::WriteFlush,
+            &payload,
+            &intent,
+            ir.addr(0),
+            mirror(),
+            0,
+            0,
+        );
+        let (p, w) = pair.points(&part, &wit);
+        let prepared = pair.wait(&mut part, &mut wit);
+        assert_eq!(prepared, p.max(w), "prepared-at must be the pair max");
+        // Serialized control on identical seeds.
+        let mut p2 = fab(cfg, 11);
+        let mut w2 = fab(cfg, 12);
+        let wp = post_prepare(
+            &mut p2,
+            SingletonMethod::WriteFlush,
+            &payload,
+            &intent,
+            ir.addr(0),
+            0,
+        );
+        let t1 = wp.wait(&mut p2);
+        sync_clock(&mut w2, t1);
+        let m = mirror();
+        let wp = post_singleton_batch(
+            &mut w2,
+            SingletonMethod::WriteFlush,
+            std::slice::from_ref(&m),
+            0,
+        );
+        let t2 = wp.wait(&mut w2);
+        assert!(
+            prepared < t2,
+            "overlapped pair ({prepared}) must beat serialized trains ({t2})"
         );
     }
 

@@ -14,7 +14,13 @@
 //! engine ([`contention`]) races concurrent transactions on zipfian hot
 //! keys through a per-key lock table, aborted losers backing off as
 //! reactor timer events, with crash sweeps proving no lost update and
-//! committed-prefix-consistent snapshot reads.
+//! committed-prefix-consistent snapshot reads. The promotion layer
+//! ([`promotion`]) closes the loop on coordinator death: the witness
+//! shard detects the loss via reactor-lease expiry, reads the durable
+//! decision/manifest/intent state over one-sided ops, and promotes
+//! itself to acting coordinator, **finishing** every in-flight
+//! transaction — adopt, commit, or presumed-abort with a fencing
+//! tombstone — instead of stranding them until offline recovery.
 
 pub mod config;
 pub mod contention;
@@ -23,6 +29,7 @@ pub mod failover;
 pub mod groupcommit;
 pub mod method;
 pub mod planner;
+pub mod promotion;
 pub mod retry;
 pub mod taxonomy;
 pub mod txn;
@@ -30,17 +37,25 @@ pub mod wire;
 
 pub use config::{Extensions, PDomain, RqwrbLoc, ServerConfig, Transport};
 pub use contention::{
-    check_contention_crash_at, contention_sweep, run_contention,
-    CommittedTxn, ContentionOpts, ContentionResult, ContentionRun,
+    check_contention_crash_at, contention_sweep, lock_hygiene_error,
+    run_contention, CommittedTxn, ContentionOpts, ContentionResult,
+    ContentionRun,
 };
 pub use exec::{exec_compound, exec_singleton, PersistOutcome, Update};
-pub use failover::{recover_decisions_merged, witness_for, DecisionPair};
+pub use failover::{
+    recover_decisions_merged, witness_for, witness_for_promoted,
+    DecisionPair, IntentPair,
+};
 pub use groupcommit::{
     post_decision_group, post_decision_group_replicated, GroupCommitOpts,
     GroupScheduler, PlannedGroup,
 };
 pub use method::{CompoundMethod, PersistencePoint, Primary, SingletonMethod};
 pub use planner::{plan_compound, plan_singleton};
+pub use promotion::{
+    check_promotion_crash_at, promotion_sweep, run_promotion,
+    PromotionOpts, PromotionResult, PromotionRun, TakeoverReport,
+};
 pub use retry::{await_pair_with_retry, await_with_retry, RetryPolicy};
 pub use txn::{
     plan_txn_method, recover_decisions, recover_intents, roll_forward,

@@ -1,0 +1,1109 @@
+//! Layer 9 — live coordinator failover: witness **promotion** that
+//! finishes in-flight groups instead of waiting for offline recovery.
+//!
+//! The failover layer ([`crate::persist::failover`]) made the *commit
+//! state* survive coordinator loss by mirroring decision records to a
+//! deterministic witness shard. But surviving is not the same as
+//! continuing: when the coordinator process dies, every transaction in
+//! its in-flight window — prepared-undecided, decided-unacked, or
+//! mid-group — is stranded until someone reconnects, re-scans, and
+//! re-drives the store. This module closes that gap with a **live
+//! takeover**:
+//!
+//! * **Manifest mirror** — alongside each PREPARE fan-out the
+//!   coordinator posts the transaction's *manifest* (its participant-
+//!   shard mask) to the witness's mirror ring, folded into the
+//!   prepared-at max ([`crate::kvstore::ShardedKv::with_intent_replication`]).
+//!   The manifest is what lets a promoted witness distinguish
+//!   "prepared everywhere, safe to finish" from "partially prepared,
+//!   presume abort" without the dead coordinator's requester state.
+//!
+//! * **Lease** — the witness watches a reactor-timer lease
+//!   ([`crate::runtime::reactor::Lease`]): the coordinator heartbeats
+//!   at every event it dispatches; death is detected one TTL after the
+//!   last heartbeat, entirely on the event axis.
+//!
+//! * **Takeover** — at lease expiry the witness fences the dead
+//!   coordinator and reads the durable truth over one-sided ops (the
+//!   paper's core premise: a process-dead responder's PM is still
+//!   readable with no responder CPU): the merged decision prefix, the
+//!   manifest mirror, and each named participant's intent slot. Every
+//!   in-flight id is then **finished** — adopted (decision durable,
+//!   commit markers re-posted), committed (prepared everywhere, COMMIT
+//!   takeover record), or presumed-aborted (ABORT tombstone
+//!   [`crate::persist::txn::DECISION_ABORT`] + version rollback). The
+//!   takeover train is reverse-posted, so a mid-promotion death of the
+//!   *successor* leaves a prefix-safe partial train for the next
+//!   witness in ring order ([`crate::persist::failover::witness_for_promoted`]).
+//!
+//! ```text
+//!              heartbeat at every dispatch
+//!   ALIVE ────────────────────────────────────────────┐
+//!     │ die (process or media)                        │ renew
+//!     ▼                                               ▼
+//!   DEAD ── lease expires (ttl after last beat) ──► PROMOTE
+//!     ▲                                               │ read prefix +
+//!     │ successor dies mid-takeover                   │ manifests +
+//!     └──────────── (next witness re-arms) ◄──────────┤ intents
+//!                                                     ▼
+//!   adopted ───► post flips, ack at promoted_at   TAKEOVER TRAIN
+//!   finished ──► COMMIT record + flips            (reverse-posted,
+//!   aborted ───► ABORT tombstone + rollback        witness-replicated)
+//! ```
+//!
+//! [`run_promotion`] drives the contention workload
+//! ([`crate::persist::contention`]) through a coordinator death at a
+//! chosen instant and proves, via [`promotion_sweep`], that the store
+//! stays crash-consistent at **every** instant — before, during, and
+//! after the takeover — with zero leaked lock-table entries and zero
+//! retry timers still referencing a dead coordinator.
+
+use crate::fabric::faults::NetworkModel;
+use crate::fabric::timing::{Nanos, TimingModel};
+use crate::integrity::fletcher_words;
+use crate::kvstore::{ShardedKv, KV_TXN_SLOTS};
+use crate::persist::config::ServerConfig;
+use crate::persist::contention::{
+    lock_hygiene_error, CommittedTxn, ContentionOpts,
+};
+use crate::persist::exec::Update;
+use crate::persist::txn::{
+    decode_decision_status, decode_intent, SlotRing, DECISION_ABORT,
+    DECISION_BYTES, DECISION_COMMIT, DECISION_WORDS, INTENT_BYTES,
+};
+use crate::remotelog::pipeline::zipf_txn_keys;
+use crate::runtime::reactor::{Lease, Reactor};
+use crate::server::memory::Image;
+use crate::util::rng::Zipf;
+use crate::util::stats::{mean, percentile};
+use std::collections::{HashMap, HashSet};
+
+/// Manifest record size — decision-record geometry (64 bytes, 16 LE
+/// u32 words), so mirror rings stride identically to decision rings.
+pub const MANIFEST_BYTES: usize = DECISION_BYTES;
+
+/// Encode a PREPARE manifest: transaction id + participant-shard mask
+/// (bit `s` set ⇔ shard `s` received a payload/intent train). Fletcher
+/// pair over words 0..14, mirroring the decision-record layout.
+pub fn encode_manifest(txn_id: u64, mask: u32) -> [u8; MANIFEST_BYTES] {
+    assert!(mask != 0, "a manifest names at least one participant");
+    let mut words = [0u32; DECISION_WORDS];
+    words[0] = txn_id as u32;
+    words[1] = (txn_id >> 32) as u32;
+    words[2] = mask;
+    let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
+    words[DECISION_WORDS - 2] = s1;
+    words[DECISION_WORDS - 1] = s2;
+    let mut out = [0u8; MANIFEST_BYTES];
+    for (i, w) in words.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Decode + integrity-check a manifest image: `(txn_id, mask)`, or
+/// `None` for empty/torn slots (an all-zero slot fails the checksum —
+/// `fletcher_words` seeds `s1 = 1` — and a zero mask is rejected).
+pub fn decode_manifest(bytes: &[u8]) -> Option<(u64, u32)> {
+    if bytes.len() != MANIFEST_BYTES {
+        return None;
+    }
+    let mut words = [0u32; DECISION_WORDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
+    if words[DECISION_WORDS - 2] != s1
+        || words[DECISION_WORDS - 1] != s2
+        || words[2] == 0
+    {
+        return None;
+    }
+    Some((words[0] as u64 | ((words[1] as u64) << 32), words[2]))
+}
+
+/// Scan a mirror ring on a crash image: every durable, checksummed
+/// manifest whose id routes to its slot. Unlike decisions, manifests
+/// need no prefix structure — each is an independent fact about one
+/// transaction's participant set.
+pub fn recover_manifests(image: &Image, ring: &SlotRing) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    for slot in 0..ring.slots {
+        let rec = image.read(ring.base + slot * ring.stride, MANIFEST_BYTES);
+        if let Some((id, mask)) = decode_manifest(rec) {
+            if id % ring.slots == slot {
+                out.push((id, mask));
+            }
+        }
+    }
+    out
+}
+
+/// Outcome of a merged, tombstone-aware decision scan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecisionResolution {
+    /// Longest resolved prefix: every id `< resolved` has a durable
+    /// COMMIT record or ABORT tombstone on some source ring.
+    pub resolved: u64,
+    /// Ids inside the prefix resolved as ABORT.
+    pub aborted: HashSet<u64>,
+}
+
+/// Walk id 0.. across every `(image, ring)` source, merging with
+/// **abort priority**: a valid ABORT tombstone on any source resolves
+/// the id as aborted even if another source holds a valid COMMIT —
+/// that is the fencing rule that lets a promoted coordinator override a
+/// dead coordinator's decision train persisting *after* the takeover
+/// read. The scan stops at the first id no source resolves (presumed
+/// abort for everything beyond, exactly the classic rule).
+pub fn resolve_decisions(
+    sources: &[(&Image, &SlotRing)],
+) -> DecisionResolution {
+    let slots = sources.iter().map(|(_, r)| r.slots).min().unwrap_or(0);
+    let mut aborted = HashSet::new();
+    let mut id = 0u64;
+    while id < slots {
+        let mut commit = false;
+        let mut abort = false;
+        for (img, ring) in sources {
+            let rec = img.read(ring.addr(id), DECISION_BYTES);
+            match decode_decision_status(rec) {
+                Some((rid, status)) if rid == id => {
+                    if status == DECISION_ABORT {
+                        abort = true;
+                    } else if status == DECISION_COMMIT {
+                        commit = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if abort {
+            aborted.insert(id);
+        } else if !commit {
+            break;
+        }
+        id += 1;
+    }
+    DecisionResolution { resolved: id, aborted }
+}
+
+/// Is shard `shard`'s PREPARE intent for `txn_id` durable on `image`?
+/// The promoted coordinator's per-participant commitability probe: a
+/// valid, checksummed intent matching both the id and the shard.
+pub fn intent_durable(
+    image: &Image,
+    ring: &SlotRing,
+    txn_id: u64,
+    shard: u32,
+) -> bool {
+    match decode_intent(image.read(ring.addr(txn_id), INTENT_BYTES)) {
+        Some(i) => i.txn_id == txn_id && i.shard == shard,
+        None => false,
+    }
+}
+
+/// Build the takeover train: one update per `(id, status)` record at
+/// the id's ring slot, **reverse-posted** (descending id). A doorbell
+/// train persists in posting order, so any partial persistence covers
+/// a *suffix* of the ids — the ascending prefix scan stalls at the
+/// first missing id and never observes a record whose predecessors are
+/// torn. That is what makes mid-promotion death of the successor safe.
+pub fn takeover_updates(
+    records: &[(u64, u32)],
+    ring: &SlotRing,
+) -> Vec<Update> {
+    let mut recs = records.to_vec();
+    recs.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    recs.iter()
+        .map(|&(id, status)| {
+            Update::new(
+                ring.addr(id),
+                crate::persist::txn::encode_decision_status(id, status)
+                    .to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// Cost of the promotion read pass: `ops` one-sided READs pulling
+/// `bytes` total. Each READ is a full PCIe-drain round trip (a READ
+/// orders after prior placements — the FLUSH-emulation path of §3.4),
+/// plus streaming the payload back through the DMA path. No responder
+/// CPU, no connection setup: the witness already holds QPs to every
+/// shard — the structural reason live takeover beats offline recovery.
+pub fn one_sided_read_ns(t: &TimingModel, ops: u64, bytes: u64) -> Nanos {
+    let per_op = t.post_ns
+        + t.rnic_op_ns
+        + t.wire_ns
+        + t.rnic_op_ns
+        + t.pcie_drain_ns
+        + t.wire_ns
+        + t.rnic_op_ns;
+    ops * per_op + t.dma_stream_ns(bytes)
+}
+
+/// Cost of the **offline** alternative the promotion path replaces: a
+/// fresh recovery process must re-establish a QP to every live shard
+/// (two two-sided round trips each — connection handshake, then
+/// rkey/layout exchange, both needing the responder CPU), bulk-read
+/// each shard's full application region (`bytes_per_shard`: buckets
+/// plus all four rings), and validate it at memcpy bandwidth. Compare
+/// against [`one_sided_read_ns`] over just the *rings* of non-local
+/// shards to see why takeover latency wins structurally, not by
+/// constant-tuning.
+pub fn offline_recovery_scan_ns(
+    t: &TimingModel,
+    live_shards: u64,
+    bytes_per_shard: u64,
+) -> Nanos {
+    let two_sided_rtt = t.post_ns
+        + t.rnic_op_ns
+        + t.wire_ns
+        + t.rnic_op_ns
+        + t.cpu_dispatch_ns
+        + t.cpu_post_ack_ns
+        + t.wire_ns
+        + t.rnic_op_ns;
+    let per_shard = 2 * two_sided_rtt
+        + one_sided_read_ns(t, 1, bytes_per_shard)
+        + t.cpu_copy_ns(bytes_per_shard);
+    live_shards * per_shard
+}
+
+/// What one takeover did, as observed by the promoted witness.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TakeoverReport {
+    /// Lease-expiry instant (event axis) the takeover started from.
+    pub detected_at: Nanos,
+    /// One-sided read-pass cost ([`one_sided_read_ns`]) preceding the
+    /// takeover train.
+    pub read_ns: Nanos,
+    /// The takeover train's persistence point: adopted and finished
+    /// transactions ack here; the store resumes here.
+    pub promoted_at: Nanos,
+    /// Resolved decision prefix at detection (merged, tombstone-aware).
+    pub resolved: u64,
+    /// Decided-but-unacked ids the successor adopted (flips re-posted,
+    /// acked at `promoted_at`).
+    pub adopted: Vec<u64>,
+    /// Prepared-everywhere ids finished with a COMMIT takeover record.
+    pub finished: Vec<u64>,
+    /// Ids presumed aborted (ABORT tombstone where the id was still
+    /// undecided; speculative versions rolled back).
+    pub aborted: Vec<u64>,
+}
+
+impl TakeoverReport {
+    /// Did the takeover settle `id` as a commit (adopted or finished)?
+    pub fn committed(&self, id: u64) -> bool {
+        self.adopted.contains(&id) || self.finished.contains(&id)
+    }
+}
+
+/// Knobs for one live-failover run: the contention workload plus the
+/// death/lease schedule.
+#[derive(Debug, Clone)]
+pub struct PromotionOpts {
+    /// Workload knobs (clients, quota, zipfian skew, shards, group and
+    /// retry policy). `broken_locks` must be off; `record` should be on
+    /// for sweeps. Promotion needs `shards >= 2`.
+    pub load: ContentionOpts,
+    /// Lease TTL: death is detected this long after the coordinator's
+    /// last heartbeat (it heartbeats at every dispatched event).
+    pub lease_ns: Nanos,
+    /// Kill the acting coordinator at this virtual instant (`None` = it
+    /// outlives the workload — the baseline).
+    pub die_at: Option<Nanos>,
+    /// Kill the **successor** at this instant, mid-takeover: the next
+    /// witness in ring order must finish the job (needs `shards >= 3`).
+    pub die2_at: Option<Nanos>,
+    /// Negative control when `false`: death is never detected, nobody
+    /// promotes — the sweep MUST flag the leaked locks and stranded
+    /// timers this produces.
+    pub enabled: bool,
+    /// Death also destroys the coordinator's PM media (its intents and
+    /// keys are gone, not just its process). Exercises the blank-image
+    /// presume-abort path; requires decision replication to survive.
+    pub lose_media: bool,
+    /// Hostile-network perturbation attached to every shard's QP
+    /// (jitter and duplicates only — this driver layers no op-retry
+    /// engine, so `drop_per_mille` must be 0; the soak axis owns
+    /// dropped-train coverage).
+    pub faults: Option<NetworkModel>,
+}
+
+impl Default for PromotionOpts {
+    fn default() -> Self {
+        PromotionOpts {
+            load: ContentionOpts {
+                shards: 3,
+                replicate: true,
+                ..Default::default()
+            },
+            lease_ns: 50_000,
+            die_at: None,
+            die2_at: None,
+            enabled: true,
+            lose_media: false,
+            faults: None,
+        }
+    }
+}
+
+/// Aggregate outcome of one live-failover run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromotionResult {
+    /// Committed transactions (workload + takeover-settled).
+    pub committed: u64,
+    /// Lock-conflict aborts (retried via backoff).
+    pub aborts: u64,
+    /// Members settled by presumed abort or re-proposed from scratch
+    /// because of a coordinator death (each later retried).
+    pub death_aborts: u64,
+    /// Group flushes issued.
+    pub flushes: u64,
+    /// Reactor events dispatched (heartbeat renewals included).
+    pub events: u64,
+    /// Virtual makespan (ns).
+    pub span_ns: Nanos,
+    /// First coordinator death instant, if one was scheduled and hit.
+    pub died_at: Option<Nanos>,
+    /// Lease-expiry instant of the *final* successful takeover.
+    pub detected_at: Option<Nanos>,
+    /// Promotion point of the final successful takeover.
+    pub promoted_at: Option<Nanos>,
+    /// Mean admission-to-ack commit latency (ns).
+    pub mean_commit_ns: f64,
+    /// p99 admission-to-ack commit latency (ns).
+    pub p99_commit_ns: u64,
+}
+
+impl PromotionResult {
+    /// Death-to-resumption latency: `promoted_at - died_at` (the
+    /// takeover window clients actually experience), `None` for
+    /// baseline runs or a disabled control.
+    pub fn takeover_ns(&self) -> Option<Nanos> {
+        match (self.died_at, self.promoted_at) {
+            (Some(d), Some(p)) => Some(p.saturating_sub(d)),
+            _ => None,
+        }
+    }
+
+    /// Committed-transaction throughput in million txns per simulated
+    /// second.
+    pub fn goodput_mtps(&self) -> f64 {
+        self.committed as f64 / self.span_ns.max(1) as f64 * 1e3
+    }
+}
+
+/// A finished live-failover run: the store (with its takeover history),
+/// the commit ledger, and the hygiene counters the tripwires audit.
+pub struct PromotionRun {
+    /// The sharded store, post-takeover topology installed.
+    pub kv: ShardedKv,
+    /// Every committed transaction — global ack order, which is also
+    /// txn-id order (takeover-settled members ack at the promotion
+    /// point, between the dead coordinator's last ack and the
+    /// successor's first).
+    pub commits: Vec<CommittedTxn>,
+    /// Every takeover that completed, in order.
+    pub takeovers: Vec<TakeoverReport>,
+    /// Lock-table entries still held when the run ended — non-empty
+    /// only when promotion is disabled (the leak the tripwire exists
+    /// to catch).
+    pub leaked_locks: Vec<u64>,
+    /// Client retry timers that fired against a dead coordinator and
+    /// were never re-armed against a live one.
+    pub stranded_timer_refs: u64,
+    /// The knobs that produced this run.
+    pub opts: PromotionOpts,
+    /// Aggregate outcome.
+    pub result: PromotionResult,
+}
+
+impl PromotionRun {
+    /// Committed-prefix-consistent snapshot at instant `t` (recording
+    /// runs only) — takeover-aware: the merged decision sources include
+    /// every successor's rings.
+    pub fn snapshot_at(&self, t: Nanos) -> HashMap<u64, (u32, Vec<u8>)> {
+        self.kv.recover_all_at(t)
+    }
+}
+
+/// A lock-holding proposal waiting for (or stranded by) a flush.
+struct Proposal {
+    client: usize,
+    keys: Vec<u64>,
+    bases: Vec<u64>,
+    ready_at: Nanos,
+    attempts: u32,
+}
+
+/// Drive the contention workload through a live coordinator failover.
+///
+/// Identical to [`crate::persist::contention::run_contention`] while
+/// the coordinator lives (heartbeating a [`Lease`] at every dispatched
+/// event), then at `die_at`: members the dying flush fully committed
+/// ack normally; everything else is left exactly as the crash left it —
+/// locks held, clients unscheduled — until the lease expires and the
+/// witness promotes ([`ShardedKv::promote_until`]). Takeover-settled
+/// members commit at the promotion point; presumed-aborted and
+/// never-staged members release their locks and re-propose against the
+/// new coordinator; client timers that fired into the dead window
+/// re-arm at the promotion point. Fully deterministic from `opts`.
+pub fn run_promotion(
+    cfg: ServerConfig,
+    timing: TimingModel,
+    opts: &PromotionOpts,
+) -> PromotionRun {
+    let load = &opts.load;
+    assert!(!load.broken_locks, "promotion runs use a working lock table");
+    assert!(load.shards >= 2, "promotion needs a witness shard");
+    assert!(load.clients >= 1 && load.txns_per_client >= 1);
+    assert!(load.keys_per_txn >= 1 && load.keys_per_txn as u64 <= load.keys);
+    assert!(load.keys <= load.capacity);
+    assert!(load.group.max_group >= 1);
+    assert!(opts.lease_ns >= 1);
+    let total = load.txns_per_client * load.clients as u64;
+    assert!(
+        !load.record || total <= KV_TXN_SLOTS,
+        "recording runs must fit the txn oracle rings"
+    );
+
+    let zipf = Zipf::new(load.keys, load.theta);
+    let mut kv = ShardedKv::new(
+        cfg,
+        timing,
+        load.capacity,
+        load.shards,
+        load.seed,
+        load.record,
+    )
+    .with_decision_replication(load.replicate)
+    .with_intent_replication(true);
+    if let Some(model) = &opts.faults {
+        assert_eq!(
+            model.drop_per_mille, 0,
+            "promotion runs layer no op-retry engine; dropped-train \
+             coverage belongs to the soak axis"
+        );
+        kv.attach_faults(model);
+    }
+
+    let lease_task = load.clients;
+    let mut reactor = Reactor::new();
+    for c in 0..load.clients {
+        reactor.schedule(0, c);
+    }
+    let mut lease = Lease::arm(&mut reactor, lease_task, opts.lease_ns, 0);
+
+    let mut next_txn = vec![0u64; load.clients];
+    let mut attempts = vec![0u32; load.clients];
+    let mut ledger: HashMap<u64, u64> = HashMap::new();
+    let mut locked: HashSet<u64> = HashSet::new();
+    let mut pending: Vec<Proposal> = Vec::new();
+    let mut open_ready: Nanos = 0;
+    let mut commits: Vec<CommittedTxn> = Vec::new();
+    let mut commit_lat: Vec<u64> = Vec::new();
+    let (mut aborts, mut flushes, mut death_aborts) = (0u64, 0u64, 0u64);
+
+    // Failover state: `die` is armed until the death fires, then the
+    // run is `dead` until a takeover completes. Stranded proposals keep
+    // their locks (that is the leak promotion must fix); clients whose
+    // timers fire into the dead window are parked.
+    let mut die = opts.die_at;
+    let mut die2 = opts.die2_at;
+    let mut died_at: Option<Nanos> = None;
+    let mut dead = false;
+    let mut stranded: Vec<(Proposal, Option<u64>)> = Vec::new();
+    let mut parked: Vec<usize> = Vec::new();
+    let mut takeovers: Vec<TakeoverReport> = Vec::new();
+
+    // Commit bookkeeping shared by live acks and takeover settlements.
+    let settle_commit = |p: &Proposal,
+                             acked: Nanos,
+                             ledger: &mut HashMap<u64, u64>,
+                             locked: &mut HashSet<u64>,
+                             commits: &mut Vec<CommittedTxn>,
+                             commit_lat: &mut Vec<u64>,
+                             next_txn: &mut [u64],
+                             reactor: &mut Reactor| {
+        for (&k, &b) in p.keys.iter().zip(&p.bases) {
+            ledger.insert(k, b + 1);
+            locked.remove(&k);
+        }
+        commits.push(CommittedTxn {
+            client: p.client,
+            keys: p
+                .keys
+                .iter()
+                .zip(&p.bases)
+                .map(|(&k, &b)| (k, b + 1))
+                .collect(),
+            proposed_at: p.ready_at,
+            acked_at: acked,
+            attempts: p.attempts,
+        });
+        commit_lat.push(acked.saturating_sub(p.ready_at));
+        next_txn[p.client] += 1;
+        if next_txn[p.client] < load.txns_per_client {
+            reactor.schedule(acked, p.client);
+        }
+    };
+
+    loop {
+        let flush_now = !dead
+            && !pending.is_empty()
+            && (pending.len() >= load.group.max_group
+                || match reactor.peek() {
+                    None => true,
+                    Some((t, _)) => t > open_ready + load.group.max_hold_ns,
+                });
+        if flush_now {
+            flushes += 1;
+            let batch: Vec<Vec<(u64, Vec<u8>)>> = pending
+                .iter()
+                .map(|p| {
+                    p.keys
+                        .iter()
+                        .zip(&p.bases)
+                        .map(|(&k, &b)| (k, (b + 1).to_le_bytes().to_vec()))
+                        .collect()
+                })
+                .collect();
+            let outcome = kv.put_txn_grouped_until(&batch, &load.group, die);
+            let crashed = outcome.acks.iter().any(|a| a.is_none());
+            for (i, p) in pending.drain(..).enumerate() {
+                match outcome.acks[i] {
+                    Some(acked) => settle_commit(
+                        &p,
+                        acked,
+                        &mut ledger,
+                        &mut locked,
+                        &mut commits,
+                        &mut commit_lat,
+                        &mut next_txn,
+                        &mut reactor,
+                    ),
+                    // Stranded: the coordinator died before this
+                    // member's decision point was observed. Locks stay
+                    // held — only a takeover (or the tripwire) can
+                    // account for them now.
+                    None => stranded.push((p, outcome.ids[i])),
+                }
+            }
+            if crashed {
+                let d = die.take().expect("death without a scheduled instant");
+                died_at = Some(d);
+                dead = true;
+                if opts.lose_media {
+                    kv.fail_shard(kv.coord_shard());
+                }
+                // The coordinator's final heartbeat was at the death
+                // instant; the witness detects one TTL later.
+                lease.renew(&mut reactor, d);
+            }
+            continue;
+        }
+        let Some((t, task)) = reactor.pop() else { break };
+
+        if task == lease_task {
+            if !lease.is_expiry(t) {
+                continue; // superseded by a later heartbeat
+            }
+            if dead {
+                if !opts.enabled {
+                    // Negative control: nobody watches the lease. The
+                    // dead window never ends; locks leak, parked
+                    // timers strand, and the sweep must say so.
+                    continue;
+                }
+                let d2 = die2.take();
+                match kv.promote_until(t, d2) {
+                    None => {
+                        // The successor died mid-takeover. Its own
+                        // lease runs from its death instant; the next
+                        // witness in ring order takes over at expiry.
+                        let d2 = d2.expect("mid-takeover death needs die2");
+                        lease.renew(&mut reactor, d2.max(t));
+                    }
+                    Some(report) => {
+                        let at = report.promoted_at;
+                        for (p, id) in stranded.drain(..) {
+                            if id.is_some_and(|i| report.committed(i)) {
+                                settle_commit(
+                                    &p,
+                                    at,
+                                    &mut ledger,
+                                    &mut locked,
+                                    &mut commits,
+                                    &mut commit_lat,
+                                    &mut next_txn,
+                                    &mut reactor,
+                                );
+                            } else {
+                                // Presumed abort (or never staged):
+                                // the takeover released the durable
+                                // side; release the lock-table side
+                                // and re-propose against the new
+                                // coordinator with backoff.
+                                for k in &p.keys {
+                                    locked.remove(k);
+                                }
+                                death_aborts += 1;
+                                attempts[p.client] =
+                                    p.attempts.saturating_add(1);
+                                reactor.schedule(
+                                    at + load.retry.timeout_ns
+                                        + load.retry.backoff_ns(p.attempts),
+                                    p.client,
+                                );
+                            }
+                        }
+                        // Admitted-but-never-flushed members: no
+                        // durable residue at all — same re-propose
+                        // path.
+                        for p in pending.drain(..) {
+                            for k in &p.keys {
+                                locked.remove(k);
+                            }
+                            death_aborts += 1;
+                            attempts[p.client] = p.attempts.saturating_add(1);
+                            reactor.schedule(
+                                at + load.retry.timeout_ns
+                                    + load.retry.backoff_ns(p.attempts),
+                                p.client,
+                            );
+                        }
+                        // Re-arm every timer that fired into the dead
+                        // window against the new coordinator.
+                        for c in parked.drain(..) {
+                            reactor.schedule(at, c);
+                        }
+                        lease.renew(&mut reactor, at);
+                        dead = false;
+                        takeovers.push(report);
+                    }
+                }
+            } else if next_txn
+                .iter()
+                .any(|&n| n < load.txns_per_client)
+                || !pending.is_empty()
+            {
+                // Idle expiry with work remaining (clients backing off
+                // past the TTL): the coordinator is alive, keep the
+                // lease hopping until the next real event.
+                lease.renew(&mut reactor, t);
+            }
+            // Otherwise: workload done, let the lease lapse so the
+            // heap can drain.
+            continue;
+        }
+
+        // Client event. The death instant may fall between events: the
+        // coordinator dies before dispatching this one.
+        if !dead {
+            if let Some(d) = die {
+                if t >= d {
+                    died_at = Some(d);
+                    die = None;
+                    dead = true;
+                    if opts.lose_media {
+                        kv.fail_shard(kv.coord_shard());
+                    }
+                    lease.renew(&mut reactor, d);
+                }
+            }
+        }
+        if dead {
+            parked.push(task);
+            continue;
+        }
+        lease.renew(&mut reactor, t); // heartbeat
+        let c = task;
+        let keys =
+            zipf_txn_keys(&zipf, load.seed, c, next_txn[c], load.keys_per_txn);
+        if keys.iter().any(|k| locked.contains(k)) {
+            aborts += 1;
+            let a = attempts[c];
+            attempts[c] = attempts[c].saturating_add(1);
+            reactor
+                .schedule(t + load.retry.timeout_ns + load.retry.backoff_ns(a), c);
+            continue;
+        }
+        for &k in &keys {
+            locked.insert(k);
+        }
+        if pending.is_empty() {
+            open_ready = t;
+        }
+        let bases: Vec<u64> =
+            keys.iter().map(|k| ledger.get(k).copied().unwrap_or(0)).collect();
+        pending.push(Proposal {
+            client: c,
+            keys,
+            bases,
+            ready_at: t,
+            attempts: attempts[c],
+        });
+        attempts[c] = 0;
+    }
+
+    let stranded_timer_refs = parked.len() as u64 + stranded.len() as u64;
+    let mut leaked_locks: Vec<u64> = locked.into_iter().collect();
+    leaked_locks.sort_unstable();
+    if opts.enabled {
+        debug_assert!(leaked_locks.is_empty(), "leaked {leaked_locks:?}");
+        debug_assert_eq!(commits.len() as u64, total);
+    }
+
+    let result = PromotionResult {
+        committed: commits.len() as u64,
+        aborts,
+        death_aborts,
+        flushes,
+        events: reactor.events_dispatched(),
+        span_ns: kv.makespan(),
+        died_at,
+        detected_at: takeovers.last().map(|r| r.detected_at),
+        promoted_at: takeovers.last().map(|r| r.promoted_at),
+        mean_commit_ns: mean(&commit_lat),
+        p99_commit_ns: percentile(&commit_lat, 0.99),
+    };
+    PromotionRun {
+        kv,
+        commits,
+        takeovers,
+        leaked_locks,
+        stranded_timer_refs,
+        opts: opts.clone(),
+        result,
+    }
+}
+
+/// Audit one crash instant of a recording live-failover run — the
+/// contention checker's three guarantees, takeover-aware, plus the
+/// lock-hygiene tripwires:
+///
+/// 1. **No lost update** — every recovered counter equals its version.
+/// 2. **Exactly one commit-prefix** — the recovered state equals the
+///    replay of exactly one prefix of the global commit order; the
+///    takeover train's reverse posting is what keeps this true at
+///    every instant *during* a promotion (including a successor dying
+///    mid-train).
+/// 3. **Durability** — the matched prefix covers every commit acked at
+///    or before `t`; takeover-settled members ack at the promotion
+///    point, so adopted decisions persisted by the dead coordinator
+///    must all surface.
+/// 4. **Hygiene** ([`lock_hygiene_error`]) — no lock-table entry
+///    outlives the run, no retry timer still references a dead
+///    coordinator. A disabled-promotion control MUST fail here.
+///
+/// On media-loss runs (`lose_media`), keys homed on a media-failed
+/// shard are excused from all state comparisons: their bytes are gone
+/// by fiat, not by protocol failure (a process-dead shard's keys are
+/// NOT excused — its PM still serves one-sided reads).
+pub fn check_promotion_crash_at(
+    run: &PromotionRun,
+    t: Nanos,
+) -> Result<(), String> {
+    if let Some(e) =
+        lock_hygiene_error(&run.leaked_locks, run.stranded_timer_refs)
+    {
+        return Err(e);
+    }
+    let excused = |k: u64| {
+        run.opts.lose_media
+            && run.kv.failed_shards().contains(&run.kv.shard_for(k))
+    };
+    let state: HashMap<u64, (u32, Vec<u8>)> = run
+        .snapshot_at(t)
+        .into_iter()
+        .filter(|(k, _)| !excused(*k))
+        .collect();
+    for (k, (v, val)) in &state {
+        let bytes: [u8; 8] = val.as_slice().try_into().map_err(|_| {
+            format!("key {k}: {}-byte value is not a counter at t={t}", val.len())
+        })?;
+        let counter = u64::from_le_bytes(bytes);
+        if counter != *v as u64 {
+            return Err(format!(
+                "lost update on key {k}: version {v} carries counter \
+                 {counter} at t={t}"
+            ));
+        }
+    }
+    let mut replay: HashMap<u64, (u32, Vec<u8>)> = HashMap::new();
+    let mut matched: Option<usize> = None;
+    let mut matches = 0u32;
+    if state == replay {
+        matches += 1;
+        matched = Some(0);
+    }
+    for (j, ctx) in run.commits.iter().enumerate() {
+        for &(k, counter) in &ctx.keys {
+            if excused(k) {
+                continue;
+            }
+            let e = replay.entry(k).or_insert((0, Vec::new()));
+            e.0 += 1;
+            e.1 = counter.to_le_bytes().to_vec();
+        }
+        if state == replay {
+            matches += 1;
+            matched = Some(j + 1);
+        }
+    }
+    if matches != 1 {
+        return Err(format!(
+            "state at t={t} matches {matches} commit prefixes (want \
+             exactly 1): torn group, partial txn, or visible abort"
+        ));
+    }
+    let acked = run.commits.iter().filter(|c| c.acked_at <= t).count();
+    if matched.unwrap_or(0) < acked {
+        return Err(format!(
+            "durability hole at t={t}: {acked} commits acked but only \
+             prefix {} recovered",
+            matched.unwrap_or(0)
+        ));
+    }
+    Ok(())
+}
+
+/// Sweep `points + 1` uniform crash instants over the makespan, plus
+/// adversarial instants at every commit ack ± 1 ns and at every
+/// takeover's detection and promotion points ± 1 ns — death-at-every-
+/// instant including mid-promotion. Returns every violation (empty =
+/// the run survives every crash).
+pub fn promotion_sweep(run: &PromotionRun, points: u64) -> Vec<String> {
+    let end = run.kv.makespan();
+    let mut ts: Vec<Nanos> =
+        (0..=points).map(|i| end * i / points.max(1)).collect();
+    fn around(x: Nanos, ts: &mut Vec<Nanos>) {
+        ts.push(x.saturating_sub(1));
+        ts.push(x);
+        ts.push(x + 1);
+    }
+    for c in &run.commits {
+        around(c.acked_at, &mut ts);
+    }
+    for r in &run.takeovers {
+        around(r.detected_at, &mut ts);
+        around(r.detected_at + r.read_ns, &mut ts);
+        around(r.promoted_at, &mut ts);
+    }
+    if let Some(d) = run.result.died_at {
+        around(d, &mut ts);
+    }
+    ts.sort_unstable();
+    ts.dedup();
+    ts.into_iter()
+        .filter_map(|t| check_promotion_crash_at(run, t).err())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::config::{PDomain, RqwrbLoc};
+
+    fn cfg() -> ServerConfig {
+        ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    fn small(die: Option<Nanos>) -> PromotionOpts {
+        PromotionOpts {
+            load: ContentionOpts {
+                clients: 3,
+                txns_per_client: 4,
+                keys: 16,
+                shards: 3,
+                replicate: true,
+                ..Default::default()
+            },
+            die_at: die,
+            ..Default::default()
+        }
+    }
+
+    /// Deterministic death instant in the thick of the workload.
+    fn midpoint_death(opts: &PromotionOpts) -> Nanos {
+        let probe = run_promotion(
+            cfg(),
+            TimingModel::default(),
+            &PromotionOpts { die_at: None, ..opts.clone() },
+        );
+        probe.result.span_ns / 2
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_corruption() {
+        let bytes = encode_manifest(0xDEAD_BEEF_42, 0b1011);
+        assert_eq!(decode_manifest(&bytes), Some((0xDEAD_BEEF_42, 0b1011)));
+        for i in 0..MANIFEST_BYTES {
+            let mut bad = bytes;
+            bad[i] ^= 0x10;
+            assert!(decode_manifest(&bad).is_none(), "flip at byte {i}");
+        }
+        // An untouched (all-zero) slot never decodes.
+        assert!(decode_manifest(&[0u8; MANIFEST_BYTES]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one participant")]
+    fn empty_manifest_mask_rejected() {
+        encode_manifest(7, 0);
+    }
+
+    #[test]
+    fn resolve_merges_sources_with_abort_priority() {
+        use crate::persist::txn::encode_decision_status;
+        let ring = SlotRing { base: 0, slots: 8, stride: DECISION_BYTES as u64 };
+        let blank = vec![0u8; ring.end() as usize];
+        let mut a = blank.clone();
+        let mut b = blank.clone();
+        let put = |img: &mut Vec<u8>, id: u64, status: u32| {
+            let at = ring.addr(id) as usize;
+            img[at..at + DECISION_BYTES]
+                .copy_from_slice(&encode_decision_status(id, status));
+        };
+        // Source A: COMMIT 0,1,2. Source B: ABORT 1, COMMIT 3.
+        put(&mut a, 0, DECISION_COMMIT);
+        put(&mut a, 1, DECISION_COMMIT);
+        put(&mut a, 2, DECISION_COMMIT);
+        put(&mut b, 1, DECISION_ABORT);
+        put(&mut b, 3, DECISION_COMMIT);
+        let ia = Image::from_bytes(a);
+        let ib = Image::from_bytes(b);
+        let res = resolve_decisions(&[(&ia, &ring), (&ib, &ring)]);
+        // Merged prefix reaches 4; the tombstone on id 1 WINS over the
+        // dead coordinator's late commit — that is the fencing rule.
+        assert_eq!(res.resolved, 4);
+        assert!(res.aborted.contains(&1));
+        assert_eq!(res.aborted.len(), 1);
+        // A gap at 4 stops the scan even if later slots resolve.
+        let mut c = blank.clone();
+        put(&mut c, 6, DECISION_COMMIT);
+        let ic = Image::from_bytes(c);
+        let res2 = resolve_decisions(&[(&ia, &ring), (&ic, &ring)]);
+        assert_eq!(res2.resolved, 3);
+    }
+
+    #[test]
+    fn takeover_train_is_reverse_posted() {
+        let ring = SlotRing { base: 0x100, slots: 16, stride: 64 };
+        let ups = takeover_updates(
+            &[(2, DECISION_COMMIT), (5, DECISION_ABORT), (3, DECISION_COMMIT)],
+            &ring,
+        );
+        let addrs: Vec<u64> = ups.iter().map(|u| u.addr).collect();
+        assert_eq!(addrs, vec![ring.addr(5), ring.addr(3), ring.addr(2)]);
+    }
+
+    #[test]
+    fn takeover_read_beats_offline_scan() {
+        // The structural inequality `rpmem promote` reports: reading a
+        // few rings over live QPs vs re-connecting and bulk-scanning
+        // every shard. Must hold with slack, not by a hair.
+        let t = TimingModel::default();
+        let ring_bytes = 3 * 64u64 * 64; // three 64-slot decision-sized rings
+        let takeover = one_sided_read_ns(&t, 6, ring_bytes);
+        let offline = offline_recovery_scan_ns(&t, 3, 64 * 1024);
+        assert!(
+            takeover * 2 < offline,
+            "takeover {takeover} ns vs offline {offline} ns"
+        );
+    }
+
+    #[test]
+    fn baseline_run_commits_everything_deterministically() {
+        let opts = small(None);
+        let a = run_promotion(cfg(), TimingModel::default(), &opts);
+        let b = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert_eq!(a.result.committed, 12);
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.commits, b.commits);
+        assert!(a.takeovers.is_empty());
+        assert!(a.leaked_locks.is_empty());
+        assert_eq!(a.stranded_timer_refs, 0);
+        assert!(promotion_sweep(&a, 60).is_empty());
+    }
+
+    #[test]
+    fn death_promotes_witness_and_sweep_stays_clean() {
+        let mut opts = small(None);
+        opts.die_at = Some(midpoint_death(&opts));
+        let run = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert_eq!(run.takeovers.len(), 1, "exactly one takeover");
+        assert_eq!(run.kv.coord_shard(), 1, "witness of shard 0 promoted");
+        assert_eq!(run.kv.failed_shards(), &[0]);
+        assert_eq!(run.result.committed, 12, "quota met through the death");
+        assert!(run.result.takeover_ns().is_some());
+        assert!(run.leaked_locks.is_empty());
+        assert_eq!(run.stranded_timer_refs, 0);
+        let violations = promotion_sweep(&run, 120);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn disabled_promotion_fails_the_sweep() {
+        let mut opts = small(None);
+        opts.die_at = Some(midpoint_death(&opts));
+        opts.enabled = false;
+        let run = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert!(run.result.committed < 12, "death must strand the quota");
+        assert!(
+            !run.leaked_locks.is_empty() || run.stranded_timer_refs > 0,
+            "a dead coordinator with no takeover must leak"
+        );
+        let violations = promotion_sweep(&run, 40);
+        assert!(
+            violations.iter().any(|v| v.contains("lock")
+                || v.contains("dead coordinator")),
+            "{violations:?}"
+        );
+    }
+
+    #[test]
+    fn media_loss_death_survives_via_replication() {
+        let mut opts = small(None);
+        opts.die_at = Some(midpoint_death(&opts));
+        opts.lose_media = true;
+        let run = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert_eq!(run.takeovers.len(), 1);
+        assert_eq!(run.result.committed, 12);
+        let violations = promotion_sweep(&run, 80);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn successor_death_mid_takeover_chains_to_next_witness() {
+        let mut opts = small(None);
+        opts.load.shards = 4;
+        let die = midpoint_death(&opts);
+        opts.die_at = Some(die);
+        // Kill the successor the instant after detection: it dies in
+        // its read pass, and shard 2 must finish the job.
+        opts.die2_at = Some(die + opts.lease_ns + 1);
+        let run = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert_eq!(run.takeovers.len(), 1, "only the final takeover completes");
+        assert_eq!(run.kv.coord_shard(), 2);
+        assert_eq!(run.kv.failed_shards(), &[0, 1]);
+        assert_eq!(run.result.committed, 12);
+        let violations = promotion_sweep(&run, 80);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn death_runs_are_deterministic() {
+        let mut opts = small(None);
+        opts.die_at = Some(midpoint_death(&opts));
+        let a = run_promotion(cfg(), TimingModel::default(), &opts);
+        let b = run_promotion(cfg(), TimingModel::default(), &opts);
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.commits, b.commits);
+        assert_eq!(a.takeovers, b.takeovers);
+    }
+}

@@ -71,9 +71,19 @@ pub const DECISION_WORDS: usize = 16;
 /// Maximum commit markers one intent record can carry:
 /// (64 words − 4 header − 2 checksum) / 4 words per marker.
 pub const MAX_TXN_FLIPS: usize = 14;
-/// Decision-record status word for COMMIT (the only status ever
-/// persisted — presumed abort needs no abort records).
+/// Decision-record status word for COMMIT (the only status a *healthy*
+/// coordinator ever persists — presumed abort needs no abort records).
 pub const DECISION_COMMIT: u32 = 1;
+/// Decision-record status word for an ABORT tombstone. Only a
+/// **promoted** coordinator writes these ([`crate::persist::promotion`]):
+/// finishing a dead coordinator's in-flight window can abort a
+/// transaction *below* a committable one, and without a tombstone that
+/// gap would stall the prefix scan forever — every id after it would
+/// read as in-doubt. The tombstone keeps the scan prefix-closed while
+/// recording "resolved: aborted"; it also *fences* the dead
+/// coordinator, overriding any of its decision trains that persist
+/// after the takeover read.
+pub const DECISION_ABORT: u32 = 2;
 
 /// One commit marker: an 8-byte monotone release-write (a KV version
 /// word, a log tail pointer) applied when the transaction commits.
@@ -161,10 +171,24 @@ pub fn decode_intent(bytes: &[u8]) -> Option<IntentRecord> {
 /// Encode a COMMIT decision record for `txn_id` (Fletcher over words
 /// 0..14).
 pub fn encode_decision(txn_id: u64) -> [u8; DECISION_BYTES] {
+    encode_decision_status(txn_id, DECISION_COMMIT)
+}
+
+/// Encode a decision record with an explicit status word
+/// ([`DECISION_COMMIT`] or [`DECISION_ABORT`]) — the takeover-train
+/// form; healthy coordinators use [`encode_decision`].
+pub fn encode_decision_status(
+    txn_id: u64,
+    status: u32,
+) -> [u8; DECISION_BYTES] {
+    assert!(
+        status == DECISION_COMMIT || status == DECISION_ABORT,
+        "unknown decision status {status}"
+    );
     let mut words = [0u32; DECISION_WORDS];
     words[0] = txn_id as u32;
     words[1] = (txn_id >> 32) as u32;
-    words[2] = DECISION_COMMIT;
+    words[2] = status;
     let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
     words[DECISION_WORDS - 2] = s1;
     words[DECISION_WORDS - 1] = s2;
@@ -193,6 +217,29 @@ pub fn decode_decision(bytes: &[u8]) -> Option<u64> {
         return None;
     }
     Some(words[0] as u64 | ((words[1] as u64) << 32))
+}
+
+/// Status-aware decision decode: returns `(txn_id, status)` for a valid
+/// COMMIT record *or* ABORT tombstone, `None` for empty/torn slots. The
+/// promotion-aware resolved-prefix scan uses this; the classic scanners
+/// keep [`decode_decision`]'s commit-only view (a tombstone reads as
+/// "not committed" there, which is exactly presumed abort).
+pub fn decode_decision_status(bytes: &[u8]) -> Option<(u64, u32)> {
+    if bytes.len() != DECISION_BYTES {
+        return None;
+    }
+    let mut words = [0u32; DECISION_WORDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let (s1, s2) = fletcher_words(&words[..DECISION_WORDS - 2]);
+    if words[DECISION_WORDS - 2] != s1
+        || words[DECISION_WORDS - 1] != s2
+        || (words[2] != DECISION_COMMIT && words[2] != DECISION_ABORT)
+    {
+        return None;
+    }
+    Some((words[0] as u64 | ((words[1] as u64) << 32), words[2]))
 }
 
 /// A ring of fixed-stride PM slots indexed by transaction id (intent
@@ -366,8 +413,23 @@ pub fn recover_intents(
     shard: u32,
     committed: u64,
 ) -> Vec<CommitFlip> {
+    recover_intents_where(image, ring, shard, committed, |_| true)
+}
+
+/// [`recover_intents`] with a per-id commit predicate: collect markers
+/// only for ids in `0..resolved` where `is_committed(id)` holds. The
+/// promotion-aware recovery path needs this because a takeover train
+/// can leave ABORT tombstones *inside* the resolved prefix — those ids'
+/// intents are durable but must never roll forward.
+pub fn recover_intents_where(
+    image: &Image,
+    ring: &SlotRing,
+    shard: u32,
+    resolved: u64,
+    is_committed: impl Fn(u64) -> bool,
+) -> Vec<CommitFlip> {
     let mut flips = Vec::new();
-    for i in 0..committed.min(ring.slots) {
+    for i in (0..resolved.min(ring.slots)).filter(|&i| is_committed(i)) {
         let rec = image.read(ring.addr(i), INTENT_BYTES);
         if let Some(intent) = decode_intent(rec) {
             if intent.txn_id == i && intent.shard == shard {
@@ -433,6 +495,32 @@ mod tests {
             assert!(decode_decision(&bad).is_none(), "flip at byte {i}");
         }
         assert!(decode_decision(&[0u8; DECISION_BYTES]).is_none());
+    }
+
+    #[test]
+    fn abort_tombstone_roundtrip_and_commit_only_view() {
+        let commit = encode_decision_status(7, DECISION_COMMIT);
+        let abort = encode_decision_status(7, DECISION_ABORT);
+        assert_eq!(commit, encode_decision(7));
+        // Status-aware decode sees both; the classic commit-only decode
+        // treats a tombstone as "not committed" (presumed abort).
+        assert_eq!(decode_decision_status(&commit), Some((7, DECISION_COMMIT)));
+        assert_eq!(decode_decision_status(&abort), Some((7, DECISION_ABORT)));
+        assert_eq!(decode_decision(&commit), Some(7));
+        assert_eq!(decode_decision(&abort), None);
+        // Tombstones are integrity-checked like any record.
+        for i in 0..DECISION_BYTES {
+            let mut bad = abort;
+            bad[i] ^= 0x01;
+            assert!(decode_decision_status(&bad).is_none(), "byte {i}");
+        }
+        assert!(decode_decision_status(&[0u8; DECISION_BYTES]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown decision status")]
+    fn unknown_decision_status_rejected() {
+        encode_decision_status(1, 3);
     }
 
     #[test]

@@ -176,6 +176,61 @@ impl Reactor {
     }
 }
 
+/// A renewable liveness lease on the reactor timeline — the failure
+/// detector of the live-failover layer ([`crate::persist::promotion`]).
+///
+/// The holder (the 2PC coordinator) renews the lease on every sign of
+/// life; the watcher (the deterministic witness shard) learns of the
+/// holder's death when an expiry event fires **at or after** the
+/// current deadline. The reactor's heap cannot cancel events, so every
+/// renewal schedules a *new* expiry event and stale fires — events
+/// armed before a later renewal — are filtered by [`Lease::is_expiry`]:
+/// a fire strictly before `expires_at` means the holder renewed since
+/// that event was armed and the watcher goes back to sleep. Detection
+/// latency is therefore bounded by exactly one `ttl_ns` past the
+/// holder's last renewal, on the same deterministic timeline as every
+/// other event (same-instant ties break by task id like everything
+/// else).
+#[derive(Debug, Clone, Copy)]
+pub struct Lease {
+    /// Reactor task that expiry events dispatch to (the watcher).
+    pub task: TaskId,
+    /// Lease duration: detection fires this long after the last renewal.
+    pub ttl_ns: Nanos,
+    /// Current deadline (last renewal + `ttl_ns`).
+    pub expires_at: Nanos,
+}
+
+impl Lease {
+    /// Arm a fresh lease at `now`: the first expiry event is scheduled
+    /// at `now + ttl_ns` for `task`.
+    pub fn arm(
+        reactor: &mut Reactor,
+        task: TaskId,
+        ttl_ns: Nanos,
+        now: Nanos,
+    ) -> Lease {
+        let lease = Lease { task, ttl_ns, expires_at: now + ttl_ns };
+        reactor.schedule(lease.expires_at, task);
+        lease
+    }
+
+    /// Record a heartbeat at `now`: pushes the deadline to
+    /// `now + ttl_ns` and schedules the matching expiry event. Earlier
+    /// pending expiry events become stale (filtered by
+    /// [`Lease::is_expiry`]).
+    pub fn renew(&mut self, reactor: &mut Reactor, now: Nanos) {
+        self.expires_at = now + self.ttl_ns;
+        reactor.schedule(self.expires_at, self.task);
+    }
+
+    /// Is a fire of this lease's task at instant `at` a real expiry?
+    /// `false` for stale events superseded by a later renewal.
+    pub fn is_expiry(&self, at: Nanos) -> bool {
+        at >= self.expires_at
+    }
+}
+
 // ---------------------------------------------------------------------
 // Shared setup for the put-pipeline runners (the exact layout/fabric
 // construction of `run_multi_client`, factored so every scheduling
@@ -1698,6 +1753,36 @@ mod tests {
 
     fn cfg() -> ServerConfig {
         ServerConfig::new(PDomain::Mhp, false, RqwrbLoc::Dram)
+    }
+
+    #[test]
+    fn lease_expiry_fires_one_ttl_after_last_renewal() {
+        let mut r = Reactor::new();
+        let mut lease = Lease::arm(&mut r, 9, 100, 0);
+        assert_eq!(lease.expires_at, 100);
+        // Heartbeats at 40 and 90 push the deadline to 190.
+        lease.renew(&mut r, 40);
+        lease.renew(&mut r, 90);
+        let mut real = Vec::new();
+        while let Some((at, task)) = r.pop() {
+            assert_eq!(task, 9);
+            if lease.is_expiry(at) {
+                real.push(at);
+            }
+        }
+        // The fires at 100 and 140 are stale (renewed past them); only
+        // the fire at the final deadline detects the silence.
+        assert_eq!(real, vec![190]);
+    }
+
+    #[test]
+    fn unrenewed_lease_fires_exactly_once() {
+        let mut r = Reactor::new();
+        let lease = Lease::arm(&mut r, 3, 250, 1000);
+        let (at, task) = r.pop().unwrap();
+        assert_eq!((at, task), (1250, 3));
+        assert!(lease.is_expiry(at), "armed-once lease must detect");
+        assert!(r.pop().is_none());
     }
 
     #[test]

@@ -298,6 +298,14 @@ pub struct Image {
 }
 
 impl Image {
+    /// Build an image directly from bytes, all treated as PM — a test
+    /// utility for exercising recovery scanners against hand-crafted
+    /// ring contents without driving a fabric.
+    pub fn from_bytes(mem: Vec<u8>) -> Image {
+        let pm_size = mem.len() as u64;
+        Image { mem, pm_size }
+    }
+
     /// Read `len` bytes at `addr`.
     pub fn read(&self, addr: u64, len: usize) -> &[u8] {
         &self.mem[addr as usize..addr as usize + len]

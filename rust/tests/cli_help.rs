@@ -32,6 +32,7 @@ fn bare_invocation_and_help_list_every_command() {
             "group",
             "soak",
             "contend",
+            "promote",
             "claims",
             "crash-test",
             "recover-demo",
@@ -48,7 +49,7 @@ fn bare_invocation_and_help_list_every_command() {
 #[test]
 fn per_command_help_lists_the_knobs() {
     // (command, flags its usage text must name)
-    let cases: [(&str, &[&str]); 9] = [
+    let cases: [(&str, &[&str]); 10] = [
         ("scale", &["--clients", "--shards", "--window", "--batch"]),
         ("reactor", &["--clients", "--window", "--batch", "--appends"]),
         ("txn", &["--clients", "--shards", "--txns", "--primary"]),
@@ -72,6 +73,10 @@ fn per_command_help_lists_the_knobs() {
         (
             "contend",
             &["--thetas", "--clients", "--shards", "--txns", "--configs"],
+        ),
+        (
+            "promote",
+            &["--clients", "--shards", "--txns", "--lease", "--configs"],
         ),
     ];
     for (cmd, knobs) in cases {
@@ -140,6 +145,7 @@ fn unknown_flag_prints_usage_and_fails_on_every_command() {
         "group",
         "soak",
         "contend",
+        "promote",
         "claims",
         "crash-test",
         "recover-demo",
@@ -161,6 +167,33 @@ fn unknown_flag_prints_usage_and_fails_on_every_command() {
         assert!(
             stdout(&out).is_empty(),
             "`{cmd} --bogus` must not run the measurement"
+        );
+    }
+}
+
+#[test]
+fn out_of_range_configs_prints_usage_and_fails() {
+    // The grid has 16 rows (indices 0-15). A row index past the end
+    // must not be clamped or skipped — every --configs-taking command
+    // rejects it with its own usage text and a non-zero exit.
+    for cmd in ["soak", "contend", "promote"] {
+        let out = rpmem(&[cmd, "--configs", "0,16"]);
+        assert!(
+            !out.status.success(),
+            "`{cmd} --configs 0,16` must exit non-zero"
+        );
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("out of range"),
+            "`{cmd}` stderr must flag the bad index: {err}"
+        );
+        assert!(
+            err.contains(&format!("USAGE: rpmem {cmd}")),
+            "`{cmd}` must print its own usage on a bad index: {err}"
+        );
+        assert!(
+            stdout(&out).is_empty(),
+            "`{cmd} --configs 0,16` must not run the measurement"
         );
     }
 }

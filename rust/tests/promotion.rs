@@ -1,0 +1,275 @@
+//! Live-failover campaign (acceptance criteria for the
+//! `persist::promotion` layer).
+//!
+//! Obligations, each across the relevant slice of the 16-config grid:
+//!
+//! * **coordinator death at every instant** — on EVERY grid config,
+//!   the coordinator is killed at a lattice of instants spanning the
+//!   baseline makespan (plus, on representative configs, at every ack
+//!   instant ± 1 ns — the adversarial schedule). Every run must still
+//!   commit every client's full quota, leak zero lock-table entries,
+//!   strand zero retry timers, and crash-sweep clean at every instant
+//!   — before, during, and after the takeover;
+//! * **mid-promotion death of the successor** — the second coordinator
+//!   dies during its own takeover on every config; the next witness in
+//!   ring order finishes the job off the reverse-posted partial train;
+//! * **the soak fault mix rides along** — jitter + duplicate
+//!   perturbation on every QP (drop-free: the promotion driver layers
+//!   no op-retry engine), with and without media loss;
+//! * **the harness can still fail** — promotion disabled MUST trip the
+//!   lock-leak / stranded-timer tripwires on every config it runs on;
+//! * **takeover beats offline recovery** — on every grid config the
+//!   measured death-to-resumption latency is strictly below the
+//!   modeled offline merged-ring recovery;
+//! * **determinism** — identical opts (faults included) reproduce the
+//!   run bit-for-bit.
+
+use rpmem::coordinator::scaling::{run_promotion_grid, ScalingOpts};
+use rpmem::fabric::faults::NetworkModel;
+use rpmem::fabric::timing::TimingModel;
+use rpmem::persist::config::ServerConfig;
+use rpmem::persist::contention::ContentionOpts;
+use rpmem::persist::promotion::{
+    promotion_sweep, run_promotion, PromotionOpts,
+};
+
+/// The campaign workload: three clients racing on a small hot key
+/// space over three shards, decision+intent replication on (promotion
+/// requires a witness that can reconstruct the in-flight window).
+fn campaign_opts() -> PromotionOpts {
+    PromotionOpts {
+        load: ContentionOpts {
+            clients: 3,
+            txns_per_client: 4,
+            keys: 16,
+            shards: 3,
+            capacity: 64,
+            seed: 11,
+            record: true,
+            replicate: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Baseline makespan for a config (no-death probe with these opts).
+fn baseline_span(cfg: ServerConfig, opts: &PromotionOpts) -> u64 {
+    let probe = run_promotion(
+        cfg,
+        TimingModel::default(),
+        &PromotionOpts { die_at: None, die2_at: None, ..opts.clone() },
+    );
+    probe.result.span_ns
+}
+
+/// Assert one death run is fully clean: quota met, zero leaked locks,
+/// zero stranded timers, sweep (uniform + every-ack + every-takeover
+/// boundary ± 1 ns) silent.
+fn assert_clean(cfg: ServerConfig, opts: &PromotionOpts, points: u64) {
+    let run = run_promotion(cfg, TimingModel::default(), opts);
+    let total = opts.load.clients as u64 * opts.load.txns_per_client;
+    assert_eq!(
+        run.result.committed,
+        total,
+        "{} die_at={:?}: every in-flight group must be finished or \
+         presumed-aborted and retried",
+        cfg.label(),
+        opts.die_at
+    );
+    assert!(
+        run.leaked_locks.is_empty(),
+        "{} die_at={:?}: leaked locks {:?}",
+        cfg.label(),
+        opts.die_at,
+        run.leaked_locks
+    );
+    assert_eq!(
+        run.stranded_timer_refs,
+        0,
+        "{} die_at={:?}: stranded retry timers",
+        cfg.label(),
+        opts.die_at
+    );
+    let violations = promotion_sweep(&run, points);
+    assert!(
+        violations.is_empty(),
+        "{} die_at={:?}: {violations:?}",
+        cfg.label(),
+        opts.die_at
+    );
+}
+
+#[test]
+fn campaign_death_at_every_instant_on_every_grid_config() {
+    let base = campaign_opts();
+    for (i, &cfg) in ServerConfig::grid().iter().enumerate() {
+        let span = baseline_span(cfg, &base);
+        assert!(span > 0, "config {i} ({}): empty baseline", cfg.label());
+        // A lattice of death instants spanning the whole run, plus the
+        // boundaries: death before the first flush (nothing in flight)
+        // and death after the last ack (nothing left to kill).
+        for k in 0..=6u64 {
+            let die = span * k / 6;
+            let opts = PromotionOpts { die_at: Some(die), ..base.clone() };
+            assert_clean(cfg, &opts, 40);
+        }
+    }
+}
+
+#[test]
+fn adversarial_death_at_every_ack_instant_stays_clean() {
+    let base = campaign_opts();
+    // The ack schedule is where in-flight windows are widest. One
+    // representative config per persistence domain: the death-handling
+    // state machine is fabric-independent, the full grid is covered by
+    // the lattice campaign above.
+    for &cfg in &ServerConfig::grid()[..4] {
+        let probe = run_promotion(
+            cfg,
+            TimingModel::default(),
+            &PromotionOpts { die_at: None, ..base.clone() },
+        );
+        let acks: Vec<u64> =
+            probe.commits.iter().map(|c| c.acked_at).collect();
+        for &a in &acks {
+            for die in [a.saturating_sub(1), a, a + 1] {
+                let opts =
+                    PromotionOpts { die_at: Some(die), ..base.clone() };
+                assert_clean(cfg, &opts, 20);
+            }
+        }
+    }
+}
+
+#[test]
+fn successor_death_mid_takeover_chains_on_every_grid_config() {
+    let base = PromotionOpts {
+        load: ContentionOpts { shards: 4, ..campaign_opts().load },
+        ..campaign_opts()
+    };
+    for &cfg in &ServerConfig::grid() {
+        let span = baseline_span(cfg, &base);
+        let die = span / 2;
+        // The successor's takeover begins at die + lease; kill it one
+        // tick in, mid-read-pass — the next witness must finish the
+        // job off the reverse-posted partial train.
+        let opts = PromotionOpts {
+            die_at: Some(die),
+            die2_at: Some(die + base.lease_ns + 1),
+            ..base.clone()
+        };
+        let run = run_promotion(cfg, TimingModel::default(), &opts);
+        assert_eq!(
+            run.takeovers.len(),
+            1,
+            "{}: exactly one takeover completes",
+            cfg.label()
+        );
+        assert_eq!(
+            run.kv.failed_shards(),
+            &[0, 1],
+            "{}: both dead coordinators fenced",
+            cfg.label()
+        );
+        assert_clean(cfg, &opts, 40);
+    }
+}
+
+#[test]
+fn fault_mix_campaign_stays_clean_on_every_grid_config() {
+    // The soak perturbation (minus drops — the promotion driver layers
+    // no op-retry engine): per-op jitter and payload redelivery on
+    // every QP, independent derived seeds per shard.
+    let faults = NetworkModel::new(23).with_jitter(200).with_duplicates(10);
+    let base = PromotionOpts {
+        faults: Some(faults),
+        ..campaign_opts()
+    };
+    for (i, &cfg) in ServerConfig::grid().iter().enumerate() {
+        let span = baseline_span(cfg, &base);
+        let opts = PromotionOpts {
+            die_at: Some(span / 2),
+            // Alternate plain process death with media loss: half the
+            // grid also loses the dead coordinator's PM and must
+            // presume-abort off blank images via the replicas.
+            lose_media: i % 2 == 1,
+            ..base.clone()
+        };
+        assert_clean(cfg, &opts, 40);
+    }
+}
+
+#[test]
+fn disabled_promotion_negative_control_fails_on_every_config_it_runs_on() {
+    let base = campaign_opts();
+    // The negative control is about the tripwires, not the fabric — a
+    // representative config per persistence domain suffices.
+    for &cfg in &ServerConfig::grid()[..4] {
+        let span = baseline_span(cfg, &base);
+        let opts = PromotionOpts {
+            die_at: Some(span / 2),
+            enabled: false,
+            ..base.clone()
+        };
+        let run = run_promotion(cfg, TimingModel::default(), &opts);
+        let total = opts.load.clients as u64 * opts.load.txns_per_client;
+        assert!(
+            run.result.committed < total,
+            "{}: an undetected death cannot finish the workload",
+            cfg.label()
+        );
+        assert!(
+            !run.leaked_locks.is_empty() || run.stranded_timer_refs > 0,
+            "{}: the dead window must leak",
+            cfg.label()
+        );
+        let violations = promotion_sweep(&run, 40);
+        assert!(
+            violations
+                .iter()
+                .any(|v| v.contains("leaked lock")
+                    || v.contains("dead coordinator")),
+            "{}: the sweep must name the leak: {violations:?}",
+            cfg.label()
+        );
+    }
+}
+
+#[test]
+fn takeover_beats_offline_recovery_on_every_grid_config() {
+    let opts = ScalingOpts { capacity: 64, ..Default::default() };
+    let points = run_promotion_grid(&[3], 3, 4, 50_000, &opts);
+    assert_eq!(points.len(), 16, "every grid config measured");
+    for p in &points {
+        assert!(
+            p.takeover_ns < p.offline_ns,
+            "{}: takeover {} ns must beat offline recovery {} ns",
+            p.config.label(),
+            p.takeover_ns,
+            p.offline_ns
+        );
+        assert_eq!(p.committed, 12, "{}", p.config.label());
+    }
+}
+
+#[test]
+fn campaign_is_deterministic_faults_included() {
+    let faults = NetworkModel::new(5).with_jitter(150).with_duplicates(20);
+    let cfg = ServerConfig::grid()[0];
+    let base = PromotionOpts {
+        faults: Some(faults),
+        ..campaign_opts()
+    };
+    let span = baseline_span(cfg, &base);
+    let opts = PromotionOpts { die_at: Some(span / 2), ..base };
+    let a = run_promotion(cfg, TimingModel::default(), &opts);
+    let b = run_promotion(cfg, TimingModel::default(), &opts);
+    assert_eq!(a.result, b.result);
+    assert_eq!(a.takeovers, b.takeovers);
+    assert_eq!(a.commits.len(), b.commits.len());
+    for (x, y) in a.commits.iter().zip(&b.commits) {
+        assert_eq!(x.acked_at, y.acked_at);
+        assert_eq!(x.keys, y.keys);
+    }
+}
